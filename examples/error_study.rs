@@ -1,0 +1,52 @@
+//! The paper's numerical-error study (Fig 7) as a standalone example:
+//! sweep σ for both decompositions and print the posit-vs-binary32
+//! advantage in digits, plus a golden-zone visualization.
+//!
+//! ```sh
+//! cargo run --release --example error_study -- [N]
+//! ```
+
+use posit_accel::experiments::fig7::{error_cell, SIGMAS};
+use posit_accel::posit::{eps_for_scale, Posit32};
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(192);
+
+    println!("== golden zone of Posit(32,2) (paper §2) ==");
+    println!("   |x|        eps_posit    vs binary32");
+    for e in [-40, -20, -6, -3, 0, 3, 6, 20, 40] {
+        let v = 10f64.powi(e);
+        let scale = v.log2().round() as i32;
+        let eps = eps_for_scale(scale.clamp(-120, 120));
+        let rel = 6.0e-8 / eps;
+        let bar = if rel >= 1.0 { "posit wins" } else { "binary32 wins" };
+        println!("  1e{e:+03}      {eps:9.1e}    {rel:8.1}x  {bar}");
+    }
+    let _ = Posit32::ONE;
+
+    println!("\n== Fig 7 protocol at N={n} (measured; 2 matrices per cell) ==");
+    for (label, chol) in [("LU", false), ("Cholesky", true)] {
+        println!("\n{label}: advantage of posit over binary32, in digits");
+        print!("   ");
+        for s in SIGMAS {
+            print!("  σ={s:<7.0e}");
+        }
+        println!();
+        print!("   ");
+        for (i, s) in SIGMAS.iter().enumerate() {
+            match error_cell(chol, n, *s, 2, 99 + i as u64) {
+                Some(c) => print!("  {:+9.2}", c.digits),
+                None => print!("  {:>9}", "fail"),
+            }
+        }
+        println!();
+    }
+    println!(
+        "\npositive = posit more accurate. Expected shape (paper Fig 7):\n\
+         +0.5..1 digit at σ <= 1, ~0 at σ = 1e2, negative beyond;\n\
+         Cholesky degrades faster (A = XᵀX squares the norm)."
+    );
+}

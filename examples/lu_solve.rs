@@ -1,0 +1,100 @@
+//! END-TO-END driver: solve a real dense linear system with the full
+//! three-layer stack, proving all layers compose (DESIGN.md §6):
+//!
+//!   L1/L2  Pallas posit GEMM kernel, AOT-lowered by python to HLO
+//!   L3     Rust coordinator: blocked LU, panels on host, trailing
+//!          updates dispatched to the PJRT runtime executing the artifact
+//!
+//! The run factorizes A (N(0,1) entries), solves A x = b for the paper's
+//! x_sol = 1/sqrt(N) right-hand side, reports per-phase timing, tile
+//! counts, Gflops, and the Eq.(4) backward error vs binary32 — and
+//! cross-checks that the accelerator path is bit-identical to native.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example lu_solve -- [N]
+//! ```
+
+use posit_accel::coordinator::drivers::{getrf_offload, lu_ops};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use posit_accel::experiments::matgen;
+use posit_accel::lapack::{backward_error, forward_error, getrs};
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
+use posit_accel::runtime::Runtime;
+use posit_accel::{blas, lapack};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(384);
+    let nb = 64;
+    println!("== end-to-end posit LU solve, N={n}, nb={nb} ==\n");
+
+    // Problem data in binary64 (the paper's protocol, §5.1).
+    let mut rng = Pcg64::seed(2024);
+    let a64 = matgen::normal_f64(n, 1.0, &mut rng);
+    let (xsol, b64) = matgen::rhs_for(&a64);
+
+    // --- the accelerator path ----------------------------------------------
+    let dir = Runtime::default_dir();
+    anyhow::ensure!(
+        dir.is_dir(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let be = PjrtBackend::new(&dir)?;
+    println!(
+        "runtime: PJRT platform={}, artifact tile {}x{}x{}",
+        be.runtime().platform(),
+        be.tm,
+        be.tk,
+        be.tn
+    );
+
+    let (ap, mut bp) = matgen::cast_problem::<Posit32>(&a64, &b64);
+    let mut lu = ap.clone();
+    let mut ipiv = vec![0usize; n];
+    let stats = getrf_offload(n, n, &mut lu.data, n, &mut ipiv, nb, &be)?;
+    getrs(n, 1, &lu.data, n, &ipiv, &mut bp, n);
+
+    println!("\nfactorization (posit32 via AOT Pallas GEMM on PJRT):");
+    println!("  panel (host)        {:>8.3} s", stats.panel_s);
+    println!("  update (accelerator){:>8.3} s", stats.update_s);
+    println!("  total               {:>8.3} s", stats.total_s);
+    println!("  throughput          {:>8.1} Mflops", lu_ops(n) / stats.total_s / 1e6);
+    println!("  tiles dispatched    {:>8}", be.tiles_dispatched());
+
+    // --- verification ------------------------------------------------------
+    // 1. bit-exactness vs the native backend.
+    let mut lu2 = ap.clone();
+    let mut ipiv2 = vec![0usize; n];
+    getrf_offload(
+        n,
+        n,
+        &mut lu2.data,
+        n,
+        &mut ipiv2,
+        nb,
+        &NativeBackend::new(blas::default_threads()),
+    )?;
+    assert_eq!(lu.data, lu2.data, "PJRT and native factors differ!");
+    println!("\n  [ok] accelerator factors bit-identical to native rust");
+
+    // 2. accuracy vs binary32 (Eq. 4-5).
+    let (af, mut bf) = matgen::cast_problem::<f32>(&a64, &b64);
+    let mut luf = af;
+    let mut ipf = vec![0usize; n];
+    lapack::getrf(n, n, &mut luf.data, n, &mut ipf, nb, blas::default_threads()).unwrap();
+    getrs(n, 1, &luf.data, n, &ipf, &mut bf, n);
+
+    let (ep, fp) = (backward_error(&a64, &b64, &bp), forward_error(&xsol, &bp));
+    let (ef, ff) = (backward_error(&a64, &b64, &bf), forward_error(&xsol, &bf));
+    println!("\naccuracy (errors computed in binary64):");
+    println!("  posit32:  backward {ep:.3e}   forward {fp:.3e}");
+    println!("  binary32: backward {ef:.3e}   forward {ff:.3e}");
+    println!(
+        "  posit advantage: {:+.2} digits (paper Fig 7: ~+0.8 at σ=1)",
+        (ef / ep).log10()
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: the Posit(32,2) format and the GEMM API in two minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use posit_accel::blas::{dot, dot_quire, gemm, Matrix, Trans};
+use posit_accel::posit::{eps_for_scale, Posit32};
+use posit_accel::rng::Pcg64;
+
+fn main() {
+    // --- scalars ----------------------------------------------------------
+    let a = Posit32::from_f64(1.5);
+    let b = Posit32::from_f64(2.25);
+    println!("1.5 + 2.25   = {}", a + b);
+    println!("1.5 * 2.25   = {}", a * b);
+    println!("sqrt(2.25)   = {}", Posit32::from_f64(2.25).sqrt());
+    println!("1.5 bits     = {:#010x}", a.to_bits());
+    println!("maxpos       = {:e}", Posit32::MAXPOS.to_f64());
+    println!("NaR          = {}", Posit32::NAR);
+    println!("1/0          = {}", Posit32::ONE / Posit32::ZERO);
+
+    // --- tapered precision: the "golden zone" (paper §2) -------------------
+    println!("\ntapered precision (rounding step at scale s):");
+    for v in [1.0f64, 1e-3, 1e3, 1e9, 1e-30] {
+        let scale = v.log2().round() as i32;
+        println!(
+            "  |x| ~ {v:>6.0e}: eps_posit = {:.1e}   (binary32 eps = 6.0e-8)",
+            eps_for_scale(scale)
+        );
+    }
+
+    // --- vectors: sequential vs fused (quire) dot --------------------------
+    let mut rng = Pcg64::seed(42);
+    let n = 10_000;
+    let xs: Vec<Posit32> = (0..n).map(|_| Posit32::from_f64(rng.normal())).collect();
+    let ys: Vec<Posit32> = (0..n).map(|_| Posit32::from_f64(rng.normal())).collect();
+    let truth: f64 = xs.iter().zip(&ys).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+    let seq = dot(n, &xs, 1, &ys, 1);
+    let fused = dot_quire(n, &xs, 1, &ys, 1);
+    println!("\ndot product of {n} N(0,1) pairs:");
+    println!("  exact (f64)     = {truth:.12}");
+    println!("  sequential      = {:.12}", seq.to_f64());
+    println!("  quire (1 round) = {:.12}", fused.to_f64());
+
+    // --- GEMM: the paper's Eq. (2) -----------------------------------------
+    let (m, k, nn) = (64, 64, 64);
+    let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+    let b = Matrix::<Posit32>::random_normal(k, nn, 1.0, &mut rng);
+    let mut c = Matrix::<Posit32>::zeros(m, nn);
+    gemm(
+        Trans::No, Trans::No, m, nn, k, Posit32::ONE, &a.data, m, &b.data, k,
+        Posit32::ZERO, &mut c.data, m,
+    );
+    println!("\nRgemm {m}x{k}x{nn}: C[0,0] = {}", c[(0, 0)]);
+    println!("\nnext: examples/lu_solve.rs runs the full accelerator stack.");
+}

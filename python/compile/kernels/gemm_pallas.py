@@ -1,0 +1,145 @@
+"""L1: Pallas blocked GEMM kernel in Posit(32,2) arithmetic.
+
+The paper's GPU GEMM blocks A and B into shared memory and has each thread
+accumulate one C element with per-operation posit rounding (§3.2). The TPU
+adaptation (DESIGN.md §3): blocks are staged through VMEM by `BlockSpec`s,
+the 32-lane warp becomes the 8x128 vector unit, and the posit emulation is
+the branchless integer formulation of `posit_ops` — so, like the paper's
+FPGA and unlike its GPU, kernel latency does not depend on operand
+magnitude.
+
+Grid: (M/bm, N/bn); each grid cell loads an (bm, K) strip of A and a
+(K, bn) strip of B (posit bit patterns, uint32), decodes them ONCE
+(decode is pure), and runs the k-loop with the mandatory sequential
+rounding: t = add(t, mul(a_il, b_lj)), ascending l. The decode hoist is
+the kernel's main optimization: it removes ~40% of the integer ops from
+the loop body without touching the rounding sequence (EXPERIMENTS.md
+paragraph Perf).
+
+VMEM estimate per cell (bm = bn = 128, K = 1024): A strip 512 KiB + B
+strip 512 KiB + C tile 64 KiB plus decoded components (x3) ~ 3.2 MiB —
+inside the 16 MiB VMEM budget of a modern TPU core with double buffering.
+`interpret=True` everywhere: the kernel lowers to plain HLO so the PJRT
+CPU client (and our Rust runtime) can execute it; a real-TPU build would
+lower the same kernel through Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import posit_ops as P
+
+
+def _mul_decoded(na, sa, fa, nb, sb, fb):
+    """posit multiply from pre-decoded operands -> (neg, scale, sig64)."""
+    neg = na != nb
+    scale = sa + sb
+    prod = fa.astype(jnp.uint64) * fb.astype(jnp.uint64)  # Q2.62
+    carry = (prod >> 63) != 0
+    scale = scale + carry.astype(jnp.int32)
+    sig = jnp.where(carry, prod, prod << 1)
+    return neg, scale, sig
+
+
+def _mul_encode(na, sa, fa, za, ra, nb, sb, fb, zb, rb):
+    """Multiply pre-decoded operands and encode, with zero/NaR masks."""
+    neg, scale, sig = _mul_decoded(na, sa, fa, nb, sb, fb)
+    out = P.encode(neg, scale, sig)
+    out = jnp.where(za | zb, P.ZERO, out)
+    return jnp.where(ra | rb, P.NAR, out)
+
+
+def gemm_kernel(a_ref, b_ref, c_ref, o_ref, *, k, alpha, beta):
+    """Pallas kernel body: one (bm, bn) tile of
+    C = alpha * A @ B + beta * C, posit semantics."""
+    a = a_ref[...]  # (bm, k) uint32
+    b = b_ref[...]  # (k, bn) uint32
+    # Hoisted decode (pure, magnitude-independent).
+    na, sa, fa = P.decode(a)
+    za, ra = P.is_zero(a), P.is_nar(a)
+    nb, sb, fb = P.decode(b)
+    zb, rb = P.is_zero(b), P.is_nar(b)
+
+    bm, bn = o_ref.shape
+
+    def body(l, t):
+        # Column l of A (bm, 1) x row l of B (1, bn), posit product...
+        av = lambda x: jax.lax.dynamic_slice_in_dim(x, l, 1, axis=1)
+        bv = lambda x: jax.lax.dynamic_slice_in_dim(x, l, 1, axis=0)
+        prod = _mul_encode(
+            av(na), av(sa), av(fa), av(za), av(ra),
+            bv(nb), bv(sb), bv(fb), bv(zb), bv(rb),
+        )
+        # ...then the sequential posit accumulation (the rounding that
+        # defines the paper's numerics — must stay ordered).
+        return P.posit_add(t, prod)
+
+    t = jax.lax.fori_loop(0, k, body, jnp.full((bm, bn), P.ZERO, jnp.uint32))
+    # Combine with alpha/beta (compile-time constants: -1/1 for the
+    # trailing update, 1/0 for plain product).
+    if alpha == -1:
+        t = P.posit_neg(t)
+    elif alpha != 1:
+        raise ValueError("alpha must be +-1 in the AOT kernels")
+    if beta == 0:
+        o_ref[...] = t
+    elif beta == 1:
+        o_ref[...] = P.posit_add(t, c_ref[...])
+    else:
+        raise ValueError("beta must be 0 or 1 in the AOT kernels")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "alpha", "beta"))
+def gemm_posit_pallas(a, b, c, bm=64, bn=64, alpha=1, beta=0):
+    """C = alpha * A@B + beta * C on posit bit patterns (uint32).
+
+    a: (m, k), b: (k, n), c: (m, n); m % bm == 0, n % bn == 0.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    kernel = functools.partial(gemm_kernel, k=k, alpha=alpha, beta=beta)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,  # CPU-executable HLO; Mosaic on real TPU
+    )(a, b, c)
+
+
+def gemm_posit_jnp(a, b, c, alpha=1, beta=0):
+    """Non-Pallas reference with identical semantics (scan over k on the
+    whole matrices). Used to validate the Pallas blocking/indexing."""
+    m, k = a.shape
+    _, n = b.shape
+
+    na, sa, fa = P.decode(a)
+    za, ra = P.is_zero(a), P.is_nar(a)
+    nb, sb, fb = P.decode(b)
+    zb, rb = P.is_zero(b), P.is_nar(b)
+
+    def body(l, t):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, l, 1, axis=1)
+        sr = lambda x: jax.lax.dynamic_slice_in_dim(x, l, 1, axis=0)
+        prod = _mul_encode(
+            sl(na), sl(sa), sl(fa), sl(za), sl(ra),
+            sr(nb), sr(sb), sr(fb), sr(zb), sr(rb),
+        )
+        return P.posit_add(t, prod)
+
+    t = jax.lax.fori_loop(0, k, body, jnp.full((m, n), P.ZERO, jnp.uint32))
+    if alpha == -1:
+        t = P.posit_neg(t)
+    if beta == 1:
+        t = P.posit_add(t, c)
+    return t

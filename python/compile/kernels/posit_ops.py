@@ -1,0 +1,351 @@
+"""Branchless Posit(32,2) arithmetic on JAX integer arrays (L1 substrate).
+
+This is the TPU-adapted formulation of the paper's SoftPosit GPU port
+(DESIGN.md §3): where the CUDA kernels decode the regime with sequential,
+divergence-prone bit loops (paper §4.2), here every step is a fixed
+sequence of `uint32`/`uint64` lane operations — count-leading-zeros via
+bit-smearing + popcount, i.e. a software priority encoder, the same
+combinational structure the paper's FPGA decoder uses (§3.1). Latency is
+therefore magnitude-independent, like the FPGA and unlike the GPU.
+
+Exactness contract: bit-identical to the Rust implementation
+(`rust/src/posit/ops.rs`) and the scalar oracle (`ref.py`), one rounding
+per operation (round-to-nearest-even on the encoding stream, saturation
+at +-maxpos, never-round-to-zero, NaR absorbing). Cross-checked by
+`python/tests/` via hypothesis sweeps and the shared golden vectors in
+`testdata/`.
+
+Everything here is build-time only: these functions are traced by
+`aot.py` into HLO artifacts which the Rust runtime executes via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+I32 = jnp.int32
+
+# Plain ints (not jnp scalars): inside a pallas_call trace, module-level
+# jnp arrays would be captured constants, which pallas rejects. NumPy's
+# weak-typing promotes these against uint32 arrays without upcasting.
+ZERO = 0x00000000
+NAR = 0x80000000
+ONE = 0x40000000
+MAXPOS = 0x7FFFFFFF
+MINPOS = 0x00000001
+
+ES = 2
+MAX_SCALE = 120
+
+
+def _u32(x):
+    return x.astype(U32)
+
+
+def _u64(x):
+    return x.astype(U64)
+
+
+def _i32(x):
+    return x.astype(I32)
+
+
+def popcount32(x):
+    """Population count of a uint32 array (SWAR)."""
+    x = _u32(x)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def clz32(x):
+    """Count leading zeros of a uint32 array (32 for x == 0).
+
+    Bit-smear then popcount — the branchless priority encoder.
+    """
+    x = _u32(x)
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return popcount32(~x)
+
+
+def clz64(x):
+    """Count leading zeros of a uint64 array (64 for x == 0)."""
+    x = _u64(x)
+    hi = _u32(x >> 32)
+    lo = _u32(x & jnp.uint64(0xFFFFFFFF))
+    return jnp.where(hi != 0, clz32(hi), 32 + clz32(lo))
+
+
+def _shl32(x, n):
+    """uint32 << n with n possibly >= 32 (yields 0)."""
+    n = _u32(n)
+    return jnp.where(n >= 32, jnp.uint32(0), _u32(x) << jnp.minimum(n, jnp.uint32(31)))
+
+
+def _shr64(x, n):
+    """uint64 >> n with n possibly >= 64 (yields 0)."""
+    n = _u64(n)
+    return jnp.where(n >= 64, jnp.uint64(0), _u64(x) >> jnp.minimum(n, jnp.uint64(63)))
+
+
+def is_nar(bits):
+    return _u32(bits) == NAR
+
+
+def is_zero(bits):
+    return _u32(bits) == ZERO
+
+
+def _special(bits):
+    return is_nar(bits) | is_zero(bits)
+
+
+def decode(bits):
+    """Unpack nonzero/non-NaR posits to (neg, scale, frac).
+
+    Special inputs (0 / NaR) are substituted by 1.0 before decoding so the
+    arithmetic below stays well-defined; callers mask the outputs.
+
+    Returns: neg (bool), scale (int32, in [-120, 120]), frac (uint32
+    Q1.31 with the hidden bit at bit 31).
+    """
+    bits = jnp.where(_special(bits), ONE, _u32(bits))
+    neg = (bits >> 31) != 0
+    absv = jnp.where(neg, jnp.uint32(0) - bits, bits)
+    x = absv << 1
+    ones_run = clz32(~x)
+    zeros_run = clz32(x)
+    is_ones = (x >> 31) == 1
+    k = jnp.where(is_ones, _i32(ones_run) - 1, -_i32(zeros_run))
+    run = jnp.where(is_ones, ones_run, zeros_run)
+    body = _shl32(x, run + 1)
+    e = _i32(body >> 30)
+    frac = jnp.uint32(0x80000000) | ((body << 2) >> 1)
+    scale = (k << ES) + e
+    return neg, scale, frac
+
+
+def encode(neg, scale, sig):
+    """Pack (sign, scale, Q1.63 significand w/ sticky bit 0) into posit
+    bits. Mirrors `pack32` in rust/src/posit/mod.rs: RNE on the encoding
+    stream, clamp to maxpos, never round to zero.
+
+    Works entirely in uint64 by compressing the 63 fraction bits to
+    29 + sticky (the cut always discards >= regime+1 >= 3 payload bits,
+    so compressed bits can only ever land in the sticky region).
+    """
+    scale = _i32(scale)
+    sig = _u64(sig)
+    k = scale >> ES
+    e = _u64(scale & 3)
+    # Regime run: k+1 ones (k >= 0) or -k zeros (k < 0), then terminator.
+    kpos = k >= 0
+    rs = jnp.where(kpos, _u32(k + 2), _u32(1 - k))  # run + terminator
+    ones = jnp.where(kpos, _u32(k + 1), jnp.uint32(0))
+    # regime bits incl. terminator, right-aligned: for k>=0: (2^(k+1)-1)<<1;
+    # for k<0: 1. rs <= 32 for k <= 30.
+    regime = jnp.where(
+        kpos,
+        (_shl64_1s(ones)) << 1,
+        jnp.uint64(1),
+    )
+    # Payload: e(2) | frac29(29) | sticky(1) = 32 bits.
+    frac63 = sig & jnp.uint64(0x7FFFFFFFFFFFFFFF)  # fraction, hidden dropped
+    frac29 = frac63 >> 34
+    sticky_low = (frac63 & jnp.uint64((1 << 34) - 1)) != 0
+    payload = (e << 30) | (frac29 << 1) | _u64(sticky_low)
+    # Full stream: regime ++ payload, width rs + 32 (<= 64). Cut to 31.
+    stream = (regime << 32) | payload
+    shift = _u64(rs + 1)  # (rs + 32) - 31
+    kept = _u32(stream >> shift)
+    rnd = _u32(stream >> (shift - 1)) & 1
+    sticky = (stream & ((jnp.uint64(1) << (shift - 1)) - 1)) != 0
+    up = (rnd != 0) & (sticky | ((kept & 1) == 1))
+    mag = kept + _u32(up)
+    # Saturation / never-to-zero, then the scale clamp.
+    mag = jnp.where(mag == 0, MINPOS, mag)
+    mag = jnp.where(mag >= jnp.uint32(0x80000000), MAXPOS, mag)
+    mag = jnp.where(scale > MAX_SCALE, MAXPOS, mag)
+    mag = jnp.where(scale < -MAX_SCALE, MINPOS, mag)
+    return jnp.where(neg, jnp.uint32(0) - mag, mag)
+
+
+def _shl64_1s(n):
+    """(2^n - 1) as uint64 for n in [0, 32]."""
+    n = _u64(n)
+    return jnp.where(n >= 64, ~jnp.uint64(0), (jnp.uint64(1) << n) - 1)
+
+
+def posit_mul(a, b):
+    """Elementwise posit multiply, one rounding."""
+    na, sa, fa = decode(a)
+    nb, sb, fb = decode(b)
+    neg = na != nb
+    scale = sa + sb
+    prod = _u64(fa) * _u64(fb)  # Q2.62
+    carry = (prod >> 63) != 0
+    scale = scale + _i32(carry)
+    sig = jnp.where(carry, prod, prod << 1)
+    out = encode(neg, scale, sig)
+    out = jnp.where(is_zero(a) | is_zero(b), ZERO, out)
+    out = jnp.where(is_nar(a) | is_nar(b), NAR, out)
+    return out
+
+
+def posit_add(a, b):
+    """Elementwise posit add, one rounding. Mirrors rust `add_unpacked`
+    in a 64-bit frame (hidden bit at 62, 31 guard bits)."""
+    a = _u32(a)
+    b = _u32(b)
+    na, sa, fa = decode(a)
+    nb, sb, fb = decode(b)
+    # Order by magnitude: (scale, frac) lexicographic.
+    a_hi = (sa > sb) | ((sa == sb) & (fa >= fb))
+    hn = jnp.where(a_hi, na, nb)
+    hs = jnp.where(a_hi, sa, sb)
+    hf = jnp.where(a_hi, fa, fb)
+    ln = jnp.where(a_hi, nb, na)
+    ls = jnp.where(a_hi, sb, sa)
+    lf = jnp.where(a_hi, fb, fa)
+    d = _u64(_u32(hs - ls))
+    hi64 = _u64(hf) << 31  # hidden at 62
+    lo_full = _u64(lf) << 31
+    lo64 = _shr64(lo_full, d)
+    # Sticky: any bit shifted out (d >= 64 -> the whole operand).
+    mask = jnp.where(
+        d >= 64,
+        ~jnp.uint64(0),
+        (jnp.uint64(1) << jnp.minimum(d, jnp.uint64(63))) - 1,
+    )
+    sticky = (lo_full & mask) != 0
+
+    same = hn == ln
+    # --- same sign path ---
+    ssum = hi64 + lo64  # <= Q2.62, bit 63 possible
+    carry = (ssum >> 63) != 0
+    s_scale = hs + _i32(carry)
+    s_sig = jnp.where(carry, ssum, ssum << 1) | _u64(sticky)
+    # --- opposite sign path ---
+    diff = hi64 - lo64 - _u64(sticky)
+    diff_safe = jnp.where(diff == 0, jnp.uint64(1), diff)  # avoid clz(0)=64
+    lz = clz64(diff_safe)
+    shift = _u32(lz) - 1  # bring top bit to 62
+    d_scale = hs - _i32(shift)
+    dnorm = diff_safe << jnp.minimum(_u64(shift), jnp.uint64(63))
+    d_sig = (dnorm << 1) | _u64(sticky)
+
+    neg = hn
+    scale = jnp.where(same, s_scale, d_scale)
+    sig = jnp.where(same, s_sig, d_sig)
+    out = encode(neg, scale, sig)
+    # Exact cancellation -> true zero.
+    out = jnp.where(~same & (diff == 0) & ~sticky, ZERO, out)
+    # Specials.
+    out = jnp.where(is_zero(a), b, out)
+    out = jnp.where(is_zero(b), jnp.where(is_zero(a), ZERO, a), out)
+    out = jnp.where(a == (jnp.uint32(0) - b), ZERO, out)
+    out = jnp.where(is_nar(a) | is_nar(b), NAR, out)
+    return out
+
+
+def posit_sub(a, b):
+    return posit_add(a, posit_neg(b))
+
+
+def posit_neg(a):
+    a = _u32(a)
+    return jnp.where(is_nar(a), NAR, jnp.uint32(0) - a)
+
+
+def posit_abs(a):
+    a = _u32(a)
+    neg = (a >> 31) != 0
+    return jnp.where(is_nar(a), NAR, jnp.where(neg, jnp.uint32(0) - a, a))
+
+
+def posit_div(a, b):
+    """Elementwise posit divide, one rounding. x/0 = NaR."""
+    na, sa, fa = decode(a)
+    nb, sb, fb = decode(b)
+    neg = na != nb
+    scale = sa - sb
+    num = _u64(fa) << 31  # Q1.62
+    den = _u64(fb)
+    q = num // den  # ratio in (1/2, 2) -> q in (2^30, 2^32)
+    rem = (num % den) != 0
+    lt1 = (q >> 31) == 0
+    scale = scale - _i32(lt1)
+    sig = jnp.where(lt1, q << 33, q << 32)
+    out = encode(neg, scale, sig | _u64(rem))
+    out = jnp.where(is_zero(a), ZERO, out)
+    out = jnp.where(is_nar(a) | is_nar(b) | is_zero(b), NAR, out)
+    return out
+
+
+def posit_sqrt(a):
+    """Elementwise posit square root, one rounding. NaR for negatives."""
+    a = _u32(a)
+    neg_in = ((a >> 31) != 0) & ~is_nar(a)
+    n, s, f = decode(jnp.where(neg_in, ONE, a))
+    del n
+    odd = (s & 1) != 0
+    scale = (s - _i32(odd)) >> 1
+    m = _u64(f) << (29 + _u64(odd))  # in [2^60, 2^62)
+    # isqrt via float seed + integer correction (exact).
+    r = jnp.sqrt(m.astype(jnp.float64)).astype(U64)
+    for _ in range(3):
+        r = jnp.where(r * r > m, r - 1, r)
+        r = jnp.where((r + 1) * (r + 1) <= m, r + 1, r)
+    inexact = r * r != m
+    sig = (r << 33) | _u64(inexact)  # r in [2^30, 2^31): hidden to bit 63
+    out = encode(jnp.zeros_like(odd), scale, sig)
+    out = jnp.where(is_zero(a), ZERO, out)
+    out = jnp.where(is_nar(a) | neg_in, NAR, out)
+    return out
+
+
+def _exp2i(k):
+    """Exact 2^k as float64 for integer k in [-1022, 1023] (bit-cast;
+    jnp.exp2 is a transcendental approximation and can be 1 ulp off)."""
+    biased = (k + 1023).astype(jnp.uint64) << 52
+    return jax.lax.bitcast_convert_type(biased, jnp.float64)
+
+
+def posit_to_f64(bits):
+    """Exact conversion to float64 (every Posit(32,2) is a binary64)."""
+    bits = _u32(bits)
+    neg, scale, frac = decode(bits)
+    m = frac.astype(jnp.float64) * _exp2i(scale - 31)
+    v = jnp.where(neg, -m, m)
+    v = jnp.where(is_zero(bits), 0.0, v)
+    return jnp.where(is_nar(bits), jnp.float64(jnp.nan), v)
+
+
+def f64_to_posit(v):
+    """Round float64 to the nearest Posit(32,2) (single rounding)."""
+    v = v.astype(jnp.float64)
+    b = jax.lax.bitcast_convert_type(v, jnp.uint64)
+    neg = (b >> 63) != 0
+    biased = _i32((b >> 52) & jnp.uint64(0x7FF))
+    mant = b & jnp.uint64((1 << 52) - 1)
+    is_nan_inf = biased == 0x7FF
+    is_zero_v = (biased == 0) & (mant == 0)
+    # Subnormals saturate to minpos; normalize enough for encode's clamp.
+    is_subn = (biased == 0) & (mant != 0)
+    scale = jnp.where(is_subn, -1000, biased - 1023)
+    sig = jnp.where(
+        is_subn,
+        jnp.uint64(1) << 63,
+        (jnp.uint64(1) << 63) | (mant << 11),
+    )
+    out = encode(neg, scale, sig)
+    out = jnp.where(is_zero_v, ZERO, out)
+    return jnp.where(is_nan_inf, NAR, out)

@@ -1,0 +1,225 @@
+"""Scalar Posit(n, es) oracle in pure Python — the correctness anchor.
+
+A third, independent implementation (after the two Rust ones and the jnp
+one): scalar, loop-based, and *exact by construction* — Python's unbounded
+integers let every intermediate be represented without guard/sticky
+machinery, and rounding happens once on the full bit stream. If this, the
+Rust engines, and the jnp kernels all agree bit-for-bit, an arithmetic bug
+would have to be replicated four times independently to slip through.
+
+Also provides `gemm_ref`, the sequentially-rounded reference GEMM the
+Pallas kernel is tested against (same ascending-k contract as DESIGN.md
+paragraph 7).
+"""
+
+from fractions import Fraction
+
+
+class PyPosit:
+    """Posit(nbits, es) scalar arithmetic on integer bit patterns."""
+
+    def __init__(self, nbits=32, es=2):
+        assert 3 <= nbits <= 64 and 0 <= es <= 4
+        self.nbits = nbits
+        self.es = es
+        self.mask = (1 << nbits) - 1
+        self.nar = 1 << (nbits - 1)
+        self.maxpos = self.nar - 1
+        self.minpos = 1
+        self.max_scale = (nbits - 2) << es
+
+    # ---- decode / encode -------------------------------------------------
+
+    def decode(self, bits):
+        """bits -> (neg, scale, frac_numerator, frac_bits) with
+        value = (-1)^neg * 2^scale * frac_num / 2^frac_bits,
+        frac_num in [2^frac_bits, 2^(frac_bits+1)). None for 0 / NaR."""
+        bits &= self.mask
+        if bits == 0 or bits == self.nar:
+            return None
+        neg = bits >> (self.nbits - 1)
+        absv = ((-bits) & self.mask) if neg else bits
+        # Regime: run of identical bits after the sign.
+        i = self.nbits - 2
+        r0 = (absv >> i) & 1
+        run = 0
+        while i >= 0 and ((absv >> i) & 1) == r0:
+            run += 1
+            i -= 1
+        k = run - 1 if r0 == 1 else -run
+        i -= 1  # terminator
+        # Exponent (missing bits read as 0).
+        e = 0
+        for _ in range(self.es):
+            e <<= 1
+            if i >= 0:
+                e |= (absv >> i) & 1
+                i -= 1
+        # Fraction: remaining i+1 bits.
+        nf = max(i + 1, 0)
+        frac_field = absv & ((1 << nf) - 1) if nf else 0
+        return (bool(neg), (k << self.es) + e, (1 << nf) | frac_field, nf)
+
+    def to_value(self, bits):
+        """Exact value as a Fraction (None -> NaR)."""
+        bits &= self.mask
+        if bits == 0:
+            return Fraction(0)
+        d = self.decode(bits)
+        if d is None:
+            return None
+        neg, scale, num, nf = d
+        v = Fraction(num, 1 << nf)
+        v = v * Fraction(2) ** scale
+        return -v if neg else v
+
+    def encode(self, neg, scale, num, nbits_num):
+        """Round (-1)^neg * 2^scale * num/2^nbits_num (num normalized:
+        2^nbits_num <= num < 2^(nbits_num+1)) to the nearest posit.
+        RNE on the encoding stream; posit saturation semantics."""
+        assert (num >> nbits_num) == 1, "significand must be normalized"
+        if scale > self.max_scale:
+            mag = self.maxpos
+        elif scale < -self.max_scale:
+            mag = self.minpos
+        else:
+            k = scale >> self.es
+            e = scale & ((1 << self.es) - 1)
+            if k >= 0:
+                regime = ((1 << (k + 1)) - 1) << 1
+                rs = k + 2
+            else:
+                regime = 1
+                rs = -k + 1
+            # Exact stream: regime | exponent | fraction (hidden dropped).
+            frac = num - (1 << nbits_num)
+            stream = (((regime << self.es) | e) << nbits_num) | frac
+            slen = rs + self.es + nbits_num
+            keep = self.nbits - 1
+            shift = slen - keep
+            if shift <= 0:
+                mag = stream << (-shift)
+            else:
+                kept = stream >> shift
+                rnd = (stream >> (shift - 1)) & 1
+                sticky = (stream & ((1 << (shift - 1)) - 1)) != 0
+                mag = kept + (rnd and (sticky or (kept & 1)))
+            if mag >= (1 << (self.nbits - 1)):
+                mag = self.maxpos
+            elif mag == 0:
+                mag = self.minpos
+        return ((-mag) & self.mask) if neg else mag
+
+    def from_value(self, v):
+        """Round an exact Fraction / int / float to the nearest posit."""
+        if isinstance(v, float):
+            if v != v or v in (float("inf"), float("-inf")):
+                return self.nar
+            v = Fraction(v)  # exact
+        else:
+            v = Fraction(v)
+        if v == 0:
+            return 0
+        neg = v < 0
+        if neg:
+            v = -v
+        # Normalize: v = m * 2^scale with m in [1, 2).
+        scale = v.numerator.bit_length() - v.denominator.bit_length()
+        if Fraction(2) ** scale > v:
+            scale -= 1
+        m = v / Fraction(2) ** scale  # in [1, 2)
+        # Represent m to full precision: num/2^nb with enough bits that the
+        # remainder folds into a final sticky (128 bits >> any posit fs).
+        nb = 128
+        scaled = m * (1 << nb)
+        num = scaled.numerator // scaled.denominator
+        if num * scaled.denominator != scaled.numerator:
+            num |= 1  # sticky
+        return self.encode(neg, scale, num, nb)
+
+    # ---- arithmetic (exact compute, round once) --------------------------
+
+    def _binop(self, a, b, f):
+        a &= self.mask
+        b &= self.mask
+        if a == self.nar or b == self.nar:
+            return self.nar
+        return f(self.to_value(a), self.to_value(b))
+
+    def add(self, a, b):
+        return self._binop(a, b, lambda x, y: self.from_value(x + y))
+
+    def sub(self, a, b):
+        return self._binop(a, b, lambda x, y: self.from_value(x - y))
+
+    def mul(self, a, b):
+        return self._binop(a, b, lambda x, y: self.from_value(x * y))
+
+    def div(self, a, b):
+        def f(x, y):
+            if y == 0:
+                return self.nar
+            return self.from_value(x / y)
+
+        return self._binop(a, b, f)
+
+    def sqrt(self, a):
+        a &= self.mask
+        if a == self.nar or a >> (self.nbits - 1):
+            return self.nar
+        if a == 0:
+            return 0
+        v = self.to_value(a)
+        # Exact-or-sticky square root of a Fraction with dyadic denominator:
+        # v = p / 2^q; sqrt = isqrt(p * 2^(2t - q)) / 2^t with t large.
+        p, q = v.numerator, v.denominator.bit_length() - 1
+        assert v.denominator == 1 << q
+        t = 200
+        m = p << (2 * t - q)
+        r = _isqrt(m)
+        exact = r * r == m
+        val = Fraction(r, 1 << t)
+        if exact:
+            return self.from_value(val)
+        # Inexact: r is the floor; encode with an explicit sticky by
+        # nudging the significand representation.
+        neg = False
+        scale = val.numerator.bit_length() - val.denominator.bit_length()
+        if Fraction(2) ** scale > val:
+            scale -= 1
+        nb = 192
+        scaled = val / Fraction(2) ** scale * (1 << nb)
+        num = scaled.numerator // scaled.denominator
+        num |= 1  # sqrt inexact -> sticky
+        return self.encode(neg, scale, num, nb)
+
+    def neg(self, a):
+        a &= self.mask
+        return a if a == self.nar else (-a) & self.mask
+
+
+def _isqrt(n):
+    import math
+
+    return math.isqrt(n)
+
+
+def gemm_ref(p, a, b, m, n, k, alpha_bits, beta_bits, c):
+    """Sequentially-rounded GEMM on bit-pattern lists (row-major here for
+    clarity; the tests transpose as needed). Mirrors the Rust/Pallas
+    contract: t = fold_l add(t, mul(a_il, b_lj)), then
+    c = add(mul(alpha, t), mul(beta, c)) with beta==0 overwriting."""
+    out = [0] * (m * n)
+    for i in range(m):
+        for j in range(n):
+            t = 0
+            for l in range(k):
+                t = p.add(t, p.mul(a[i * k + l], b[l * n + j]))
+            left = t if alpha_bits == p.from_value(1) else p.mul(alpha_bits, t)
+            if beta_bits == 0:
+                out[i * n + j] = left
+            else:
+                cb = c[i * n + j]
+                cb = cb if beta_bits == p.from_value(1) else p.mul(beta_bits, cb)
+                out[i * n + j] = p.add(left, cb)
+    return out

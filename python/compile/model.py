@@ -1,0 +1,115 @@
+"""L2: the JAX computation graphs exported as AOT artifacts.
+
+Each graph is a jitted function over posit bit-pattern arrays (uint32)
+calling the L1 kernels; `aot.py` lowers every (graph, shape) pair listed in
+`ARTIFACTS` to HLO text for the Rust runtime. Python never runs after
+`make artifacts`.
+
+Graphs:
+  * `gemm_update`  — C <- C - A@B, the trailing-matrix update the paper
+    offloads in `Rgetrf`/`Rpotrf` (alpha=-1, beta=1), via the Pallas GEMM.
+  * `gemm_plain`   — C <- A@B (alpha=1, beta=0), square/rect products.
+    Transposed operand layouts are handled like the paper's FPGA driver:
+    the host (Rust) pre-transposes, so only the NN kernel exists on the
+    accelerator (§3.1).
+  * `ew_add/mul/div/sqrt` — elementwise kernels (the paper's Table 2
+    microbenchmarks, executed on PJRT by the Rust `op-bench` command).
+  * `decode_f64` / `encode_f64` — bulk format conversion for staging.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import posit_ops as P
+from .kernels.gemm_pallas import gemm_posit_pallas
+
+
+def gemm_update(a, b, c, bm=64, bn=64):
+    """Trailing update: C - A@B (posit bits)."""
+    return gemm_posit_pallas(a, b, c, bm=bm, bn=bn, alpha=-1, beta=1)
+
+
+def gemm_plain(a, b, bm=64, bn=64):
+    """Plain product: A@B (posit bits)."""
+    m, _ = a.shape
+    _, n = b.shape
+    c = jnp.zeros((m, n), jnp.uint32)
+    return gemm_posit_pallas(a, b, c, bm=bm, bn=bn, alpha=1, beta=0)
+
+
+def ew_add(a, b):
+    return P.posit_add(a, b)
+
+
+def ew_mul(a, b):
+    return P.posit_mul(a, b)
+
+
+def ew_div(a, b):
+    return P.posit_div(a, b)
+
+
+def ew_sqrt(a):
+    return P.posit_sqrt(a)
+
+
+def decode_f64(a):
+    return P.posit_to_f64(a)
+
+
+def encode_f64(v):
+    return P.f64_to_posit(v)
+
+
+def _u32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def _f64(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+# Tile shapes the Rust coordinator dispatches. (m, k, n) for GEMMs: the
+# k dimension is the panel width `nb` of the blocked factorizations plus
+# square tiles for bulk products; see rust/src/coordinator.
+GEMM_UPDATE_SHAPES = [
+    (64, 64, 64),
+    (128, 64, 128),
+    (128, 128, 128),
+    (256, 64, 256),
+]
+GEMM_PLAIN_SHAPES = [
+    (64, 64, 64),
+    (128, 128, 128),
+    (256, 256, 256),
+]
+EW_SIZES = [65536]
+
+
+def artifacts():
+    """(name, jitted fn, example args) for every artifact to export."""
+    out = []
+    for (m, k, n) in GEMM_UPDATE_SHAPES:
+        out.append(
+            (
+                f"gemm_update_{m}x{k}x{n}",
+                lambda a, b, c: gemm_update(a, b, c),
+                (_u32((m, k)), _u32((k, n)), _u32((m, n))),
+            )
+        )
+    for (m, k, n) in GEMM_PLAIN_SHAPES:
+        out.append(
+            (
+                f"gemm_plain_{m}x{k}x{n}",
+                lambda a, b: gemm_plain(a, b),
+                (_u32((m, k)), _u32((k, n))),
+            )
+        )
+    for s in EW_SIZES:
+        out.append((f"ew_add_{s}", ew_add, (_u32((s,)), _u32((s,)))))
+        out.append((f"ew_mul_{s}", ew_mul, (_u32((s,)), _u32((s,)))))
+        out.append((f"ew_div_{s}", ew_div, (_u32((s,)), _u32((s,)))))
+        out.append((f"ew_sqrt_{s}", ew_sqrt, (_u32((s,)),)))
+        out.append((f"decode_f64_{s}", decode_f64, (_u32((s,)),)))
+        out.append((f"encode_f64_{s}", encode_f64, (_f64((s,)),)))
+    return out

@@ -1,0 +1,127 @@
+"""Conversion kernels, oracle self-consistency, and edge-case sweeps.
+
+Complements test_posit_ops.py: exercises the decode/encode (f64) kernels
+the Rust runtime stages data through, the PyPosit oracle's internal
+invariants (so the oracle itself is cross-braced, not just trusted), and
+the known-subtle boundary patterns of the format.
+"""
+
+import sys
+from fractions import Fraction
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import posit_ops as P
+from compile.kernels.ref import PyPosit
+
+ORACLE = PyPosit(32, 2)
+u32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(max_examples=300, deadline=None)
+@given(bits=u32)
+def test_decode_f64_is_exact(bits):
+    got = float(np.asarray(P.posit_to_f64(jnp.uint32(bits))))
+    v = ORACLE.to_value(bits)
+    if v is None:
+        assert got != got  # NaR -> NaN
+    else:
+        assert got == float(v)
+        # ...and exactly: the Fraction round-trips.
+        assert Fraction(got) == v
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    v=st.one_of(
+        st.floats(allow_nan=False, allow_infinity=False, width=64),
+        st.floats(min_value=-4.0, max_value=4.0),
+        st.sampled_from([0.0, -0.0, 1e300, -1e300, 5e-324, 2.0**120, 2.0**-120]),
+    )
+)
+def test_encode_f64_matches_oracle(v):
+    got = int(np.asarray(P.f64_to_posit(jnp.float64(v))))
+    assert got == ORACLE.from_value(v)
+
+
+def test_oracle_value_encode_involution():
+    """from_value(to_value(bits)) == bits for a dense sample — pins the
+    oracle against itself (decode and encode are written independently)."""
+    rng = np.random.default_rng(5)
+    for bits in list(rng.integers(0, 2**32, 3000)) + [0, 1, 2**31 - 1, 2**31 + 1]:
+        bits = int(bits)
+        v = ORACLE.to_value(bits)
+        if v is None:
+            continue
+        assert ORACLE.from_value(v) == bits, hex(bits)
+
+
+def test_oracle_rounding_boundaries():
+    """Hand-derived boundary cases of posit stream-RNE (see the Rust and
+    pytest 'minpos' discussions)."""
+    # minpos + minpos = 2^-119 rounds DOWN to minpos (cut bit = e-high = 0)
+    assert ORACLE.add(1, 1) == 1
+    # 2^-116 + 2^-116 = 2^-115: exact encoding-space tie -> even (stays 2)
+    assert ORACLE.add(2, 2) == 2
+    # near 1.0: ulp = 2^-27, plain RNE ties to even
+    one = 0x40000000
+    assert ORACLE.from_value(Fraction(1) + Fraction(1, 2**28)) == one
+    assert ORACLE.from_value(Fraction(1) + Fraction(3, 2**28)) == one + 2
+    # maxpos arithmetic saturates, never NaR
+    assert ORACLE.mul(0x7FFFFFFF, 0x7FFFFFFF) == 0x7FFFFFFF
+    assert ORACLE.div(one, 1) == 0x7FFFFFFF  # 1/minpos = 2^120 = maxpos
+
+
+@settings(max_examples=150, deadline=None)
+@given(a=u32)
+def test_jnp_abs_neg_consistency(a):
+    neg = int(np.asarray(P.posit_neg(jnp.uint32(a))))
+    ab = int(np.asarray(P.posit_abs(jnp.uint32(a))))
+    if a == 0x80000000:
+        assert neg == 0x80000000 and ab == 0x80000000
+    else:
+        assert (neg + a) % 2**32 == 0 or a == 0
+        va = ORACLE.to_value(a)
+        assert ORACLE.to_value(ab) == abs(va)
+
+
+def test_vectorized_ops_match_scalar_loop():
+    """The jnp kernels must be elementwise (no cross-lane leakage)."""
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    b = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    whole = np.asarray(P.posit_add(jnp.asarray(a), jnp.asarray(b)))
+    for i in [0, 1, 255, 511]:
+        lane = int(np.asarray(P.posit_add(jnp.uint32(a[i]), jnp.uint32(b[i]))))
+        assert whole[i] == lane
+
+
+def test_small_format_oracle_agrees_with_posit8_exhaustive():
+    """PyPosit at (8,2): every add against evaluating exactly + rounding
+    — an independent closure check of the generic oracle machinery."""
+    py8 = PyPosit(8, 2)
+    for a in range(0, 256, 3):
+        va = py8.to_value(a)
+        for b in range(0, 256, 7):
+            got = py8.add(a, b)
+            if a == 0x80 or b == 0x80:
+                assert got == 0x80
+                continue
+            want = py8.from_value(va + py8.to_value(b))
+            assert got == want, (hex(a), hex(b))
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_oracle_parametrized_es_roundtrip(es):
+    py = PyPosit(12, es)
+    for bits in range(0, 1 << 12):
+        if bits == py.nar:
+            continue
+        v = py.to_value(bits)
+        assert py.from_value(v) == bits, (es, hex(bits))

@@ -1,0 +1,127 @@
+"""L1/L2 GEMM correctness: Pallas kernel vs jnp reference vs scalar oracle.
+
+Hypothesis sweeps shapes, block sizes and input magnitudes (the paper's
+sigma axis); the Pallas blocking must be invisible: results bit-identical
+for every (bm, bn), and equal to the sequentially-rounded scalar oracle.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels.gemm_pallas import gemm_posit_pallas, gemm_posit_jnp
+from compile.kernels.ref import PyPosit, gemm_ref
+from compile import model
+
+ORACLE = PyPosit(32, 2)
+
+
+def rand_posits(rng, shape, sigma):
+    vals = rng.normal(0, sigma, int(np.prod(shape)))
+    bits = np.array([ORACLE.from_value(float(v)) for v in vals], dtype=np.uint32)
+    return bits.reshape(shape)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    dims=st.tuples(
+        st.integers(1, 3), st.integers(1, 3), st.integers(1, 12)
+    ),
+    blocks=st.sampled_from([(2, 2), (2, 4), (4, 2), (4, 4)]),
+    sigma=st.sampled_from([1e-2, 1.0, 1e2, 1e6]),
+    seed=st.integers(0, 2**31),
+    update=st.booleans(),
+)
+def test_pallas_matches_scalar_oracle(dims, blocks, sigma, seed, update):
+    bm, bn = blocks
+    m, n, k = dims[0] * bm, dims[1] * bn, dims[2]
+    rng = np.random.default_rng(seed)
+    a = rand_posits(rng, (m, k), sigma)
+    b = rand_posits(rng, (k, n), sigma)
+    c = rand_posits(rng, (m, n), sigma)
+    alpha, beta = (-1, 1) if update else (1, 0)
+    got = np.asarray(
+        gemm_posit_pallas(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), bm=bm, bn=bn,
+            alpha=alpha, beta=beta,
+        )
+    )
+    want = gemm_ref(
+        ORACLE,
+        a.flatten().tolist(),
+        b.flatten().tolist(),
+        m,
+        n,
+        k,
+        ORACLE.from_value(alpha),
+        ORACLE.from_value(beta) if beta else 0,
+        c.flatten().tolist() if beta else None,
+    )
+    assert got.flatten().tolist() == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mnk=st.tuples(st.integers(4, 16), st.integers(4, 16), st.integers(1, 16)),
+    sigma=st.sampled_from([1.0, 1e4]),
+    seed=st.integers(0, 2**31),
+)
+def test_blocking_is_invisible(mnk, sigma, seed):
+    """Different (bm, bn) choices must be bit-identical (same rounding
+    sequence), and equal to the non-Pallas jnp reference."""
+    m, n, k = mnk
+    m, n = m - m % 4 + 4, n - n % 4 + 4  # multiples of 4
+    rng = np.random.default_rng(seed)
+    a, b = rand_posits(rng, (m, k), sigma), rand_posits(rng, (k, n), sigma)
+    c = np.zeros((m, n), dtype=np.uint32)
+    ja, jb, jc = jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)
+    ref = np.asarray(gemm_posit_jnp(ja, jb, jc, alpha=1, beta=0))
+    for bm, bn in [(2, 2), (4, 4), (m, n)]:
+        if m % bm or n % bn:
+            continue
+        got = np.asarray(gemm_posit_pallas(ja, jb, jc, bm=bm, bn=bn))
+        assert np.array_equal(got, ref), (bm, bn)
+
+
+def test_nar_poisons_only_its_row_col():
+    m = n = k = 4
+    rng = np.random.default_rng(3)
+    a = rand_posits(rng, (m, k), 1.0)
+    b = rand_posits(rng, (k, n), 1.0)
+    a[1, 2] = 0x80000000  # NaR
+    c = np.zeros((m, n), dtype=np.uint32)
+    got = np.asarray(gemm_posit_pallas(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), bm=2, bn=2))
+    assert all(got[1, j] == 0x80000000 for j in range(n)), "row 1 is NaR"
+    assert all(got[i, j] != 0x80000000 for i in range(m) if i != 1 for j in range(n))
+
+
+def test_artifact_list_is_consistent():
+    names = [name for name, _, _ in model.artifacts()]
+    assert len(names) == len(set(names))
+    assert any("gemm_update" in n for n in names)
+    assert any("ew_div" in n for n in names)
+
+
+def test_artifacts_on_disk_match_manifest():
+    import json
+
+    art = Path(__file__).resolve().parents[2] / "artifacts"
+    man = art / "manifest.json"
+    if not man.exists():
+        import pytest
+
+        pytest.skip("run `make artifacts` first")
+    manifest = json.loads(man.read_text())
+    for name, meta in manifest.items():
+        f = art / meta["file"]
+        assert f.exists(), name
+        text = f.read_text()
+        assert "ENTRY" in text, f"{name} is not HLO text"
+        import hashlib
+
+        assert hashlib.sha256(text.encode()).hexdigest()[:16] == meta["sha256"], name

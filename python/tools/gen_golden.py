@@ -1,0 +1,43 @@
+"""Regenerate testdata/golden_posit32.txt from the PyPosit scalar oracle.
+
+The file is the cross-language arithmetic contract: pytest checks the jnp
+kernels against it and `cargo test` checks both Rust implementations
+against it. Regenerate only when extending coverage (`make golden`).
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from compile.kernels.ref import PyPosit  # noqa: E402
+
+
+def main():
+    py = PyPosit()
+    rng = np.random.default_rng(1234)
+    lines = ["# golden Posit(32,2) vectors: op a_hex b_hex result_hex (b=0 for sqrt)"]
+    specials = [
+        0x00000000, 0x80000000, 0x7FFFFFFF, 0x00000001, 0x40000000,
+        0xC0000000, 0xFFFFFFFF, 0x80000001, 0x3FFFFFFF, 0x40000001,
+    ]
+    pats = list(specials)
+    for sigma in [1.0, 1e-2, 1e2, 1e6, 1e-20, 1e20]:
+        pats += [py.from_value(float(v)) for v in rng.normal(0, sigma, 120)]
+    pats += [int(v) for v in rng.integers(0, 2**32, 240)]
+    rng.shuffle(pats)
+    n = len(pats) // 2
+    for i in range(n):
+        a, b = int(pats[2 * i]), int(pats[2 * i + 1])
+        lines.append(f"add {a:08x} {b:08x} {py.add(a, b):08x}")
+        lines.append(f"mul {a:08x} {b:08x} {py.mul(a, b):08x}")
+        lines.append(f"div {a:08x} {b:08x} {py.div(a, b):08x}")
+        lines.append(f"sqrt {a:08x} 00000000 {py.sqrt(a):08x}")
+    out = Path(__file__).resolve().parents[2] / "testdata" / "golden_posit32.txt"
+    out.write_text("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} lines to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+//! `cargo bench --bench hot_paths` — statistical microbenchmarks of every
+//! layer's hot path. These are the numbers the §Perf optimization loop in
+//! EXPERIMENTS.md tracks:
+//!
+//! * scalar posit ops: branchless (`posit::ops`) vs SoftPosit-style
+//!   (`posit::generic`), per input range;
+//! * conversions and the quire;
+//! * GEMM: naive vs blocked vs parallel native, and the PJRT/Pallas
+//!   artifact path (per 128x64x128 tile);
+//! * blocked LU/Cholesky end to end.
+
+use posit_accel::blas::{self, Matrix, Trans};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use posit_accel::posit::counting::{sample_in_range, PAPER_RANGES};
+use posit_accel::posit::generic::{NoTrace, PositSpec};
+use posit_accel::posit::{self, Posit32};
+use posit_accel::rng::Pcg64;
+use posit_accel::runtime::Runtime;
+use posit_accel::util::bench_stats;
+
+struct Bench {
+    rows: Vec<(String, f64, String)>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Bench { rows: vec![] }
+    }
+    /// Record `name` at `per`-unit granularity (ns/op or Mflops).
+    fn add(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<48} {value:>12.2} {unit}");
+        self.rows.push((name.to_string(), value, unit.to_string()));
+    }
+    fn save(&self) {
+        let mut s = String::from("benchmark,value,unit\n");
+        for (n, v, u) in &self.rows {
+            s.push_str(&format!("{n},{v},{u}\n"));
+        }
+        std::fs::create_dir_all("results").ok();
+        std::fs::write("results/hot_paths.csv", s).ok();
+        println!("[saved results/hot_paths.csv]");
+    }
+}
+
+fn bench_scalar_ops(b: &mut Bench) {
+    let spec = PositSpec::P32;
+    let s = 65_536usize;
+    for (ri, range) in [0usize, 1].into_iter().zip([PAPER_RANGES[0], PAPER_RANGES[1]]) {
+        let mut rng = Pcg64::seed(1000 + ri as u64);
+        let xs: Vec<u32> = (0..s).map(|_| sample_in_range(spec, range, &mut rng)).collect();
+        let ys: Vec<u32> = (0..s).map(|_| sample_in_range(spec, range, &mut rng)).collect();
+        let mut out = vec![0u32; s];
+        for (name, f) in [
+            ("add", posit::add as fn(u32, u32) -> u32),
+            ("mul", posit::mul),
+            ("div", posit::div),
+        ] {
+            let st = bench_stats(7, || {
+                for i in 0..s {
+                    out[i] = f(xs[i], ys[i]);
+                }
+                std::hint::black_box(&mut out);
+            });
+            b.add(
+                &format!("posit32 {name} branchless [{}]", range.name),
+                st.min * 1e9 / s as f64,
+                "ns/op",
+            );
+        }
+        // Branchy engine for contrast (the GPU-modelled implementation).
+        let mut t = NoTrace;
+        let st = bench_stats(5, || {
+            for i in 0..s {
+                out[i] = spec.add(xs[i], ys[i], &mut t);
+            }
+            std::hint::black_box(&mut out);
+        });
+        b.add(
+            &format!("posit32 add softposit-style [{}]", range.name),
+            st.min * 1e9 / s as f64,
+            "ns/op",
+        );
+        let st = bench_stats(7, || {
+            for i in 0..s {
+                out[i] = posit::sqrt(xs[i]);
+            }
+            std::hint::black_box(&mut out);
+        });
+        b.add(
+            &format!("posit32 sqrt branchless [{}]", range.name),
+            st.min * 1e9 / s as f64,
+            "ns/op",
+        );
+    }
+    // Conversions + quire.
+    let mut rng = Pcg64::seed(7);
+    let vals: Vec<f64> = (0..s).map(|_| rng.normal()).collect();
+    let mut bits = vec![0u32; s];
+    let st = bench_stats(7, || {
+        for i in 0..s {
+            bits[i] = posit::convert::f64_to_posit32(vals[i]);
+        }
+        std::hint::black_box(&mut bits);
+    });
+    b.add("f64 -> posit32", st.min * 1e9 / s as f64, "ns/op");
+    let mut back = vec![0f64; s];
+    let st = bench_stats(7, || {
+        for i in 0..s {
+            back[i] = posit::convert::posit32_to_f64(bits[i]);
+        }
+        std::hint::black_box(&mut back);
+    });
+    b.add("posit32 -> f64", st.min * 1e9 / s as f64, "ns/op");
+    let xp: Vec<Posit32> = bits.iter().map(|&v| Posit32(v)).collect();
+    let st = bench_stats(5, || {
+        std::hint::black_box(blas::dot(s, &xp, 1, &xp, 1));
+    });
+    b.add("dot sequential (2 ops/el)", st.min * 1e9 / s as f64, "ns/el");
+    let st = bench_stats(5, || {
+        std::hint::black_box(blas::dot_quire(s, &xp, 1, &xp, 1));
+    });
+    b.add("dot quire (exact)", st.min * 1e9 / s as f64, "ns/el");
+}
+
+fn bench_gemm(b: &mut Bench) {
+    let n = 192usize;
+    let mut rng = Pcg64::seed(11);
+    let a = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+    let bb = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+    let mut c = Matrix::<Posit32>::zeros(n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+    let st = bench_stats(3, || {
+        blas::gemm_naive(
+            Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bb.data,
+            n, Posit32::ZERO, &mut c.data, n,
+        )
+    });
+    b.add("gemm native naive 192^3", flops / st.min / 1e6, "Mflops");
+    let st = bench_stats(3, || {
+        blas::gemm(
+            Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bb.data,
+            n, Posit32::ZERO, &mut c.data, n,
+        )
+    });
+    b.add("gemm native blocked 192^3", flops / st.min / 1e6, "Mflops");
+    let threads = blas::default_threads();
+    let st = bench_stats(3, || {
+        blas::gemm_parallel(
+            threads, Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n,
+            &bb.data, n, Posit32::ZERO, &mut c.data, n,
+        )
+    });
+    b.add(
+        &format!("gemm native parallel x{threads} 192^3"),
+        flops / st.min / 1e6,
+        "Mflops",
+    );
+    // f32/f64 baselines through the same generic kernel (format cost).
+    let af: Matrix<f32> = a.cast();
+    let bf: Matrix<f32> = bb.cast();
+    let mut cf = Matrix::<f32>::zeros(n, n);
+    let st = bench_stats(3, || {
+        blas::gemm(
+            Trans::No, Trans::No, n, n, n, 1.0f32, &af.data, n, &bf.data, n,
+            0.0, &mut cf.data, n,
+        )
+    });
+    b.add("gemm binary32 blocked 192^3", flops / st.min / 1e6, "Mflops");
+
+    // PJRT tile path (the Pallas artifact).
+    if Runtime::default_dir().is_dir() {
+        if let Ok(be) = PjrtBackend::new(Runtime::default_dir()) {
+            let (m, k, nn) = (128usize, 64usize, 128usize);
+            let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+            let bm = Matrix::<Posit32>::random_normal(k, nn, 1.0, &mut rng);
+            let mut cm = Matrix::<Posit32>::zeros(m, nn);
+            let tile_flops = 2.0 * (m * k * nn) as f64;
+            let st = bench_stats(3, || {
+                be.gemm_update(m, k, nn, &a.data, m, &bm.data, k, &mut cm.data, m)
+                    .unwrap()
+            });
+            b.add("gemm_update pjrt 128x64x128 tile", tile_flops / st.min / 1e6, "Mflops");
+        }
+    }
+}
+
+fn bench_decompositions(b: &mut Bench) {
+    use posit_accel::coordinator::drivers::{getrf_offload, lu_ops};
+    let n = 256usize;
+    let mut rng = Pcg64::seed(21);
+    let a0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+    let be = NativeBackend::new(blas::default_threads());
+    let st = bench_stats(3, || {
+        let mut a = a0.clone();
+        let mut ipiv = vec![0usize; n];
+        getrf_offload(n, n, &mut a.data, n, &mut ipiv, 64, &be).unwrap();
+    });
+    b.add("LU offload native 256", lu_ops(n) / st.min / 1e6, "Mflops");
+    let spd = posit_accel::experiments::matgen::spd_f64(n, 1.0, &mut rng);
+    let ap: Matrix<Posit32> = spd.cast();
+    let st = bench_stats(3, || {
+        let mut l = ap.clone();
+        posit_accel::coordinator::drivers::potrf_offload(n, &mut l.data, n, 64, &be).unwrap();
+    });
+    b.add(
+        "Cholesky offload native 256",
+        posit_accel::coordinator::drivers::chol_ops(n) / st.min / 1e6,
+        "Mflops",
+    );
+}
+
+fn main() {
+    println!("hot_paths microbenchmarks (min of several reps)\n");
+    let mut b = Bench::new();
+    bench_scalar_ops(&mut b);
+    bench_gemm(&mut b);
+    bench_decompositions(&mut b);
+    b.save();
+}

@@ -1,0 +1,45 @@
+//! `cargo bench --bench paper_tables` — regenerates every table and
+//! figure of the paper's evaluation section, in order, timing each
+//! generator. (criterion is unavailable offline; this is a plain
+//! `harness = false` driver — see also `benches/hot_paths.rs` for the
+//! statistical microbenchmarks.)
+//!
+//! Output doubles as the repo's reproduction artifact: each block prints
+//! model/measured values next to the paper's numbers and saves CSV under
+//! results/. Set POSIT_ACCEL_FULL=1 for the full problem sizes.
+
+use std::time::Instant;
+
+fn section(name: &str, f: impl FnOnce()) {
+    println!("\n##### {name} #####");
+    let t0 = Instant::now();
+    f();
+    println!("##### {name}: {:.2}s #####", t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("POSIT_ACCEL_FULL").is_none();
+    println!(
+        "paper_tables: regenerating the evaluation ({} mode)",
+        if quick { "quick" } else { "full" }
+    );
+    use posit_accel::experiments as ex;
+    section("Table 1 (FPGA synthesis)", ex::table1::run);
+    section("Table 2 (op times by range)", || ex::table2_3::run_table2(quick));
+    section("Table 3 (Add instruction profile)", ex::table2_3::run_table3);
+    section("Table 4 (GPU specs)", ex::print_table4);
+    section("Fig 2 (Agilex GEMM vs N)", ex::fig2::run);
+    section("Fig 3 (V100 GEMM vs sigma)", || ex::fig3_4::run_fig3(quick));
+    section("Fig 4 (five GPUs)", || ex::fig3_4::run_fig4(quick));
+    section("Fig 5 (power caps)", ex::fig5::run);
+    section("Fig 6 (trailing update)", ex::fig6::run);
+    section("Fig 7 (numerical error, MEASURED)", || ex::fig7::run(quick));
+    section("Fig 8 + measured offload", || ex::fig8_table5::run_fig8(quick));
+    section("Table 5 (elapsed at N=8000)", ex::fig8_table5::run_table5);
+    section("Table 6 (power efficiency)", ex::table6::run);
+    section("Extensions (format sweep + quire refinement)", || {
+        ex::extensions::run(quick)
+    });
+    println!("\nall tables and figures regenerated; CSVs in results/");
+}

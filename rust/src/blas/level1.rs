@@ -1,0 +1,153 @@
+//! Level-1 BLAS: vector-vector operations with strides, MPLAPACK `R*`
+//! semantics (one rounding per scalar operation, fixed evaluation order).
+
+use super::Scalar;
+use crate::posit::{quire::Quire, Posit32};
+
+/// Sequentially rounded dot product `Σ x_i · y_i` (ascending i) — the
+/// accumulation semantics of the paper's GEMM kernels.
+pub fn dot<T: Scalar>(n: usize, x: &[T], incx: usize, y: &[T], incy: usize) -> T {
+    let mut acc = T::zero();
+    for i in 0..n {
+        acc = acc.mac(x[i * incx], y[i * incy]);
+    }
+    acc
+}
+
+/// Fused (quire) dot product for Posit32: exact accumulation, one rounding
+/// total. The accuracy ablation of DESIGN.md §6.
+pub fn dot_quire(n: usize, x: &[Posit32], incx: usize, y: &[Posit32], incy: usize) -> Posit32 {
+    let mut q = Quire::new();
+    for i in 0..n {
+        q.add_product(x[i * incx].0, y[i * incy].0);
+    }
+    Posit32(q.to_posit_bits())
+}
+
+/// `y += alpha * x` (per-element: two roundings like MPLAPACK's Raxpy).
+pub fn axpy<T: Scalar>(n: usize, alpha: T, x: &[T], incx: usize, y: &mut [T], incy: usize) {
+    if alpha.is_zero() {
+        return;
+    }
+    for i in 0..n {
+        y[i * incy] = y[i * incy].add(alpha.mul(x[i * incx]));
+    }
+}
+
+/// `x *= alpha`.
+pub fn scal<T: Scalar>(n: usize, alpha: T, x: &mut [T], incx: usize) {
+    for i in 0..n {
+        x[i * incx] = x[i * incx].mul(alpha);
+    }
+}
+
+/// Index of the element of maximum magnitude (first on ties) — the pivot
+/// search of `getrf`. Exact comparison (no rounding involved).
+pub fn iamax<T: Scalar>(n: usize, x: &[T], incx: usize) -> usize {
+    let mut best = 0;
+    for i in 1..n {
+        if x[i * incx].abs_gt(x[best * incx]) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// `Σ |x_i|`, sequentially rounded.
+pub fn asum<T: Scalar>(n: usize, x: &[T], incx: usize) -> T {
+    let mut acc = T::zero();
+    for i in 0..n {
+        acc = acc.add(x[i * incx].abs());
+    }
+    acc
+}
+
+/// Euclidean norm with scaling against overflow (LAPACK dnrm2-style): the
+/// running scale keeps intermediate squares representable, which matters
+/// for binary32 and for posits far from the golden zone.
+pub fn nrm2<T: Scalar>(n: usize, x: &[T], incx: usize) -> T {
+    let mut scale = T::zero();
+    let mut ssq = T::one();
+    for i in 0..n {
+        let xi = x[i * incx].abs();
+        if xi.is_zero() {
+            continue;
+        }
+        if scale.abs_gt(xi) || scale == xi {
+            let r = xi.div(scale);
+            ssq = ssq.add(r.mul(r));
+        } else {
+            let r = scale.div(xi);
+            ssq = T::one().add(ssq.mul(r.mul(r)));
+            scale = xi;
+        }
+    }
+    scale.mul(ssq.sqrt())
+}
+
+/// Swap rows `r1` and `r2` of an `ld`-strided column-major matrix with
+/// `ncol` columns (the kernel of `laswp`).
+pub fn swap_rows<T: Scalar>(a: &mut [T], ld: usize, ncol: usize, r1: usize, r2: usize) {
+    if r1 == r2 {
+        return;
+    }
+    for j in 0..ncol {
+        a.swap(r1 + j * ld, r2 + j * ld);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::Posit32;
+
+    fn pv(vals: &[f64]) -> Vec<Posit32> {
+        vals.iter().map(|&v| Posit32::from_f64(v)).collect()
+    }
+
+    #[test]
+    fn dot_exact_small() {
+        let x = pv(&[1.0, 2.0, 3.0]);
+        let y = pv(&[4.0, 5.0, 6.0]);
+        assert_eq!(dot(3, &x, 1, &y, 1).to_f64(), 32.0);
+        assert_eq!(dot_quire(3, &x, 1, &y, 1).to_f64(), 32.0);
+    }
+
+    #[test]
+    fn dot_order_matters_for_posits() {
+        // Sequential rounding is order-sensitive; the quire is not.
+        let x = pv(&[1e12, 1.0, -1e12]);
+        let y = pv(&[1.0, 1.0, 1.0]);
+        let seq = dot(3, &x, 1, &y, 1);
+        let fused = dot_quire(3, &x, 1, &y, 1);
+        assert_eq!(seq.to_f64(), 0.0); // the 1.0 was absorbed then cancelled
+        assert_eq!(fused.to_f64(), 1.0); // quire keeps it
+    }
+
+    #[test]
+    fn iamax_finds_pivot() {
+        let x = pv(&[0.5, -9.0, 3.0, 9.0]);
+        assert_eq!(iamax(4, &x, 1), 1); // first of the tied |9| wins
+        let y = [1.0f32, -0.5, 0.25];
+        assert_eq!(iamax(3, &y, 1), 0);
+    }
+
+    #[test]
+    fn nrm2_is_overflow_safe_in_f32() {
+        // Naive sum of squares would overflow binary32.
+        let x = [1e20f32, 1e20];
+        let n = nrm2(2, &x, 1);
+        assert!((n as f64 - 2f64.sqrt() * 1e20).abs() / 1e20 < 1e-6);
+    }
+
+    #[test]
+    fn axpy_scal_strided() {
+        let mut y = vec![1.0f64; 6];
+        let x = vec![2.0f64; 3];
+        axpy(3, 10.0, &x, 1, &mut y, 2);
+        assert_eq!(y, vec![21.0, 1.0, 21.0, 1.0, 21.0, 1.0]);
+        scal(3, 0.5, &mut y, 2);
+        assert_eq!(y[0], 10.5);
+        assert_eq!(y[1], 1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Level-2 BLAS: matrix-vector operations (MPLAPACK `R*` semantics —
+//! fixed evaluation order, one rounding per scalar operation).
+//!
+//! Used by the unblocked factorization kernels and the iterative
+//! refinement solver; also part of making the library a complete BLAS
+//! substrate rather than a GEMM-only demo.
+
+use super::gemm::Trans;
+use super::Scalar;
+
+/// `y = alpha * op(A) x + beta * y` (GEMV). A is m×n column-major.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv<T: Scalar>(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    x: &[T],
+    incx: usize,
+    beta: T,
+    y: &mut [T],
+    incy: usize,
+) {
+    let (rows, cols) = match trans {
+        Trans::No => (m, n),
+        Trans::Yes => (n, m),
+    };
+    for i in 0..rows {
+        let mut t = T::zero();
+        for l in 0..cols {
+            let av = match trans {
+                Trans::No => a[i + l * lda],
+                Trans::Yes => a[l + i * lda],
+            };
+            t = t.mac(av, x[l * incx]);
+        }
+        let yi = &mut y[i * incy];
+        *yi = super::gemm::combine(alpha, t, beta, *yi);
+    }
+}
+
+/// Rank-1 update `A += alpha * x * y^T` (GER).
+#[allow(clippy::too_many_arguments)]
+pub fn ger<T: Scalar>(
+    m: usize,
+    n: usize,
+    alpha: T,
+    x: &[T],
+    incx: usize,
+    y: &[T],
+    incy: usize,
+    a: &mut [T],
+    lda: usize,
+) {
+    for j in 0..n {
+        let ayj = alpha.mul(y[j * incy]);
+        if ayj.is_zero() {
+            continue;
+        }
+        for i in 0..m {
+            a[i + j * lda] = a[i + j * lda].add(x[i * incx].mul(ayj));
+        }
+    }
+}
+
+/// Triangular solve `op(A) x = b` for a single vector (TRSV), in place.
+pub fn trsv<T: Scalar>(
+    uplo: super::Uplo,
+    trans: Trans,
+    diag: super::Diag,
+    n: usize,
+    a: &[T],
+    lda: usize,
+    x: &mut [T],
+    incx: usize,
+) {
+    // Delegate to TRSM with one RHS held at stride 1; handle stride by
+    // gathering (level-2 calls in this codebase are incx == 1 in practice).
+    if incx == 1 {
+        super::trsm(super::Side::Left, uplo, trans, diag, n, 1, T::one(), a, lda, x, n);
+    } else {
+        let mut tmp: Vec<T> = (0..n).map(|i| x[i * incx]).collect();
+        super::trsm(
+            super::Side::Left,
+            uplo,
+            trans,
+            diag,
+            n,
+            1,
+            T::one(),
+            a,
+            lda,
+            &mut tmp,
+            n,
+        );
+        for (i, v) in tmp.into_iter().enumerate() {
+            x[i * incx] = v;
+        }
+    }
+}
+
+/// Symmetric matrix-vector product using only the lower triangle
+/// (SYMV, lower): `y = alpha * A x + beta * y`.
+#[allow(clippy::too_many_arguments)]
+pub fn symv_lower<T: Scalar>(
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    x: &[T],
+    beta: T,
+    y: &mut [T],
+) {
+    for i in 0..n {
+        let mut t = T::zero();
+        for l in 0..n {
+            // a(i,l) with only the lower triangle stored.
+            let av = if i >= l { a[i + l * lda] } else { a[l + i * lda] };
+            t = t.mac(av, x[l]);
+        }
+        y[i] = super::gemm::combine(alpha, t, beta, y[i]);
+    }
+}
+
+/// Symmetric rank-1 update of the lower triangle (SYR, lower):
+/// `A += alpha * x x^T`.
+pub fn syr_lower<T: Scalar>(n: usize, alpha: T, x: &[T], a: &mut [T], lda: usize) {
+    for j in 0..n {
+        let axj = alpha.mul(x[j]);
+        if axj.is_zero() {
+            continue;
+        }
+        for i in j..n {
+            a[i + j * lda] = a[i + j * lda].add(x[i].mul(axj));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Diag, Matrix, Uplo};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn gemv_matches_gemm_bitwise_posit() {
+        let (m, n) = (13, 9);
+        let mut rng = Pcg64::seed(61);
+        let a = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+        let x: Vec<Posit32> = (0..n).map(|_| Posit32::from_f64(rng.normal())).collect();
+        let y0: Vec<Posit32> = (0..m).map(|_| Posit32::from_f64(rng.normal())).collect();
+        let alpha = Posit32::from_f64(-1.0);
+        let mut y1 = y0.clone();
+        gemv(Trans::No, m, n, alpha, &a.data, m, &x, 1, Posit32::ONE, &mut y1, 1);
+        let mut y2 = y0.clone();
+        gemm(
+            Trans::No, Trans::No, m, 1, n, alpha, &a.data, m, &x, n,
+            Posit32::ONE, &mut y2, m,
+        );
+        assert_eq!(y1, y2);
+        // Transposed variant vs explicit transpose.
+        let at = a.transposed();
+        let xm: Vec<Posit32> = (0..m).map(|_| Posit32::from_f64(rng.normal())).collect();
+        let mut z1 = vec![Posit32::ZERO; n];
+        let mut z2 = vec![Posit32::ZERO; n];
+        gemv(Trans::Yes, m, n, Posit32::ONE, &a.data, m, &xm, 1, Posit32::ZERO, &mut z1, 1);
+        gemv(Trans::No, n, m, Posit32::ONE, &at.data, n, &xm, 1, Posit32::ZERO, &mut z2, 1);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn ger_builds_outer_product() {
+        let (m, n) = (4, 3);
+        let mut a = Matrix::<f64>::zeros(m, n);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![10.0, 20.0, 30.0];
+        ger(m, n, 0.5, &x, 1, &y, 1, &mut a.data, m);
+        for j in 0..n {
+            for i in 0..m {
+                assert_eq!(a[(i, j)], 0.5 * x[i] * y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn trsv_solves_strided() {
+        let n = 6;
+        let mut rng = Pcg64::seed(62);
+        let a = Matrix::<f64>::from_fn(n, n, |i, j| {
+            if i > j {
+                rng.normal() * 0.2
+            } else if i == j {
+                2.0
+            } else {
+                0.0
+            }
+        });
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // Strided x: embed b at stride 2.
+        let mut x = vec![0.0; 2 * n];
+        for i in 0..n {
+            x[2 * i] = b[i];
+        }
+        trsv(Uplo::Lower, Trans::No, Diag::NonUnit, n, &a.data, n, &mut x, 2);
+        // Verify A x = b.
+        for i in 0..n {
+            let mut s = 0.0;
+            for l in 0..=i {
+                s += a[(i, l)] * x[2 * l];
+            }
+            assert!((s - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symv_and_syr_lower_consistent() {
+        let n = 8;
+        let mut rng = Pcg64::seed(63);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // A = x x^T via syr on zero, then A y == x (x·y).
+        let mut a = Matrix::<f64>::zeros(n, n);
+        syr_lower(n, 1.0, &x, &mut a.data, n);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut z = vec![0.0; n];
+        symv_lower(n, 1.0, &a.data, n, &y, 0.0, &mut z);
+        let xy: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        for i in 0..n {
+            assert!((z[i] - x[i] * xy).abs() < 1e-10, "{i}");
+        }
+    }
+}

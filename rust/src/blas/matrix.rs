@@ -1,0 +1,147 @@
+//! Column-major matrix storage (BLAS/LAPACK convention).
+
+use super::Scalar;
+use crate::rng::Pcg64;
+
+/// An owned column-major matrix. Element `(i, j)` lives at `data[i + j*ld]`
+/// with `ld == rows` (owned matrices are always packed; routines that need
+/// submatrix views take `&[T]`/`&mut [T]` plus an `ld`, BLAS style).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![T::zero(); rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::one();
+        }
+        m
+    }
+
+    /// Build from a row-major closure (convenient in tests).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Entries i.i.d. normal with standard deviation `sigma` (the paper's
+    /// workload generator, §4.1).
+    pub fn random_normal(rows: usize, cols: usize, sigma: f64, rng: &mut Pcg64) -> Self {
+        Self::from_fn(rows, cols, |_, _| T::from_f64(rng.normal_sigma(sigma)))
+    }
+
+    /// Leading dimension of the packed storage.
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.rows
+    }
+
+    /// Convert elementwise to another scalar type (one rounding per entry
+    /// via f64, which is exact for all supported formats).
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| U::from_f64(x.to_f64())).collect(),
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Matrix<T> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Max |a_ij - b_ij| in f64.
+    pub fn max_abs_diff(&self, other: &Matrix<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm in f64.
+    pub fn fro_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| {
+                let v = x.to_f64();
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// True if any entry is NaR/NaN/Inf.
+    pub fn any_bad(&self) -> bool {
+        self.data.iter().any(|&x| x.is_bad())
+    }
+
+    pub fn col(&self, j: usize) -> &[T] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+}
+
+impl<T> core::ops::Index<(usize, usize)> for Matrix<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+impl<T> core::ops::IndexMut<(usize, usize)> for Matrix<T> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::Posit32;
+
+    #[test]
+    fn indexing_is_column_major() {
+        let m = Matrix::<f64>::from_fn(2, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.data[0], 0.0); // (0,0)
+        assert_eq!(m.data[1], 10.0); // (1,0)
+        assert_eq!(m.data[2], 1.0); // (0,1)
+        assert_eq!(m[(1, 2)], 12.0);
+    }
+
+    #[test]
+    fn cast_rounds_once() {
+        let m = Matrix::<f64>::from_fn(1, 1, |_, _| 1.0 + 2f64.powi(-30));
+        let p: Matrix<Posit32> = m.cast();
+        // 2^-30 is below half of the 2^-27 ulp at 1.0 -> rounds to 1.0.
+        assert_eq!(p[(0, 0)], Posit32::ONE);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = crate::rng::Pcg64::seed(3);
+        let m = Matrix::<f32>::random_normal(5, 7, 2.0, &mut rng);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+}

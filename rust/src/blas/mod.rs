@@ -1,0 +1,420 @@
+//! MPLAPACK-style BLAS routines, generic over the arithmetic format.
+//!
+//! The paper ports MPLAPACK's `Rgemm` (and the routines `Rgetrf`/`Rpotrf`
+//! need) to Posit(32,2); the binary32 baseline uses vendor `sgemm`/LAPACK.
+//! Here both share one implementation, generic over [`Scalar`], so the
+//! *only* difference between `Rgemm` and `sgemm` is the number format —
+//! which is exactly the comparison Eq. (5) of the paper wants to isolate.
+//!
+//! Semantics contract (DESIGN.md §7): for posit instantiations every
+//! `Scalar` operation is one posit rounding, and GEMM accumulates the dot
+//! product in ascending-k order — bit-identical to the Pallas kernel and
+//! the FPGA PE chain.
+
+pub mod gemm;
+pub mod level1;
+pub mod level2;
+pub mod matrix;
+pub mod syrk;
+pub mod trsm;
+
+pub use gemm::{default_threads, gemm, gemm_naive, gemm_parallel, Trans};
+pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
+pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};
+pub use matrix::Matrix;
+pub use syrk::syrk_lower;
+pub use trsm::{trsm, Diag, Side, Uplo};
+
+use crate::posit::{self, Posit32};
+
+/// An arithmetic format usable by the BLAS/LAPACK routines.
+///
+/// Every method performs exactly one rounding in the target format (posit
+/// semantics); `f32`/`f64` inherit IEEE RNE from hardware.
+pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
+    /// Short name used in reports ("posit32", "binary32", "binary64").
+    const NAME: &'static str;
+
+    /// Pre-decoded operand for GEMM inner loops. For IEEE types this is
+    /// the value itself; for posits it is the unpacked
+    /// (sign, scale, significand) form, so the hot loop never re-decodes
+    /// (the §Perf "hoisted decode" optimization — numerics unchanged).
+    type Pre: Copy + Send + Sync;
+    /// Accumulator state for GEMM inner loops (posit: unpacked, rounded
+    /// to posit precision after every mac exactly like the packed path).
+    type Acc: Copy + Send + Sync;
+
+    fn pre(self) -> Self::Pre;
+    fn acc_zero() -> Self::Acc;
+    /// One fused step `acc = round(acc + round(a*b))` with the format's
+    /// per-operation rounding — bit-identical to `acc.add(a.mul(b))`.
+    fn acc_mac(acc: Self::Acc, a: Self::Pre, b: Self::Pre) -> Self::Acc;
+    fn acc_finish(acc: Self::Acc) -> Self;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn div(self, o: Self) -> Self;
+    fn sqrt(self) -> Self;
+    fn neg(self) -> Self;
+    fn abs(self) -> Self;
+    /// Exact comparison of magnitudes (for pivot selection).
+    fn abs_gt(self, o: Self) -> bool;
+    /// Round from f64 (one rounding).
+    fn from_f64(v: f64) -> Self;
+    /// Convert to f64 (exact for all three instantiations).
+    fn to_f64(self) -> f64;
+    /// NaR / NaN / Inf detection (failure propagation in factorizations).
+    fn is_bad(self) -> bool;
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == Self::zero()
+    }
+    /// `acc + a*b` with the format's per-operation rounding (two roundings;
+    /// NOT fused — the paper's GEMM semantics).
+    #[inline]
+    fn mac(self, a: Self, b: Self) -> Self {
+        self.add(a.mul(b))
+    }
+}
+
+/// Pre-decoded / accumulator form of a Posit32 for the GEMM hot loop:
+/// the unpacked significand plus special-value flags. Invariant: when
+/// `flags == REAL`, (neg, scale, frac) hold a posit-representable value
+/// (i.e. already rounded), so packing at the end is exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrePosit {
+    frac: u32,
+    scale: i32,
+    neg: bool,
+    flags: u8, // 0 = real, 1 = zero, 2 = NaR
+}
+
+impl PrePosit {
+    const REAL: u8 = 0;
+    const ZERO_F: u8 = 1;
+    const NAR_F: u8 = 2;
+    pub const ZERO: PrePosit = PrePosit {
+        frac: 0,
+        scale: 0,
+        neg: false,
+        flags: Self::ZERO_F,
+    };
+
+    #[inline]
+    pub fn decode(p: Posit32) -> PrePosit {
+        if p.is_zero() {
+            return Self::ZERO;
+        }
+        if p.is_nar() {
+            return PrePosit {
+                frac: 0,
+                scale: 0,
+                neg: false,
+                flags: Self::NAR_F,
+            };
+        }
+        let u = posit::unpack32(p.0);
+        PrePosit {
+            frac: u.frac,
+            scale: u.scale,
+            neg: u.neg,
+            flags: Self::REAL,
+        }
+    }
+
+    #[inline]
+    fn unpacked(self) -> posit::Unpacked {
+        posit::Unpacked {
+            neg: self.neg,
+            scale: self.scale,
+            frac: self.frac,
+        }
+    }
+
+    /// `round(self + round(a*b))` — one posit rounding per operation,
+    /// bit-identical to the packed path (pinned by blas::gemm tests).
+    #[inline]
+    pub fn mac(self, a: PrePosit, b: PrePosit) -> PrePosit {
+        if self.flags == Self::NAR_F || a.flags == Self::NAR_F || b.flags == Self::NAR_F {
+            return PrePosit {
+                flags: Self::NAR_F,
+                ..Self::ZERO
+            };
+        }
+        if a.flags == Self::ZERO_F || b.flags == Self::ZERO_F {
+            return self; // + exact 0
+        }
+        let (pneg, pscale, psig) = posit::mul_exact(a.unpacked(), b.unpacked());
+        let prod = posit::round_unpacked(pneg, pscale, psig);
+        if self.flags == Self::ZERO_F {
+            return PrePosit {
+                frac: prod.frac,
+                scale: prod.scale,
+                neg: prod.neg,
+                flags: Self::REAL,
+            };
+        }
+        let acc = self.unpacked();
+        // Exact cancellation check (add_core requires a nonzero sum).
+        if acc.neg != prod.neg && acc.scale == prod.scale && acc.frac == prod.frac {
+            return Self::ZERO;
+        }
+        let (neg, scale, sig) = posit::add_core(acc, prod);
+        let r = posit::round_unpacked(neg, scale, sig);
+        PrePosit {
+            frac: r.frac,
+            scale: r.scale,
+            neg: r.neg,
+            flags: Self::REAL,
+        }
+    }
+
+    /// Final packing: exact, because the invariant keeps the value
+    /// posit-representable.
+    #[inline]
+    pub fn pack(self) -> Posit32 {
+        match self.flags {
+            Self::ZERO_F => Posit32::ZERO,
+            Self::NAR_F => Posit32::NAR,
+            _ => Posit32(posit::pack32(
+                self.neg,
+                self.scale,
+                (self.frac as u64) << 32,
+            )),
+        }
+    }
+}
+
+impl Scalar for Posit32 {
+    const NAME: &'static str = "posit32";
+
+    type Pre = PrePosit;
+    type Acc = PrePosit;
+
+    #[inline]
+    fn pre(self) -> PrePosit {
+        PrePosit::decode(self)
+    }
+    #[inline]
+    fn acc_zero() -> PrePosit {
+        PrePosit::ZERO
+    }
+    #[inline]
+    fn acc_mac(acc: PrePosit, a: PrePosit, b: PrePosit) -> PrePosit {
+        acc.mac(a, b)
+    }
+    #[inline]
+    fn acc_finish(acc: PrePosit) -> Posit32 {
+        acc.pack()
+    }
+
+    #[inline]
+    fn zero() -> Self {
+        Posit32::ZERO
+    }
+    #[inline]
+    fn one() -> Self {
+        Posit32::ONE
+    }
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        self / o
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        Posit32(posit::sqrt(self.0))
+    }
+    #[inline]
+    fn neg(self) -> Self {
+        self.negate()
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        Posit32::abs(self)
+    }
+    #[inline]
+    fn abs_gt(self, o: Self) -> bool {
+        // Exact: |x| compare is unsigned compare of magnitudes' patterns,
+        // which posit ordering gives for the positive halves.
+        Posit32::abs(self).0 > Posit32::abs(o).0
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        Posit32::from_f64(v)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        Posit32::to_f64(self)
+    }
+    #[inline]
+    fn is_bad(self) -> bool {
+        self.is_nar()
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "binary32";
+
+    type Pre = f32;
+    type Acc = f32;
+
+    #[inline]
+    fn pre(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn acc_zero() -> f32 {
+        0.0
+    }
+    #[inline]
+    fn acc_mac(acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+    #[inline]
+    fn acc_finish(acc: f32) -> f32 {
+        acc
+    }
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        self / o
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn neg(self) -> Self {
+        -self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn abs_gt(self, o: Self) -> bool {
+        f32::abs(self) > f32::abs(o)
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn is_bad(self) -> bool {
+        !self.is_finite()
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "binary64";
+
+    type Pre = f64;
+    type Acc = f64;
+
+    #[inline]
+    fn pre(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn acc_zero() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn acc_mac(acc: f64, a: f64, b: f64) -> f64 {
+        acc + a * b
+    }
+    #[inline]
+    fn acc_finish(acc: f64) -> f64 {
+        acc
+    }
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        self / o
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn neg(self) -> Self {
+        -self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn abs_gt(self, o: Self) -> bool {
+        f64::abs(self) > f64::abs(o)
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn is_bad(self) -> bool {
+        !self.is_finite()
+    }
+}

@@ -1,0 +1,66 @@
+//! SYRK (lower): `C = alpha * A * A^T + beta * C` on the lower triangle —
+//! the trailing update of the blocked Cholesky factorization (`Rpotrf`).
+//! Same rounding contract as GEMM (ascending-k accumulation from zero).
+
+use super::gemm::combine;
+use super::Scalar;
+
+/// Rank-k update of the lower triangle of `c` (n×n) with `a` (n×k).
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_lower<T: Scalar>(
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in j..n {
+            let mut t = T::zero();
+            for l in 0..k {
+                t = t.mac(a[i + l * lda], a[j + l * lda]);
+            }
+            let cij = &mut c[i + j * ldc];
+            *cij = combine(alpha, t, beta, *cij);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Matrix, Trans};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_gemm_on_lower_triangle_bitwise() {
+        let (n, k) = (9, 5);
+        let mut rng = Pcg64::seed(13);
+        let a = Matrix::<Posit32>::random_normal(n, k, 1.0, &mut rng);
+        let c0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let alpha = Posit32::from_f64(-1.0);
+
+        let mut c_syrk = c0.clone();
+        syrk_lower(n, k, alpha, &a.data, n, Posit32::ONE, &mut c_syrk.data, n);
+
+        let at = a.transposed();
+        let mut c_gemm = c0.clone();
+        gemm(
+            Trans::No, Trans::No, n, n, k, alpha, &a.data, n, &at.data, k,
+            Posit32::ONE, &mut c_gemm.data, n,
+        );
+        for j in 0..n {
+            for i in 0..n {
+                if i >= j {
+                    assert_eq!(c_syrk[(i, j)], c_gemm[(i, j)], "({i},{j})");
+                } else {
+                    assert_eq!(c_syrk[(i, j)], c0[(i, j)], "upper untouched");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! TRSM: triangular solve with multiple right-hand sides,
+//! `op(A) * X = alpha * B` (Left) or `X * op(A) = alpha * B` (Right),
+//! B overwritten by X. All side/uplo/trans/diag combinations, MPLAPACK
+//! `Rtrsm` algorithm (substitution order fixed, one rounding per op).
+//!
+//! The blocked factorizations use: Left/Lower/NoTrans/Unit (LU panel
+//! update), Right/Lower/Trans/NonUnit (Cholesky panel), and the solvers
+//! use Left Lower/Upper against single right-hand sides.
+
+use super::Scalar;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    Left,
+    Right,
+}
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Uplo {
+    Upper,
+    Lower,
+}
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Diag {
+    Unit,
+    NonUnit,
+}
+
+use super::gemm::Trans;
+
+/// Triangular solve; `b` is m×n (column-major, leading dimension `ldb`),
+/// `a` is the triangular factor (m×m for Left, n×n for Right).
+#[allow(clippy::too_many_arguments)]
+pub fn trsm<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if !(alpha == T::one()) {
+        for j in 0..n {
+            for i in 0..m {
+                b[i + j * ldb] = alpha.mul(b[i + j * ldb]);
+            }
+        }
+    }
+    let at = |i: usize, j: usize| a[i + j * lda];
+    match (side, uplo, trans) {
+        // Solve L X = B: forward substitution down the rows.
+        (Side::Left, Uplo::Lower, Trans::No) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut x = b[i + j * ldb];
+                    for l in 0..i {
+                        x = x.sub(at(i, l).mul(b[l + j * ldb]));
+                    }
+                    if diag == Diag::NonUnit {
+                        x = x.div(at(i, i));
+                    }
+                    b[i + j * ldb] = x;
+                }
+            }
+        }
+        // Solve U X = B: backward substitution up the rows.
+        (Side::Left, Uplo::Upper, Trans::No) => {
+            for j in 0..n {
+                for i in (0..m).rev() {
+                    let mut x = b[i + j * ldb];
+                    for l in i + 1..m {
+                        x = x.sub(at(i, l).mul(b[l + j * ldb]));
+                    }
+                    if diag == Diag::NonUnit {
+                        x = x.div(at(i, i));
+                    }
+                    b[i + j * ldb] = x;
+                }
+            }
+        }
+        // Solve L^T X = B == upper system: backward substitution.
+        (Side::Left, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                for i in (0..m).rev() {
+                    let mut x = b[i + j * ldb];
+                    for l in i + 1..m {
+                        x = x.sub(at(l, i).mul(b[l + j * ldb]));
+                    }
+                    if diag == Diag::NonUnit {
+                        x = x.div(at(i, i));
+                    }
+                    b[i + j * ldb] = x;
+                }
+            }
+        }
+        // Solve U^T X = B == lower system: forward substitution.
+        (Side::Left, Uplo::Upper, Trans::Yes) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut x = b[i + j * ldb];
+                    for l in 0..i {
+                        x = x.sub(at(l, i).mul(b[l + j * ldb]));
+                    }
+                    if diag == Diag::NonUnit {
+                        x = x.div(at(i, i));
+                    }
+                    b[i + j * ldb] = x;
+                }
+            }
+        }
+        // X L = B: process columns right-to-left (X_j depends on later).
+        (Side::Right, Uplo::Lower, Trans::No) => {
+            for j in (0..n).rev() {
+                for l in j + 1..n {
+                    let alj = at(l, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].sub(b[i + l * ldb].mul(alj));
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = at(j, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].div(d);
+                    }
+                }
+            }
+        }
+        // X U = B: left-to-right.
+        (Side::Right, Uplo::Upper, Trans::No) => {
+            for j in 0..n {
+                for l in 0..j {
+                    let alj = at(l, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].sub(b[i + l * ldb].mul(alj));
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = at(j, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].div(d);
+                    }
+                }
+            }
+        }
+        // X L^T = B (the Cholesky panel update): left-to-right, using rows
+        // of L as columns of L^T.
+        (Side::Right, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                for l in 0..j {
+                    let ajl = at(j, l); // (L^T)[l, j]
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].sub(b[i + l * ldb].mul(ajl));
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = at(j, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].div(d);
+                    }
+                }
+            }
+        }
+        // X U^T = B: right-to-left.
+        (Side::Right, Uplo::Upper, Trans::Yes) => {
+            for j in (0..n).rev() {
+                for l in j + 1..n {
+                    let ajl = at(j, l); // (U^T)[l, j]
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].sub(b[i + l * ldb].mul(ajl));
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = at(j, j);
+                    for i in 0..m {
+                        b[i + j * ldb] = b[i + j * ldb].div(d);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Matrix};
+    use crate::rng::Pcg64;
+
+    /// Build a well-conditioned triangular matrix (unit-ish diagonal).
+    fn tri(n: usize, uplo: Uplo, rng: &mut Pcg64) -> Matrix<f64> {
+        Matrix::from_fn(n, n, |i, j| {
+            let keep = match uplo {
+                Uplo::Lower => i >= j,
+                Uplo::Upper => i <= j,
+            };
+            if !keep {
+                0.0
+            } else if i == j {
+                2.0 + rng.uniform()
+            } else {
+                rng.normal() * 0.3
+            }
+        })
+    }
+
+    #[test]
+    fn all_eight_variants_solve_their_system() {
+        let (m, n) = (6, 4);
+        let mut rng = Pcg64::seed(77);
+        for side in [Side::Left, Side::Right] {
+            for uplo in [Uplo::Lower, Uplo::Upper] {
+                for trans in [Trans::No, Trans::Yes] {
+                    for diag in [Diag::NonUnit, Diag::Unit] {
+                        let asz = if side == Side::Left { m } else { n };
+                        let mut a = tri(asz, uplo, &mut rng);
+                        if diag == Diag::Unit {
+                            for i in 0..asz {
+                                // Unit diag: stored values ignored; make
+                                // them garbage to prove it.
+                                a[(i, i)] = 1e9;
+                            }
+                        }
+                        let b0 = Matrix::<f64>::random_normal(m, n, 1.0, &mut rng);
+                        let mut x = b0.clone();
+                        trsm(
+                            side, uplo, trans, diag, m, n, 1.0, &a.data, asz,
+                            &mut x.data, m,
+                        );
+                        // Verify op(A)*X = B (or X*op(A) = B) by GEMM.
+                        let mut aeff = a.clone();
+                        if diag == Diag::Unit {
+                            for i in 0..asz {
+                                aeff[(i, i)] = 1.0;
+                            }
+                        }
+                        let mut r = Matrix::<f64>::zeros(m, n);
+                        match side {
+                            Side::Left => gemm(
+                                trans, Trans::No, m, n, m, 1.0, &aeff.data, asz,
+                                &x.data, m, 0.0, &mut r.data, m,
+                            ),
+                            Side::Right => gemm(
+                                Trans::No, trans, m, n, n, 1.0, &x.data, m,
+                                &aeff.data, asz, 0.0, &mut r.data, m,
+                            ),
+                        }
+                        let err = r.max_abs_diff(&b0);
+                        assert!(
+                            err < 1e-10,
+                            "{side:?} {uplo:?} {trans:?} {diag:?}: err {err}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_scales_rhs() {
+        let a = Matrix::<f64>::identity(3);
+        let mut b = Matrix::<f64>::from_fn(3, 2, |i, j| (i + j) as f64);
+        let want: Vec<f64> = b.data.iter().map(|v| v * 2.0).collect();
+        trsm(
+            Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, 3, 2, 2.0,
+            &a.data, 3, &mut b.data, 3,
+        );
+        assert_eq!(b.data, want);
+    }
+}

@@ -1,0 +1,108 @@
+//! Hand-rolled CLI (clap is not reachable offline).
+//!
+//! ```text
+//! posit-accel table 1|2|3|4|5|6       regenerate a paper table
+//! posit-accel fig 2|3|4|5|6|7|8       regenerate a paper figure
+//! posit-accel all [--quick]           everything, in paper order
+//! posit-accel gemm --n 256 [--backend native|pjrt] [--sigma 1.0]
+//! posit-accel decomp --n 256 [--alg lu|cholesky] [--backend ...]
+//! posit-accel solve --n 256 [--sigma 1.0]   factorize+solve, report errors
+//! posit-accel opbench                 posit op microbenchmarks by range
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand path plus `--key value` / `--flag`
+/// options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(name.to_string(), v);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+posit-accel — Posit(32,2) linear-algebra accelerators (HPCAsia'24 reproduction)
+
+USAGE:
+  posit-accel table <1|2|3|4|5|6> [--quick]
+  posit-accel fig <2|3|4|5|6|7|8> [--quick]
+  posit-accel all [--quick]
+  posit-accel gemm   [--n 256] [--sigma 1.0] [--backend native|pjrt]
+  posit-accel decomp [--n 256] [--alg lu|cholesky] [--backend native|pjrt] [--nb 64]
+  posit-accel solve  [--n 256] [--sigma 1.0]
+  posit-accel opbench [--quick]
+
+Tables/figures print a paper-vs-model/measured comparison and save CSV
+under results/. PJRT backends need `make artifacts` first.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = parse("decomp --n 512 --alg cholesky --quick");
+        assert_eq!(a.positional, vec!["decomp"]);
+        assert_eq!(a.usize_or("n", 0), 512);
+        assert_eq!(a.str_or("alg", "lu"), "cholesky");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.f64_or("sigma", 1.0), 1.0);
+    }
+
+    #[test]
+    fn table_fig_selectors() {
+        let a = parse("table 5");
+        assert_eq!(a.positional, vec!["table", "5"]);
+    }
+}

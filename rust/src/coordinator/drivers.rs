@@ -1,0 +1,260 @@
+//! Offloaded blocked factorizations: the paper's CPU-panel /
+//! accelerator-update split (§5.2), parameterized by [`GemmBackend`].
+//!
+//! The loops mirror `lapack::getrf` / `lapack::potrf` exactly; only the
+//! trailing update goes through the backend, so for any backend the
+//! factors are bit-identical to the all-native LAPACK versions
+//! (integration-tested in rust/tests/end_to_end.rs).
+
+use super::{GemmBackend, OffloadStats};
+use crate::blas::{trsm, Diag, Side, Trans, Uplo};
+use crate::lapack::{getf2, laswp, potf2, LapackError};
+use crate::posit::Posit32;
+use std::time::Instant;
+
+/// Blocked LU with partial pivoting, trailing update on `backend`.
+/// Returns per-phase stats; factors land in `a`/`ipiv` as in LAPACK.
+pub fn getrf_offload(
+    m: usize,
+    n: usize,
+    a: &mut [Posit32],
+    lda: usize,
+    ipiv: &mut [usize],
+    nb: usize,
+    backend: &dyn GemmBackend,
+) -> Result<OffloadStats, LapackError> {
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let kmin = m.min(n);
+    let mut info: Option<LapackError> = None;
+    let mut j = 0;
+    while j < kmin {
+        let jb = nb.min(kmin - j);
+        let t0 = Instant::now();
+        // Panel (host).
+        {
+            let panel = &mut a[j + j * lda..];
+            let mut piv = vec![0usize; jb];
+            if let Err(e) = getf2(m - j, jb, panel, lda, &mut piv) {
+                info.get_or_insert(match e {
+                    LapackError::SingularU(i) => LapackError::SingularU(i + j),
+                    other => other,
+                });
+            }
+            for (t, &p) in ipiv[j..j + jb].iter_mut().zip(&piv) {
+                *t = p + j;
+            }
+        }
+        laswp(j, a, lda, j, j + jb, ipiv);
+        if j + jb < n {
+            laswp(n - j - jb, &mut a[(j + jb) * lda..], lda, j, j + jb, ipiv);
+            // U12 = L11^{-1} A12 (host TRSM, panel-sized).
+            let (a11_part, a12_part) = a.split_at_mut((j + jb) * lda);
+            let a11 = &a11_part[j + j * lda..];
+            let a12 = &mut a12_part[j..];
+            trsm(
+                Side::Left,
+                Uplo::Lower,
+                Trans::No,
+                Diag::Unit,
+                jb,
+                n - j - jb,
+                Posit32::ONE,
+                a11,
+                lda,
+                a12,
+                lda,
+            );
+        }
+        stats.panel_s += t0.elapsed().as_secs_f64();
+
+        if j + jb < n && j + jb < m {
+            // Trailing update A22 -= L21 U12 — THE OFFLOADED CALL.
+            let t1 = Instant::now();
+            let ncols = n - j - jb;
+            let nrows = m - j - jb;
+            // Pack U12 (jb x ncols) to break the borrow overlap; the same
+            // staging the paper performs when shipping operands to the
+            // accelerator.
+            let mut u12 = vec![Posit32::ZERO; jb * ncols];
+            for c in 0..ncols {
+                let base = j + (j + jb + c) * lda;
+                u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let (left, right) = a.split_at_mut((j + jb) * lda);
+            let l21 = &left[(j + jb) + j * lda..];
+            let a22 = &mut right[j + jb..];
+            backend
+                .gemm_update(nrows, jb, ncols, l21, lda, &u12, jb, a22, lda)
+                .map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+        }
+        j += jb;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    stats.simulated_s = backend.simulated_seconds();
+    match info {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// Blocked lower Cholesky, trailing update on `backend`.
+///
+/// Like the paper (§5.2: "Both Rpotrf and Rgetrf call Rgemm for updating
+/// the trailing matrix"), the update is expressed as a GEMM with
+/// host-transposed A21 rather than a SYRK; only the lower triangle is
+/// meaningful afterwards.
+pub fn potrf_offload(
+    n: usize,
+    a: &mut [Posit32],
+    lda: usize,
+    nb: usize,
+    backend: &dyn GemmBackend,
+) -> Result<OffloadStats, LapackError> {
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        let t0 = Instant::now();
+        {
+            let diag = &mut a[j + j * lda..];
+            potf2(jb, diag, lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => {
+                    LapackError::NotPositiveDefinite(i + j)
+                }
+                LapackError::BadValue(i) => LapackError::BadValue(i + j),
+                other => other,
+            })?;
+        }
+        if j + jb < n {
+            let m2 = n - j - jb;
+            // A21 = A21 L11^{-T} (host TRSM).
+            let mut l11 = vec![Posit32::ZERO; jb * jb];
+            for c in 0..jb {
+                let base = j + (j + c) * lda;
+                l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let a21 = &mut a[(j + jb) + j * lda..];
+            trsm(
+                Side::Right,
+                Uplo::Lower,
+                Trans::Yes,
+                Diag::NonUnit,
+                m2,
+                jb,
+                Posit32::ONE,
+                &l11,
+                jb,
+                a21,
+                lda,
+            );
+            stats.panel_s += t0.elapsed().as_secs_f64();
+
+            // Trailing update A22 -= A21 A21^T as a GEMM: stage A21 and its
+            // host-side transpose (paper §3.1 does transposes on the host).
+            let t1 = Instant::now();
+            let mut a21_copy = vec![Posit32::ZERO; m2 * jb];
+            let mut a21_t = vec![Posit32::ZERO; jb * m2];
+            for c in 0..jb {
+                let base = (j + jb) + (j + c) * lda;
+                a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+            }
+            for c in 0..jb {
+                for r in 0..m2 {
+                    a21_t[c + r * jb] = a21_copy[r + c * m2];
+                }
+            }
+            let a22 = &mut a[(j + jb) + (j + jb) * lda..];
+            backend
+                .gemm_update(m2, jb, m2, &a21_copy, m2, &a21_t, jb, a22, lda)
+                .map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+        } else {
+            stats.panel_s += t0.elapsed().as_secs_f64();
+        }
+        j += jb;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    stats.simulated_s = backend.simulated_seconds();
+    Ok(stats)
+}
+
+/// Nominal operation counts the paper uses for Gflops (§5.2):
+/// LU: 2N³/3; Cholesky: N³/3.
+pub fn lu_ops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3) / 3.0
+}
+pub fn chol_ops(n: usize) -> f64 {
+    (n as f64).powi(3) / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::coordinator::NativeBackend;
+    use crate::lapack::{getrf, potrf};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn offload_lu_bit_matches_lapack() {
+        let n = 100;
+        let mut rng = Pcg64::seed(50);
+        let a0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut a1 = a0.clone();
+        let mut a2 = a0.clone();
+        let (mut p1, mut p2) = (vec![0usize; n], vec![0usize; n]);
+        getrf(n, n, &mut a1.data, n, &mut p1, 32, 2).unwrap();
+        let be = NativeBackend::new(2);
+        let stats = getrf_offload(n, n, &mut a2.data, n, &mut p2, 32, &be).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(a1.data, a2.data, "offload LU must be bit-identical");
+        assert!(stats.update_flops > 0.0 && stats.total_s > 0.0);
+    }
+
+    #[test]
+    fn offload_cholesky_matches_lapack_on_lower_triangle() {
+        let n = 96;
+        let mut rng = Pcg64::seed(51);
+        // SPD in f64, then round.
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut af = Matrix::<f64>::zeros(n, n);
+        crate::blas::gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 0.0,
+            &mut af.data, n,
+        );
+        for i in 0..n {
+            af[(i, i)] += 0.5 * n as f64;
+        }
+        let ap: Matrix<Posit32> = af.cast();
+        let mut a1 = ap.clone();
+        let mut a2 = ap.clone();
+        potrf(n, &mut a1.data, n, 24).unwrap();
+        let be = NativeBackend::new(2);
+        potrf_offload(n, &mut a2.data, n, 24, &be).unwrap();
+        for j in 0..n {
+            for i in j..n {
+                assert_eq!(a1[(i, j)], a2[(i, j)], "L({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn offload_lu_reports_singular() {
+        let n = 8;
+        let mut a = Matrix::<Posit32>::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                a[(i, j)] = Posit32::from_f64(((i + 1) * (j + 1)) as f64);
+            }
+        }
+        let be = NativeBackend::new(1);
+        let mut ipiv = vec![0; n];
+        let err = getrf_offload(n, n, &mut a.data, n, &mut ipiv, 4, &be).unwrap_err();
+        assert!(matches!(err, LapackError::SingularU(_)));
+    }
+}

@@ -1,0 +1,375 @@
+//! L3 coordinator: the accelerator-offload layer (the paper's system
+//! design, §3/§5.2).
+//!
+//! The paper factorizes dense matrices with the LAPACK blocked algorithms,
+//! running the *panel* on the host CPU and offloading the *trailing-matrix
+//! GEMM update* to an accelerator (FPGA systolic array or GPU posit
+//! kernels). This module reproduces that split:
+//!
+//! * [`GemmBackend`] — the accelerator interface (`C -= A·B` on posit
+//!   tiles). Implementations:
+//!   - [`NativeBackend`] — multithreaded host posit GEMM (the "CPU only"
+//!     rows of Table 5),
+//!   - [`PjrtBackend`] — executes the AOT Pallas GEMM artifacts through
+//!     the PJRT runtime, tiling + zero-padding arbitrary updates onto the
+//!     fixed artifact shapes (zero padding is exact: padded products are
+//!     posit zeros and `add(t, 0) == t`),
+//!   - [`TimedBackend`] — wraps another backend and charges a hardware
+//!     cost model per call; this is how the FPGA/GPU rows of Figs 2-8 are
+//!     produced with *real numerics* and *modelled time*.
+//! * [`drivers`] — blocked LU / Cholesky drivers parameterized by backend.
+//! * [`OffloadStats`] — per-phase timing the experiments report.
+
+pub mod drivers;
+
+use crate::blas::{gemm_parallel, Trans};
+use crate::posit::Posit32;
+use crate::runtime::{ArtifactKind, Runtime};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// An accelerator that can apply the trailing-matrix update
+/// `C <- C - A · B` on column-major Posit(32,2) tiles.
+pub trait GemmBackend {
+    fn name(&self) -> &str;
+
+    /// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`; posit semantics per
+    /// DESIGN.md §7 (bit-identical across all backends).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[Posit32],
+        lda: usize,
+        b: &[Posit32],
+        ldb: usize,
+        c: &mut [Posit32],
+        ldc: usize,
+    ) -> Result<()>;
+
+    /// Simulated accelerator-seconds accumulated so far (model backends).
+    fn simulated_seconds(&self) -> f64 {
+        0.0
+    }
+    /// Tiles dispatched so far (diagnostics).
+    fn tiles_dispatched(&self) -> u64 {
+        0
+    }
+}
+
+/// Host CPU backend: the blocked multithreaded native GEMM.
+pub struct NativeBackend {
+    pub threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(threads: usize) -> Self {
+        NativeBackend { threads }
+    }
+}
+
+impl GemmBackend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[Posit32],
+        lda: usize,
+        b: &[Posit32],
+        ldb: usize,
+        c: &mut [Posit32],
+        ldc: usize,
+    ) -> Result<()> {
+        let minus1 = Posit32::ONE.negate();
+        gemm_parallel(
+            self.threads,
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            minus1,
+            a,
+            lda,
+            b,
+            ldb,
+            Posit32::ONE,
+            c,
+            ldc,
+        );
+        Ok(())
+    }
+}
+
+/// PJRT backend: dispatches fixed-shape AOT artifacts, padding the update
+/// onto (TM, TK, TN) tiles. The default tile matches the exported
+/// `gemm_update_128x64x128` artifact (panel width = `lapack::DEFAULT_NB`).
+pub struct PjrtBackend {
+    rt: Runtime,
+    pub tm: usize,
+    pub tk: usize,
+    pub tn: usize,
+    tiles: AtomicU64,
+    /// Scratch buffers (one per concurrent tile call).
+    pool: Mutex<Vec<TileBufs>>,
+}
+
+struct TileBufs {
+    a: Vec<u32>,
+    b: Vec<u32>,
+    c: Vec<u32>,
+}
+
+impl PjrtBackend {
+    /// Load artifacts from `dir` and pre-compile the tile executable.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::with_tile(dir, 128, 64, 128)
+    }
+
+    pub fn with_tile(
+        dir: impl AsRef<std::path::Path>,
+        tm: usize,
+        tk: usize,
+        tn: usize,
+    ) -> Result<Self> {
+        let rt = Runtime::new(dir)?;
+        let kind = ArtifactKind::GemmUpdate { m: tm, k: tk, n: tn };
+        anyhow::ensure!(
+            rt.has(&kind),
+            "artifact {} missing — run `make artifacts`",
+            kind.file_name()
+        );
+        rt.warmup(&[kind])?;
+        Ok(PjrtBackend {
+            rt,
+            tm,
+            tk,
+            tn,
+            tiles: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn take_bufs(&self) -> TileBufs {
+        self.pool.lock().unwrap().pop().unwrap_or_else(|| TileBufs {
+            a: vec![0; self.tm * self.tk],
+            b: vec![0; self.tk * self.tn],
+            c: vec![0; self.tm * self.tn],
+        })
+    }
+    fn put_bufs(&self, b: TileBufs) {
+        self.pool.lock().unwrap().push(b);
+    }
+}
+
+impl GemmBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[Posit32],
+        lda: usize,
+        b: &[Posit32],
+        ldb: usize,
+        c: &mut [Posit32],
+        ldc: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            k <= self.tk,
+            "panel width {k} exceeds artifact tile depth {}",
+            self.tk
+        );
+        // Tile C into (tm x tn) cells; each cell is padded to the artifact
+        // shape with posit zeros (exact, see module docs).
+        for i0 in (0..m).step_by(self.tm) {
+            let ib = self.tm.min(m - i0);
+            for j0 in (0..n).step_by(self.tn) {
+                let jb = self.tn.min(n - j0);
+                let mut bufs = self.take_bufs();
+                // Pack A tile (ib x k, pad to tm x tk).
+                bufs.a.fill(0);
+                for l in 0..k {
+                    for i in 0..ib {
+                        bufs.a[i + l * self.tm] = a[i0 + i + l * lda].0;
+                    }
+                }
+                // Pack B tile (k x jb, pad to tk x tn).
+                bufs.b.fill(0);
+                for j in 0..jb {
+                    for l in 0..k {
+                        bufs.b[l + j * self.tk] = b[l + (j0 + j) * ldb].0;
+                    }
+                }
+                // Pack C tile.
+                bufs.c.fill(0);
+                for j in 0..jb {
+                    for i in 0..ib {
+                        bufs.c[i + j * self.tm] = c[i0 + i + (j0 + j) * ldc].0;
+                    }
+                }
+                let out = self.rt.gemm_update(
+                    self.tm, self.tk, self.tn, &bufs.a, &bufs.b, &bufs.c,
+                )?;
+                for j in 0..jb {
+                    for i in 0..ib {
+                        c[i0 + i + (j0 + j) * ldc] = Posit32(out[i + j * self.tm]);
+                    }
+                }
+                self.tiles.fetch_add(1, Ordering::Relaxed);
+                self.put_bufs(bufs);
+            }
+        }
+        Ok(())
+    }
+
+    fn tiles_dispatched(&self) -> u64 {
+        self.tiles.load(Ordering::Relaxed)
+    }
+}
+
+/// Wraps a backend with a per-call hardware time model: numerics from the
+/// inner backend (bit-exact), accelerator-time from the model. This is the
+/// mechanism behind every "FPGA"/"GPU" performance row in the experiments
+/// (DESIGN.md §4, substitution table).
+pub struct TimedBackend<B> {
+    inner: B,
+    label: String,
+    /// seconds = model(m, k, n)
+    model: Box<dyn Fn(usize, usize, usize) -> f64>,
+    nanos: AtomicU64,
+}
+
+impl<B: GemmBackend> TimedBackend<B> {
+    pub fn new(
+        label: impl Into<String>,
+        inner: B,
+        model: impl Fn(usize, usize, usize) -> f64 + 'static,
+    ) -> Self {
+        TimedBackend {
+            inner,
+            label: label.into(),
+            model: Box::new(model),
+            nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+impl<B: GemmBackend> GemmBackend for TimedBackend<B> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[Posit32],
+        lda: usize,
+        b: &[Posit32],
+        ldb: usize,
+        c: &mut [Posit32],
+        ldc: usize,
+    ) -> Result<()> {
+        let secs = (self.model)(m, k, n);
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
+    }
+    fn simulated_seconds(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+    fn tiles_dispatched(&self) -> u64 {
+        self.inner.tiles_dispatched()
+    }
+}
+
+/// Phase timing of an offloaded factorization.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadStats {
+    /// Wall seconds in host panel factorization (+ trsm + pivoting).
+    pub panel_s: f64,
+    /// Wall seconds in backend trailing updates.
+    pub update_s: f64,
+    /// Simulated accelerator seconds (TimedBackend), if any.
+    pub simulated_s: f64,
+    /// Total wall seconds.
+    pub total_s: f64,
+    /// Trailing-update flops (2·m·n·k summed over updates).
+    pub update_flops: f64,
+}
+
+impl OffloadStats {
+    /// Gflops of the whole factorization given its nominal op count.
+    pub fn gflops(&self, ops: f64) -> f64 {
+        ops / self.total_s / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::rng::Pcg64;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Matrix<Posit32> {
+        let mut rng = Pcg64::seed(seed);
+        Matrix::random_normal(r, c, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn pjrt_backend_padding_matches_native_bitwise() {
+        let dir = Runtime::default_dir();
+        if !dir.is_dir() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        // Odd sizes force padding on every edge.
+        let (m, k, n) = (150, 37, 131);
+        let a = rand_mat(m, k, 1);
+        let b = rand_mat(k, n, 2);
+        let c0 = rand_mat(m, n, 3);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        NativeBackend::new(2)
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m)
+            .unwrap();
+        let be = PjrtBackend::new(dir).unwrap();
+        be.gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+            .unwrap();
+        assert_eq!(c1.data, c2.data, "padded PJRT tiles must be bit-exact");
+        assert_eq!(be.tiles_dispatched(), 4); // ceil(150/128)*ceil(131/128)
+    }
+
+    #[test]
+    fn timed_backend_accumulates_model_time() {
+        let be = TimedBackend::new("model", NativeBackend::new(1), |m, k, n| {
+            (2 * m * k * n) as f64 / 1e9
+        });
+        let (m, k, n) = (32, 8, 16);
+        let a = rand_mat(m, k, 4);
+        let b = rand_mat(k, n, 5);
+        let mut c = rand_mat(m, n, 6);
+        be.gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c.data, m)
+            .unwrap();
+        be.gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c.data, m)
+            .unwrap();
+        let want = 2.0 * (2 * m * k * n) as f64 / 1e9;
+        assert!((be.simulated_seconds() - want).abs() < 1e-9);
+    }
+}

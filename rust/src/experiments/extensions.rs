@@ -1,0 +1,143 @@
+//! Extension experiments beyond the paper's evaluation — the §7 future
+//! work, made concrete:
+//!
+//! * **format sweep** — the Fig-7 protocol across posit widths (16/24/32
+//!   bits) vs binary32, quantifying how much of the 32-bit advantage
+//!   survives shorter formats;
+//! * **quire iterative refinement** — accuracy recovered by exact-residual
+//!   refinement (`lapack::gesv_refine`), inside and outside the golden
+//!   zone — the deployment answer to Fig 7's σ ≥ 1e2 losses.
+
+use super::matgen;
+use crate::blas::Matrix;
+use crate::blas::Scalar;
+use crate::lapack::{backward_error, gesv_refine, getrf, getrs};
+use crate::posit::formats::{P16, P24, P32G};
+use crate::posit::Posit32;
+use crate::rng::Pcg64;
+use crate::util::Table;
+
+fn solve_err<T: Scalar>(a64: &Matrix<f64>, b64: &[f64], nb: usize) -> Option<f64> {
+    let n = a64.rows;
+    let (a, mut b) = matgen::cast_problem::<T>(a64, b64);
+    let mut lu = a;
+    let mut ipiv = vec![0usize; n];
+    getrf(n, n, &mut lu.data, n, &mut ipiv, nb, 1).ok()?;
+    getrs(n, 1, &lu.data, n, &ipiv, &mut b, n);
+    let e = backward_error(a64, b64, &b);
+    e.is_finite().then_some(e)
+}
+
+/// Format-width ablation (LU backward error, digits vs binary32).
+pub fn run_formats(quick: bool) {
+    let n = if quick { 64 } else { 128 };
+    let mut t = Table::new(
+        &format!("Extension: LU backward error by posit width, N={n} (digits vs binary32; MEASURED)"),
+        &["sigma", "posit16", "posit24", "posit32", "binary32 err"],
+    );
+    for (i, sigma) in [1e-2, 1.0, 1e2].into_iter().enumerate() {
+        let mut rng = Pcg64::seed(0xF0 + i as u64);
+        let a64 = matgen::normal_f64(n, sigma, &mut rng);
+        let (_x, b64) = matgen::rhs_for(&a64);
+        let ef = solve_err::<f32>(&a64, &b64, 32).unwrap();
+        let digits = |e: Option<f64>| match e {
+            Some(e) => format!("{:+.2}", (ef / e).log10()),
+            None => "fail".into(),
+        };
+        t.row(&[
+            format!("{sigma:.0e}"),
+            digits(solve_err::<P16>(&a64, &b64, 32)),
+            digits(solve_err::<P24>(&a64, &b64, 32)),
+            digits(solve_err::<P32G>(&a64, &b64, 32)),
+            format!("{ef:.2e}"),
+        ]);
+    }
+    t.emit("ext_format_sweep");
+}
+
+/// Quire iterative-refinement study.
+pub fn run_refinement(quick: bool) {
+    let n = if quick { 64 } else { 128 };
+    let mut t = Table::new(
+        &format!("Extension: quire iterative refinement, LU at N={n} (MEASURED)"),
+        &["sigma", "plain err", "refined err", "gain digits", "iters"],
+    );
+    for (i, sigma) in [1.0, 1e2, 1e4].into_iter().enumerate() {
+        let mut rng = Pcg64::seed(0xEF1 + i as u64);
+        let a64 = matgen::normal_f64(n, sigma, &mut rng);
+        let (_x, b64) = matgen::rhs_for(&a64);
+        let (a, b) = matgen::cast_problem::<Posit32>(&a64, &b64);
+        let plain = solve_err::<Posit32>(&a64, &b64, 32).unwrap();
+        let r = gesv_refine(a, &b, 32, 1, 5).unwrap();
+        let refined = backward_error(&a64, &b64, &r.x);
+        t.row(&[
+            format!("{sigma:.0e}"),
+            format!("{plain:.2e}"),
+            format!("{refined:.2e}"),
+            format!("{:+.1}", (plain / refined).log10()),
+            r.iters.to_string(),
+        ]);
+    }
+    t.emit("ext_quire_refinement");
+}
+
+/// Golden-zone scaling study (the paper's §5.1 remedy, quantified).
+pub fn run_scaling(quick: bool) {
+    let n = if quick { 64 } else { 128 };
+    let mut t = Table::new(
+        &format!("Extension: power-of-two equilibration, LU at N={n} (MEASURED; paper §5.1 remedy)"),
+        &["sigma", "posit plain", "posit scaled", "binary32", "scaled digits vs b32"],
+    );
+    for (i, sigma) in [1.0, 1e2, 1e4, 1e6].into_iter().enumerate() {
+        let mut rng = Pcg64::seed(0x5CA1E + i as u64);
+        let a64 = matgen::normal_f64(n, sigma, &mut rng);
+        let (_x, b64) = matgen::rhs_for(&a64);
+        let plain = solve_err::<Posit32>(&a64, &b64, 32);
+        let ef = solve_err::<f32>(&a64, &b64, 32).unwrap();
+        let (a, b) = matgen::cast_problem::<Posit32>(&a64, &b64);
+        let scaled = crate::lapack::gesv_scaled(&a, &b, 32, 1)
+            .ok()
+            .map(|x| crate::lapack::backward_error(&a64, &b64, &x));
+        let f = |e: Option<f64>| e.map_or("fail".into(), |e| format!("{e:.2e}"));
+        let digits = scaled
+            .map(|e| format!("{:+.2}", (ef / e).log10()))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            format!("{sigma:.0e}"),
+            f(plain),
+            f(scaled),
+            format!("{ef:.2e}"),
+            digits,
+        ]);
+    }
+    t.emit("ext_equilibration");
+}
+
+pub fn run(quick: bool) {
+    run_formats(quick);
+    run_refinement(quick);
+    run_scaling(quick);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wider_posits_gain_digits_at_sigma_one() {
+        let n = 48;
+        let mut rng = Pcg64::seed(0xAB);
+        let a64 = matgen::normal_f64(n, 1.0, &mut rng);
+        let (_x, b64) = matgen::rhs_for(&a64);
+        let e16 = solve_err::<P16>(&a64, &b64, 16).unwrap();
+        let e24 = solve_err::<P24>(&a64, &b64, 16).unwrap();
+        let e32 = solve_err::<Posit32>(&a64, &b64, 16).unwrap();
+        let ef = solve_err::<f32>(&a64, &b64, 16).unwrap();
+        assert!(e16 > e24 && e24 > e32);
+        // posit24 already competitive with binary32 in the golden zone
+        // (24-bit posit has up to 19 fraction bits vs f32's 23, but the
+        // golden zone + tapering makes up much of it).
+        assert!(e24 < ef * 30.0);
+        assert!(e32 < ef);
+    }
+}

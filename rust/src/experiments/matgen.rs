@@ -1,0 +1,92 @@
+//! Workload generators for the experiments (paper §4.1/§5.1/§5.2).
+
+use crate::blas::{gemm, Matrix, Scalar, Trans};
+use crate::rng::Pcg64;
+
+/// General matrix with entries ~ N(0, σ), built in f64 (the experiment
+/// then casts to the format under test, so posit and binary32 see the
+/// SAME matrix — Eq. 5's controlled comparison).
+pub fn normal_f64(n: usize, sigma: f64, rng: &mut Pcg64) -> Matrix<f64> {
+    Matrix::random_normal(n, n, sigma, rng)
+}
+
+/// SPD matrix for Cholesky: A = XᵀX with X ~ N(0, σ) (paper §5.2). The
+/// product is computed in f64; note its entries scale like N·σ² — the
+/// mechanism behind Fig 7's Cholesky rows degrading faster with σ.
+pub fn spd_f64(n: usize, sigma: f64, rng: &mut Pcg64) -> Matrix<f64> {
+    let x = Matrix::<f64>::random_normal(n, n, sigma, rng);
+    let mut a = Matrix::<f64>::zeros(n, n);
+    gemm(
+        Trans::Yes,
+        Trans::No,
+        n,
+        n,
+        n,
+        1.0,
+        &x.data,
+        n,
+        &x.data,
+        n,
+        0.0,
+        &mut a.data,
+        n,
+    );
+    a
+}
+
+/// The paper's right-hand side: x_sol = (1/√N, ...), b = A·x_sol in f64.
+pub fn rhs_for(a: &Matrix<f64>) -> (Vec<f64>, Vec<f64>) {
+    let n = a.rows;
+    let xsol = vec![1.0 / (n as f64).sqrt(); n];
+    let mut b = vec![0.0; n];
+    gemm(
+        Trans::No,
+        Trans::No,
+        n,
+        1,
+        n,
+        1.0,
+        &a.data,
+        n,
+        &xsol,
+        n,
+        0.0,
+        &mut b,
+        n,
+    );
+    (xsol, b)
+}
+
+/// Cast problem data into the format under test (one rounding per entry).
+pub fn cast_problem<T: Scalar>(a: &Matrix<f64>, b: &[f64]) -> (Matrix<T>, Vec<T>) {
+    (a.cast(), b.iter().map(|&v| T::from_f64(v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spd_is_symmetric_and_scales_with_sigma() {
+        let mut rng = Pcg64::seed(1);
+        let a = spd_f64(16, 1.0, &mut rng);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((a[(i, j)] - a[(j, i)]).abs() < 1e-12);
+            }
+        }
+        let big = spd_f64(16, 100.0, &mut rng);
+        assert!(big.fro_norm() > 1e3 * a.fro_norm());
+    }
+
+    #[test]
+    fn rhs_matches_solution() {
+        let mut rng = Pcg64::seed(2);
+        let a = normal_f64(8, 1.0, &mut rng);
+        let (xsol, b) = rhs_for(&a);
+        assert_eq!(xsol.len(), 8);
+        assert_eq!(b.len(), 8);
+        // b = A xsol by construction -> backward error 0.
+        assert_eq!(crate::lapack::backward_error(&a, &b, &xsol), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §6 maps each experiment to its modules).
+//!
+//! Conventions:
+//! * each `run()` prints an aligned table AND saves `results/<slug>.csv`;
+//! * columns labelled `paper` are transcribed reference values; columns
+//!   labelled `model` come from the calibrated hardware models; columns
+//!   labelled `measured` are real computation on this host;
+//! * Fig 7 (numerical error) is entirely *measured* — the headline
+//!   accuracy claim never passes through a model.
+
+pub mod extensions;
+pub mod fig2;
+pub mod fig3_4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8_table5;
+pub mod matgen;
+pub mod table1;
+pub mod table2_3;
+pub mod table6;
+
+/// Run everything (the `posit-accel all` subcommand); `quick` shrinks the
+/// measured problem sizes for CI.
+pub fn run_all(quick: bool) {
+    table1::run();
+    table2_3::run_table2(quick);
+    table2_3::run_table3();
+    print_table4();
+    fig2::run();
+    fig3_4::run_fig3(quick);
+    fig3_4::run_fig4(quick);
+    fig5::run();
+    fig6::run();
+    fig7::run(quick);
+    fig8_table5::run_fig8(quick);
+    fig8_table5::run_table5();
+    table6::run();
+    extensions::run(quick);
+}
+
+/// Table 4 is pure input data; print it for completeness.
+pub fn print_table4() {
+    use crate::sim::specs::ALL_GPUS;
+    let mut t = crate::util::Table::new(
+        "Table 4: GPU specifications (input data)",
+        &[
+            "", "process(nm)", "cores", "clock(MHz)", "mem(GB)", "Tops(int)",
+            "Tflops(f32)", "Tflops(f64)", "P_limit(W)",
+        ],
+    );
+    for g in ALL_GPUS {
+        t.row(&[
+            g.name.into(),
+            g.process_nm.to_string(),
+            g.cores.to_string(),
+            format!("{:.0}", g.clock_mhz),
+            g.memory_gb.to_string(),
+            format!("{:.2}", g.tops_int),
+            format!("{:.0}", g.tflops_f32),
+            format!("{:.2}", g.tflops_f64),
+            format!("{:.0}", g.p_limit_w),
+        ]);
+    }
+    t.emit("table4_gpu_specs");
+}

@@ -1,0 +1,60 @@
+//! Table 1: synthesis results of the four GEMM designs on Agilex,
+//! regenerated from the resource model (`sim::resource`), plus the n_PE
+//! scaling ablation the paper sketches in §6.2.
+
+use crate::sim::resource::{
+    logic_utilization, max_mesh, synthesize, Design, CHIP_DSP, CHIP_MEM_BITS,
+    CHIP_RAM_BLOCKS,
+};
+use crate::util::Table;
+
+/// Paper values for the four designs at 256 PEs (for the side-by-side).
+pub const PAPER: [(&str, u64, u64, f64, f64, f64); 4] = [
+    ("Posit(32,2)_SM", 433_836, 589, 432.71, 221.5, 42.1),
+    ("Posit(32,2)_TC", 337_111, 589, 429.92, 220.1, 38.7),
+    ("binary32_Hard", 141_930, 317, 505.05, 285.6, 31.6),
+    ("binary32_Soft", 234_697, 589, 461.46, 236.3, 36.0),
+];
+
+pub fn run() {
+    let mut t = Table::new(
+        "Table 1: GEMM designs on Agilex, 256 PEs (model vs paper)",
+        &[
+            "design", "logic model", "logic paper", "util%", "DSP", "Fmax(MHz)",
+            "F_peak(Gflops)", "power model(W)", "power paper(W)",
+        ],
+    );
+    for (d, paper) in Design::ALL.iter().zip(PAPER.iter()) {
+        let s = synthesize(*d, 256);
+        t.row(&[
+            d.name().into(),
+            s.logic_cells.to_string(),
+            paper.1.to_string(),
+            format!("{:.0}", logic_utilization(&s) * 100.0),
+            s.dsp.to_string(),
+            format!("{:.2}", s.fmax_mhz),
+            format!("{:.1}", s.f_peak_gflops),
+            format!("{:.1}", s.power_w),
+            format!("{:.1}", paper.5),
+        ]);
+    }
+    t.emit("table1_synthesis");
+
+    // §6.2 ablation: how far each design scales on this chip.
+    let mut t = Table::new(
+        "Table 1b (ablation): largest mesh per design (paper §6.2)",
+        &["design", "max PEs", "logic util%", "F_peak(Gflops)"],
+    );
+    for d in Design::ALL {
+        let n = max_mesh(d);
+        let s = synthesize(d, n);
+        t.row(&[
+            d.name().into(),
+            n.to_string(),
+            format!("{:.0}", logic_utilization(&s) * 100.0),
+            format!("{:.0}", s.f_peak_gflops),
+        ]);
+    }
+    t.emit("table1b_max_mesh");
+    let _ = (CHIP_DSP, CHIP_MEM_BITS, CHIP_RAM_BLOCKS);
+}

@@ -1,0 +1,96 @@
+//! Backward-error evaluation — the paper's Eq. (4)–(5) (§5.1).
+//!
+//! The paper measures `e = |b - A x̂| / |b|` (2-norms, computed in
+//! binary64) where `b = A x_sol` is built in binary64 from the true
+//! solution `x_sol = (1/√N, ..., 1/√N)`, and reports
+//! `log10(e_binary32 / e_posit)` — positive when Posit(32,2) is more
+//! accurate, in decimal digits.
+
+use crate::blas::{gemm, Matrix, Scalar, Trans};
+
+/// Relative backward error `|b - A x̂|₂ / |b|₂`, evaluated in f64.
+/// `a` and `b` are the *binary64* problem data; `x_hat` is the computed
+/// solution in any format (converted exactly to f64).
+pub fn backward_error<T: Scalar>(a: &Matrix<f64>, b: &[f64], x_hat: &[T]) -> f64 {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    assert_eq!(b.len(), n);
+    assert_eq!(x_hat.len(), n);
+    let xf: Vec<f64> = x_hat.iter().map(|&v| v.to_f64()).collect();
+    let mut r = b.to_vec();
+    // r = b - A x̂ in f64.
+    gemm(
+        Trans::No,
+        Trans::No,
+        n,
+        1,
+        n,
+        -1.0,
+        &a.data,
+        n,
+        &xf,
+        n,
+        1.0,
+        &mut r,
+        n,
+    );
+    norm2(&r) / norm2(b)
+}
+
+/// Relative forward error `|x̂ - x_sol|₂ / |x_sol|₂` in f64.
+pub fn forward_error<T: Scalar>(x_sol: &[f64], x_hat: &[T]) -> f64 {
+    let diff2: f64 = x_sol
+        .iter()
+        .zip(x_hat)
+        .map(|(&s, &h)| {
+            let d = h.to_f64() - s;
+            d * d
+        })
+        .sum();
+    diff2.sqrt() / norm2(x_sol)
+}
+
+/// Residual of a solve in f64: convenience wrapper returning both errors.
+pub fn solve_residual_f64<T: Scalar>(
+    a: &Matrix<f64>,
+    b: &[f64],
+    x_sol: &[f64],
+    x_hat: &[T],
+) -> (f64, f64) {
+    (backward_error(a, b, x_hat), forward_error(x_sol, x_hat))
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|&x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn exact_solution_has_zero_error() {
+        let n = 8;
+        let mut rng = Pcg64::seed(1);
+        let a = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let x = vec![1.0; n];
+        let mut b = vec![0.0; n];
+        gemm(
+            Trans::No, Trans::No, n, 1, n, 1.0, &a.data, n, &x, n, 0.0, &mut b,
+            n,
+        );
+        assert_eq!(backward_error(&a, &b, &x), 0.0);
+        assert_eq!(forward_error(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn perturbed_solution_scales() {
+        let n = 4;
+        let a = Matrix::<f64>::identity(n);
+        let b = vec![1.0; n];
+        let x_hat = vec![1.0 + 1e-6, 1.0, 1.0, 1.0];
+        let e = backward_error(&a, &b, &x_hat);
+        assert!((e - 1e-6 / 2.0).abs() < 1e-9); // |r|=1e-6, |b|=2
+    }
+}

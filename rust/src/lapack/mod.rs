@@ -1,0 +1,54 @@
+//! LAPACK-style dense factorizations, generic over [`crate::blas::Scalar`]
+//! — the MPLAPACK `Rgetrf` / `Rpotrf` / `Rgetrs` / `Rpotrs` routines the
+//! paper ports to Posit(32,2) (§3), plus the backward-error evaluation of
+//! its Eq. (4)–(5).
+//!
+//! The blocked algorithms follow LAPACK exactly (right-looking, Level-3
+//! updates), so the trailing-matrix GEMM — the paper's offload target — is
+//! the dominant cost. `coordinator::drivers` re-implements the same loops
+//! with the GEMM dispatched to an accelerator backend; both must agree
+//! bit-for-bit with the all-native versions here (integration-tested).
+
+mod error;
+mod getrf;
+mod potrf;
+mod refine;
+mod scale;
+mod solve;
+
+pub use error::{backward_error, forward_error, solve_residual_f64};
+pub use refine::{gesv_refine, RefineResult};
+pub use scale::{equilibrate_pow2, gesv_scaled, Equilibration};
+pub use getrf::{getf2, getrf, laswp};
+pub use potrf::{potf2, potrf};
+pub use solve::{getrs, potrs};
+
+/// Failure modes of the factorizations (LAPACK `info` codes, typed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LapackError {
+    /// `getrf`: U(i,i) is exactly zero; factorization finished but U is
+    /// singular (1-based index like LAPACK's `info`).
+    SingularU(usize),
+    /// `potrf`: leading minor of order i is not positive definite.
+    NotPositiveDefinite(usize),
+    /// A NaR/NaN/Inf appeared during factorization.
+    BadValue(usize),
+}
+
+impl core::fmt::Display for LapackError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            LapackError::SingularU(i) => write!(f, "singular: U({i},{i}) == 0"),
+            LapackError::NotPositiveDefinite(i) => {
+                write!(f, "leading minor {i} not positive definite")
+            }
+            LapackError::BadValue(i) => write!(f, "non-finite value at step {i}"),
+        }
+    }
+}
+impl std::error::Error for LapackError {}
+
+/// Default LAPACK-style block size for the right-looking algorithms. The
+/// paper's FPGA analysis (Fig 6) shows trailing updates with K = 32..256;
+/// 64 balances panel (CPU) vs update (accelerator) cost on this testbed.
+pub const DEFAULT_NB: usize = 64;

@@ -1,0 +1,203 @@
+//! Cholesky factorization (`Rpotrf` / LAPACK `dpotrf`), lower variant:
+//! `A = L * L^T` for symmetric positive definite A. Right-looking blocked
+//! algorithm; the trailing SYRK/GEMM update is the paper's offload target.
+
+use super::LapackError;
+use crate::blas::{syrk_lower, trsm, Diag, Scalar, Side, Trans, Uplo};
+
+/// Unblocked lower Cholesky (LAPACK `potf2`). Overwrites the lower
+/// triangle of the leading n×n block of `a`; upper triangle untouched.
+pub fn potf2<T: Scalar>(n: usize, a: &mut [T], lda: usize) -> Result<(), LapackError> {
+    for j in 0..n {
+        // d = a(j,j) - sum_{l<j} a(j,l)^2, sequentially rounded.
+        let mut d = a[j + j * lda];
+        for l in 0..j {
+            let v = a[j + l * lda];
+            d = d.sub(v.mul(v));
+        }
+        if d.is_bad() {
+            return Err(LapackError::BadValue(j + 1));
+        }
+        // Positive-definite check: the paper's Rpotrf fails the same way
+        // LAPACK does (info = j+1) when the pivot is not positive. The
+        // f64 view is exact for all supported formats, so this is an
+        // exact sign test.
+        if d.to_f64() <= 0.0 {
+            return Err(LapackError::NotPositiveDefinite(j + 1));
+        }
+        let ljj = d.sqrt();
+        a[j + j * lda] = ljj;
+        // Column below: a(i,j) = (a(i,j) - sum_{l<j} a(i,l) a(j,l)) / ljj.
+        for i in j + 1..n {
+            let mut s = a[i + j * lda];
+            for l in 0..j {
+                s = s.sub(a[i + l * lda].mul(a[j + l * lda]));
+            }
+            a[i + j * lda] = s.div(ljj);
+        }
+    }
+    Ok(())
+}
+
+/// Blocked right-looking lower Cholesky (LAPACK `potrf`).
+///
+/// Per block: `potf2` on the diagonal block (host), TRSM of the panel
+/// below it, then the rank-nb SYRK trailing update (offloaded in the
+/// coordinator variant).
+pub fn potrf<T: Scalar>(
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    nb: usize,
+) -> Result<(), LapackError> {
+    if nb <= 1 || nb >= n {
+        return potf2(n, a, lda);
+    }
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        // Diagonal block. potf2 uses only the block's own lower triangle,
+        // which was fully updated by previous iterations' SYRK.
+        {
+            let diag = &mut a[j + j * lda..];
+            potf2(jb, diag, lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => {
+                    LapackError::NotPositiveDefinite(i + j)
+                }
+                LapackError::BadValue(i) => LapackError::BadValue(i + j),
+                other => other,
+            })?;
+        }
+        if j + jb < n {
+            // Panel: A21 = A21 * L11^{-T}.
+            let m2 = n - j - jb;
+            // L11 is read (rows j.., col j..j+jb); A21 written (rows
+            // j+jb.., same columns). Disjoint rows, same columns — copy
+            // L11's lower triangle (jb x jb) to break the overlap; it is
+            // the small diagonal block, cheap.
+            let mut l11 = vec![T::zero(); jb * jb];
+            for c in 0..jb {
+                let base = j + (j + c) * lda;
+                l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let a21 = &mut a[(j + jb) + j * lda..];
+            trsm(
+                Side::Right,
+                Uplo::Lower,
+                Trans::Yes,
+                Diag::NonUnit,
+                m2,
+                jb,
+                T::one(),
+                &l11,
+                jb,
+                a21,
+                lda,
+            );
+            // Trailing update: A22 -= A21 * A21^T (lower triangle only).
+            let mut a21_copy = vec![T::zero(); m2 * jb];
+            for c in 0..jb {
+                let base = (j + jb) + (j + c) * lda;
+                a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+            }
+            let a22 = &mut a[(j + jb) + (j + jb) * lda..];
+            let minus_one = T::zero().sub(T::one());
+            syrk_lower(m2, jb, minus_one, &a21_copy, m2, T::one(), a22, lda);
+        }
+        j += jb;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Matrix, Trans};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    /// SPD test matrix: A = X^T X + n*I computed in f64.
+    fn spd(n: usize, sigma: f64, rng: &mut Pcg64) -> Matrix<f64> {
+        let x = Matrix::<f64>::random_normal(n, n, sigma, rng);
+        let mut a = Matrix::<f64>::identity(n);
+        for v in a.data.iter_mut() {
+            *v *= n as f64 * sigma * sigma * 0.01;
+        }
+        gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 1.0,
+            &mut a.data, n,
+        );
+        a
+    }
+
+    fn check_llt<T: crate::blas::Scalar>(a0: &Matrix<f64>, l: &Matrix<T>, tol: f64) {
+        let n = a0.rows;
+        let lf: Matrix<f64> = l.cast();
+        let mut llt = Matrix::<f64>::zeros(n, n);
+        // zero the upper triangle of L first
+        let mut ltri = lf.clone();
+        for j in 0..n {
+            for i in 0..j {
+                ltri[(i, j)] = 0.0;
+            }
+        }
+        gemm(
+            Trans::No, Trans::Yes, n, n, n, 1.0, &ltri.data, n, &ltri.data, n,
+            0.0, &mut llt.data, n,
+        );
+        // Compare lower triangles (upper of A untouched by potrf).
+        let mut err: f64 = 0.0;
+        let mut scale: f64 = 0.0;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt[(i, j)] - a0[(i, j)]).abs());
+                scale = scale.max(a0[(i, j)].abs());
+            }
+        }
+        assert!(err / scale < tol, "relative err {}", err / scale);
+    }
+
+    #[test]
+    fn cholesky_reconstructs_f64() {
+        let n = 40;
+        let mut rng = Pcg64::seed(200);
+        let a0 = spd(n, 1.0, &mut rng);
+        let mut a = a0.clone();
+        potrf(n, &mut a.data, n, 16).unwrap();
+        check_llt(&a0, &a, 1e-12);
+    }
+
+    #[test]
+    fn cholesky_posit_blocked_and_unblocked_agree_on_quality() {
+        let n = 32;
+        let mut rng = Pcg64::seed(201);
+        let a0 = spd(n, 1.0, &mut rng);
+        let ap: Matrix<Posit32> = a0.cast();
+        let mut u = ap.clone();
+        potf2(n, &mut u.data, n).unwrap();
+        check_llt(&a0, &u, 1e-5);
+        let mut b = ap.clone();
+        potrf(n, &mut b.data, n, 8).unwrap();
+        check_llt(&a0, &b, 1e-5);
+    }
+
+    #[test]
+    fn indefinite_matrix_fails_with_index() {
+        let n = 5;
+        let mut a = Matrix::<f64>::identity(n);
+        a[(2, 2)] = -1.0; // third leading minor goes negative
+        let err = potrf(n, &mut a.data, n, 2).unwrap_err();
+        assert_eq!(err, LapackError::NotPositiveDefinite(3));
+    }
+
+    #[test]
+    fn nar_input_fails_cleanly_posit() {
+        let n = 4;
+        let mut rng = Pcg64::seed(7);
+        let a0 = spd(n, 1.0, &mut rng);
+        let mut ap: Matrix<Posit32> = a0.cast();
+        ap[(1, 1)] = Posit32::NAR;
+        let err = potf2(n, &mut ap.data, n).unwrap_err();
+        assert!(matches!(err, LapackError::BadValue(_)), "{err:?}");
+    }
+}

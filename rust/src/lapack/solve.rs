@@ -1,0 +1,144 @@
+//! Triangular solvers on factorized matrices: `Rgetrs` / `Rpotrs` —
+//! the routines the paper uses to turn factorizations into linear-system
+//! solutions for the error study (§5.1).
+
+use super::getrf::laswp;
+use crate::blas::{trsm, Diag, Scalar, Side, Trans, Uplo};
+
+/// Solve `A X = B` given the LU factorization from `getrf` (`getrs`,
+/// no-transpose case). `b` is n×nrhs, overwritten with X.
+pub fn getrs<T: Scalar>(
+    n: usize,
+    nrhs: usize,
+    lu: &[T],
+    lda: usize,
+    ipiv: &[usize],
+    b: &mut [T],
+    ldb: usize,
+) {
+    // X = U^{-1} L^{-1} P B.
+    laswp(nrhs, b, ldb, 0, n, ipiv);
+    trsm(
+        Side::Left,
+        Uplo::Lower,
+        Trans::No,
+        Diag::Unit,
+        n,
+        nrhs,
+        T::one(),
+        lu,
+        lda,
+        b,
+        ldb,
+    );
+    trsm(
+        Side::Left,
+        Uplo::Upper,
+        Trans::No,
+        Diag::NonUnit,
+        n,
+        nrhs,
+        T::one(),
+        lu,
+        lda,
+        b,
+        ldb,
+    );
+}
+
+/// Solve `A X = B` given the lower Cholesky factor from `potrf` (`potrs`).
+pub fn potrs<T: Scalar>(
+    n: usize,
+    nrhs: usize,
+    l: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    // X = L^{-T} L^{-1} B.
+    trsm(
+        Side::Left,
+        Uplo::Lower,
+        Trans::No,
+        Diag::NonUnit,
+        n,
+        nrhs,
+        T::one(),
+        l,
+        lda,
+        b,
+        ldb,
+    );
+    trsm(
+        Side::Left,
+        Uplo::Lower,
+        Trans::Yes,
+        Diag::NonUnit,
+        n,
+        nrhs,
+        T::one(),
+        l,
+        lda,
+        b,
+        ldb,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{getrf, potrf};
+    use super::*;
+    use crate::blas::{gemm, Matrix};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn lu_solve_f64_roundtrip() {
+        let n = 30;
+        let mut rng = Pcg64::seed(300);
+        let a0 = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let xsol = vec![1.0 / (n as f64).sqrt(); n];
+        let mut b = vec![0.0f64; n];
+        gemm(
+            Trans::No, Trans::No, n, 1, n, 1.0, &a0.data, n, &xsol, n, 0.0,
+            &mut b, n,
+        );
+        let mut lu = a0.clone();
+        let mut ipiv = vec![0usize; n];
+        getrf(n, n, &mut lu.data, n, &mut ipiv, 8, 1).unwrap();
+        getrs(n, 1, &lu.data, n, &ipiv, &mut b, n);
+        for i in 0..n {
+            assert!((b[i] - xsol[i]).abs() < 1e-10, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn cholesky_solve_posit_close_to_solution() {
+        let n = 24;
+        let mut rng = Pcg64::seed(301);
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut a0 = Matrix::<f64>::zeros(n, n);
+        gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 0.0,
+            &mut a0.data, n,
+        );
+        for i in 0..n {
+            a0[(i, i)] += n as f64 * 0.1;
+        }
+        let xsol = vec![1.0 / (n as f64).sqrt(); n];
+        let mut bf = vec![0.0f64; n];
+        gemm(
+            Trans::No, Trans::No, n, 1, n, 1.0, &a0.data, n, &xsol, n, 0.0,
+            &mut bf, n,
+        );
+        let ap: Matrix<Posit32> = a0.cast();
+        let mut l = ap.clone();
+        potrf(n, &mut l.data, n, 8).unwrap();
+        let mut bp: Vec<Posit32> = bf.iter().map(|&v| Posit32::from_f64(v)).collect();
+        potrs(n, 1, &l.data, n, &mut bp, n);
+        for i in 0..n {
+            let err = (bp[i].to_f64() - xsol[i]).abs();
+            assert!(err < 1e-4, "x[{i}] err {err}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # posit-accel
+//!
+//! A reproduction of *"Evaluation of POSIT Arithmetic with Accelerators"*
+//! (Nakasato, Kono, Murakami, Nakata — HPCAsia '24) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`posit`] — an exact, branchless software implementation of the
+//!   Posit(32,2) number format (the paper's §2), plus a SoftPosit-style
+//!   branchy implementation with instruction/branch instrumentation used
+//!   to model the paper's GPU kernels, a generic `Posit(n, es)` engine for
+//!   exhaustive small-format validation, and a 512-bit quire accumulator.
+//! * [`blas`] / [`lapack`] — MPLAPACK-style `Rgemm` / `Rgetrf` / `Rpotrf`
+//!   (and friends) generic over a [`blas::Scalar`] trait, instantiated at
+//!   `Posit32`, `f32` (the paper's binary32 baseline) and `f64` (ground
+//!   truth), so the numeric format is the *only* experimental variable.
+//! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX /
+//!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
+//!   Python never runs on the request path.
+//! * [`coordinator`] — the accelerator-offload layer: blocked LU/Cholesky
+//!   drivers that factorize panels on the host and dispatch trailing-matrix
+//!   GEMM updates to a pluggable [`coordinator::GemmBackend`].
+//! * [`sim`] — calibrated models of the paper's hardware: the Agilex
+//!   systolic array (cycles, resources, power) and the five GPUs
+//!   (instruction-driven timing, warp divergence, power capping).
+//! * [`experiments`] — one generator per table/figure of the paper's
+//!   evaluation section.
+
+pub mod blas;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod lapack;
+pub mod posit;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use posit::Posit32;

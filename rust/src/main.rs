@@ -1,0 +1,156 @@
+//! `posit-accel` — CLI entrypoint (L3 leader process).
+
+use posit_accel::cli::{Args, USAGE};
+use posit_accel::coordinator::drivers::{getrf_offload, lu_ops, potrf_offload};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
+use posit_accel::util::{time_it, Table};
+use posit_accel::{blas, experiments, lapack, runtime};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.flag("quick");
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("table") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("1") => experiments::table1::run(),
+            Some("2") => experiments::table2_3::run_table2(quick),
+            Some("3") => experiments::table2_3::run_table3(),
+            Some("4") => experiments::print_table4(),
+            Some("5") => experiments::fig8_table5::run_table5(),
+            Some("6") => experiments::table6::run(),
+            other => die(&format!("unknown table {other:?}")),
+        },
+        Some("fig") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("2") => experiments::fig2::run(),
+            Some("3") => experiments::fig3_4::run_fig3(quick),
+            Some("4") => experiments::fig3_4::run_fig4(quick),
+            Some("5") => experiments::fig5::run(),
+            Some("6") => experiments::fig6::run(),
+            Some("7") => experiments::fig7::run(quick),
+            Some("8") => experiments::fig8_table5::run_fig8(quick),
+            other => die(&format!("unknown figure {other:?}")),
+        },
+        Some("all") => experiments::run_all(quick),
+        Some("ext") => experiments::extensions::run(quick),
+        Some("gemm") => cmd_gemm(&args),
+        Some("decomp") => cmd_decomp(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("opbench") => {
+            experiments::table2_3::run_table2(quick || !args.flag("full"))
+        }
+        _ => {
+            println!("{USAGE}");
+        }
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{USAGE}");
+    std::process::exit(2)
+}
+
+fn backend(args: &Args) -> Box<dyn GemmBackend> {
+    match args.str_or("backend", "native") {
+        "native" => Box::new(NativeBackend::new(blas::default_threads())),
+        "pjrt" => Box::new(
+            PjrtBackend::new(runtime::Runtime::default_dir())
+                .unwrap_or_else(|e| die(&format!("pjrt backend: {e:#}"))),
+        ),
+        other => die(&format!("unknown backend '{other}'")),
+    }
+}
+
+fn cmd_gemm(args: &Args) {
+    let n = args.usize_or("n", 256);
+    let sigma = args.f64_or("sigma", 1.0);
+    let be = backend(args);
+    let mut rng = Pcg64::seed(1);
+    let a = blas::Matrix::<Posit32>::random_normal(n, n, sigma, &mut rng);
+    let b = blas::Matrix::<Posit32>::random_normal(n, n, sigma, &mut rng);
+    let mut c = blas::Matrix::<Posit32>::zeros(n, n);
+    let (r, secs) = time_it(|| be.gemm_update(n, n.min(64), n, &a.data, n, &b.data, n, &mut c.data, n));
+    r.unwrap();
+    let k = n.min(64);
+    let gflops = 2.0 * (n * n * k) as f64 / secs / 1e9;
+    println!(
+        "gemm_update {n}x{k}x{n} σ={sigma:.0e} backend={}: {secs:.3}s = {gflops:.3} Gflops",
+        be.name()
+    );
+}
+
+fn cmd_decomp(args: &Args) {
+    let n = args.usize_or("n", 256);
+    let nb = args.usize_or("nb", 64);
+    let alg = args.str_or("alg", "lu");
+    let be = backend(args);
+    let mut rng = Pcg64::seed(2);
+    let mut t = Table::new(
+        &format!("{alg} decomposition, N={n}, nb={nb}, backend={}", be.name()),
+        &["phase", "seconds"],
+    );
+    let (stats, ops) = match alg {
+        "lu" => {
+            let mut a = blas::Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+            let mut ipiv = vec![0usize; n];
+            let s = getrf_offload(n, n, &mut a.data, n, &mut ipiv, nb, be.as_ref())
+                .unwrap_or_else(|e| die(&format!("factorization failed: {e}")));
+            (s, lu_ops(n))
+        }
+        "cholesky" => {
+            let a64 = experiments::matgen::spd_f64(n, 1.0, &mut rng);
+            let mut a: blas::Matrix<Posit32> = a64.cast();
+            let s = potrf_offload(n, &mut a.data, n, nb, be.as_ref())
+                .unwrap_or_else(|e| die(&format!("factorization failed: {e}")));
+            (s, posit_accel::coordinator::drivers::chol_ops(n))
+        }
+        other => die(&format!("unknown --alg '{other}'")),
+    };
+    t.row(&["panel (host)".into(), format!("{:.4}", stats.panel_s)]);
+    t.row(&["update (accel)".into(), format!("{:.4}", stats.update_s)]);
+    t.row(&["total".into(), format!("{:.4}", stats.total_s)]);
+    t.row(&["Gflops".into(), format!("{:.3}", stats.gflops(ops))]);
+    t.row(&["tiles".into(), be.tiles_dispatched().to_string()]);
+    print!("{}", t.render());
+}
+
+fn cmd_solve(args: &Args) {
+    let n = args.usize_or("n", 256);
+    let sigma = args.f64_or("sigma", 1.0);
+    let mut rng = Pcg64::seed(3);
+    let a64 = experiments::matgen::normal_f64(n, sigma, &mut rng);
+    let (xsol, b64) = experiments::matgen::rhs_for(&a64);
+    let mut t = Table::new(
+        &format!("solve Ax=b, N={n}, σ={sigma:.0e}: posit32 vs binary32 (binary64 truth)"),
+        &["format", "backward err", "forward err", "digits vs b32"],
+    );
+    let mut errs = vec![];
+    // posit32
+    {
+        let (a, mut b) = experiments::matgen::cast_problem::<Posit32>(&a64, &b64);
+        let mut lu = a;
+        let mut ipiv = vec![0usize; n];
+        lapack::getrf(n, n, &mut lu.data, n, &mut ipiv, 64, blas::default_threads()).unwrap();
+        lapack::getrs(n, 1, &lu.data, n, &ipiv, &mut b, n);
+        errs.push(("posit32", lapack::backward_error(&a64, &b64, &b), lapack::forward_error(&xsol, &b)));
+    }
+    // binary32
+    {
+        let (a, mut b) = experiments::matgen::cast_problem::<f32>(&a64, &b64);
+        let mut lu = a;
+        let mut ipiv = vec![0usize; n];
+        lapack::getrf(n, n, &mut lu.data, n, &mut ipiv, 64, blas::default_threads()).unwrap();
+        lapack::getrs(n, 1, &lu.data, n, &ipiv, &mut b, n);
+        errs.push(("binary32", lapack::backward_error(&a64, &b64, &b), lapack::forward_error(&xsol, &b)));
+    }
+    let e32 = errs[1].1;
+    for (name, be, fe) in errs {
+        t.row(&[
+            name.into(),
+            format!("{be:.3e}"),
+            format!("{fe:.3e}"),
+            format!("{:+.2}", (e32 / be).log10()),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,189 @@
+//! Conversions between Posit(32,2) and IEEE 754 / integers.
+//!
+//! * posit → f64 is **exact**: every Posit(32,2) value (scale ∈ [-120,120],
+//!   ≤ 27 fraction bits) is representable in binary64.
+//! * f64/f32 → posit rounds once (RNE with posit saturation semantics) via
+//!   [`super::pack32`]; an f64 significand (52 bits) fits the 63-bit packing
+//!   frame, so no pre-rounding ever happens.
+//! * NaN and ±Inf map to NaR; subnormals are normalized and convert exactly.
+
+use super::{pack32, unpack32, NAR_BITS, ZERO_BITS};
+
+/// Exact conversion of a Posit(32,2) bit pattern to f64. NaR maps to NaN.
+pub fn posit32_to_f64(bits: u32) -> f64 {
+    if bits == ZERO_BITS {
+        return 0.0;
+    }
+    if bits == NAR_BITS {
+        return f64::NAN;
+    }
+    let u = unpack32(bits);
+    // frac is Q1.31: value = frac * 2^(scale - 31). Both factors exact.
+    let m = u.frac as f64 * (u.scale - 31).exp2_i();
+    if u.neg {
+        -m
+    } else {
+        m
+    }
+}
+
+/// Round an f64 to the nearest Posit(32,2).
+pub fn f64_to_posit32(v: f64) -> u32 {
+    let b = v.to_bits();
+    let neg = b >> 63 != 0;
+    let biased = ((b >> 52) & 0x7FF) as i32;
+    let mant = b & ((1u64 << 52) - 1);
+    if biased == 0x7FF {
+        return NAR_BITS; // NaN or ±Inf
+    }
+    if biased == 0 {
+        if mant == 0 {
+            return ZERO_BITS; // ±0 -> the single posit zero
+        }
+        // Subnormal: normalize. Value = mant * 2^-1074 = sig * 2^(scale-63).
+        // (Always far below minpos = 2^-120, so this saturates; kept exact
+        // anyway for the generic small-format engine's sake.)
+        let lz = mant.leading_zeros(); // >= 12
+        let sig = mant << lz; // hidden bit at 63
+        let scale = -1011 - lz as i32;
+        return pack32(neg, scale, sig);
+    }
+    let scale = biased - 1023;
+    let sig = (1u64 << 63) | (mant << 11);
+    pack32(neg, scale, sig)
+}
+
+/// Round an f32 to the nearest Posit(32,2). Goes through f64, which is
+/// exact for every f32, so only a single rounding occurs.
+pub fn f32_to_posit32(v: f32) -> u32 {
+    f64_to_posit32(v as f64)
+}
+
+/// Exact conversion to f32 is not possible in general (27 > 23 fraction
+/// bits); this rounds once, since posit→f64 is exact.
+pub fn posit32_to_f32(bits: u32) -> f32 {
+    posit32_to_f64(bits) as f32
+}
+
+/// Convert an i64 to the nearest Posit(32,2) (exact for |v| < 2^27-ish,
+/// rounded otherwise).
+pub fn i64_to_posit32(v: i64) -> u32 {
+    if v == 0 {
+        return ZERO_BITS;
+    }
+    let neg = v < 0;
+    let a = v.unsigned_abs();
+    let lz = a.leading_zeros();
+    let sig = a << lz; // hidden bit at 63
+    let scale = 63 - lz as i32;
+    pack32(neg, scale, sig)
+}
+
+/// Round a Posit(32,2) to the nearest i64 (ties to even), saturating.
+/// NaR returns i64::MIN (matching SoftPosit's convention).
+pub fn posit32_to_i64(bits: u32) -> i64 {
+    if bits == ZERO_BITS {
+        return 0;
+    }
+    if bits == NAR_BITS {
+        return i64::MIN;
+    }
+    let u = unpack32(bits);
+    if u.scale >= 63 {
+        return if u.neg { i64::MIN } else { i64::MAX };
+    }
+    if u.scale < -1 {
+        return 0; // |x| < 0.5 rounds to 0
+    }
+    // Integer part: frac (Q1.31) shifted so 2^scale is the weight of the
+    // hidden bit. Work in u128 to keep the discarded fraction for rounding.
+    let wide = (u.frac as u128) << 64; // hidden bit at 95
+    let int_shift = 95 - u.scale; // bits below this are fraction
+    let int = (wide >> int_shift) as u64;
+    let rem_mask = (1u128 << int_shift) - 1;
+    let rem = wide & rem_mask;
+    let half = 1u128 << (int_shift - 1);
+    let rounded = int
+        + ((rem > half) || (rem == half && int & 1 == 1)) as u64;
+    let val = rounded as i64;
+    if u.neg {
+        -val
+    } else {
+        val
+    }
+}
+
+/// Small helper: integer power of two as f64, valid for |e| <= 1023.
+trait Exp2I {
+    fn exp2_i(self) -> f64;
+}
+impl Exp2I for i32 {
+    #[inline]
+    fn exp2_i(self) -> f64 {
+        debug_assert!((-1022..=1023).contains(&self));
+        f64::from_bits(((self + 1023) as u64) << 52)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{MAXPOS_BITS, MINPOS_BITS, ONE_BITS};
+
+    #[test]
+    fn f64_roundtrip_exact_values() {
+        for v in [
+            0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.75, 1024.0, 9.5367431640625e-7,
+            2f64.powi(120), 2f64.powi(-120), 1.0 + 2f64.powi(-27),
+        ] {
+            let p = f64_to_posit32(v);
+            assert_eq!(posit32_to_f64(p), v, "roundtrip {v}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f64_to_posit32(f64::NAN), NAR_BITS);
+        assert_eq!(f64_to_posit32(f64::INFINITY), NAR_BITS);
+        assert_eq!(f64_to_posit32(f64::NEG_INFINITY), NAR_BITS);
+        assert_eq!(f64_to_posit32(-0.0), ZERO_BITS);
+        assert!(posit32_to_f64(NAR_BITS).is_nan());
+        assert_eq!(f64_to_posit32(1.0), ONE_BITS);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(f64_to_posit32(1e40), MAXPOS_BITS);
+        assert_eq!(f64_to_posit32(f64::MAX), MAXPOS_BITS);
+        assert_eq!(f64_to_posit32(1e-40), MINPOS_BITS);
+        assert_eq!(f64_to_posit32(5e-324), MINPOS_BITS); // smallest subnormal
+        assert_eq!(f64_to_posit32(-1e40), MAXPOS_BITS.wrapping_neg());
+        assert_eq!(f64_to_posit32(-5e-324), MINPOS_BITS.wrapping_neg());
+    }
+
+    #[test]
+    fn rounding_to_nearest() {
+        // Near 1.0, ulp = 2^-27. 1 + ulp/2 is a tie -> even (stays 1.0).
+        let ulp = 2f64.powi(-27);
+        assert_eq!(f64_to_posit32(1.0 + ulp / 2.0), ONE_BITS);
+        assert_eq!(posit32_to_f64(f64_to_posit32(1.0 + ulp * 1.5)), 1.0 + 2.0 * ulp);
+        // Just above the tie rounds up.
+        assert_eq!(
+            posit32_to_f64(f64_to_posit32(1.0 + ulp / 2.0 + ulp / 256.0)),
+            1.0 + ulp
+        );
+    }
+
+    #[test]
+    fn int_conversions() {
+        for v in [0i64, 1, -1, 7, 42, -100000, 1 << 26, -(1 << 26)] {
+            assert_eq!(posit32_to_f64(i64_to_posit32(v)), v as f64, "{v}");
+        }
+        assert_eq!(posit32_to_i64(f64_to_posit32(2.5)), 2); // tie to even
+        assert_eq!(posit32_to_i64(f64_to_posit32(3.5)), 4); // tie to even
+        assert_eq!(posit32_to_i64(f64_to_posit32(-2.5)), -2);
+        assert_eq!(posit32_to_i64(f64_to_posit32(0.49)), 0);
+        assert_eq!(posit32_to_i64(f64_to_posit32(1e30)), i64::MAX);
+        assert_eq!(posit32_to_i64(NAR_BITS), i64::MIN);
+    }
+}

@@ -1,0 +1,266 @@
+//! Warp-level profiling of posit operations — the paper's nvprof
+//! methodology (§4.2, Tables 2–3) reproduced on our own implementation.
+//!
+//! The paper executes SoftPosit-derived kernels on a GPU and reports, per
+//! input-magnitude range: `n_inst` (instructions per operation), `n_cont`
+//! (control instructions), and `f_branch` (branch efficiency: the share of
+//! branch executions where every thread of a 32-lane warp took the same
+//! direction). We run the instrumented [`super::generic`] implementation on
+//! 32 lanes of range-distributed operands and compute the same quantities;
+//! the GPU timing model (`sim::gpu`) then prices the resulting instruction
+//! stream. Nothing in Tables 2–3 is hard-coded.
+
+use super::generic::{PositSpec, Profile};
+use crate::rng::Pcg64;
+use std::collections::HashMap;
+
+/// SIMT width used throughout (CUDA warp).
+pub const WARP: usize = 32;
+
+/// The four kernels the paper profiles (Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PositOp {
+    Add,
+    Mul,
+    Div,
+    Sqrt,
+}
+
+impl PositOp {
+    pub const ALL: [PositOp; 4] = [PositOp::Add, PositOp::Mul, PositOp::Div, PositOp::Sqrt];
+    pub fn name(self) -> &'static str {
+        match self {
+            PositOp::Add => "Add",
+            PositOp::Mul => "Mul",
+            PositOp::Div => "Div",
+            PositOp::Sqrt => "Sqrt",
+        }
+    }
+}
+
+/// An input-magnitude range `[a, b)` (the paper's Table 2 rows).
+#[derive(Clone, Copy, Debug)]
+pub struct InputRange {
+    pub name: &'static str,
+    pub a: f64,
+    pub b: f64,
+}
+
+/// The paper's five ranges I0..I4.
+pub const PAPER_RANGES: [InputRange; 5] = [
+    InputRange { name: "I0", a: 1.0, b: 2.0 },
+    InputRange { name: "I1", a: 1e-38, b: 1e-30 },
+    InputRange { name: "I2", a: 1e30, b: 1e38 },
+    InputRange { name: "I3", a: 1e-15, b: 1e-14 },
+    InputRange { name: "I4", a: 1e14, b: 1e15 },
+];
+
+/// Aggregated warp statistics for one kernel on one operand distribution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpStats {
+    /// Mean executed instructions per lane (paper's `n_inst`).
+    pub n_inst: f64,
+    /// Mean executed control instructions per lane (paper's `n_cont`).
+    pub n_cont: f64,
+    /// Branch efficiency: 1 - divergent / total branch executions.
+    pub f_branch: f64,
+    /// Effective instruction issue slots per op for a lockstep warp:
+    /// max-lane instructions plus a serialization surcharge per divergent
+    /// branch execution. This is what the GPU timing model prices.
+    pub warp_inst: f64,
+}
+
+/// Extra issue slots charged per divergent branch execution (both sides of
+/// the branch occupy the pipeline). Single calibration constant; see
+/// DESIGN.md §4 (GPU model).
+pub const DIVERGENCE_PENALTY: f64 = 6.0;
+
+/// Combine per-lane profiles of one warp-executed operation.
+///
+/// Branch executions are aligned across lanes by `(site, occurrence#)` —
+/// the k-th time a lane reaches static branch `site`. A branch execution is
+/// divergent when participating lanes disagree on the direction.
+pub fn warp_stats(lanes: &[Profile]) -> OpStats {
+    assert!(!lanes.is_empty());
+    let n = lanes.len() as f64;
+    let n_inst = lanes.iter().map(|p| p.inst as f64).sum::<f64>() / n;
+    let n_cont = lanes.iter().map(|p| p.cont as f64).sum::<f64>() / n;
+    let max_inst = lanes.iter().map(|p| p.inst).max().unwrap() as f64;
+
+    // (site, occurrence) -> (visits, takens)
+    let mut execs: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+    for lane in lanes {
+        let mut occ: HashMap<u32, u32> = HashMap::new();
+        for &(s, taken) in &lane.trace {
+            let k = occ.entry(s).or_insert(0);
+            let e = execs.entry((s, *k)).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += taken as u32;
+            *k += 1;
+        }
+    }
+    let total = execs.len() as f64;
+    let divergent = execs
+        .values()
+        .filter(|&&(v, t)| t != 0 && t != v)
+        .count() as f64;
+    let f_branch = if total == 0.0 { 1.0 } else { 1.0 - divergent / total };
+    OpStats {
+        n_inst,
+        n_cont,
+        f_branch,
+        warp_inst: max_inst + DIVERGENCE_PENALTY * divergent,
+    }
+}
+
+/// Draw a posit operand log-uniformly from `[a, b)` (positive, like the
+/// paper's Table 2 arrays).
+pub fn sample_in_range(spec: PositSpec, r: InputRange, rng: &mut Pcg64) -> u32 {
+    spec.from_f64(rng.loguniform(r.a, r.b))
+}
+
+/// Profile `op` over `warps` warps of operands drawn from `range`.
+pub fn profile_op(
+    spec: PositSpec,
+    op: PositOp,
+    range: InputRange,
+    warps: usize,
+    rng: &mut Pcg64,
+) -> OpStats {
+    let mut acc = OpStats::default();
+    for _ in 0..warps {
+        let lanes: Vec<Profile> = (0..WARP)
+            .map(|_| {
+                let a = sample_in_range(spec, range, rng);
+                let b = sample_in_range(spec, range, rng);
+                let mut p = Profile::default();
+                match op {
+                    PositOp::Add => spec.add(a, b, &mut p),
+                    PositOp::Mul => spec.mul(a, b, &mut p),
+                    PositOp::Div => spec.div(a, b, &mut p),
+                    PositOp::Sqrt => spec.sqrt(a, &mut p),
+                };
+                p
+            })
+            .collect();
+        let s = warp_stats(&lanes);
+        acc.n_inst += s.n_inst;
+        acc.n_cont += s.n_cont;
+        acc.f_branch += s.f_branch;
+        acc.warp_inst += s.warp_inst;
+    }
+    let w = warps as f64;
+    OpStats {
+        n_inst: acc.n_inst / w,
+        n_cont: acc.n_cont / w,
+        f_branch: acc.f_branch / w,
+        warp_inst: acc.warp_inst / w,
+    }
+}
+
+/// Profile the fused multiply-accumulate pattern of the GEMM inner loop
+/// (`c = add(c, mul(a, b))`) with matrix entries ~ N(0, σ), accumulator
+/// warmed up over `k_depth` steps. Returns stats *per fma* (two flops).
+/// This drives the σ-dependence of GEMM performance (Fig 3).
+pub fn profile_gemm_fma(
+    spec: PositSpec,
+    sigma: f64,
+    k_depth: usize,
+    warps: usize,
+    rng: &mut Pcg64,
+) -> OpStats {
+    let mut acc = OpStats::default();
+    let mut count = 0.0;
+    for _ in 0..warps {
+        // Each lane owns an accumulator, as one GPU thread owns c[i][j].
+        let mut c = vec![0u32; WARP];
+        for _step in 0..k_depth {
+            let lanes: Vec<Profile> = (0..WARP)
+                .map(|l| {
+                    let a = spec.from_f64(rng.normal_sigma(sigma));
+                    let b = spec.from_f64(rng.normal_sigma(sigma));
+                    let mut p = Profile::default();
+                    let prod = spec.mul(a, b, &mut p);
+                    c[l] = spec.add(c[l], prod, &mut p);
+                    p
+                })
+                .collect();
+            let s = warp_stats(&lanes);
+            acc.n_inst += s.n_inst;
+            acc.n_cont += s.n_cont;
+            acc.f_branch += s.f_branch;
+            acc.warp_inst += s.warp_inst;
+            count += 1.0;
+        }
+    }
+    OpStats {
+        n_inst: acc.n_inst / count,
+        n_cont: acc.n_cont / count,
+        f_branch: acc.f_branch / count,
+        warp_inst: acc.warp_inst / count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_zone_is_cheapest() {
+        // Table 2's headline: I0 (values near 1) executes the fewest
+        // instructions; the wide ranges I1/I2 the most; I3/I4 in between.
+        let spec = PositSpec::P32;
+        let mut rng = Pcg64::seed(2024);
+        let stats: Vec<OpStats> = PAPER_RANGES
+            .iter()
+            .map(|&r| profile_op(spec, PositOp::Add, r, 64, &mut rng))
+            .collect();
+        let (i0, i1, i2, i3, i4) = (stats[0], stats[1], stats[2], stats[3], stats[4]);
+        assert!(i0.n_inst < i3.n_inst && i0.n_inst < i4.n_inst);
+        assert!(i3.n_inst < i1.n_inst && i4.n_inst < i2.n_inst);
+        assert!(i0.warp_inst < i1.warp_inst && i0.warp_inst < i2.warp_inst);
+    }
+
+    #[test]
+    fn wide_ranges_diverge_more() {
+        let spec = PositSpec::P32;
+        let mut rng = Pcg64::seed(7);
+        let i0 = profile_op(spec, PositOp::Add, PAPER_RANGES[0], 64, &mut rng);
+        let i1 = profile_op(spec, PositOp::Add, PAPER_RANGES[1], 64, &mut rng);
+        // I1 spans 8 decades -> lanes disagree on regime length -> more
+        // control instructions and (weakly) lower branch efficiency.
+        assert!(i1.n_cont > i0.n_cont);
+        assert!(i1.f_branch <= i0.f_branch + 0.02);
+    }
+
+    #[test]
+    fn warp_stats_divergence_counting() {
+        // Two lanes, one branch site: disagree -> f_branch = 0.
+        let mk = |taken| Profile {
+            inst: 10,
+            cont: 1,
+            trace: vec![(1, taken)],
+        };
+        let s = warp_stats(&[mk(true), mk(false)]);
+        assert_eq!(s.f_branch, 0.0);
+        assert_eq!(s.warp_inst, 10.0 + DIVERGENCE_PENALTY);
+        let s = warp_stats(&[mk(true), mk(true)]);
+        assert_eq!(s.f_branch, 1.0);
+    }
+
+    #[test]
+    fn gemm_fma_sigma_dependence() {
+        // σ = 1 (golden zone) must cost fewer warp slots per fma than
+        // σ = 1e6 (regimes long, divergence high) — the Fig 3 effect.
+        let spec = PositSpec::P32;
+        let mut rng = Pcg64::seed(9);
+        let near1 = profile_gemm_fma(spec, 1.0, 16, 8, &mut rng);
+        let huge = profile_gemm_fma(spec, 1e6, 16, 8, &mut rng);
+        assert!(
+            near1.warp_inst < huge.warp_inst,
+            "{} !< {}",
+            near1.warp_inst,
+            huge.warp_inst
+        );
+    }
+}

@@ -1,0 +1,458 @@
+//! The Posit(32,2) number format (paper §2).
+//!
+//! A posit value is `x = (-1)^s · u^k · 2^e · 1.f` with `u = 2^(2^es) = 16`
+//! for `es = 2`. The regime `k` is encoded as a variable-length run of
+//! identical bits, so the fraction width `fs` shrinks as `|log2 x|` grows:
+//! posits near 1 carry up to 27 fraction bits (more precise than binary32),
+//! posits far from 1 carry as few as 0 (less precise). This module
+//! implements the format exactly:
+//!
+//! * [`Posit32`] — the 32-bit storage type (a `u32` bit pattern).
+//! * [`unpack32`] / [`pack32`] — decode/encode between the bit pattern and
+//!   the internal sign/scale/significand form, with correct round-to-
+//!   nearest-even, saturation at ±`maxpos`, never-round-to-zero, and NaR.
+//! * [`add`], [`mul`], [`div`], [`sqrt`] — exact scalar operations (one
+//!   posit rounding per operation), implemented **branchlessly** with
+//!   count-leading-zeros — the software analogue of the combinational
+//!   decoder the paper uses on the FPGA (§3.1). A data-dependent-loop
+//!   implementation in the style of SoftPosit (which the paper ports to
+//!   GPUs, §3.2) lives in [`counting`] and is checked bit-exact against
+//!   this one.
+//!
+//! Submodules: [`convert`] (f32/f64/int conversions), [`quire`] (512-bit
+//! exact accumulator), [`generic`] (Posit(n,es) engine for exhaustive
+//! small-format tests), [`counting`] (instrumented SoftPosit-style ops).
+
+pub mod convert;
+pub mod counting;
+pub mod formats;
+pub mod generic;
+pub mod quire;
+
+mod ops;
+
+pub use ops::{add, add_unpacked, div, mul, mul_exact, mul_unpacked, neg, round_unpacked, sqrt, sub};
+pub(crate) use ops::add_core;
+
+/// A 32-bit posit with 2-bit exponent field: Posit(32,2).
+///
+/// The wrapped `u32` is the raw bit pattern. Arithmetic is provided both as
+/// methods/operators on this type and as free functions on `u32` patterns
+/// (the hot path used by the BLAS kernels).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Posit32(pub u32);
+
+/// Exponent field width of Posit(32,2).
+pub const ES: u32 = 2;
+/// Total width in bits.
+pub const NBITS: u32 = 32;
+/// `useed = 2^(2^es)`; each extra regime bit scales the value by this.
+pub const USEED_LOG2: i32 = 1 << ES; // 4
+/// Maximum |scale| = (nbits - 2) * 2^es = 120; maxpos = 2^120.
+pub const MAX_SCALE: i32 = ((NBITS - 2) as i32) << ES;
+
+/// Bit pattern of zero (the unique posit zero; posits have no -0).
+pub const ZERO_BITS: u32 = 0x0000_0000;
+/// Bit pattern of NaR ("Not a Real"): the single exception value.
+pub const NAR_BITS: u32 = 0x8000_0000;
+/// Bit pattern of 1.0.
+pub const ONE_BITS: u32 = 0x4000_0000;
+/// Bit pattern of the largest finite posit, 2^120.
+pub const MAXPOS_BITS: u32 = 0x7FFF_FFFF;
+/// Bit pattern of the smallest positive posit, 2^-120.
+pub const MINPOS_BITS: u32 = 0x0000_0001;
+
+impl Posit32 {
+    pub const ZERO: Posit32 = Posit32(ZERO_BITS);
+    pub const ONE: Posit32 = Posit32(ONE_BITS);
+    pub const NAR: Posit32 = Posit32(NAR_BITS);
+    pub const MAXPOS: Posit32 = Posit32(MAXPOS_BITS);
+    pub const MINPOS: Posit32 = Posit32(MINPOS_BITS);
+
+    /// Construct from a raw bit pattern.
+    #[inline]
+    pub const fn from_bits(bits: u32) -> Self {
+        Posit32(bits)
+    }
+    /// The raw bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u32 {
+        self.0
+    }
+    /// True iff this is the NaR exception value.
+    #[inline]
+    pub const fn is_nar(self) -> bool {
+        self.0 == NAR_BITS
+    }
+    /// True iff this is zero.
+    #[inline]
+    pub const fn is_zero(self) -> bool {
+        self.0 == ZERO_BITS
+    }
+    /// True for any value other than NaR.
+    #[inline]
+    pub const fn is_real(self) -> bool {
+        self.0 != NAR_BITS
+    }
+    /// Sign bit (true = negative). NaR and zero report false/true per bit.
+    #[inline]
+    pub const fn is_negative(self) -> bool {
+        (self.0 as i32) < 0 && self.0 != NAR_BITS
+    }
+    /// Posit negation is exact: two's complement of the word.
+    #[inline]
+    pub const fn negate(self) -> Self {
+        if self.0 == NAR_BITS {
+            self
+        } else {
+            Posit32(self.0.wrapping_neg())
+        }
+    }
+    /// |x|; exact.
+    #[inline]
+    pub const fn abs(self) -> Self {
+        if (self.0 as i32) < 0 && self.0 != NAR_BITS {
+            Posit32(self.0.wrapping_neg())
+        } else {
+            self
+        }
+    }
+    /// Round-trip through f64 (exact: every Posit(32,2) is an f64).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        convert::posit32_to_f64(self.0)
+    }
+    /// Round an f64 to the nearest Posit(32,2) (RNE, saturating).
+    #[inline]
+    pub fn from_f64(v: f64) -> Self {
+        Posit32(convert::f64_to_posit32(v))
+    }
+    /// Round an f32 to the nearest Posit(32,2) (RNE, saturating).
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        Posit32(convert::f32_to_posit32(v))
+    }
+    /// Nearest f32 (single rounding: the exact posit value is first
+    /// materialized in f64, which is lossless, then rounded once).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        convert::posit32_to_f64(self.0) as f32
+    }
+    #[inline]
+    pub fn recip(self) -> Self {
+        Posit32(div(ONE_BITS, self.0))
+    }
+    #[inline]
+    pub fn sqrt(self) -> Self {
+        Posit32(sqrt(self.0))
+    }
+}
+
+/// Total order on posits: NaR < all reals, otherwise numeric order.
+/// This is simply signed integer comparison of the bit patterns — one of
+/// the format's design features (paper §2: "hardware friendly").
+impl PartialOrd for Posit32 {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<core::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Posit32 {
+    #[inline]
+    fn cmp(&self, other: &Self) -> core::cmp::Ordering {
+        (self.0 as i32).cmp(&(other.0 as i32))
+    }
+}
+
+impl core::ops::Add for Posit32 {
+    type Output = Posit32;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        Posit32(add(self.0, rhs.0))
+    }
+}
+impl core::ops::Sub for Posit32 {
+    type Output = Posit32;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        Posit32(sub(self.0, rhs.0))
+    }
+}
+impl core::ops::Mul for Posit32 {
+    type Output = Posit32;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        Posit32(mul(self.0, rhs.0))
+    }
+}
+impl core::ops::Div for Posit32 {
+    type Output = Posit32;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        Posit32(div(self.0, rhs.0))
+    }
+}
+impl core::ops::Neg for Posit32 {
+    type Output = Posit32;
+    #[inline]
+    fn neg(self) -> Self {
+        self.negate()
+    }
+}
+impl core::ops::AddAssign for Posit32 {
+    #[inline]
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+impl core::ops::SubAssign for Posit32 {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+impl core::ops::MulAssign for Posit32 {
+    #[inline]
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+
+impl core::fmt::Debug for Posit32 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.is_nar() {
+            write!(f, "Posit32(NaR)")
+        } else {
+            write!(f, "Posit32({:e} = {:#010x})", self.to_f64(), self.0)
+        }
+    }
+}
+impl core::fmt::Display for Posit32 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.is_nar() {
+            write!(f, "NaR")
+        } else {
+            core::fmt::Display::fmt(&self.to_f64(), f)
+        }
+    }
+}
+
+/// Internal unpacked form of a nonzero, non-NaR posit.
+///
+/// `value = (-1)^neg · 2^scale · (frac / 2^31)` with `frac` a Q1.31
+/// significand: hidden bit at bit 31, so `frac ∈ [2^31, 2^32)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    pub neg: bool,
+    /// Combined scale `4k + e` ∈ [-120, 120].
+    pub scale: i32,
+    /// Q1.31 significand with hidden bit set (bit 31).
+    pub frac: u32,
+}
+
+/// Decode a nonzero, non-NaR posit bit pattern.
+///
+/// Branchless in the regime length: the run of identical bits is measured
+/// with `leading_zeros` (a priority encoder in hardware terms — exactly the
+/// circuit the paper's FPGA decoder uses, §2/§3.1).
+///
+/// # Panics
+/// Debug-asserts that `bits` is neither zero nor NaR.
+#[inline]
+pub fn unpack32(bits: u32) -> Unpacked {
+    debug_assert!(bits != ZERO_BITS && bits != NAR_BITS);
+    let neg = (bits as i32) < 0;
+    // Two's-complement magnitude: posit negation is word negation.
+    let abs = if neg { bits.wrapping_neg() } else { bits };
+    // Drop the sign bit; the 31 regime/exp/frac bits are now left-aligned
+    // (bit 0 becomes a zero pad and cannot extend a run of zeros because
+    // a zeros-run is terminated by a 1 which `abs != 0` guarantees).
+    let x = abs << 1;
+    // Regime: count the leading run of identical bits.
+    let ones_run = (!x).leading_zeros(); // length of leading 1-run (0 if top bit is 0)
+    let zeros_run = x.leading_zeros(); // length of leading 0-run (0 if top bit is 1)
+    let is_ones = x >> 31 == 1;
+    let (k, run) = if is_ones {
+        (ones_run as i32 - 1, ones_run)
+    } else {
+        (-(zeros_run as i32), zeros_run)
+    };
+    // Skip the run and its terminating bit. `run + 1` can be 32 (maxpos /
+    // minpos patterns where the run fills the word): unbounded_shl -> 0,
+    // which is correct (missing exponent/fraction bits read as zero).
+    let body = x.unbounded_shl(run + 1);
+    let e = (body >> 30) as i32; // 2-bit exponent field (truncated bits = 0)
+    let frac_field = body << 2; // fraction, left-aligned in 32 bits
+    Unpacked {
+        neg,
+        scale: (k << ES) + e,
+        frac: 0x8000_0000 | (frac_field >> 1),
+    }
+}
+
+/// Encode (sign, scale, significand) into the nearest Posit(32,2).
+///
+/// `sig` is a Q1.63 significand: hidden bit at bit 63 (`sig ∈ [2^63, 2^64)`),
+/// with any inexactness from the producing operation OR-ed into bit 0 (a
+/// sticky bit). Rounding is round-to-nearest, ties to even *in the posit
+/// encoding* (i.e. after the regime has consumed its variable share of the
+/// word), with the posit-specific rules:
+///
+/// * magnitudes above `maxpos` clamp to `maxpos` (posits do not overflow),
+/// * nonzero magnitudes never round to zero (they return `minpos`).
+#[inline]
+pub fn pack32(neg: bool, scale: i32, sig: u64) -> u32 {
+    debug_assert!(sig >> 63 == 1, "significand must be normalized: {sig:#x}");
+    // Clamp the scale: beyond ±MAX_SCALE the result saturates regardless of
+    // the fraction. (At exactly ±MAX_SCALE the generic path below already
+    // rounds regime-truncated payloads correctly.)
+    let mag = if scale > MAX_SCALE {
+        MAXPOS_BITS
+    } else if scale < -MAX_SCALE {
+        MINPOS_BITS
+    } else {
+        // Regime run for k = floor(scale/4), exponent e = scale mod 4.
+        let k = scale >> ES;
+        let e = (scale & (USEED_LOG2 - 1)) as u64;
+        // The exact stream is [regime+terminator | e(2) | frac(63)], cut to
+        // 31 bits with RNE. To stay within u64 arithmetic the 63 fraction
+        // bits are compressed to 29 + a sticky bit: the cut always removes
+        // at least regime+1 >= 3 payload bits, so compressed-away fraction
+        // bits can only ever land in the sticky region (same scheme as the
+        // jnp kernel, python/compile/kernels/posit_ops.py::encode).
+        let (regime, rs): (u64, u32) = if k >= 0 {
+            let r = k as u32 + 1;
+            (((1u64 << r) - 1) << 1, r + 1)
+        } else {
+            (1, 1 - k as u32)
+        };
+        let frac63 = sig & 0x7FFF_FFFF_FFFF_FFFF;
+        let sticky_low = (frac63 & ((1u64 << 34) - 1) != 0) as u64;
+        let payload = (e << 30) | ((frac63 >> 34) << 1) | sticky_low;
+        let stream = (regime << 32) | payload;
+        // Stream width rs + 32 <= 64 (|scale| <= 120 -> rs <= 32); keep 31.
+        let shift = rs + 1;
+        let kept = (stream >> shift) as u32;
+        let round = (stream >> (shift - 1)) & 1 != 0;
+        let sticky = stream & ((1u64 << (shift - 1)) - 1) != 0;
+        let mag = kept + ((round && (sticky || kept & 1 == 1)) as u32);
+        // Posit rounding never overflows past maxpos nor underflows to zero.
+        if mag >= 0x8000_0000 {
+            MAXPOS_BITS
+        } else if mag == 0 {
+            MINPOS_BITS
+        } else {
+            mag
+        }
+    };
+    if neg {
+        mag.wrapping_neg()
+    } else {
+        mag
+    }
+}
+
+/// Fraction width available for a posit with the given scale (paper §2:
+/// `fs = 32 - k(r) - es - 2`, floored at 0). Used by the experiments to
+/// report the per-range machine epsilon (Table 2 discussion).
+pub fn frac_bits_for_scale(scale: i32) -> u32 {
+    let k = scale >> ES;
+    let rs = if k >= 0 { k as u32 + 2 } else { (-k) as u32 + 1 };
+    (31u32.saturating_sub(rs)).saturating_sub(ES).min(27)
+}
+
+/// Rounding step ("machine epsilon") of Posit(32,2) at the given scale:
+/// 2^-fs relative. For |x| near 1 this is 2^-27 ≈ 7.5e-9 — smaller than
+/// binary32's 2^-24 ≈ 6e-8 (the "golden zone"); far from 1 it degrades.
+pub fn eps_for_scale(scale: i32) -> f64 {
+    (2.0f64).powi(-(frac_bits_for_scale(scale) as i32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_decode() {
+        // 1.0 = 0x40000000: regime "10" (k=0), e=0, f=0.
+        let u = unpack32(ONE_BITS);
+        assert_eq!((u.neg, u.scale, u.frac), (false, 0, 0x8000_0000));
+        // maxpos = 2^120, minpos = 2^-120.
+        let u = unpack32(MAXPOS_BITS);
+        assert_eq!((u.neg, u.scale, u.frac), (false, 120, 0x8000_0000));
+        let u = unpack32(MINPOS_BITS);
+        assert_eq!((u.neg, u.scale, u.frac), (false, -120, 0x8000_0000));
+        // -1.0 is the two's complement of 1.0.
+        let u = unpack32(ONE_BITS.wrapping_neg());
+        assert_eq!((u.neg, u.scale, u.frac), (true, 0, 0x8000_0000));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_regimes() {
+        // Every scale in range with a handful of fractions must round-trip
+        // bit-exactly through pack -> unpack when the fraction fits.
+        for scale in -120..=120 {
+            let fs = frac_bits_for_scale(scale);
+            // Near the extremes the regime also truncates the exponent
+            // field; such scales are only representable when the cut-off
+            // exponent bits are zero.
+            let k = scale >> ES;
+            let rs = if k >= 0 { k as u32 + 2 } else { (-k) as u32 + 1 };
+            let avail_e = (31u32.saturating_sub(rs)).min(ES);
+            let e = (scale & (USEED_LOG2 - 1)) as u32;
+            if avail_e < ES && e & ((1 << (ES - avail_e)) - 1) != 0 {
+                continue;
+            }
+            for pat in [0u64, 1, 0x5A5A5A, (1 << 27) - 1] {
+                // Build sig = 1.f with exactly fs fraction bits.
+                let f = if fs == 0 { 0 } else { pat & ((1 << fs) - 1) };
+                let sig = (1u64 << 63) | (f << (63 - fs));
+                let bits = pack32(false, scale, sig);
+                let u = unpack32(bits);
+                assert_eq!(u.scale, scale, "scale {scale} fs {fs} pat {pat:#x}");
+                // u.frac is Q1.31; realign to Q1.63 for comparison.
+                assert_eq!((u.frac as u64) << 32, sig, "frac at scale {scale}");
+                assert!(!u.neg);
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_and_never_to_zero() {
+        assert_eq!(pack32(false, 121, 1 << 63), MAXPOS_BITS);
+        assert_eq!(pack32(false, 4000, 1 << 63), MAXPOS_BITS);
+        assert_eq!(pack32(false, -121, 1 << 63), MINPOS_BITS);
+        assert_eq!(pack32(false, -4000, 1 << 63), MINPOS_BITS);
+        assert_eq!(pack32(true, 121, 1 << 63), MAXPOS_BITS.wrapping_neg());
+        assert_eq!(pack32(true, -4000, 1 << 63), MINPOS_BITS.wrapping_neg());
+        // At scale 120 with a fraction, rounding up must clamp to maxpos,
+        // not wrap into NaR.
+        assert_eq!(pack32(false, 120, u64::MAX), MAXPOS_BITS);
+    }
+
+    #[test]
+    fn rne_tie_to_even() {
+        // scale 0 -> fs = 27. A significand exactly halfway between two
+        // representable fractions must round to the even one.
+        let fs = frac_bits_for_scale(0);
+        assert_eq!(fs, 27);
+        let exact = |f: u64| pack32(false, 0, (1u64 << 63) | (f << (63 - fs)));
+        // f = 1 + exactly half an ulp (odd last bit): ties up to even f = 2.
+        let odd_half = (1u64 << 63) | (1u64 << (63 - fs)) | (1u64 << (63 - fs - 1));
+        assert_eq!(pack32(false, 0, odd_half), exact(2));
+        // f = 0 + half ulp (even last bit): ties down, stays f = 0.
+        let even_half = (1u64 << 63) | (1u64 << (63 - fs - 1));
+        assert_eq!(pack32(false, 0, even_half), exact(0));
+        // Any sticky bit breaks the tie upward.
+        assert_eq!(pack32(false, 0, even_half | 1), exact(1));
+    }
+
+    #[test]
+    fn ordering_matches_value_order() {
+        let vals = [-1e20, -3.5, -1.0, -1e-12, 0.0, 1e-12, 0.5, 1.0, 2.0, 1e20];
+        let ps: Vec<Posit32> = vals.iter().map(|&v| Posit32::from_f64(v)).collect();
+        for w in ps.windows(2) {
+            assert!(w[0] < w[1], "{:?} < {:?}", w[0], w[1]);
+        }
+    }
+}

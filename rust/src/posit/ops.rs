@@ -1,0 +1,363 @@
+//! Exact scalar Posit(32,2) operations on raw bit patterns.
+//!
+//! Each operation performs exactly one posit rounding (RNE with posit
+//! saturation semantics, see [`super::pack32`]). NaR is absorbing; zero
+//! follows the posit standard (`x/0 = NaR`, `sqrt(negative) = NaR`).
+//!
+//! These are the "combinational" implementations: regime handling uses
+//! count-leading-zeros instead of SoftPosit's sequential bit loops, so the
+//! instruction count is independent of operand magnitude — the property
+//! the paper attributes to the FPGA datapath (§3.1), in contrast to its
+//! GPU port (§4.2, Tables 2–3) which is modelled by [`super::counting`].
+
+use super::{frac_bits_for_scale, pack32, unpack32, Unpacked, NAR_BITS, ZERO_BITS};
+
+/// Negation: exact, the two's complement of the word.
+#[inline]
+pub fn neg(a: u32) -> u32 {
+    if a == NAR_BITS {
+        NAR_BITS
+    } else {
+        a.wrapping_neg()
+    }
+}
+
+/// Posit multiplication with a single rounding.
+#[inline]
+pub fn mul(a: u32, b: u32) -> u32 {
+    if a == NAR_BITS || b == NAR_BITS {
+        return NAR_BITS;
+    }
+    if a == ZERO_BITS || b == ZERO_BITS {
+        return ZERO_BITS;
+    }
+    let ua = unpack32(a);
+    let ub = unpack32(b);
+    mul_unpacked(ua, ub)
+}
+
+/// Multiply two unpacked operands and round. Split out so GEMM kernels can
+/// decode once and reuse.
+#[inline]
+pub fn mul_unpacked(ua: Unpacked, ub: Unpacked) -> u32 {
+    let neg = ua.neg ^ ub.neg;
+    let mut scale = ua.scale + ub.scale;
+    // Q1.31 x Q1.31 -> Q2.62 product in [1, 4).
+    let prod = (ua.frac as u64) * (ub.frac as u64);
+    // Normalize to Q1.63. The product is exact; no sticky needed.
+    let sig = if prod >> 63 != 0 {
+        scale += 1;
+        prod
+    } else {
+        prod << 1
+    };
+    pack32(neg, scale, sig)
+}
+
+/// Posit addition with a single rounding.
+#[inline]
+pub fn add(a: u32, b: u32) -> u32 {
+    if a == NAR_BITS || b == NAR_BITS {
+        return NAR_BITS;
+    }
+    if a == ZERO_BITS {
+        return b;
+    }
+    if b == ZERO_BITS {
+        return a;
+    }
+    // x + (-x) is exactly zero; catching it here also guarantees the
+    // subtraction path below never sees a zero difference.
+    if a == b.wrapping_neg() {
+        return ZERO_BITS;
+    }
+    add_unpacked(unpack32(a), unpack32(b))
+}
+
+/// Subtraction: `a - b = a + (-b)`; exact negation then one rounding.
+#[inline]
+pub fn sub(a: u32, b: u32) -> u32 {
+    add(a, neg(b))
+}
+
+/// Add two unpacked operands (not both zero, sum nonzero) and round.
+///
+/// Works in a 64-bit fixed-point frame: the larger operand's hidden bit at
+/// bit 62 (Q1.62) leaves 31 guard bits, so alignment shifts up to 31 lose
+/// nothing; beyond that the shifted-out tail folds into a sticky bit.
+/// Sticky (d >= 32) and deep cancellation (d <= 1) cannot coincide, so the
+/// borrow-one-ulp trick below stays exact (DESIGN.md §7; bit-equivalence
+/// with the u128 formulation is pinned by the golden vectors and the
+/// cross-engine property tests).
+#[inline]
+pub fn add_unpacked(ua: Unpacked, ub: Unpacked) -> u32 {
+    let (neg, scale, sig64) = add_core(ua, ub);
+    pack32(neg, scale, sig64)
+}
+
+/// The rounding-free core of [`add_unpacked`]: returns the sign, scale and
+/// Q1.63 significand (sticky in bit 0) of the exact sum.
+#[inline]
+pub(crate) fn add_core(ua: Unpacked, ub: Unpacked) -> (bool, i32, u64) {
+    // Order by magnitude: (scale, frac) lexicographic.
+    let (hi, lo) = if (ua.scale, ua.frac) >= (ub.scale, ub.frac) {
+        (ua, ub)
+    } else {
+        (ub, ua)
+    };
+    let d = (hi.scale - lo.scale) as u32;
+    let hi64 = (hi.frac as u64) << 31; // hidden bit at 62
+    let lo_full = (lo.frac as u64) << 31;
+    let (lo64, sticky) = if d == 0 {
+        (lo_full, false)
+    } else if d < 64 {
+        (lo_full >> d, lo_full & ((1u64 << d) - 1) != 0)
+    } else {
+        (0, true)
+    };
+    // Unified two's-complement formulation (the same trick as the paper's
+    // Posit(32,2)_TC hardware units, §3.1/[24]): add lo as a signed term —
+    // when subtracting, the exact value hi - (lo64 + ε) with ε ∈ [0,1)
+    // equals (hi - lo64 - sticky) + residue, residue absorbed by sticky —
+    // then a single CLZ renormalizes carry, aligned, and cancellation
+    // cases alike: sum has its top bit at 63 - lz, the result significand
+    // is sum << lz (hidden at 63) and the scale moves by 1 - lz.
+    let subtract = hi.neg != lo.neg;
+    let lo_term = if subtract {
+        (lo64 + sticky as u64).wrapping_neg()
+    } else {
+        lo64
+    };
+    let sum = hi64.wrapping_add(lo_term);
+    debug_assert!(sum != 0, "exact cancellation is handled by the caller");
+    let lz = sum.leading_zeros();
+    let sig64 = sum.unbounded_shl(lz) | sticky as u64;
+    (hi.neg, hi.scale + 1 - lz as i32, sig64)
+}
+
+/// Round (neg, scale, Q1.63 sig + sticky) straight to the nearest posit's
+/// *unpacked* form — semantically `unpack32(pack32(...))` minus the bit
+/// marshalling. The fast path applies while the scale is far from the
+/// exponent-truncation zone (|scale| <= 104 -> fs >= 1), where stream-RNE
+/// reduces to fraction-RNE at `fs` bits; outside it we defer to the full
+/// encoder. This is the workhorse of the fused GEMM accumulator (the
+/// §Perf "unpacked accumulation" optimization): per-operation posit
+/// rounding is preserved exactly, only the pack/unpack round trip between
+/// consecutive operations is elided.
+#[inline]
+pub fn round_unpacked(neg: bool, scale: i32, sig: u64) -> Unpacked {
+    debug_assert!(sig >> 63 == 1);
+    if !(-104..=104).contains(&scale) {
+        // Rare: near-saturation or exponent truncation; take the exact
+        // encoder (cannot yield zero/NaR for a normalized sig).
+        return unpack32(pack32(neg, scale, sig));
+    }
+    let fs = frac_bits_for_scale(scale); // 1..=27 in this range
+    let cut = 63 - fs;
+    let kept = sig >> cut;
+    let round = (sig >> (cut - 1)) & 1 != 0;
+    let sticky = sig & ((1u64 << (cut - 1)) - 1) != 0;
+    let m = kept + (round && (sticky || kept & 1 == 1)) as u64;
+    if m >> (fs + 1) != 0 {
+        // Rounded up to 2.0: renormalize (2.0 is representable at every
+        // in-range scale, so no re-rounding can occur).
+        Unpacked {
+            neg,
+            scale: scale + 1,
+            frac: 0x8000_0000,
+        }
+    } else {
+        Unpacked {
+            neg,
+            scale,
+            frac: (m << (31 - fs)) as u32,
+        }
+    }
+}
+
+/// Fused decode of a multiply for `c += a*b` style accumulation: returns
+/// the exact (unrounded) product as an `Unpacked`-like triple with a Q1.63
+/// significand, for use by [`fma_to`]-style helpers and the quire.
+#[inline]
+pub fn mul_exact(ua: Unpacked, ub: Unpacked) -> (bool, i32, u64) {
+    let neg = ua.neg ^ ub.neg;
+    let mut scale = ua.scale + ub.scale;
+    let prod = (ua.frac as u64) * (ub.frac as u64);
+    let sig = if prod >> 63 != 0 {
+        scale += 1;
+        prod
+    } else {
+        prod << 1
+    };
+    (neg, scale, sig)
+}
+
+/// Posit division with a single rounding. `x / 0 = NaR` (posit standard).
+#[inline]
+pub fn div(a: u32, b: u32) -> u32 {
+    if a == NAR_BITS || b == NAR_BITS || b == ZERO_BITS {
+        return NAR_BITS;
+    }
+    if a == ZERO_BITS {
+        return ZERO_BITS;
+    }
+    let ua = unpack32(a);
+    let ub = unpack32(b);
+    let neg = ua.neg ^ ub.neg;
+    let mut scale = ua.scale - ub.scale;
+    // Q1.31 / Q1.31 at 62 extra fraction bits: quotient ~ ratio * 2^62,
+    // ratio in (1/2, 2) -> q in (2^61, 2^63).
+    let num = (ua.frac as u128) << 62;
+    let den = ub.frac as u128;
+    let q = num / den;
+    let rem_nonzero = num % den != 0;
+    let sig = if q >> 62 != 0 {
+        (q << 1) as u64
+    } else {
+        scale -= 1;
+        (q << 2) as u64
+    };
+    pack32(neg, scale, sig | rem_nonzero as u64)
+}
+
+/// Posit square root with a single rounding. `sqrt(x<0) = sqrt(NaR) = NaR`.
+#[inline]
+pub fn sqrt(a: u32) -> u32 {
+    if a == NAR_BITS || (a as i32) < 0 {
+        return NAR_BITS;
+    }
+    if a == ZERO_BITS {
+        return ZERO_BITS;
+    }
+    let ua = unpack32(a);
+    // Make the scale even by folding its parity into the significand:
+    // sqrt(2^s * m) = 2^(s/2) * sqrt(m), m in [1, 4).
+    let odd = (ua.scale & 1) != 0;
+    let scale = (ua.scale - odd as i32) >> 1; // floor to even, halve
+    // m in [2^60, 2^62): its exact integer sqrt lands in [2^30, 2^31),
+    // i.e. a Q1.30 significand — 30 fraction bits, enough for the posit's
+    // <= 27 plus round, with the remainder as sticky.
+    let m = (ua.frac as u64) << (29 + odd as u32);
+    let r = isqrt_u64(m);
+    debug_assert!(r >> 30 == 1, "{r:#x}");
+    let exact = r * r == m;
+    pack32(false, scale, (r << 33) | (!exact) as u64)
+}
+
+/// Exact integer square root of a u64 (floor): float seed + integer
+/// fix-up. The f64 sqrt of a <= 62-bit integer is within 2 ulp of the
+/// true root, so two correction rounds suffice (debug-asserted).
+#[inline]
+fn isqrt_u64(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut r = (n as f64).sqrt() as u64;
+    for _ in 0..2 {
+        if r.checked_mul(r).map_or(true, |s| s > n) {
+            r -= 1;
+        } else if (r + 1) * (r + 1) <= n {
+            r += 1;
+        }
+    }
+    debug_assert!(r * r <= n && (r + 1) * (r + 1) > n, "isqrt({n}) = {r}");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Posit32, MAXPOS_BITS, MINPOS_BITS, NAR_BITS, ONE_BITS, ZERO_BITS};
+    use super::*;
+
+    fn p(v: f64) -> u32 {
+        Posit32::from_f64(v).0
+    }
+    fn f(bits: u32) -> f64 {
+        Posit32(bits).to_f64()
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(add(NAR_BITS, ONE_BITS), NAR_BITS);
+        assert_eq!(mul(NAR_BITS, ZERO_BITS), NAR_BITS);
+        assert_eq!(div(ONE_BITS, ZERO_BITS), NAR_BITS);
+        assert_eq!(div(ZERO_BITS, ONE_BITS), ZERO_BITS);
+        assert_eq!(sqrt(neg(ONE_BITS)), NAR_BITS);
+        assert_eq!(sqrt(NAR_BITS), NAR_BITS);
+        assert_eq!(add(ZERO_BITS, ZERO_BITS), ZERO_BITS);
+        assert_eq!(mul(ZERO_BITS, ZERO_BITS), ZERO_BITS);
+        assert_eq!(add(p(2.5), p(-2.5)), ZERO_BITS);
+    }
+
+    #[test]
+    fn exact_small_arithmetic() {
+        assert_eq!(f(add(p(1.0), p(1.0))), 2.0);
+        assert_eq!(f(add(p(1.5), p(2.25))), 3.75);
+        assert_eq!(f(mul(p(3.0), p(4.0))), 12.0);
+        assert_eq!(f(mul(p(-3.5), p(2.0))), -7.0);
+        assert_eq!(f(div(p(12.0), p(4.0))), 3.0);
+        assert_eq!(f(div(p(1.0), p(8.0))), 0.125);
+        assert_eq!(f(sqrt(p(9.0))), 3.0);
+        assert_eq!(f(sqrt(p(2.25))), 1.5);
+        assert_eq!(f(sub(p(10.0), p(2.5))), 7.5);
+    }
+
+    #[test]
+    fn saturation_arithmetic() {
+        // maxpos * maxpos saturates to maxpos, not NaR.
+        assert_eq!(mul(MAXPOS_BITS, MAXPOS_BITS), MAXPOS_BITS);
+        // minpos * minpos stays minpos (never rounds to zero).
+        assert_eq!(mul(MINPOS_BITS, MINPOS_BITS), MINPOS_BITS);
+        // maxpos + maxpos = maxpos.
+        assert_eq!(add(MAXPOS_BITS, MAXPOS_BITS), MAXPOS_BITS);
+        // 1 / minpos = maxpos (2^120 is representable exactly).
+        assert_eq!(div(ONE_BITS, MINPOS_BITS), MAXPOS_BITS);
+    }
+
+    #[test]
+    fn add_cancellation() {
+        // (1 + 2^-26) - 1 = 2^-26 exactly: posits near 1 have 27 frac bits.
+        let x = p(1.0 + 2f64.powi(-26));
+        let r = sub(x, ONE_BITS);
+        assert_eq!(f(r), 2f64.powi(-26));
+        // Alignment sticky: 1 + minpos rounds back to 1 (RNE, huge gap).
+        assert_eq!(add(ONE_BITS, MINPOS_BITS), ONE_BITS);
+        // ... but 1 - minpos must round DOWN to the predecessor? No: the
+        // gap below 1 is 2^-28ish and minpos=2^-120 is far below half of
+        // it, so RNE returns 1 exactly.
+        assert_eq!(sub(ONE_BITS, MINPOS_BITS), ONE_BITS);
+    }
+
+    #[test]
+    fn matches_f64_when_exact() {
+        // For values whose result fits in <= 27 fraction bits near scale 0
+        // the posit result must equal the f64 result exactly.
+        let cases = [
+            (1.375, 2.625),
+            (0.03125, 7.75),
+            (100.5, 0.25),
+            (-42.0, 1.0 / 64.0),
+        ];
+        for (x, y) in cases {
+            assert_eq!(f(add(p(x), p(y))), x + y, "{x}+{y}");
+            assert_eq!(f(mul(p(x), p(y))), x * y, "{x}*{y}");
+        }
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        let mut rng = crate::rng::Pcg64::seed(64);
+        let mut cases = vec![0u64, 1, 2, 3, 4, 15, 16, 17, (1 << 62) - 1, 1 << 60];
+        for _ in 0..10_000 {
+            cases.push(rng.next_u64() >> 2); // <= 2^62, the sqrt input range
+        }
+        for v in cases {
+            let r = isqrt_u64(v);
+            assert!(r * r <= v, "isqrt({v})");
+            assert!(
+                (r + 1).checked_mul(r + 1).map(|s| s > v).unwrap_or(true),
+                "isqrt({v}) = {r} too small"
+            );
+        }
+    }
+}

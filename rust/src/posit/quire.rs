@@ -1,0 +1,293 @@
+//! The quire: a 512-bit exact accumulator for Posit(32,2) (posit standard
+//! §quire). Sums of products accumulate with **no rounding at all**; a
+//! single posit rounding happens at extraction. This implements the fused
+//! dot product that [Buoncristiani et al. 2020] (the paper's ref. [2])
+//! recommends for linear algebra, and that our experiments use as an
+//! accuracy ablation against the paper's per-operation-rounding GEMM.
+//!
+//! Layout: 512-bit two's-complement fixed point, binary point at bit 240
+//! (LSB weight 2^-240). Every product of two Posit(32,2) values is exactly
+//! representable (lowest possible product bit = minpos² = 2^-240, highest
+//! = maxpos² = 2^240), and 31 carry bits of headroom allow ≥ 2^31
+//! accumulations without overflow — enough for any N used here.
+
+use super::{pack32, unpack32, NAR_BITS, ZERO_BITS};
+
+/// 512-bit two's-complement fixed-point accumulator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Quire {
+    /// Little-endian limbs; bit 0 of `limbs[0]` has weight 2^-240.
+    limbs: [u64; 8],
+    /// NaR is absorbing for the whole accumulation.
+    nar: bool,
+}
+
+impl Default for Quire {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Quire {
+    pub const fn new() -> Self {
+        Quire {
+            limbs: [0; 8],
+            nar: false,
+        }
+    }
+
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// `q += a * b` exactly (posit bit patterns).
+    pub fn add_product(&mut self, a: u32, b: u32) {
+        self.fused(a, b, false)
+    }
+
+    /// `q -= a * b` exactly.
+    pub fn sub_product(&mut self, a: u32, b: u32) {
+        self.fused(a, b, true)
+    }
+
+    /// `q += p` exactly.
+    pub fn add_posit(&mut self, p: u32) {
+        self.add_product(p, super::ONE_BITS)
+    }
+
+    fn fused(&mut self, a: u32, b: u32, negate: bool) {
+        if self.nar || a == NAR_BITS || b == NAR_BITS {
+            self.nar = true;
+            return;
+        }
+        if a == ZERO_BITS || b == ZERO_BITS {
+            return;
+        }
+        let ua = unpack32(a);
+        let ub = unpack32(b);
+        let neg = (ua.neg ^ ub.neg) ^ negate;
+        // Q1.31 * Q1.31 = Q2.62 exact product; value = prod * 2^(s - 62).
+        let prod = (ua.frac as u64) * (ub.frac as u64);
+        let s = ua.scale + ub.scale;
+        // Bit 0 of `prod` lands at quire bit (s - 62 + 240).
+        let off = s + 178;
+        if off >= 0 {
+            self.add_shifted(prod, off as u32, neg);
+        } else {
+            // The analysis above guarantees the dropped low bits are zero
+            // (fraction width shrinks exactly as fast as the scale drops).
+            let sh = (-off) as u32;
+            debug_assert!(prod & ((1u64 << sh) - 1) == 0, "quire product underflow");
+            self.add_shifted(prod >> sh, 0, neg);
+        }
+    }
+
+    /// Add (or subtract) `v << off` into the accumulator.
+    fn add_shifted(&mut self, v: u64, off: u32, negate: bool) {
+        let limb = (off / 64) as usize;
+        let sh = off % 64;
+        // Up to three limbs are touched by a shifted u64.
+        let lo = v.unbounded_shl(sh);
+        let mid = if sh == 0 { 0 } else { v >> (64 - sh) };
+        debug_assert!(limb + 1 < 8 || mid == 0, "quire overflow");
+        if negate {
+            self.sub_at(limb, lo);
+            if mid != 0 {
+                self.sub_at(limb + 1, mid);
+            }
+        } else {
+            self.add_at(limb, lo);
+            if mid != 0 {
+                self.add_at(limb + 1, mid);
+            }
+        }
+    }
+
+    fn add_at(&mut self, mut i: usize, v: u64) {
+        let (s, mut carry) = self.limbs[i].overflowing_add(v);
+        self.limbs[i] = s;
+        while carry {
+            i += 1;
+            if i == 8 {
+                // Two's complement wrap: only legal when crossing between
+                // negative and non-negative totals; headroom (31 carry
+                // bits) makes true overflow unreachable in our workloads.
+                return;
+            }
+            let (s, c) = self.limbs[i].overflowing_add(1);
+            self.limbs[i] = s;
+            carry = c;
+        }
+    }
+
+    fn sub_at(&mut self, mut i: usize, v: u64) {
+        let (s, mut borrow) = self.limbs[i].overflowing_sub(v);
+        self.limbs[i] = s;
+        while borrow {
+            i += 1;
+            if i == 8 {
+                return;
+            }
+            let (s, b) = self.limbs[i].overflowing_sub(1);
+            self.limbs[i] = s;
+            borrow = b;
+        }
+    }
+
+    /// Round the accumulated value to the nearest Posit(32,2) — the single
+    /// rounding of the fused dot product.
+    pub fn to_posit_bits(&self) -> u32 {
+        if self.nar {
+            return NAR_BITS;
+        }
+        let negative = self.limbs[7] >> 63 != 0;
+        // Magnitude of the two's-complement value.
+        let mag = if negative {
+            let mut m = [0u64; 8];
+            let mut carry = 1u128;
+            for i in 0..8 {
+                let t = (!self.limbs[i]) as u128 + carry;
+                m[i] = t as u64;
+                carry = t >> 64;
+            }
+            m
+        } else {
+            self.limbs
+        };
+        // Find the most significant set bit.
+        let mut msb: i32 = -1;
+        for i in (0..8).rev() {
+            if mag[i] != 0 {
+                msb = (i as i32) * 64 + (63 - mag[i].leading_zeros() as i32);
+                break;
+            }
+        }
+        if msb < 0 {
+            return ZERO_BITS;
+        }
+        let scale = msb - 240;
+        // Extract 64 bits starting at the msb (Q1.63), sticky from below.
+        let mut sig: u64 = 0;
+        let mut sticky = false;
+        for bit in 0..64 {
+            let pos = msb - bit;
+            if pos < 0 {
+                break;
+            }
+            let (l, s) = ((pos / 64) as usize, (pos % 64) as u32);
+            sig |= ((mag[l] >> s) & 1) << (63 - bit);
+        }
+        let tail_top = msb - 64;
+        if tail_top >= 0 {
+            'outer: for i in 0..8usize {
+                if (i as i32) * 64 > tail_top {
+                    break;
+                }
+                let limb = mag[i];
+                let hi_in_limb = (tail_top - (i as i32) * 64).min(63);
+                if hi_in_limb >= 0 {
+                    let mask = if hi_in_limb == 63 {
+                        u64::MAX
+                    } else {
+                        (1u64 << (hi_in_limb + 1)) - 1
+                    };
+                    if limb & mask != 0 {
+                        sticky = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        pack32(negative, scale, sig | sticky as u64)
+    }
+
+    /// Exact fused dot product of two posit vectors: one rounding total.
+    pub fn dot(a: &[u32], b: &[u32]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut q = Quire::new();
+        for (&x, &y) in a.iter().zip(b) {
+            q.add_product(x, y);
+        }
+        q.to_posit_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{add, mul, Posit32, ONE_BITS};
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn p(v: f64) -> u32 {
+        Posit32::from_f64(v).0
+    }
+
+    #[test]
+    fn single_product_matches_mul() {
+        let mut rng = Pcg64::seed(11);
+        for _ in 0..5000 {
+            let a = p(rng.normal_sigma(10.0));
+            let b = p(rng.normal_sigma(0.1));
+            let mut q = Quire::new();
+            q.add_product(a, b);
+            assert_eq!(q.to_posit_bits(), mul(a, b), "a={a:#x} b={b:#x}");
+        }
+    }
+
+    #[test]
+    fn extreme_products_exact() {
+        use crate::posit::{MAXPOS_BITS, MINPOS_BITS};
+        let mut q = Quire::new();
+        q.add_product(MINPOS_BITS, MINPOS_BITS); // 2^-240: quire bit 0
+        assert!(!q.is_zero());
+        q.sub_product(MINPOS_BITS, MINPOS_BITS);
+        assert!(q.is_zero());
+        let mut q = Quire::new();
+        q.add_product(MAXPOS_BITS, MAXPOS_BITS); // 2^240
+        assert_eq!(q.to_posit_bits(), MAXPOS_BITS); // saturates on extract
+    }
+
+    #[test]
+    fn cancellation_is_exact() {
+        // (big + small) - big == small exactly in the quire, where plain
+        // posit addition would have lost `small` entirely.
+        let big = p(1e12);
+        let small = p(1e-12);
+        assert_eq!(add(add(big, small), p(-1e12)), 0); // plain posit loses it
+        let mut q = Quire::new();
+        q.add_posit(big);
+        q.add_posit(small);
+        q.add_product(p(-1e12), ONE_BITS);
+        assert_eq!(q.to_posit_bits(), small);
+    }
+
+    #[test]
+    fn dot_beats_sequential_rounding() {
+        // A dot product engineered so sequential rounding drifts: the quire
+        // must equal the f64 result rounded once (f64 is exact here since
+        // all terms are small integers scaled by powers of two).
+        let n = 1000;
+        let mut rng = Pcg64::seed(5);
+        let a: Vec<u32> = (0..n).map(|_| p((rng.below(64) as f64 - 32.0) / 64.0)).collect();
+        let b: Vec<u32> = (0..n).map(|_| p((rng.below(64) as f64 - 32.0) / 64.0)).collect();
+        let exact: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| Posit32(x).to_f64() * Posit32(y).to_f64())
+            .sum();
+        assert_eq!(Quire::dot(&a, &b), p(exact));
+    }
+
+    #[test]
+    fn nar_absorbs() {
+        let mut q = Quire::new();
+        q.add_posit(p(2.0));
+        q.add_product(NAR_BITS, ONE_BITS);
+        q.add_posit(p(5.0));
+        assert_eq!(q.to_posit_bits(), NAR_BITS);
+    }
+}

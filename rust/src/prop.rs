@@ -1,0 +1,74 @@
+//! A miniature property-testing harness (no proptest offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! from a deterministic seed; on failure it reruns with a fixed point and
+//! reports the failing seed + case index so the exact input is replayable:
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the xla rpath in this image)
+//! use posit_accel::prop::check;
+//! check("add is commutative", 1000, |rng| (rng.next_u32(), rng.next_u32()),
+//!       |&(a, b)| {
+//!           let l = posit_accel::posit::add(a, b);
+//!           let r = posit_accel::posit::add(b, a);
+//!           (l == r).then_some(()).ok_or_else(|| format!("{l:#x} != {r:#x}"))
+//!       });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Fixed base seed: failures print `seed` + `case` for exact replay.
+pub const BASE_SEED: u64 = 0x9E3779B97F4A7C15;
+
+/// Run a property over `cases` generated inputs. Panics with a replayable
+/// diagnostic on the first failure.
+pub fn check<T: core::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = BASE_SEED;
+    let mut rng = Pcg64::seed(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed\n  case:  {case}/{cases}\n  seed:  {seed:#x}\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with an explicit seed (for replaying failures).
+pub fn check_seeded<T: core::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::seed(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed\n  case:  {case}/{cases}\n  seed:  {seed:#x}\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f64s agree to `digits` significant decimal digits.
+pub fn assert_close(a: f64, b: f64, digits: f64, ctx: &str) {
+    if a == b {
+        return;
+    }
+    let denom = a.abs().max(b.abs()).max(f64::MIN_POSITIVE);
+    let rel = (a - b).abs() / denom;
+    let got = -rel.log10();
+    assert!(
+        got >= digits,
+        "{ctx}: {a} vs {b} agree to {got:.2} digits, need {digits}"
+    );
+}

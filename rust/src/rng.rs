@@ -1,0 +1,145 @@
+//! Deterministic pseudo-random numbers (PCG64 + Box–Muller).
+//!
+//! No external crates are reachable in the build image, so the workload
+//! generators carry their own PRNG. PCG-XSL-RR 128/64 is small, fast, and
+//! statistically solid for simulation workloads; normal deviates use the
+//! polar Box–Muller transform, matching the paper's matrix initialization
+//! ("random numbers drawn from normal distributions with mean 0 and
+//! standard deviation σ", §4.1).
+
+/// PCG-XSL-RR 128/64.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second Box–Muller deviate.
+    spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed deterministically; distinct seeds give independent streams.
+    pub fn seed(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+            spare: None,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(0x853C_49E6_748F_EA9B_DA3E_39CB_94B9_5BDB ^ (seed as u128));
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent stream (for per-thread generators).
+    pub fn split(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::seed(self.next_u64() ^ stream.rotate_left(17))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free enough for test workloads.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal deviate (polar Box–Muller).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with standard deviation `sigma` (the paper's matrix entries).
+    #[inline]
+    pub fn normal_sigma(&mut self, sigma: f64) -> f64 {
+        self.normal() * sigma
+    }
+
+    /// Log-uniform magnitude in [a, b) with random sign — the paper's
+    /// Table 2 input ranges I0..I4.
+    pub fn loguniform(&mut self, a: f64, b: f64) -> f64 {
+        let lg = self.range(a.log2(), b.log2());
+        lg.exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(1);
+        let mut c = Pcg64::seed(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(42);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn uniform_bounds_and_loguniform() {
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            let x = rng.loguniform(1e-3, 1e3);
+            assert!((1e-3..1e3).contains(&x), "{x}");
+        }
+    }
+}

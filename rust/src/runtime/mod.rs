@@ -1,0 +1,359 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from Rust. This is the only module touching the `xla` crate; it is
+//! also the only place where the Python-authored computation enters the
+//! request path — as compiled HLO, never as Python.
+//!
+//! Flow (see /opt/xla-example/load_hlo/): `HloModuleProto::from_text_file`
+//! (HLO *text*: jax >= 0.5 serialized protos use 64-bit instruction ids
+//! which xla_extension 0.5.1 rejects) -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` once per artifact (cached) -> `execute` per call.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Artifact names understood by the registry, mirroring
+/// `python/compile/model.py::artifacts()`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `C - A@B` at a fixed (m, k, n) tile.
+    GemmUpdate { m: usize, k: usize, n: usize },
+    /// `A@B` at a fixed (m, k, n) tile.
+    GemmPlain { m: usize, k: usize, n: usize },
+    /// Elementwise posit kernel over `len` lanes: "add"|"mul"|"div"|"sqrt".
+    Elementwise { op: &'static str, len: usize },
+    /// posit -> f64 over `len` lanes.
+    DecodeF64 { len: usize },
+    /// f64 -> posit over `len` lanes.
+    EncodeF64 { len: usize },
+}
+
+impl ArtifactKind {
+    pub fn file_name(&self) -> String {
+        match self {
+            ArtifactKind::GemmUpdate { m, k, n } => {
+                format!("gemm_update_{m}x{k}x{n}.hlo.txt")
+            }
+            ArtifactKind::GemmPlain { m, k, n } => {
+                format!("gemm_plain_{m}x{k}x{n}.hlo.txt")
+            }
+            ArtifactKind::Elementwise { op, len } => format!("ew_{op}_{len}.hlo.txt"),
+            ArtifactKind::DecodeF64 { len } => format!("decode_f64_{len}.hlo.txt"),
+            ArtifactKind::EncodeF64 { len } => format!("encode_f64_{len}.hlo.txt"),
+        }
+    }
+}
+
+/// A PJRT CPU runtime with a compiled-executable cache.
+///
+/// Thread-safe: executables compile under a mutex once and are reused.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} not found — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact location (`$POSIT_ACCEL_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("POSIT_ACCEL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True if the artifact file exists (cheap pre-flight check).
+    pub fn has(&self, kind: &ArtifactKind) -> bool {
+        self.dir.join(kind.file_name()).is_file()
+    }
+
+    fn executable(
+        &self,
+        kind: &ArtifactKind,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let name = kind.file_name();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(name, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Warm the cache for a set of artifacts (e.g. at coordinator start,
+    /// so compilation never lands on the request path).
+    pub fn warmup(&self, kinds: &[ArtifactKind]) -> Result<()> {
+        for k in kinds {
+            self.executable(k)?;
+        }
+        Ok(())
+    }
+
+    fn run_u32(&self, kind: &ArtifactKind, inputs: &[xla::Literal]) -> Result<Vec<u32>> {
+        let exe = self.executable(kind)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", kind.file_name()))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<u32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// `C - A @ B` on posit bit patterns; all matrices column-major on the
+    /// Rust side, converted to the row-major layout the JAX artifact uses.
+    pub fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[u32],
+        b: &[u32],
+        c: &[u32],
+    ) -> Result<Vec<u32>> {
+        let kind = ArtifactKind::GemmUpdate { m, k, n };
+        let la = lit_mat_u32(a, m, k)?;
+        let lb = lit_mat_u32(b, k, n)?;
+        let lc = lit_mat_u32(c, m, n)?;
+        let out = self.run_u32(&kind, &[la, lb, lc])?;
+        row_to_col(&out, m, n)
+    }
+
+    /// `A @ B` on posit bit patterns (column-major in/out).
+    pub fn gemm_plain(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[u32],
+        b: &[u32],
+    ) -> Result<Vec<u32>> {
+        let kind = ArtifactKind::GemmPlain { m, k, n };
+        let la = lit_mat_u32(a, m, k)?;
+        let lb = lit_mat_u32(b, k, n)?;
+        let out = self.run_u32(&kind, &[la, lb])?;
+        row_to_col(&out, m, n)
+    }
+
+    /// Elementwise binary posit op over a fixed-length vector artifact.
+    pub fn elementwise(
+        &self,
+        op: &'static str,
+        a: &[u32],
+        b: Option<&[u32]>,
+    ) -> Result<Vec<u32>> {
+        let len = a.len();
+        let kind = ArtifactKind::Elementwise { op, len };
+        let la = xla::Literal::vec1(a);
+        match b {
+            Some(b) => {
+                anyhow::ensure!(b.len() == len, "length mismatch");
+                self.run_u32(&kind, &[la, xla::Literal::vec1(b)])
+            }
+            None => self.run_u32(&kind, &[la]),
+        }
+    }
+
+    /// Bulk posit -> f64 via the decode artifact.
+    pub fn decode_f64(&self, a: &[u32]) -> Result<Vec<f64>> {
+        let kind = ArtifactKind::DecodeF64 { len: a.len() };
+        let exe = self.executable(&kind)?;
+        let out = exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(a)])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+}
+
+/// Column-major `rows x cols` slice -> row-major 2-D u32 literal (the
+/// layout jax lowers with by default).
+fn lit_mat_u32(data: &[u32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() >= rows * cols, "matrix buffer too small");
+    let mut rm = vec![0u32; rows * cols];
+    for j in 0..cols {
+        for i in 0..rows {
+            rm[i * cols + j] = data[i + j * rows];
+        }
+    }
+    xla::Literal::vec1(&rm)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Row-major output back to column-major.
+fn row_to_col(rm: &[u32], rows: usize, cols: usize) -> Result<Vec<u32>> {
+    anyhow::ensure!(rm.len() == rows * cols, "bad output size");
+    let mut cm = vec![0u32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            cm[i + j * rows] = rm[i * cols + j];
+        }
+    }
+    Ok(cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Matrix, Trans};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if dir.is_dir() {
+            Some(Runtime::new(dir).unwrap())
+        } else {
+            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn pjrt_gemm_matches_native_bitwise() {
+        let Some(rt) = runtime() else { return };
+        let (m, k, n) = (64, 64, 64);
+        let mut rng = Pcg64::seed(42);
+        let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        let abits: Vec<u32> = a.data.iter().map(|p| p.0).collect();
+        let bbits: Vec<u32> = b.data.iter().map(|p| p.0).collect();
+        let got = rt.gemm_plain(m, k, n, &abits, &bbits).unwrap();
+        let mut want = Matrix::<Posit32>::zeros(m, n);
+        gemm(
+            Trans::No, Trans::No, m, n, k, Posit32::ONE, &a.data, m, &b.data,
+            k, Posit32::ZERO, &mut want.data, m,
+        );
+        let wantbits: Vec<u32> = want.data.iter().map(|p| p.0).collect();
+        assert_eq!(got, wantbits, "PJRT and native GEMM must be bit-equal");
+    }
+
+    #[test]
+    fn pjrt_gemm_update_matches_native_bitwise() {
+        let Some(rt) = runtime() else { return };
+        let (m, k, n) = (128, 64, 128);
+        let mut rng = Pcg64::seed(43);
+        let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        let c = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+        let bits = |m: &Matrix<Posit32>| m.data.iter().map(|p| p.0).collect::<Vec<u32>>();
+        let got = rt
+            .gemm_update(m, k, n, &bits(&a), &bits(&b), &bits(&c))
+            .unwrap();
+        let mut want = c.clone();
+        let minus1 = Posit32::ONE.negate();
+        gemm(
+            Trans::No, Trans::No, m, n, k, minus1, &a.data, m, &b.data, k,
+            Posit32::ONE, &mut want.data, m,
+        );
+        assert_eq!(got, bits(&want));
+    }
+
+    #[test]
+    fn pjrt_elementwise_ops_match_native() {
+        let Some(rt) = runtime() else { return };
+        let len = 65536;
+        let mut rng = Pcg64::seed(44);
+        let a: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+        let b: Vec<u32> = (0..len)
+            .map(|_| Posit32::from_f64(rng.normal_sigma(10.0)).0)
+            .collect();
+        for (op, f) in [
+            ("add", crate::posit::add as fn(u32, u32) -> u32),
+            ("mul", crate::posit::mul),
+            ("div", crate::posit::div),
+        ] {
+            let got = rt.elementwise(op, &a, Some(&b)).unwrap();
+            for i in (0..len).step_by(997) {
+                assert_eq!(
+                    got[i],
+                    f(a[i], b[i]),
+                    "{op} lane {i} a={:#x} b={:#x}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+        let got = rt.elementwise("sqrt", &a, None).unwrap();
+        for i in (0..len).step_by(997) {
+            assert_eq!(got[i], crate::posit::sqrt(a[i]), "sqrt lane {i}");
+        }
+    }
+
+    #[test]
+    fn pjrt_decode_is_exact() {
+        let Some(rt) = runtime() else { return };
+        let len = 65536;
+        let mut rng = Pcg64::seed(45);
+        let a: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+        let got = rt.decode_f64(&a).unwrap();
+        for i in (0..len).step_by(491) {
+            let want = Posit32(a[i]).to_f64();
+            if want.is_nan() {
+                assert!(got[i].is_nan());
+            } else {
+                assert_eq!(got[i], want, "lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(rt) = runtime() else { return };
+        let a = vec![crate::posit::ONE_BITS; 65536];
+        rt.elementwise("add", &a, Some(&a)).unwrap();
+        let n1 = rt.cached();
+        rt.elementwise("add", &a, Some(&a)).unwrap();
+        assert_eq!(rt.cached(), n1, "second call must hit the cache");
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.gemm_plain(7, 7, 7, &[0; 49], &[0; 49]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("7x7x7"), "{msg}");
+    }
+}

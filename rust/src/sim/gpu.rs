@@ -1,0 +1,232 @@
+//! GPU timing model for the posit software emulation (paper §4.2–4.3,
+//! Tables 2–3, Figs 3–5).
+//!
+//! The paper's GPU numbers are driven by one mechanism: SoftPosit's
+//! data-dependent regime loops execute a magnitude-dependent number of
+//! integer instructions, and warp-lockstep execution serializes divergent
+//! branches. We *measure* those quantities on our own instrumented
+//! SoftPosit-style implementation (`posit::counting`) and price them with
+//! the Table-4 specs:
+//!
+//!   time/op  = warp_inst · CPI / clock              (Table 2)
+//!   GEMM Gflops = 2 · cores · clock · issue_eff
+//!                   / (warp_inst_fma · CPI) · occ(N)   (Figs 3–4)
+//!
+//! Two global constants are calibrated once on V100/I0 (CPI, from the
+//! paper's 101 ns Add) and V100/σ=1 GEMM (`gemm_eff`, from ~55 Gflops);
+//! per-board `issue_eff` comes from `specs.rs`. Everything else —
+//! orderings across ranges, the σ dependence, the GPU ranking — emerges
+//! from the measured instruction streams.
+
+use super::specs::GpuSpec;
+use crate::posit::counting::{
+    profile_gemm_fma, profile_op, InputRange, OpStats, PositOp, PAPER_RANGES,
+};
+use crate::posit::generic::PositSpec;
+use crate::rng::Pcg64;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Elementwise-kernel time model: `t = (C0 + CPI · n_inst) / clock`.
+/// The affine form comes straight from the paper's own data — Table 2 vs
+/// Table 3 for the V100 Add kernel gives 101 ns @ 81 inst and 215 ns @
+/// 283 inst, i.e. a fixed ~69-cycle overhead (launch amortization +
+/// memory) plus ~0.70 cycles per instruction. Both constants calibrated
+/// once on those two points; every other (kernel, range, GPU) cell is a
+/// prediction.
+pub const T0_CYCLES: f64 = 69.0;
+pub const CPI: f64 = 0.70;
+
+/// Caches the (expensive) instrumented profiling runs keyed by a
+/// discretized workload description.
+pub struct GpuModel {
+    op_cache: Mutex<HashMap<(u8, u64, u64), OpStats>>,
+    fma_cache: Mutex<HashMap<i64, OpStats>>,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GpuModel {
+    pub fn new() -> Self {
+        GpuModel {
+            op_cache: Mutex::new(HashMap::new()),
+            fma_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Measured warp statistics for `op` over `range` (cached).
+    pub fn op_stats(&self, op: PositOp, range: InputRange) -> OpStats {
+        let key = (
+            op as u8,
+            range.a.to_bits(),
+            range.b.to_bits(),
+        );
+        if let Some(s) = self.op_cache.lock().unwrap().get(&key) {
+            return *s;
+        }
+        let mut rng = Pcg64::seed(0x7AB1E2 ^ key.1 ^ key.2.rotate_left(7));
+        let s = profile_op(PositSpec::P32, op, range, 96, &mut rng);
+        self.op_cache.lock().unwrap().insert(key, s);
+        s
+    }
+
+    /// Measured warp statistics per GEMM fma at entry magnitude σ (cached
+    /// on log10 σ in 0.25 steps).
+    pub fn fma_stats(&self, sigma: f64) -> OpStats {
+        let key = (sigma.log10() * 4.0).round() as i64;
+        if let Some(s) = self.fma_cache.lock().unwrap().get(&key) {
+            return *s;
+        }
+        let mut rng = Pcg64::seed(0xF3A ^ key as u64);
+        let s = profile_gemm_fma(PositSpec::P32, sigma, 24, 24, &mut rng);
+        self.fma_cache.lock().unwrap().insert(key, s);
+        s
+    }
+
+    /// Table 2: nanoseconds per posit operation on `gpu` for operands in
+    /// `range`.
+    pub fn op_ns(&self, gpu: &GpuSpec, op: PositOp, range: InputRange) -> f64 {
+        let s = self.op_stats(op, range);
+        (T0_CYCLES + CPI * s.n_inst) / (gpu.clock_mhz * 1e-3)
+    }
+
+    /// Peak posit GEMM Gflops on `gpu` for entries ~ N(0, σ) — the large-N
+    /// plateau of Figs 3–4.
+    pub fn gemm_peak_gflops(&self, gpu: &GpuSpec, sigma: f64) -> f64 {
+        let s = self.fma_stats(sigma);
+        let inst_per_flop = s.n_inst / 2.0; // fma = 2 flops
+        gpu.cores as f64 * gpu.clock_mhz * 1e6 * gpu.int_per_clock * gpu.issue_eff
+            / inst_per_flop
+            / 1e9
+    }
+
+    /// Square-GEMM Gflops vs N (Figs 3–4), including PCIe transfer.
+    pub fn gemm_gflops_square(&self, gpu: &GpuSpec, n: usize, sigma: f64) -> f64 {
+        self.gemm_gflops(gpu, n, n, n, sigma)
+    }
+
+    /// General (m, k, n) GEMM Gflops (Fig 6's GPU trailing-update lines).
+    pub fn gemm_gflops(
+        &self,
+        gpu: &GpuSpec,
+        m: usize,
+        k: usize,
+        n: usize,
+        sigma: f64,
+    ) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        flops / self.gemm_seconds(gpu, m, k, n, sigma) / 1e9
+    }
+
+    /// End-to-end seconds for one GEMM call on `gpu`.
+    pub fn gemm_seconds(
+        &self,
+        gpu: &GpuSpec,
+        m: usize,
+        k: usize,
+        n: usize,
+        sigma: f64,
+    ) -> f64 {
+        let peak = self.gemm_peak_gflops(gpu, sigma) * 1e9; // flops/s
+        let geo_n = ((m * n) as f64).sqrt();
+        let occ = {
+            let blocks = (m as f64 / 64.0) * (n as f64 / 64.0);
+            let needed = gpu.cores as f64 / 64.0;
+            (blocks / needed).min(1.0) * (geo_n / (geo_n + 192.0))
+        };
+        // Short-K inner loops amortize the block prologue and the C
+        // read-modify-write traffic poorly; still much milder than the
+        // FPGA's pipeline-fill penalty (Fig 6: GPUs win the trailing-
+        // update shape).
+        let k_eff = k as f64 / (k as f64 + 40.0);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let compute = flops / (peak * occ.max(1e-3) * k_eff);
+        // Host<->device copies of A, B and C (both ways for C): the
+        // paper's MPLAPACK offload ships operands per Rgemm call.
+        let bytes = 4.0 * (m * k + k * n + 2 * m * n) as f64;
+        let transfer = bytes / (gpu.pcie_gbs * 1e9);
+        let launch = 20e-6;
+        launch + compute + transfer
+    }
+
+    /// Table 3 columns for the Add kernel (measured, not modelled).
+    pub fn table3_row(&self, range: InputRange) -> OpStats {
+        self.op_stats(PositOp::Add, range)
+    }
+}
+
+/// Convenience: the paper's five input ranges.
+pub fn paper_ranges() -> [InputRange; 5] {
+    PAPER_RANGES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::specs::{RTX4090, V100};
+
+    #[test]
+    fn table2_calibration_point() {
+        // V100 Add on I0 must land near the paper's 101 ns (we calibrated
+        // CPI for this; the test pins it against regressions).
+        let m = GpuModel::new();
+        let ns = m.op_ns(&V100, PositOp::Add, PAPER_RANGES[0]);
+        assert!((70.0..135.0).contains(&ns), "got {ns}");
+    }
+
+    #[test]
+    fn table2_orderings_emerge() {
+        let m = GpuModel::new();
+        let ns: Vec<f64> = PAPER_RANGES
+            .iter()
+            .map(|&r| m.op_ns(&V100, PositOp::Add, r))
+            .collect();
+        // I0 fastest; I1/I2 slowest; I3/I4 in between (Table 2).
+        assert!(ns[0] < ns[3] && ns[0] < ns[4]);
+        assert!(ns[3] < ns[1] && ns[4] < ns[2]);
+        // Div slower than Add on every range (software division).
+        for &r in &PAPER_RANGES {
+            assert!(m.op_ns(&V100, PositOp::Div, r) > m.op_ns(&V100, PositOp::Add, r));
+        }
+    }
+
+    #[test]
+    fn gemm_calibration_and_sigma_dependence() {
+        let m = GpuModel::new();
+        let v100_peak = m.gemm_peak_gflops(&V100, 1.0);
+        assert!((45.0..65.0).contains(&v100_peak), "V100 σ=1: {v100_peak}");
+        // σ = 1e6 is markedly slower (paper: 55 -> ~37 Gflops).
+        let huge = m.gemm_peak_gflops(&V100, 1e6);
+        assert!(huge < 0.85 * v100_peak, "{huge} vs {v100_peak}");
+        // RTX4090 is the fastest GPU (paper: ~181 Gflops at σ=1).
+        let g4090 = m.gemm_peak_gflops(&RTX4090, 1.0);
+        assert!((150.0..215.0).contains(&g4090), "4090: {g4090}");
+    }
+
+    #[test]
+    fn gemm_curve_peaks_after_ramp() {
+        let m = GpuModel::new();
+        let g500 = m.gemm_gflops_square(&V100, 500, 1.0);
+        let g2000 = m.gemm_gflops_square(&V100, 2000, 1.0);
+        let g8000 = m.gemm_gflops_square(&V100, 8000, 1.0);
+        assert!(g500 < g2000, "{g500} {g2000}");
+        assert!(g8000 > 0.9 * g2000);
+    }
+
+    #[test]
+    fn gpu_trailing_update_beats_fpga_relative() {
+        // Fig 6: at K = 32 the 4090 sustains a larger fraction of its
+        // square-matrix performance than Agilex does of its F_peak.
+        let m = GpuModel::new();
+        let full = m.gemm_gflops(&RTX4090, 4000, 4000, 4000, 1.0);
+        let upd = m.gemm_gflops(&RTX4090, 4000, 32, 4000, 1.0);
+        let gpu_rel = upd / full;
+        let fpga = crate::sim::systolic::SystolicConfig::agilex_posit32();
+        let fpga_rel = fpga.gemm_gflops_update(4000, 32) / fpga.f_peak_gflops();
+        assert!(gpu_rel > fpga_rel, "gpu {gpu_rel} vs fpga {fpga_rel}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Calibrated models of the paper's hardware testbed (DESIGN.md §4).
+//!
+//! No FPGA or GPU is reachable in this environment, so the performance
+//! and power rows of the evaluation are regenerated from explicit,
+//! documented models; the *numerics* (Fig 7 and every bit pattern) are
+//! real computation, never modelled. Each model states its calibration
+//! anchors; its tests pin the paper's quoted values so any drift fails CI.
+
+pub mod gpu;
+pub mod power;
+pub mod resource;
+pub mod specs;
+pub mod systolic;

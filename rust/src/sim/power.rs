@@ -1,0 +1,131 @@
+//! Power models: GPU power-limit throttling (Fig 5, Table 5 starred rows)
+//! and whole-system AC power / efficiency (Table 6).
+//!
+//! Throttle model (DESIGN.md §4): a board draws `p_work` watts running the
+//! posit GEMM at full clocks. Capping below that forces DVFS down; over the
+//! cap range the paper reports, an affine clock/power relation fits both
+//! quoted RTX3090 points (58 Gflops @ 250 W, 27 @ 150 W) and the V100's
+//! mild 150->100 W drop:
+//!
+//!   factor(P) = 1                              if P >= p_work
+//!             = (P - p_static) / (p_work - p_static)   otherwise
+//!
+//! Boards whose workload draw is below every cap (RTX4090 ~140 W, RX7900
+//! ~70 W) are, correctly, unaffected — the paper's §6.1 punchline.
+
+use super::specs::{CpuSpec, FpgaBoardSpec, GpuSpec};
+
+/// Relative GEMM performance of `gpu` under a `p_limit`-watt cap.
+pub fn cap_factor(gpu: &GpuSpec, p_limit: f64) -> f64 {
+    if p_limit >= gpu.p_work_w {
+        1.0
+    } else {
+        ((p_limit - gpu.p_static_w) / (gpu.p_work_w - gpu.p_static_w)).max(0.05)
+    }
+}
+
+/// Board power actually drawn while running the workload under a cap.
+pub fn board_power(gpu: &GpuSpec, p_limit: f64) -> f64 {
+    gpu.p_work_w.min(p_limit)
+}
+
+/// Average active host cores during an accelerated decomposition: the
+/// panel keeps a few cores busy while the accelerator handles updates
+/// (Table 6 convention; see EXPERIMENTS.md).
+pub const LU_ACTIVE_CORES: f64 = 3.0;
+
+/// Host CPU package power under the decomposition workload: panel
+/// factorization keeps a few cores busy; model idle + per-active-core
+/// increments (calibrated to land Table 6's system totals within ~10 W).
+pub fn cpu_power(cpu: &CpuSpec, active_cores: f64) -> f64 {
+    let idle = 18.0;
+    let per_core = 6.5 * (cpu.base_ghz / 3.0).powf(1.5);
+    idle + per_core * active_cores.min(cpu.cores as f64)
+}
+
+/// Platform overhead (fans, DRAM, VRM losses, PSU efficiency) as an
+/// additive constant + PSU loss fraction.
+pub fn system_power(components_w: f64) -> f64 {
+    let platform = 22.0;
+    (components_w + platform) / 0.92 // PSU efficiency
+}
+
+/// Whole-system power for a GPU-accelerated LU run (Table 6 cols 2-4):
+/// the board draws its duty-cycled LU average (`p_lu_w`), capped.
+pub fn gpu_system_power(gpu: &GpuSpec, cpu: &CpuSpec, p_limit: f64, active_cores: f64) -> f64 {
+    system_power(gpu.p_lu_w.min(p_limit) + cpu_power(cpu, active_cores))
+}
+
+/// Extra draw of the DE10a-Net board beyond chip + DIMMs (fans, BSP
+/// peripherals, VRM losses) — calibrated to Table 6's 147 W total.
+pub const FPGA_BOARD_OVERHEAD_W: f64 = 19.0;
+
+/// Whole-system power for the FPGA run (Table 6 column 1): chip power
+/// from the resource model + on-board DDR + board overhead + host.
+pub fn fpga_system_power(chip_w: f64, board: &FpgaBoardSpec, cpu: &CpuSpec, active_cores: f64) -> f64 {
+    system_power(chip_w + board.ddr_power_w + FPGA_BOARD_OVERHEAD_W + cpu_power(cpu, active_cores))
+}
+
+/// Gflops/watt (Table 6 bottom row).
+pub fn efficiency(gflops: f64, watts: f64) -> f64 {
+    gflops / watts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::specs::*;
+
+    #[test]
+    fn rtx3090_cap_points_match_fig5() {
+        // Paper quotes ~58 Gflops @ 250 W and ~27 @ 150 W (N = 8000).
+        // With the model's uncapped 3090 GEMM peak ~83 Gflops:
+        let base = 83.0;
+        let at250 = base * cap_factor(&RTX3090, 250.0);
+        let at150 = base * cap_factor(&RTX3090, 150.0);
+        assert!((at250 - 58.0).abs() < 6.0, "{at250}");
+        assert!((at150 - 27.0).abs() < 5.0, "{at150}");
+    }
+
+    #[test]
+    fn v100_mildly_affected_only_below_150() {
+        assert_eq!(cap_factor(&V100, 250.0), 1.0);
+        assert_eq!(cap_factor(&V100, 150.0), 1.0);
+        let f100 = cap_factor(&V100, 100.0);
+        // Paper: 55 -> ~40 Gflops at 100 W.
+        assert!((0.6..0.85).contains(&f100), "{f100}");
+    }
+
+    #[test]
+    fn efficient_boards_ignore_caps() {
+        // §6.1: RTX4090 and RX7900 are "hardly affected" by the lowest
+        // caps (150 W and 100 W respectively).
+        assert_eq!(cap_factor(&RTX4090, 150.0), 1.0);
+        assert_eq!(cap_factor(&RX7900, 100.0), 1.0);
+        // The 3090 at its floor cap is ~3x slower (Table 5: 28.9 -> 61.9s
+        // is ~2.1x on LU; GEMM-only is worse).
+        assert!(cap_factor(&RTX3090, 100.0) < 0.4);
+    }
+
+    #[test]
+    fn table6_system_powers_are_close() {
+        // Paper Table 6: Agilex 147 W, RTX3090 273 W, RTX4090 210 W,
+        // RX7900 176 W (AC wall power averaged over the LU run).
+        let ac = LU_ACTIVE_CORES;
+        let agilex = fpga_system_power(38.7, &AGILEX, &I9_10900, ac);
+        assert!((agilex - 147.0).abs() < 12.0, "agilex {agilex}");
+        let r3090 = gpu_system_power(&RTX3090, &RYZEN9_7950X, 350.0, ac);
+        assert!((r3090 - 273.0).abs() < 15.0, "3090 {r3090}");
+        let r4090 = gpu_system_power(&RTX4090, &I9_13900K, 450.0, ac);
+        assert!((r4090 - 210.0).abs() < 15.0, "4090 {r4090}");
+        let rx = gpu_system_power(&RX7900, &RYZEN9_7950X, 339.0, ac);
+        assert!((rx - 176.0).abs() < 15.0, "7900 {rx}");
+        // Efficiency ordering (Table 6 bottom row): RX7900 best.
+        let ops = 2.0 * 8000f64.powi(3) / 3.0 / 1e9;
+        let eff_rx = efficiency(ops / 25.5, rx);
+        let eff_3090 = efficiency(ops / 28.9, r3090);
+        let eff_ag = efficiency(ops / 45.9, agilex);
+        assert!(eff_rx > eff_ag && eff_ag > eff_3090, "{eff_rx} {eff_ag} {eff_3090}");
+        assert!((0.035..0.09).contains(&eff_rx), "{eff_rx}");
+    }
+}

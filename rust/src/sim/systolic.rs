@@ -1,0 +1,185 @@
+//! Cycle model of the FPGA systolic-array GEMM accelerator (paper §3.1,
+//! §4.1, §4.4 — Figs 2 and 6).
+//!
+//! The paper's design: a P×P output-stationary PE mesh (FBLAS-style),
+//! each PE a pipelined posit multiply+add (11 stages for the optimized
+//! Posit(32,2) units), fed over PCIe Gen3 x16. Key behaviours to model:
+//!
+//! * performance is **independent of operand magnitude** (combinational
+//!   decode — Fig 2's three overlapping curves),
+//! * square-matrix performance approaches `F_peak = 2 P² f` only for
+//!   large N (202.7 of 220.1 Gflops at N = 8000),
+//! * **trailing updates collapse**: with K = 32 the 16×16 array reaches
+//!   only ~20% of peak — the pipeline along a row/column (≥ 11·16 = 176
+//!   cycles) cannot fill from a K-deep accumulation (Fig 6); the 8×8
+//!   array reaches ~50% at the same K (§4.4),
+//! * PCIe Gen3 transfers dominate at small N (§4.4, Fig 2's ramp).
+//!
+//! Model: `cycles = tiles · (K + fill) / eff` with `fill = 0.44 P²` — the
+//! output-drain latency of an output-stationary tile pass (results stream
+//! out through the mesh, ~P²/2 cycles, slightly overlapped). One shape
+//! constant reproduces *both* anchor points the paper quotes (≈20% of
+//! peak @ K=32 for 16×16, ≈50% for 8×8); `eff` absorbs stall overheads,
+//! calibrated once at (N=8000, 202.7 Gflops). Transfers are modelled
+//! explicitly and overlap compute by `overlap` (double buffering).
+
+use super::specs::AGILEX;
+
+/// Geometry + calibration of one systolic GEMM design.
+#[derive(Clone, Copy, Debug)]
+pub struct SystolicConfig {
+    /// PEs per side (paper: 16; ablation: 8).
+    pub pe: usize,
+    /// Fmax in MHz (Table 1: 429.92 for the Posit(32,2)_TC design).
+    pub fmax_mhz: f64,
+    /// PE pipeline depth in cycles (paper §4.4: 11 for posit mul+add).
+    pub pipeline: usize,
+    /// Cycle efficiency (stalls, refills); calibrated: 202.7/220.1 at
+    /// N=8000 with fill accounted -> 0.936.
+    pub eff: f64,
+    /// Host link bandwidth, GB/s (PCIe Gen3 x16 effective).
+    pub pcie_gbs: f64,
+    /// Fixed per-GEMM-invocation overhead, seconds (kernel launch, DMA
+    /// setup over the OpenCL runtime).
+    pub launch_s: f64,
+    /// Fraction of transfer hidden behind compute (double buffering).
+    pub overlap: f64,
+}
+
+impl SystolicConfig {
+    /// The paper's Posit(32,2)_TC 16x16 design on the Agilex board.
+    pub fn agilex_posit32() -> Self {
+        SystolicConfig {
+            pe: 16,
+            fmax_mhz: 429.92,
+            pipeline: 11,
+            eff: 0.936,
+            pcie_gbs: AGILEX.pcie_gbs,
+            launch_s: 1.5e-3,
+            overlap: 0.9,
+        }
+    }
+
+    /// The 8x8 ablation array of §4.4.
+    pub fn agilex_posit32_8x8() -> Self {
+        SystolicConfig {
+            pe: 8,
+            // Smaller arrays close timing a little higher.
+            fmax_mhz: 445.0,
+            ..Self::agilex_posit32()
+        }
+    }
+
+    /// binary32 hard-DSP design (Table 1, col 3) — same mesh, faster Fmax.
+    pub fn agilex_binary32_hard() -> Self {
+        SystolicConfig {
+            fmax_mhz: 505.05,
+            ..Self::agilex_posit32()
+        }
+    }
+
+    /// Peak Gflops: 2 · P² · f (paper Eq. 3).
+    pub fn f_peak_gflops(&self) -> f64 {
+        2.0 * (self.pe * self.pe) as f64 * self.fmax_mhz * 1e-3
+    }
+
+    /// Compute cycles for C(m×n) += A(m×k)·B(k×n) on the mesh.
+    pub fn gemm_cycles(&self, m: usize, k: usize, n: usize) -> f64 {
+        let p = self.pe;
+        let tiles = m.div_ceil(p) as f64 * n.div_ceil(p) as f64;
+        let fill = 0.44 * (p * p) as f64;
+        tiles * (k as f64 + fill) / self.eff
+    }
+
+    /// End-to-end seconds for one GEMM call, including PCIe and launch.
+    /// Magnitude of the inputs deliberately does NOT appear (Fig 2).
+    pub fn gemm_seconds(&self, m: usize, k: usize, n: usize) -> f64 {
+        let compute = self.gemm_cycles(m, k, n) / (self.fmax_mhz * 1e6);
+        let bytes = 4.0 * (m * k + k * n + 2 * m * n) as f64;
+        let transfer = bytes / (self.pcie_gbs * 1e9);
+        let exposed = transfer * (1.0 - self.overlap);
+        self.launch_s + compute.max(transfer * self.overlap) + exposed
+    }
+
+    /// Gflops for a square N×N GEMM (Fig 2's y-axis).
+    pub fn gemm_gflops_square(&self, n: usize) -> f64 {
+        let flops = 2.0 * (n as f64).powi(3);
+        flops / self.gemm_seconds(n, n, n) / 1e9
+    }
+
+    /// Gflops for the trailing-update shape A(N×K)·B(K×N) (Fig 6).
+    pub fn gemm_gflops_update(&self, n: usize, k: usize) -> f64 {
+        let flops = 2.0 * (n as f64) * (n as f64) * (k as f64);
+        flops / self.gemm_seconds(n, k, n) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_peak_matches_table1() {
+        let c = SystolicConfig::agilex_posit32();
+        assert!((c.f_peak_gflops() - 220.1).abs() < 0.2, "{}", c.f_peak_gflops());
+        let h = SystolicConfig::agilex_binary32_hard();
+        assert!((h.f_peak_gflops() - 258.6).abs() < 0.5);
+    }
+
+    #[test]
+    fn large_square_gemm_hits_paper_throughput() {
+        // §4.4: 202.7 Gflops at N = 8000 (we calibrate eff for this, so
+        // this test pins the calibration).
+        let c = SystolicConfig::agilex_posit32();
+        let g = c.gemm_gflops_square(8000);
+        assert!((g - 202.7).abs() < 4.0, "got {g}");
+    }
+
+    #[test]
+    fn trailing_update_k32_is_about_20_percent() {
+        // Fig 6: K = 32 trailing update ~ 20% of F_peak on the 16x16 mesh.
+        let c = SystolicConfig::agilex_posit32();
+        let rel = c.gemm_gflops_update(4000, 32) / c.f_peak_gflops();
+        assert!((0.15..0.25).contains(&rel), "got {rel}");
+    }
+
+    #[test]
+    fn small_array_is_better_at_small_k() {
+        // §4.4: the 8x8 array reaches > 50% of ITS peak at K=32, N>2000
+        // (~27 Gflops), while the 16x16 is stuck near 20%.
+        let c8 = SystolicConfig::agilex_posit32_8x8();
+        let g = c8.gemm_gflops_update(2500, 32);
+        let rel = g / c8.f_peak_gflops();
+        // Paper: > 50% in-kernel; our end-to-end model also charges PCIe
+        // and launch, so the bar here is slightly lower.
+        assert!(rel > 0.40, "rel {rel} ({g} Gflops)");
+        assert!((20.0..35.0).contains(&g), "abs {g}");
+        // With K = 256 the small array is "close to 100%" in-kernel
+        // (§4.4); end-to-end we ask for > 75%.
+        let rel256 = c8.gemm_gflops_update(2500, 256) / c8.f_peak_gflops();
+        assert!(rel256 > 0.75, "{rel256}");
+    }
+
+    #[test]
+    fn pcie_dominates_small_n() {
+        // Fig 2 / §4.4: performance ramps slowly below N ~ 3000.
+        let c = SystolicConfig::agilex_posit32();
+        let g1000 = c.gemm_gflops_square(1000);
+        let g3000 = c.gemm_gflops_square(3000);
+        let g8000 = c.gemm_gflops_square(8000);
+        assert!(g1000 < 0.8 * g8000, "{g1000} vs {g8000}");
+        assert!(g3000 > 0.85 * g8000);
+        assert!(g1000 < g3000 && g3000 < g8000);
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        let c = SystolicConfig::agilex_posit32();
+        let mut last = 0.0;
+        for k in [32, 64, 128, 256, 512, 1024, 2048] {
+            let g = c.gemm_gflops_update(4000, k);
+            assert!(g > last, "k={k}");
+            last = g;
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Small shared utilities: timing, table formatting, CSV output.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Measure the wall time of `f`, in seconds.
+pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Measure `f` repeatedly: warmup once, then `reps` timed runs; returns
+/// (min, median, mean) seconds. Used by the in-tree bench harness
+/// (criterion is not available offline).
+pub fn bench_stats<R>(reps: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    std::hint::black_box(f());
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats { min, median, mean }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+}
+
+/// Monospace table writer: pads columns, prints a header rule, and can
+/// also serialize itself as CSV into `results/`.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], width: &[usize]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:>w$}  ", c, w = width[i]);
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &width));
+        let rule: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(rule));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &width));
+        }
+        out
+    }
+
+    /// Write a CSV copy under `results/<slug>.csv` (best effort).
+    pub fn save_csv(&self, slug: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{slug}.csv"));
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join(","));
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+
+    /// Print to stdout and save CSV; the standard tail of every experiment.
+    pub fn emit(&self, slug: &str) {
+        print!("{}", self.render());
+        match self.save_csv(slug) {
+            Ok(p) => println!("[saved {}]\n", p.display()),
+            Err(e) => println!("[csv save failed: {e}]\n"),
+        }
+    }
+}
+
+/// Format a float with engineering-style significant digits.
+pub fn sig3(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if (0.01..10000.0).contains(&a) {
+        if a >= 100.0 {
+            format!("{v:.1}")
+        } else if a >= 10.0 {
+            format!("{v:.2}")
+        } else {
+            format!("{v:.3}")
+        }
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb", "c"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        t.row(&["10".into(), "200000".into(), "3".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn sig3_ranges() {
+        assert_eq!(sig3(0.0), "0");
+        assert_eq!(sig3(1.23456), "1.235");
+        assert_eq!(sig3(123.456), "123.5");
+        assert!(sig3(1.23e9).contains('e'));
+    }
+
+    #[test]
+    fn bench_stats_ordering() {
+        let s = bench_stats(5, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(s.min <= s.median && s.median <= s.mean * 5.0);
+        assert!(s.min > 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+// temp calibration probe
+#[test]
+fn calib_probe() {
+    use posit_accel::posit::counting::*;
+    use posit_accel::posit::generic::PositSpec;
+    use posit_accel::rng::Pcg64;
+    let spec = PositSpec::P32;
+    let mut rng = Pcg64::seed(1);
+    for (i, r) in PAPER_RANGES.iter().enumerate() {
+        for op in PositOp::ALL {
+            let s = profile_op(spec, op, *r, 64, &mut rng);
+            println!("I{} {:?}: n_inst={:.0} n_cont={:.0} f_branch={:.3} warp={:.0}", i, op, s.n_inst, s.n_cont, s.f_branch, s.warp_inst);
+        }
+    }
+    for sigma in [1e-2, 1.0, 1e2, 1e4, 1e6] {
+        let s = profile_gemm_fma(spec, sigma, 24, 16, &mut rng);
+        println!("fma sigma={sigma:.0e}: n_inst={:.0} warp={:.0} fb={:.3}", s.n_inst, s.warp_inst, s.f_branch);
+    }
+}

@@ -1,0 +1,259 @@
+//! Cross-implementation property tests: the two Rust posit engines
+//! (branchless and SoftPosit-style) plus algebraic invariants, over large
+//! randomized sweeps with replayable seeds (`prop::check`).
+
+use posit_accel::posit::generic::{NoTrace, PositSpec};
+use posit_accel::posit::{self, quire::Quire, Posit32};
+use posit_accel::prop::check;
+use posit_accel::rng::Pcg64;
+
+fn any_bits(rng: &mut Pcg64) -> u32 {
+    match rng.below(6) {
+        0 => rng.next_u32(),
+        1 => Posit32::from_f64(rng.normal()).0,
+        2 => Posit32::from_f64(rng.normal_sigma(1e8)).0,
+        3 => Posit32::from_f64(rng.normal_sigma(1e-12)).0,
+        4 => [0u32, 0x8000_0000, 0x7FFF_FFFF, 1, 0x4000_0000][rng.below(5) as usize],
+        _ => rng.next_u32() & 0x8000_00FF, // tiny magnitudes + sign
+    }
+}
+
+#[test]
+fn engines_agree_on_all_ops() {
+    let spec = PositSpec::P32;
+    let mut t = NoTrace;
+    check(
+        "branchless == softposit-style",
+        30_000,
+        |rng| (any_bits(rng), any_bits(rng)),
+        |&(a, b)| {
+            for (name, fast, slow) in [
+                ("add", posit::add(a, b), spec.add(a, b, &mut NoTrace)),
+                ("mul", posit::mul(a, b), spec.mul(a, b, &mut NoTrace)),
+                ("div", posit::div(a, b), spec.div(a, b, &mut NoTrace)),
+                ("sqrt", posit::sqrt(a), spec.sqrt(a, &mut NoTrace)),
+            ] {
+                if fast != slow {
+                    return Err(format!("{name}: fast {fast:#010x} != slow {slow:#010x}"));
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = &mut t;
+}
+
+#[test]
+fn addition_is_commutative_and_has_identity() {
+    check(
+        "add commutative + identity",
+        20_000,
+        |rng| (any_bits(rng), any_bits(rng)),
+        |&(a, b)| {
+            if posit::add(a, b) != posit::add(b, a) {
+                return Err("not commutative".into());
+            }
+            if a != posit::NAR_BITS && posit::add(a, posit::ZERO_BITS) != a {
+                return Err("0 is not identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn multiplication_identities() {
+    check(
+        "mul identities",
+        20_000,
+        |rng| (any_bits(rng), any_bits(rng)),
+        |&(a, b)| {
+            if posit::mul(a, b) != posit::mul(b, a) {
+                return Err("not commutative".into());
+            }
+            if a != posit::NAR_BITS {
+                if posit::mul(a, posit::ONE_BITS) != a {
+                    return Err("1 is not identity".into());
+                }
+                // x * -1 == -x exactly.
+                if posit::mul(a, posit::neg(posit::ONE_BITS)) != posit::neg(a) {
+                    return Err("-1 scaling not exact".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rounding_is_correct_vs_f64_when_exact() {
+    // When the f64 result is exactly representable near the golden zone,
+    // posit must return it exactly.
+    check(
+        "exact small-integer arithmetic",
+        10_000,
+        |rng| (rng.below(4096) as i64 - 2048, rng.below(4096) as i64 - 2048),
+        |&(x, y)| {
+            let (a, b) = (
+                Posit32::from_f64(x as f64),
+                Posit32::from_f64(y as f64),
+            );
+            if (a + b).to_f64() != (x + y) as f64 {
+                return Err(format!("{x}+{y} -> {}", (a + b).to_f64()));
+            }
+            let prod = x * y;
+            if prod.abs() <= 1 << 26 && (a * b).to_f64() != prod as f64 {
+                return Err(format!("{x}*{y} -> {}", (a * b).to_f64()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn division_roundtrip_bounds() {
+    // (a / b) * b must be within 2 ulp-ish of a (two roundings), checked
+    // via f64 relative error in the golden zone.
+    check(
+        "div-mul roundtrip",
+        10_000,
+        |rng| {
+            (
+                Posit32::from_f64(rng.normal()).0,
+                Posit32::from_f64(rng.normal()).0,
+            )
+        },
+        |&(a, b)| {
+            if a == posit::ZERO_BITS || b == posit::ZERO_BITS {
+                return Ok(());
+            }
+            let q = posit::div(a, b);
+            let back = posit::mul(q, b);
+            let (va, vb) = (Posit32(a).to_f64(), Posit32(back).to_f64());
+            let rel = ((va - vb) / va).abs();
+            if rel > 1e-6 {
+                return Err(format!("roundtrip rel err {rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sqrt_squares_back() {
+    check(
+        "sqrt(x)^2 ~ x",
+        10_000,
+        |rng| Posit32::from_f64(rng.normal_sigma(10.0).abs()).0,
+        |&a| {
+            if a == posit::ZERO_BITS {
+                return Ok(());
+            }
+            let r = posit::sqrt(a);
+            let sq = posit::mul(r, r);
+            let (va, vs) = (Posit32(a).to_f64(), Posit32(sq).to_f64());
+            let rel = ((va - vs) / va).abs();
+            if rel > 1e-6 {
+                return Err(format!("sqrt err {rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quire_dot_matches_f64_for_moderate_sums() {
+    // With values in the golden zone and moderate lengths the f64 dot is
+    // exact enough (53 bits) that quire == round(f64 result).
+    check(
+        "quire dot == f64 dot rounded",
+        300,
+        |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let xs: Vec<u32> = (0..n)
+                .map(|_| Posit32::from_f64((rng.below(1024) as f64 - 512.0) / 256.0).0)
+                .collect();
+            let ys: Vec<u32> = (0..n)
+                .map(|_| Posit32::from_f64((rng.below(1024) as f64 - 512.0) / 256.0).0)
+                .collect();
+            (xs, ys)
+        },
+        |(xs, ys)| {
+            let mut q = Quire::new();
+            for (&x, &y) in xs.iter().zip(ys) {
+                q.add_product(x, y);
+            }
+            let exact: f64 = xs
+                .iter()
+                .zip(ys)
+                .map(|(&x, &y)| Posit32(x).to_f64() * Posit32(y).to_f64())
+                .sum();
+            let want = Posit32::from_f64(exact).0;
+            let got = q.to_posit_bits();
+            if got != want {
+                return Err(format!("quire {got:#x} != {want:#x} (exact {exact})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ordering_is_total_and_matches_values() {
+    check(
+        "bit ordering == value ordering",
+        20_000,
+        |rng| (any_bits(rng), any_bits(rng)),
+        |&(a, b)| {
+            if a == posit::NAR_BITS || b == posit::NAR_BITS {
+                return Ok(());
+            }
+            let (pa, pb) = (Posit32(a), Posit32(b));
+            let by_val = pa.to_f64().partial_cmp(&pb.to_f64()).unwrap();
+            if pa.cmp(&pb) != by_val {
+                return Err(format!("{pa:?} vs {pb:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn generic_engine_small_formats_roundtrip() {
+    // Posit(16,1) and Posit(8,2): exhaustive f64 roundtrips + negation
+    // involution (the ablation formats of the paper's future work, §7).
+    for spec in [PositSpec::P16, PositSpec::P8, PositSpec::P8E0, PositSpec::P16E2] {
+        for bits in 0..(1u32 << spec.nbits) {
+            if bits == spec.nar() {
+                continue;
+            }
+            let v = spec.to_f64(bits);
+            assert_eq!(spec.from_f64(v), bits, "{spec:?} {bits:#x}");
+            assert_eq!(spec.negate(spec.negate(bits)), bits);
+        }
+    }
+}
+
+#[test]
+fn round_unpacked_equals_pack_unpack() {
+    // The fused-GEMM fast path must be indistinguishable from the full
+    // encoder across the whole scale range (including the fallback zone).
+    check(
+        "round_unpacked == unpack(pack(...))",
+        50_000,
+        |rng| {
+            let scale = (rng.below(2 * 130 + 1) as i32) - 130; // beyond ±120 too
+            let sig = rng.next_u64() | (1u64 << 63);
+            (rng.below(2) == 1, scale, sig)
+        },
+        |&(neg, scale, sig)| {
+            let fast = posit::round_unpacked(neg, scale, sig);
+            let bits = posit_accel::posit::pack32(neg, scale, sig);
+            let slow = posit_accel::posit::unpack32(bits);
+            if fast != slow {
+                return Err(format!("{fast:?} != {slow:?}"));
+            }
+            Ok(())
+        },
+    );
+}
