@@ -98,7 +98,12 @@ def test_f64_roundtrip_via_oracle(v):
 def test_golden_vectors():
     """The shared cross-language contract (testdata/golden_posit32.txt):
     jnp ops must reproduce every line (Rust checks the same file)."""
-    path = Path(__file__).resolve().parents[2] / "testdata" / "golden_posit32.txt"
+    path = (
+        Path(__file__).resolve().parents[2]
+        / "rust"
+        / "testdata"
+        / "golden_posit32.txt"
+    )
     ops, avs, bvs, wants = [], [], [], []
     for line in path.read_text().splitlines():
         if line.startswith("#") or not line.strip():

@@ -14,10 +14,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from compile.kernels.ref import PyPosit  # noqa: E402
 
 
+SEED = 1234
+
+
 def main():
     py = PyPosit()
-    rng = np.random.default_rng(1234)
-    lines = ["# golden Posit(32,2) vectors: op a_hex b_hex result_hex (b=0 for sqrt)"]
+    rng = np.random.default_rng(SEED)
+    lines = [
+        "# golden Posit(32,2) vectors: op a_hex b_hex result_hex (b=0 for sqrt)",
+        "# generator: python/tools/gen_golden.py (PyPosit scalar oracle, exact "
+        "rational arithmetic)",
+        f"# numpy default_rng seed: {SEED}",
+    ]
     specials = [
         0x00000000, 0x80000000, 0x7FFFFFFF, 0x00000001, 0x40000000,
         0xC0000000, 0xFFFFFFFF, 0x80000001, 0x3FFFFFFF, 0x40000001,
@@ -34,7 +42,13 @@ def main():
         lines.append(f"mul {a:08x} {b:08x} {py.mul(a, b):08x}")
         lines.append(f"div {a:08x} {b:08x} {py.div(a, b):08x}")
         lines.append(f"sqrt {a:08x} 00000000 {py.sqrt(a):08x}")
-    out = Path(__file__).resolve().parents[2] / "testdata" / "golden_posit32.txt"
+    out = (
+        Path(__file__).resolve().parents[2]
+        / "rust"
+        / "testdata"
+        / "golden_posit32.txt"
+    )
+    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text("\n".join(lines) + "\n")
     print(f"wrote {len(lines)} lines to {out}")
 

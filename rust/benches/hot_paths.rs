@@ -10,13 +10,16 @@
 //! * blocked LU/Cholesky end to end.
 
 use posit_accel::blas::{self, Matrix, Trans};
-use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend, TimedBackend};
 use posit_accel::posit::counting::{sample_in_range, PAPER_RANGES};
 use posit_accel::posit::generic::{NoTrace, PositSpec};
 use posit_accel::posit::{self, Posit32};
 use posit_accel::rng::Pcg64;
 use posit_accel::runtime::Runtime;
+use posit_accel::service::{mixed_manifest, Engine};
+use posit_accel::sim::systolic::SystolicConfig;
 use posit_accel::util::bench_stats;
+use std::sync::Arc;
 
 struct Bench {
     rows: Vec<(String, f64, String)>,
@@ -209,11 +212,74 @@ fn bench_decompositions(b: &mut Bench) {
     );
 }
 
+/// Service throughput: jobs/sec and aggregate Gflops on a 32-job mixed
+/// manifest, 1 vs N workers, per backend. The per-job backend is
+/// single-threaded (`NativeBackend::new(1)`), so the worker count is the
+/// parallelism variable: 1 worker ~ one core; N workers scale with cores
+/// until the machine saturates. The acceptance bar (8 workers >= 3x the
+/// 1-worker jobs/sec on `native`) needs >= ~4 real cores to show.
+fn bench_service(b: &mut Bench) {
+    const JOBS: usize = 32;
+    const BASE_N: usize = 96;
+    const MAX_BATCH: usize = 32;
+    let jobs = mixed_manifest(JOBS, BASE_N);
+    let fpga = SystolicConfig::agilex_posit32();
+    type Mk = Box<dyn Fn() -> Arc<dyn GemmBackend>>;
+    let backends: Vec<(&str, Mk)> = vec![
+        (
+            "native",
+            Box::new(|| Arc::new(NativeBackend::new(1)) as Arc<dyn GemmBackend>),
+        ),
+        (
+            "fpga-model",
+            Box::new(move || {
+                Arc::new(TimedBackend::new(
+                    "fpga/agilex-16x16",
+                    NativeBackend::new(1),
+                    move |m, k, n| fpga.gemm_seconds(m, k, n),
+                )) as Arc<dyn GemmBackend>
+            }),
+        ),
+    ];
+    for (name, mk) in &backends {
+        let mut base_jps = 0.0;
+        for &workers in &[1usize, 2, 4, 8] {
+            let engine = Engine::new(vec![(name.to_string(), mk())], MAX_BATCH);
+            // Warm once (pool spin-up, allocator), then measure one pass.
+            engine.run(&jobs[..4.min(jobs.len())], workers, false);
+            let report = engine.run(&jobs, workers, false);
+            assert_eq!(report.ok_count(), jobs.len(), "{name} x{workers}");
+            let jps = report.jobs_per_s();
+            if workers == 1 {
+                base_jps = jps;
+            }
+            b.add(
+                &format!("service {name} {JOBS}-job manifest x{workers} workers"),
+                jps,
+                "jobs/s",
+            );
+            b.add(
+                &format!("service {name} aggregate update x{workers} workers"),
+                report.agg_update_gflops() * 1e3,
+                "Mflops",
+            );
+            if workers > 1 && base_jps > 0.0 {
+                b.add(
+                    &format!("service {name} speedup x{workers} vs x1"),
+                    jps / base_jps,
+                    "x",
+                );
+            }
+        }
+    }
+}
+
 fn main() {
     println!("hot_paths microbenchmarks (min of several reps)\n");
     let mut b = Bench::new();
     bench_scalar_ops(&mut b);
     bench_gemm(&mut b);
     bench_decompositions(&mut b);
+    bench_service(&mut b);
     b.save();
 }

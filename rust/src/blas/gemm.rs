@@ -166,9 +166,14 @@ fn gemm_nn<T: Scalar>(
     }
 }
 
-/// Multithreaded GEMM: splits columns of C across OS threads; each thread
-/// runs the same blocked kernel, so results stay bit-identical regardless
-/// of thread count.
+/// Multithreaded GEMM: splits columns of C into `threads` chunks executed
+/// on the shared bounded pool ([`super::pool`]); each chunk runs the same
+/// blocked kernel, so results stay bit-identical regardless of the
+/// requested split or the pool size.
+///
+/// §Perf: chunks are queued on persistent workers instead of spawning OS
+/// threads per call — under the factorization service many of these calls
+/// are in flight at once and thread churn dominated small updates.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel<T: Scalar>(
     threads: usize,
@@ -190,62 +195,95 @@ pub fn gemm_parallel<T: Scalar>(
     if threads == 1 || n < 4 {
         return gemm(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
     }
-    // Split C at column boundaries: each chunk is a contiguous slice.
-    // NB: like BLAS, `c` need only extend to the last column's last row
-    // (len >= ldc*(n-1) + m), so the final chunk takes "the rest".
-    let cols_per = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = c;
-        let mut j0 = 0;
-        while j0 < n {
-            let jb = cols_per.min(n - j0);
-            let (mine, tail) = if j0 + jb < n {
-                rest.split_at_mut(ldc * jb)
-            } else {
-                (rest, &mut [][..])
-            };
-            rest = tail;
-            let bslice = b;
-            scope.spawn(move || {
-                // op(B) columns j0..j0+jb; for Trans::Yes, B is indexed
-                // (j, l) so pass the full B with a column offset closure —
-                // easiest correct route: naive kernel with offset.
-                match tb {
-                    Trans::No => gemm(
-                        ta,
-                        tb,
-                        m,
-                        jb,
-                        k,
-                        alpha,
-                        a,
-                        lda,
-                        &bslice[j0 * ldb..],
-                        ldb,
-                        beta,
-                        mine,
-                        ldc,
-                    ),
-                    Trans::Yes => gemm(
-                        ta,
-                        tb,
-                        m,
-                        jb,
-                        k,
-                        alpha,
-                        a,
-                        lda,
-                        &bslice[j0..],
-                        ldb,
-                        beta,
-                        mine,
-                        ldc,
-                    ),
-                }
-            });
-            j0 += jb;
-        }
+    super::pool::global().scope(|scope| {
+        gemm_parallel_scoped(
+            scope, threads, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc,
+        );
     });
+}
+
+/// Column-split GEMM into an *existing* pool scope: the shared engine of
+/// [`gemm_parallel`] and the coordinator's batched backends (which spawn
+/// several GEMMs into one scope so tiles overlap). Splits C at column
+/// boundaries into at most `threads` contiguous chunks, one pool task per
+/// chunk — always spawning, so independent calls into the same scope run
+/// concurrently. Bit-identical to the serial kernel for any split.
+///
+/// NB: like BLAS, `c` need only extend to the last column's last row
+/// (len >= ldc*(n-1) + m), so the final chunk takes "the rest".
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel_scoped<'env, T: Scalar>(
+    scope: &super::pool::Scope<'_, 'env>,
+    threads: usize,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &'env [T],
+    lda: usize,
+    b: &'env [T],
+    ldb: usize,
+    beta: T,
+    c: &'env mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let chunks = threads.max(1).min(n);
+    let cols_per = n.div_ceil(chunks);
+    let mut rest = c;
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = cols_per.min(n - j0);
+        let (mine, tail) = if j0 + jb < n {
+            rest.split_at_mut(ldc * jb)
+        } else {
+            (rest, &mut [][..])
+        };
+        rest = tail;
+        let bslice = b;
+        scope.spawn(move || {
+            // op(B) columns j0..j0+jb; for Trans::Yes, B is indexed
+            // (j, l) so pass the full B with a column offset closure —
+            // easiest correct route: naive kernel with offset.
+            match tb {
+                Trans::No => gemm(
+                    ta,
+                    tb,
+                    m,
+                    jb,
+                    k,
+                    alpha,
+                    a,
+                    lda,
+                    &bslice[j0 * ldb..],
+                    ldb,
+                    beta,
+                    mine,
+                    ldc,
+                ),
+                Trans::Yes => gemm(
+                    ta,
+                    tb,
+                    m,
+                    jb,
+                    k,
+                    alpha,
+                    a,
+                    lda,
+                    &bslice[j0..],
+                    ldb,
+                    beta,
+                    mine,
+                    ldc,
+                ),
+            }
+        });
+        j0 += jb;
+    }
 }
 
 /// Default thread count for parallel kernels.

@@ -15,10 +15,11 @@ pub mod gemm;
 pub mod level1;
 pub mod level2;
 pub mod matrix;
+pub mod pool;
 pub mod syrk;
 pub mod trsm;
 
-pub use gemm::{default_threads, gemm, gemm_naive, gemm_parallel, Trans};
+pub use gemm::{default_threads, gemm, gemm_naive, gemm_parallel, gemm_parallel_scoped, Trans};
 pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
 pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};
 pub use matrix::Matrix;

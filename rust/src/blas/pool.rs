@@ -1,0 +1,254 @@
+//! Bounded, process-wide worker pool for the compute kernels.
+//!
+//! The original `gemm_parallel` spawned OS threads per call; at service
+//! rates (many concurrent factorizations, each dispatching a trailing
+//! update per panel) that is thousands of short-lived threads per second.
+//! This pool owns a fixed set of workers — sized once from
+//! `POSIT_ACCEL_POOL_THREADS` or the machine's parallelism — shared by the
+//! parallel GEMM, the batched `gemm_update_many` backends, and the
+//! factorization service.
+//!
+//! The API is a scoped fork/join, like `std::thread::scope`: tasks may
+//! borrow from the caller's stack because [`ThreadPool::scope`] does not
+//! return until every task spawned inside it has finished (enforced by a
+//! drop guard, so it holds even if the scope body panics).
+//!
+//! Determinism: the pool only changes *where* closures run, never what
+//! they compute — callers decide the work split. All kernel users split
+//! output columns, whose results are independent of the split, so results
+//! stay bit-identical for every pool size (pinned by blas/coordinator
+//! tests).
+//!
+//! Nesting: a task that itself opens a scope runs its sub-tasks inline
+//! (detected with a thread-local flag). That keeps the pool deadlock-free
+//! when, e.g., a batched backend parallelizes jobs whose chunks would
+//! otherwise wait for the very workers executing them.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Fixed-size worker pool with scoped, borrowing task submission.
+pub struct ThreadPool {
+    tx: Mutex<Sender<Task>>,
+    threads: usize,
+}
+
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Handle for spawning borrowed tasks inside [`ThreadPool::scope`].
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl ThreadPool {
+    /// Start `threads` workers (at least 1). Workers live for the pool's
+    /// lifetime; the global pool lives for the process.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            std::thread::spawn(move || {
+                IN_POOL_WORKER.with(|f| f.set(true));
+                loop {
+                    // Take the next task, releasing the lock before running.
+                    let task = { rx.lock().unwrap().recv() };
+                    match task {
+                        Ok(t) => t(),
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        ThreadPool {
+            tx: Mutex::new(tx),
+            threads,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f`, allowing it to spawn borrowing tasks; returns only after
+    /// every spawned task completed. Panics (here) if any task panicked.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&Scope<'_, 'env>) -> R) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panicked: AtomicBool::new(false),
+            }),
+            _env: PhantomData,
+        };
+        // Wait for outstanding tasks on every exit path, including a panic
+        // in `f`: borrowed data must outlive the tasks.
+        struct WaitGuard<'a>(&'a ScopeState);
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                let mut pending = self.0.pending.lock().unwrap();
+                while *pending > 0 {
+                    pending = self.0.done.wait(pending).unwrap();
+                }
+            }
+        }
+        let result = {
+            let _wait = WaitGuard(&scope.state);
+            f(&scope)
+        };
+        if scope.state.panicked.load(Ordering::Acquire) {
+            panic!("posit-accel pool task panicked");
+        }
+        result
+    }
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Queue `f` on the pool. Runs inline when the pool has no real
+    /// parallelism or when called from a pool worker (nested scopes).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if self.pool.threads <= 1 || IN_POOL_WORKER.with(|c| c.get()) {
+            f();
+            return;
+        }
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                state.panicked.store(true, Ordering::Release);
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: `ThreadPool::scope` blocks (WaitGuard) until `pending`
+        // reaches zero, i.e. until this closure has run to completion, so
+        // every `'env` borrow it captures strictly outlives its execution.
+        // The transmute only erases that lifetime; the layout of a boxed
+        // trait object is lifetime-independent.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        self.pool
+            .tx
+            .lock()
+            .unwrap()
+            .send(task)
+            .expect("pool workers outlive the pool handle");
+    }
+}
+
+/// The process-wide pool shared by parallel GEMM, the batched backends and
+/// the factorization service. Sized from `POSIT_ACCEL_POOL_THREADS`, else
+/// the machine's available parallelism.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = std::env::var("POSIT_ACCEL_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(super::gemm::default_threads);
+        ThreadPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_borrowed_tasks_to_completion() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        pool.scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn scopes_are_reusable_and_concurrent() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|outer| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let hits = &hits;
+                outer.spawn(move || {
+                    for _ in 0..8 {
+                        pool.scope(|s| {
+                            for _ in 0..5 {
+                                s.spawn(|| {
+                                    hits.fetch_add(1, Ordering::Relaxed);
+                                });
+                            }
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 8 * 5);
+    }
+
+    #[test]
+    fn nested_scopes_run_inline_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let total = &total;
+                s.spawn(move || {
+                    // A task opening a scope on the same (global) pool must
+                    // not wait on workers it is occupying.
+                    global().scope(|inner| {
+                        for _ in 0..3 {
+                            inner.spawn(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_scope_caller() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+            });
+        }));
+        assert!(r.is_err(), "scope must re-raise task panics");
+    }
+}

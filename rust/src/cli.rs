@@ -8,6 +8,8 @@
 //! posit-accel decomp --n 256 [--alg lu|cholesky] [--backend ...]
 //! posit-accel solve --n 256 [--sigma 1.0]   factorize+solve, report errors
 //! posit-accel opbench                 posit op microbenchmarks by range
+//! posit-accel batch [--manifest f]    batched factorization service, one pass
+//! posit-accel serve [--rounds 3]      same, sustained rounds, JSON per round
 //! ```
 
 use std::collections::HashMap;
@@ -77,9 +79,24 @@ USAGE:
   posit-accel decomp [--n 256] [--alg lu|cholesky] [--backend native|pjrt] [--nb 64]
   posit-accel solve  [--n 256] [--sigma 1.0]
   posit-accel opbench [--quick]
+  posit-accel batch  [--manifest FILE] [--jobs 32] [--n 192] [--workers <cores>]
+                     [--backend native|fpga|gpu|pjrt] [--max-batch 32] [--json FILE]
+  posit-accel serve  (batch options) [--rounds 3]
 
 Tables/figures print a paper-vs-model/measured comparison and save CSV
-under results/. PJRT backends need `make artifacts` first.";
+under results/. PJRT backends need `make artifacts` first.
+
+batch/serve run a job manifest (one `lu|cholesky n=... [nb= seed= sigma=
+class= backend=]` per line; without --manifest, a deterministic mixed
+workload of --jobs jobs around size --n) through the batched service:
+--workers factorization workers multiplex their trailing updates onto
+shared backends via per-backend dispatch queues. Factors are bit-identical
+to the sequential drivers at any worker count. `batch` prints a per-job
+table plus a JSON report (--json writes it to a file); `serve` repeats the
+manifest --rounds times and emits one aggregate JSON line per round
+(--json then appends those lines to FILE as a JSONL log).
+Backends: native (host), fpga/gpu (bit-exact numerics + modelled time),
+pjrt (AOT Pallas artifacts).";
 
 #[cfg(test)]
 mod tests {

@@ -89,11 +89,14 @@ pub fn getrf_offload(
                 .map_err(|_| LapackError::BadValue(j + 1))?;
             stats.update_s += t1.elapsed().as_secs_f64();
             stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+            // Per-call model cost, not the backend's global accumulator:
+            // under the service one backend serves many concurrent jobs,
+            // and this keeps the attribution exact per job.
+            stats.simulated_s += backend.simulated_cost(nrows, jb, ncols);
         }
         j += jb;
     }
     stats.total_s = t_all.elapsed().as_secs_f64();
-    stats.simulated_s = backend.simulated_seconds();
     match info {
         Some(e) => Err(e),
         None => Ok(stats),
@@ -173,13 +176,15 @@ pub fn potrf_offload(
                 .map_err(|_| LapackError::BadValue(j + 1))?;
             stats.update_s += t1.elapsed().as_secs_f64();
             stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            // Per-call model cost (see getrf_offload): exact per-job
+            // attribution even on a backend shared across service workers.
+            stats.simulated_s += backend.simulated_cost(m2, jb, m2);
         } else {
             stats.panel_s += t0.elapsed().as_secs_f64();
         }
         j += jb;
     }
     stats.total_s = t_all.elapsed().as_secs_f64();
-    stats.simulated_s = backend.simulated_seconds();
     Ok(stats)
 }
 

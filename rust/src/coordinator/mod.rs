@@ -22,16 +22,38 @@
 
 pub mod drivers;
 
-use crate::blas::{gemm_parallel, Trans};
+use crate::blas::{gemm_parallel, gemm_parallel_scoped, pool, Trans};
 use crate::posit::Posit32;
 use crate::runtime::{ArtifactKind, Runtime};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// One trailing-matrix update staged for a backend: borrowed views of
+/// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`. The unit of work of
+/// [`GemmBackend::gemm_update_many`], which the service's per-backend
+/// dispatch queues use to hand a whole batch of tiles — typically from
+/// *different* factorization jobs — to an accelerator in one contiguous
+/// submission.
+pub struct GemmJob<'a> {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub a: &'a [Posit32],
+    pub lda: usize,
+    pub b: &'a [Posit32],
+    pub ldb: usize,
+    pub c: &'a mut [Posit32],
+    pub ldc: usize,
+}
+
 /// An accelerator that can apply the trailing-matrix update
 /// `C <- C - A · B` on column-major Posit(32,2) tiles.
-pub trait GemmBackend {
+///
+/// Backends are `Send + Sync`: one instance is shared by every worker of
+/// the batched factorization service (`crate::service`), which multiplexes
+/// the trailing updates of concurrent jobs onto it.
+pub trait GemmBackend: Send + Sync {
     fn name(&self) -> &str;
 
     /// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`; posit semantics per
@@ -49,6 +71,29 @@ pub trait GemmBackend {
         c: &mut [Posit32],
         ldc: usize,
     ) -> Result<()>;
+
+    /// Apply a batch of updates in one submission. Tiles are independent
+    /// (each has its own `C`), so every implementation — including ones
+    /// that execute the batch concurrently — produces results bit-identical
+    /// to looping `gemm_update` over the batch in order; only throughput
+    /// differs. Implementations may consume (empty) the `c` views; callers
+    /// keep their own handles to the underlying buffers.
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+        for j in jobs.iter_mut() {
+            let (m, k, n) = (j.m, j.k, j.n);
+            let (lda, ldb, ldc) = (j.lda, j.ldb, j.ldc);
+            self.gemm_update(m, k, n, j.a, lda, j.b, ldb, j.c, ldc)?;
+        }
+        Ok(())
+    }
+
+    /// Modelled accelerator-seconds *one* `(m, k, n)` update costs on this
+    /// backend (0 for real backends). Pure function of the shape: safe to
+    /// call from any thread, which is how the drivers attribute simulated
+    /// time per job even when the backend instance is shared.
+    fn simulated_cost(&self, _m: usize, _k: usize, _n: usize) -> f64 {
+        0.0
+    }
 
     /// Simulated accelerator-seconds accumulated so far (model backends).
     fn simulated_seconds(&self) -> f64 {
@@ -104,6 +149,47 @@ impl GemmBackend for NativeBackend {
             c,
             ldc,
         );
+        Ok(())
+    }
+
+    /// Batched override: one pool wave over the whole batch. Each tile is
+    /// spawned into the scope via the shared column-split engine
+    /// ([`gemm_parallel_scoped`]) with `self.threads` spread across the
+    /// batch (at least one task per tile), so tiles from different jobs
+    /// fill the workers concurrently instead of each tile serializing
+    /// behind the previous one. Chunking never changes results: every
+    /// output column is computed by the same serial kernel whichever chunk
+    /// it lands in.
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let minus1 = Posit32::ONE.negate();
+        let chunks_per_job = self.threads.max(1).div_ceil(jobs.len()).max(1);
+        pool::global().scope(|s| {
+            for job in jobs.iter_mut() {
+                // Take the C view whole so chunk tasks can outlive this
+                // loop iteration (the trait allows consuming the views).
+                let c: &mut [Posit32] = std::mem::take(&mut job.c);
+                gemm_parallel_scoped(
+                    s,
+                    chunks_per_job,
+                    Trans::No,
+                    Trans::No,
+                    job.m,
+                    job.n,
+                    job.k,
+                    minus1,
+                    job.a,
+                    job.lda,
+                    job.b,
+                    job.ldb,
+                    Posit32::ONE,
+                    c,
+                    job.ldc,
+                );
+            }
+        });
         Ok(())
     }
 }
@@ -250,8 +336,9 @@ impl GemmBackend for PjrtBackend {
 pub struct TimedBackend<B> {
     inner: B,
     label: String,
-    /// seconds = model(m, k, n)
-    model: Box<dyn Fn(usize, usize, usize) -> f64>,
+    /// seconds = model(m, k, n); `Send + Sync` so a single modelled
+    /// accelerator can be shared by all service workers.
+    model: Box<dyn Fn(usize, usize, usize) -> f64 + Send + Sync>,
     nanos: AtomicU64,
 }
 
@@ -259,7 +346,7 @@ impl<B: GemmBackend> TimedBackend<B> {
     pub fn new(
         label: impl Into<String>,
         inner: B,
-        model: impl Fn(usize, usize, usize) -> f64 + 'static,
+        model: impl Fn(usize, usize, usize) -> f64 + Send + Sync + 'static,
     ) -> Self {
         TimedBackend {
             inner,
@@ -291,6 +378,17 @@ impl<B: GemmBackend> GemmBackend for TimedBackend<B> {
             .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
         self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
     }
+    /// Charge the whole batch, then forward it to the inner backend in one
+    /// submission (so a batched native inner still overlaps the tiles).
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+        let secs: f64 = jobs.iter().map(|j| (self.model)(j.m, j.k, j.n)).sum();
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.inner.gemm_update_many(jobs)
+    }
+    fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
+        (self.model)(m, k, n) + self.inner.simulated_cost(m, k, n)
+    }
     fn simulated_seconds(&self) -> f64 {
         self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
@@ -306,7 +404,10 @@ pub struct OffloadStats {
     pub panel_s: f64,
     /// Wall seconds in backend trailing updates.
     pub update_s: f64,
-    /// Simulated accelerator seconds (TimedBackend), if any.
+    /// Modelled accelerator seconds charged to *this* factorization's
+    /// updates (TimedBackend-style backends; summed per call via
+    /// [`GemmBackend::simulated_cost`], so it stays exact per job even on
+    /// a backend shared across service workers).
     pub simulated_s: f64,
     /// Total wall seconds.
     pub total_s: f64,
@@ -354,6 +455,58 @@ mod tests {
             .unwrap();
         assert_eq!(c1.data, c2.data, "padded PJRT tiles must be bit-exact");
         assert_eq!(be.tiles_dispatched(), 4); // ceil(150/128)*ceil(131/128)
+    }
+
+    #[test]
+    fn batched_update_bit_matches_sequential_loop() {
+        // Heterogeneous tiles — odd shapes AND strided C (ldc > m, the
+        // last element: (m, k, n, ldc - m) padding) — through
+        // gemm_update_many must equal per-tile gemm_update calls, for both
+        // the pool-parallel native override and the timed wrapper.
+        let shapes =
+            [(37usize, 8usize, 29usize, 0usize), (64, 16, 64, 5), (5, 3, 7, 1), (50, 32, 1, 3)];
+        let native = NativeBackend::new(4);
+        let timed = TimedBackend::new("model", NativeBackend::new(4), |m, k, n| {
+            (2 * m * k * n) as f64 / 1e9
+        });
+        for be in [&native as &dyn GemmBackend, &timed] {
+            let mut seq: Vec<Matrix<Posit32>> = Vec::new();
+            let mut ops = Vec::new();
+            for (i, &(m, k, n, pad)) in shapes.iter().enumerate() {
+                let s = 100 + 3 * i as u64;
+                let (a, b, c) =
+                    (rand_mat(m, k, s), rand_mat(k, n, s + 1), rand_mat(m + pad, n, s + 2));
+                let mut c1 = c.clone();
+                be.gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m + pad)
+                    .unwrap();
+                seq.push(c1);
+                ops.push((a, b, c));
+            }
+            let mut jobs: Vec<GemmJob<'_>> = ops
+                .iter_mut()
+                .zip(&shapes)
+                .map(|((a, b, c), &(m, k, n, pad))| GemmJob {
+                    m,
+                    k,
+                    n,
+                    a: &a.data,
+                    lda: m,
+                    b: &b.data,
+                    ldb: k,
+                    c: &mut c.data,
+                    ldc: m + pad,
+                })
+                .collect();
+            be.gemm_update_many(&mut jobs).unwrap();
+            drop(jobs);
+            for ((_, _, got), want) in ops.iter().zip(&seq) {
+                assert_eq!(got.data, want.data, "batched != sequential on {}", be.name());
+            }
+        }
+        // The timed wrapper charged both paths: 2x the one-shot cost.
+        let one: f64 = shapes.iter().map(|&(m, k, n, _)| (2 * m * k * n) as f64 / 1e9).sum();
+        assert!((timed.simulated_seconds() - 2.0 * one).abs() < 1e-9);
+        assert!((timed.simulated_cost(37, 8, 29) - 2.0 * 37.0 * 8.0 * 29.0 / 1e9).abs() < 1e-12);
     }
 
     #[test]

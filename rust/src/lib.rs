@@ -20,7 +20,13 @@
 //!   Python never runs on the request path.
 //! * [`coordinator`] — the accelerator-offload layer: blocked LU/Cholesky
 //!   drivers that factorize panels on the host and dispatch trailing-matrix
-//!   GEMM updates to a pluggable [`coordinator::GemmBackend`].
+//!   GEMM updates to a pluggable [`coordinator::GemmBackend`] (single calls
+//!   or batched [`coordinator::GemmBackend::gemm_update_many`] submissions).
+//! * [`service`] — the batched multi-factorization service: a job manifest
+//!   is sharded across a worker pool whose trailing updates multiplex onto
+//!   shared backends through per-backend dispatch queues, with per-job
+//!   stats and throughput JSON (`posit-accel batch`/`serve`). Results are
+//!   bit-identical to the sequential drivers at any worker count.
 //! * [`sim`] — calibrated models of the paper's hardware: the Agilex
 //!   systolic array (cycles, resources, power) and the five GPUs
 //!   (instruction-driven timing, warp divergence, power capping).
@@ -36,6 +42,7 @@ pub mod posit;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 

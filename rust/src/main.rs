@@ -2,11 +2,15 @@
 
 use posit_accel::cli::{Args, USAGE};
 use posit_accel::coordinator::drivers::{getrf_offload, lu_ops, potrf_offload};
-use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend, TimedBackend};
 use posit_accel::posit::Posit32;
 use posit_accel::rng::Pcg64;
+use posit_accel::sim::gpu::GpuModel;
+use posit_accel::sim::specs::RTX4090;
+use posit_accel::sim::systolic::SystolicConfig;
 use posit_accel::util::{time_it, Table};
-use posit_accel::{blas, experiments, lapack, runtime};
+use posit_accel::{blas, experiments, lapack, runtime, service};
+use std::sync::Arc;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -36,6 +40,8 @@ fn main() {
         Some("gemm") => cmd_gemm(&args),
         Some("decomp") => cmd_decomp(&args),
         Some("solve") => cmd_solve(&args),
+        Some("batch") => cmd_batch(&args, false),
+        Some("serve") => cmd_batch(&args, true),
         Some("opbench") => {
             experiments::table2_3::run_table2(quick || !args.flag("full"))
         }
@@ -153,4 +159,154 @@ fn cmd_solve(args: &Args) {
         ]);
     }
     print!("{}", t.render());
+}
+
+/// Build the service engine: native always (the primary); FPGA/GPU as
+/// modelled accelerators (bit-exact numerics on the host, accelerator time
+/// from the calibrated models — the DESIGN.md substitution) and PJRT, each
+/// started only when some job actually routes to it, so a native-only
+/// manifest spawns no idle dispatcher threads.
+fn service_engine(jobs: &[service::JobSpec], max_batch: usize) -> service::Engine {
+    let want = |name: &str| jobs.iter().any(|j| j.backend == name);
+    let threads = blas::default_threads();
+    let mut backends: Vec<(String, Arc<dyn GemmBackend>)> = vec![(
+        "native".to_string(),
+        Arc::new(NativeBackend::new(threads)) as Arc<dyn GemmBackend>,
+    )];
+    if want("fpga") {
+        let fpga = SystolicConfig::agilex_posit32();
+        backends.push((
+            "fpga".to_string(),
+            Arc::new(TimedBackend::new(
+                "fpga/agilex-16x16",
+                NativeBackend::new(threads),
+                move |m, k, n| fpga.gemm_seconds(m, k, n),
+            )) as Arc<dyn GemmBackend>,
+        ));
+    }
+    if want("gpu") {
+        let gm = GpuModel::new();
+        backends.push((
+            "gpu".to_string(),
+            Arc::new(TimedBackend::new(
+                "gpu/rtx4090",
+                NativeBackend::new(threads),
+                move |m, k, n| gm.gemm_seconds(&RTX4090, m, k, n, 1.0),
+            )) as Arc<dyn GemmBackend>,
+        ));
+    }
+    if want("pjrt") {
+        match PjrtBackend::new(runtime::Runtime::default_dir()) {
+            Ok(be) => backends.push(("pjrt".to_string(), Arc::new(be) as Arc<dyn GemmBackend>)),
+            Err(e) => die(&format!("pjrt backend: {e:#}")),
+        }
+    }
+    service::Engine::new(backends, max_batch)
+}
+
+fn cmd_batch(args: &Args, serve: bool) {
+    let workers = args.usize_or("workers", blas::default_threads());
+    let max_batch = args.usize_or("max-batch", 32);
+    let rounds = if serve { args.usize_or("rounds", 3) } else { 1 };
+    let default_backend = args.str_or("backend", "native");
+    if !["native", "fpga", "gpu", "pjrt"].contains(&default_backend) {
+        die(&format!("unknown --backend '{default_backend}'"));
+    }
+    let mut jobs = match args.get("manifest") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| die(&format!("read {path}: {e}")));
+            service::parse_manifest(&text).unwrap_or_else(|e| die(&format!("{e:#}")))
+        }
+        None => service::mixed_manifest(args.usize_or("jobs", 32), args.usize_or("n", 192)),
+    };
+    for job in jobs.iter_mut() {
+        if job.backend.is_empty() {
+            job.backend = default_backend.to_string();
+        }
+    }
+    let engine = service_engine(&jobs, max_batch);
+
+    for round in 1..=rounds {
+        let report = engine.run(&jobs, workers, false);
+        if serve {
+            // Failed jobs keep their full rows in the round line so the
+            // JSONL log stays diagnosable (ids + error strings).
+            let failed: Vec<String> = report
+                .results
+                .iter()
+                .filter(|r| r.error.is_some())
+                .map(|r| r.to_json())
+                .collect();
+            let line = if failed.is_empty() {
+                format!("{{\"round\": {round}, \"aggregate\": {}}}", report.aggregate_json())
+            } else {
+                format!(
+                    "{{\"round\": {round}, \"aggregate\": {}, \"failed_jobs\": [{}]}}",
+                    report.aggregate_json(),
+                    failed.join(", ")
+                )
+            };
+            println!("{line}");
+            // --json in serve mode appends one line per round (a JSONL log).
+            if let Some(path) = args.get("json") {
+                use std::io::Write as _;
+                let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
+                match file.and_then(|mut f| writeln!(f, "{line}")) {
+                    Ok(()) => {}
+                    Err(e) => die(&format!("append {path}: {e}")),
+                }
+            }
+            continue;
+        }
+        let mut t = Table::new(
+            &format!(
+                "batched factorization service: {} jobs, {} workers, max batch {}",
+                report.results.len(),
+                report.workers,
+                max_batch
+            ),
+            &["id", "alg", "n", "backend", "ok", "wall s", "upd Gflops", "sim s"],
+        );
+        for r in &report.results {
+            let upd_gflops = if r.wall_s > 0.0 {
+                r.stats.update_flops / r.wall_s / 1e9
+            } else {
+                0.0
+            };
+            t.row(&[
+                r.id.to_string(),
+                r.alg.name().into(),
+                r.n.to_string(),
+                r.backend.clone(),
+                r.error.is_none().to_string(),
+                format!("{:.3}", r.wall_s),
+                format!("{upd_gflops:.3}"),
+                format!("{:.3}", r.stats.simulated_s),
+            ]);
+        }
+        print!("{}", t.render());
+        for r in &report.results {
+            if let Some(e) = &r.error {
+                println!("job {} failed: {e}", r.id);
+            }
+        }
+        println!(
+            "{} jobs ({} ok) in {:.3}s with {} workers: {:.2} jobs/s, {:.3} aggregate update Gflops",
+            report.results.len(),
+            report.ok_count(),
+            report.wall_s,
+            report.workers,
+            report.jobs_per_s(),
+            report.agg_update_gflops(),
+        );
+        let json = report.to_json();
+        match args.get("json") {
+            Some(path) => match std::fs::write(path, &json) {
+                Ok(()) => println!("[saved {path}]"),
+                Err(e) => die(&format!("write {path}: {e}")),
+            },
+            None => println!("{json}"),
+        }
+    }
 }

@@ -1,0 +1,433 @@
+//! Worker pool + per-job execution + throughput report.
+//!
+//! [`Engine::run`] shards a manifest across `workers` OS threads. Each
+//! worker claims jobs off a shared counter, materializes the job's matrix
+//! (a pure function of the [`JobSpec`]), and runs the ordinary sequential
+//! drivers (`getrf_offload` / `potrf_offload`) against a [`QueueBackend`]
+//! proxy, so all workers' trailing updates multiplex onto the shared
+//! per-backend dispatch queues.
+//!
+//! **Determinism guarantee** (the service's headline contract, pinned by
+//! `rust/tests/service_determinism.rs`): for every job, the factor matrix
+//! and pivot vector are bit-identical to running the sequential driver on
+//! the same spec, for ANY worker count, batch size, pool size or
+//! interleaving. It holds by construction: scheduling decides only *when*
+//! a tile executes, never its operands, and every backend's tile kernel is
+//! bit-exact and order-free across independent output columns.
+
+use super::manifest::{Alg, JobSpec, MatrixClass};
+use super::queue::{BatchQueue, QueueBackend, QueueReport};
+use crate::blas::Matrix;
+use crate::coordinator::drivers::{chol_ops, getrf_offload, lu_ops, potrf_offload};
+use crate::coordinator::{GemmBackend, OffloadStats};
+use crate::experiments::matgen;
+use crate::posit::Posit32;
+use crate::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Outcome of one job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: usize,
+    pub alg: Alg,
+    pub n: usize,
+    pub backend: String,
+    /// `None` = success; `Some(msg)` = driver error (singularity, NaR,
+    /// backend failure, unknown queue). Failures are deterministic too.
+    pub error: Option<String>,
+    pub stats: OffloadStats,
+    /// Wall seconds for this job on its worker (generation + factorize).
+    pub wall_s: f64,
+    /// FNV-1a over the factor bits and pivots: cheap cross-run identity.
+    pub fingerprint: u64,
+    /// Factor bit patterns (only when the run keeps factors, e.g. tests).
+    pub factors: Option<Vec<u32>>,
+    /// LU pivots (empty for Cholesky; only when keeping factors).
+    pub ipiv: Option<Vec<usize>>,
+}
+
+/// Aggregate outcome of one [`Engine::run`].
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Per-job results, ordered by job id.
+    pub results: Vec<JobResult>,
+    pub workers: usize,
+    pub wall_s: f64,
+    pub queues: Vec<QueueReport>,
+}
+
+/// The batched multi-factorization engine: a set of named dispatch queues
+/// (one per shared backend) that any number of runs can execute against.
+pub struct Engine {
+    queues: Vec<Arc<BatchQueue>>,
+}
+
+impl Engine {
+    /// Start one dispatch queue per `(name, backend)`; the first entry is
+    /// the primary backend (jobs with an empty `backend` route to it).
+    pub fn new(backends: Vec<(String, Arc<dyn GemmBackend>)>, max_batch: usize) -> Engine {
+        assert!(!backends.is_empty(), "engine needs at least one backend");
+        Engine {
+            queues: backends
+                .into_iter()
+                .map(|(name, be)| BatchQueue::start(name, be, max_batch))
+                .collect(),
+        }
+    }
+
+    /// Queue names, primary first.
+    pub fn backend_names(&self) -> Vec<String> {
+        self.queues.iter().map(|q| q.name().to_string()).collect()
+    }
+
+    fn queue_for(&self, name: &str) -> Option<&Arc<BatchQueue>> {
+        if name.is_empty() {
+            self.queues.first()
+        } else {
+            self.queues.iter().find(|q| q.name() == name)
+        }
+    }
+
+    /// Run every job of `jobs` on `workers` worker threads and report.
+    /// `keep_factors` retains factor bits + pivots per job (tests).
+    pub fn run(&self, jobs: &[JobSpec], workers: usize, keep_factors: bool) -> ServiceReport {
+        let workers = workers.max(1).min(jobs.len().max(1));
+        let next = AtomicUsize::new(0);
+        let results = Mutex::new(Vec::with_capacity(jobs.len()));
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let spec = &jobs[i];
+                    let result = match self.queue_for(&spec.backend) {
+                        Some(queue) => {
+                            let proxy = QueueBackend::new(Arc::clone(queue));
+                            run_job_on(spec, &proxy, queue.name(), keep_factors)
+                        }
+                        None => failed_result(
+                            spec,
+                            format!("unknown backend '{}'", spec.backend),
+                        ),
+                    };
+                    results.lock().unwrap().push(result);
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|r| r.id);
+        ServiceReport {
+            results,
+            workers,
+            wall_s,
+            queues: self.queues.iter().map(|q| q.report()).collect(),
+        }
+    }
+}
+
+/// Run one job straight through the sequential drivers on `backend` — the
+/// ground-truth path the determinism tests compare the service against.
+pub fn run_job_sequential(
+    spec: &JobSpec,
+    backend: &dyn GemmBackend,
+    keep_factors: bool,
+) -> JobResult {
+    run_job_on(spec, backend, backend.name(), keep_factors)
+}
+
+/// Materialize the job's input matrix: a pure function of the spec.
+fn build_matrix(spec: &JobSpec) -> Matrix<Posit32> {
+    let mut rng = Pcg64::seed(spec.seed);
+    match spec.class {
+        MatrixClass::Normal => {
+            Matrix::<Posit32>::random_normal(spec.n, spec.n, spec.sigma, &mut rng)
+        }
+        MatrixClass::Spd => matgen::spd_f64(spec.n, spec.sigma, &mut rng).cast(),
+    }
+}
+
+fn run_job_on(
+    spec: &JobSpec,
+    backend: &dyn GemmBackend,
+    backend_label: &str,
+    keep_factors: bool,
+) -> JobResult {
+    let t0 = Instant::now();
+    let n = spec.n;
+    let mut a = build_matrix(spec);
+    let mut ipiv = Vec::new();
+    let outcome = match spec.alg {
+        Alg::Lu => {
+            ipiv = vec![0usize; n];
+            getrf_offload(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+        }
+        Alg::Cholesky => potrf_offload(n, &mut a.data, n, spec.nb, backend),
+    };
+    let (stats, error) = match outcome {
+        Ok(stats) => (stats, None),
+        Err(e) => (OffloadStats::default(), Some(e.to_string())),
+    };
+    JobResult {
+        id: spec.id,
+        alg: spec.alg,
+        n,
+        backend: backend_label.to_string(),
+        error,
+        stats,
+        wall_s: t0.elapsed().as_secs_f64(),
+        fingerprint: fingerprint(&a.data, &ipiv),
+        factors: keep_factors.then(|| a.data.iter().map(|p| p.0).collect()),
+        ipiv: keep_factors.then(|| ipiv.clone()),
+    }
+}
+
+fn failed_result(spec: &JobSpec, error: String) -> JobResult {
+    JobResult {
+        id: spec.id,
+        alg: spec.alg,
+        n: spec.n,
+        backend: spec.backend.clone(),
+        error: Some(error),
+        stats: OffloadStats::default(),
+        wall_s: 0.0,
+        fingerprint: 0,
+        factors: None,
+        ipiv: None,
+    }
+}
+
+/// FNV-1a over factor bit patterns and pivots.
+pub fn fingerprint(a: &[Posit32], ipiv: &[usize]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for p in a {
+        h = (h ^ p.0 as u64).wrapping_mul(PRIME);
+    }
+    for &i in ipiv {
+        h = (h ^ i as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+impl ServiceReport {
+    pub fn ok_count(&self) -> usize {
+        self.results.iter().filter(|r| r.error.is_none()).count()
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.results.len() - self.ok_count()
+    }
+
+    /// Completed jobs per wall second.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.results.len() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate trailing-update Gflops across all jobs over the wall time.
+    pub fn agg_update_gflops(&self) -> f64 {
+        let flops: f64 = self.results.iter().map(|r| r.stats.update_flops).sum();
+        if self.wall_s > 0.0 {
+            flops / self.wall_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate nominal factorization Gflops (2N³/3 per LU, N³/3 per
+    /// Cholesky) over the wall time — the headline throughput number.
+    pub fn agg_nominal_gflops(&self) -> f64 {
+        let ops: f64 = self
+            .results
+            .iter()
+            .filter(|r| r.error.is_none())
+            .map(|r| match r.alg {
+                Alg::Lu => lu_ops(r.n),
+                Alg::Cholesky => chol_ops(r.n),
+            })
+            .sum();
+        if self.wall_s > 0.0 {
+            ops / self.wall_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Full report as JSON: per-job rows plus aggregate and queue stats.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"workers\": ");
+        out.push_str(&self.workers.to_string());
+        out.push_str(",\n  \"wall_s\": ");
+        out.push_str(&jnum(self.wall_s));
+        out.push_str(",\n  \"jobs\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            out.push_str("    ");
+            out.push_str(&r.to_json());
+            out.push_str(if i + 1 < self.results.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n  \"aggregate\": ");
+        out.push_str(&self.aggregate_json());
+        out.push_str(",\n  \"queues\": [");
+        for (i, q) in self.queues.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"backend\": \"{}\", \"tiles\": {}, \"batches\": {}, \"max_batch\": {}, \"mean_batch\": {}}}",
+                esc(&q.backend),
+                q.tiles,
+                q.batches,
+                q.max_batch,
+                jnum(q.mean_batch())
+            ));
+        }
+        out.push_str("]\n}");
+        out
+    }
+
+    /// The aggregate object alone (one line; `serve` emits this per round).
+    pub fn aggregate_json(&self) -> String {
+        format!(
+            "{{\"jobs\": {}, \"ok\": {}, \"failed\": {}, \"workers\": {}, \"wall_s\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"nominal_gflops\": {}}}",
+            self.results.len(),
+            self.ok_count(),
+            self.failed_count(),
+            self.workers,
+            jnum(self.wall_s),
+            jnum(self.jobs_per_s()),
+            jnum(self.agg_update_gflops()),
+            jnum(self.agg_nominal_gflops()),
+        )
+    }
+}
+
+impl JobResult {
+    /// One job as a single-line JSON object.
+    pub fn to_json(&self) -> String {
+        let error = match &self.error {
+            Some(e) => format!("\"{}\"", esc(e)),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"fingerprint\": \"{:#018x}\"}}",
+            self.id,
+            self.alg.name(),
+            self.n,
+            esc(&self.backend),
+            self.error.is_none(),
+            error,
+            jnum(self.wall_s),
+            jnum(self.stats.panel_s),
+            jnum(self.stats.update_s),
+            jnum(self.stats.simulated_s),
+            jnum(self.stats.update_flops),
+            self.fingerprint,
+        )
+    }
+}
+
+/// JSON number: finite f64s via Rust's shortest decimal `Display` (always
+/// valid JSON), non-finite as null.
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manifest::mixed_manifest;
+    use super::*;
+    use crate::coordinator::NativeBackend;
+
+    fn engine() -> Engine {
+        Engine::new(
+            vec![(
+                "native".to_string(),
+                Arc::new(NativeBackend::new(2)) as Arc<dyn GemmBackend>,
+            )],
+            8,
+        )
+    }
+
+    #[test]
+    fn engine_smoke_all_jobs_succeed_and_report() {
+        let jobs = mixed_manifest(6, 40);
+        let report = engine().run(&jobs, 3, false);
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.ok_count(), 6, "{:?}", report.results);
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.id, i, "results must be ordered by id");
+            assert!(r.stats.update_flops > 0.0);
+            assert!(r.wall_s > 0.0);
+        }
+        assert!(report.jobs_per_s() > 0.0);
+        assert!(report.agg_update_gflops() > 0.0);
+        let q = &report.queues[0];
+        assert!(q.tiles > 0 && q.batches > 0 && q.max_batch >= 1);
+    }
+
+    #[test]
+    fn unknown_backend_is_a_per_job_error_not_a_crash() {
+        let mut jobs = mixed_manifest(2, 32);
+        jobs[1].backend = "warp-drive".to_string();
+        let report = engine().run(&jobs, 2, false);
+        assert!(report.results[0].error.is_none());
+        let err = report.results[1].error.as_deref().unwrap();
+        assert!(err.contains("warp-drive"), "{err}");
+        assert_eq!(report.failed_count(), 1);
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough() {
+        let jobs = mixed_manifest(3, 32);
+        let report = engine().run(&jobs, 2, false);
+        let json = report.to_json();
+        assert_eq!(json.matches("\"id\":").count(), 3);
+        assert!(json.contains("\"aggregate\""));
+        assert!(json.contains("\"queues\""));
+        assert!(json.contains("\"jobs_per_s\""));
+        // Balanced braces/brackets (cheap structural check).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_and_is_stable() {
+        let jobs = mixed_manifest(2, 32);
+        let be = NativeBackend::new(1);
+        let r1 = run_job_sequential(&jobs[0], &be, false);
+        let r2 = run_job_sequential(&jobs[0], &be, false);
+        let r3 = run_job_sequential(&jobs[1], &be, false);
+        assert_eq!(r1.fingerprint, r2.fingerprint);
+        assert_ne!(r1.fingerprint, r3.fingerprint);
+    }
+}

@@ -1,0 +1,223 @@
+//! Job manifests: the service's workload description.
+//!
+//! A manifest is a plain-text file, one factorization job per line:
+//!
+//! ```text
+//! # alg     key=value options (any order)
+//! lu        n=512 nb=64 seed=7 sigma=1.0 class=normal backend=native
+//! cholesky  n=384 sigma=0.01
+//! ```
+//!
+//! * `alg` — `lu`/`getrf` or `cholesky`/`potrf`.
+//! * `n` — matrix order (required).
+//! * `nb` — panel width (default [`crate::lapack::DEFAULT_NB`]).
+//! * `seed` — PRNG seed for the matrix (default derived from the job id,
+//!   so a manifest is fully deterministic without spelling seeds out).
+//! * `sigma` — entry standard deviation (default 1).
+//! * `class` — `normal` or `spd` (default: `normal` for LU, `spd` for
+//!   Cholesky; a non-SPD Cholesky job simply fails and is reported).
+//! * `backend` — dispatch-queue name (default: the engine's primary).
+//!
+//! `#` starts a comment; blank lines are skipped. Matrix generation is a
+//! pure function of the spec, so the same manifest produces bit-identical
+//! inputs — the precondition for the service's determinism guarantee.
+
+use crate::lapack::DEFAULT_NB;
+use anyhow::{anyhow, bail, Result};
+
+/// Factorization algorithm of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alg {
+    Lu,
+    Cholesky,
+}
+
+impl Alg {
+    pub fn name(self) -> &'static str {
+        match self {
+            Alg::Lu => "lu",
+            Alg::Cholesky => "cholesky",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Alg> {
+        match s {
+            "lu" | "getrf" => Ok(Alg::Lu),
+            "cholesky" | "chol" | "potrf" => Ok(Alg::Cholesky),
+            other => bail!("unknown algorithm '{other}' (want lu|cholesky)"),
+        }
+    }
+}
+
+/// Input-matrix class of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixClass {
+    /// Entries ~ N(0, σ).
+    Normal,
+    /// XᵀX + SPD shift, built in f64 then rounded (the paper's §5.2 SPD
+    /// generator).
+    Spd,
+}
+
+impl MatrixClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            MatrixClass::Normal => "normal",
+            MatrixClass::Spd => "spd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MatrixClass> {
+        match s {
+            "normal" => Ok(MatrixClass::Normal),
+            "spd" => Ok(MatrixClass::Spd),
+            other => bail!("unknown matrix class '{other}' (want normal|spd)"),
+        }
+    }
+}
+
+/// One factorization job; see the module docs for field semantics.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: usize,
+    pub alg: Alg,
+    pub n: usize,
+    pub nb: usize,
+    pub seed: u64,
+    pub sigma: f64,
+    pub class: MatrixClass,
+    /// Dispatch-queue name; empty selects the engine's primary backend.
+    pub backend: String,
+}
+
+impl JobSpec {
+    /// A job with the manifest defaults for everything but `alg`/`n`.
+    pub fn new(id: usize, alg: Alg, n: usize) -> JobSpec {
+        JobSpec {
+            id,
+            alg,
+            n,
+            nb: DEFAULT_NB,
+            seed: 0x5EED_0000 + id as u64,
+            sigma: 1.0,
+            class: match alg {
+                Alg::Lu => MatrixClass::Normal,
+                Alg::Cholesky => MatrixClass::Spd,
+            },
+            backend: String::new(),
+        }
+    }
+}
+
+/// Parse a manifest file body; see the module docs for the grammar.
+pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let alg = Alg::parse(it.next().unwrap()).map_err(|e| anyhow!("line {lineno}: {e}"))?;
+        // JobSpec::new picks the per-alg default class (spd for Cholesky);
+        // an explicit class= below simply overrides it.
+        let mut spec = JobSpec::new(jobs.len(), alg, 0);
+        for tok in it {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {lineno}: expected key=value, got '{tok}'"))?;
+            let bad = || anyhow!("line {lineno}: bad value '{val}' for '{key}'");
+            match key {
+                "n" => spec.n = val.parse().map_err(|_| bad())?,
+                "nb" => spec.nb = val.parse().map_err(|_| bad())?,
+                "seed" => spec.seed = val.parse().map_err(|_| bad())?,
+                "sigma" => spec.sigma = val.parse().map_err(|_| bad())?,
+                "class" => {
+                    spec.class = MatrixClass::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
+                }
+                "backend" => spec.backend = val.to_string(),
+                other => bail!("line {lineno}: unknown key '{other}'"),
+            }
+        }
+        if spec.n == 0 {
+            bail!("line {lineno}: missing or zero n=");
+        }
+        if spec.nb == 0 {
+            bail!("line {lineno}: nb must be positive");
+        }
+        jobs.push(spec);
+    }
+    if jobs.is_empty() {
+        bail!("manifest contains no jobs");
+    }
+    Ok(jobs)
+}
+
+/// Deterministic mixed workload used by the benches and tests: alternating
+/// LU/Cholesky over a ladder of sizes `base_n .. base_n + 3*base_n/4`,
+/// with an occasional small-σ job. Panel width 32 keeps several trailing
+/// updates per job even at small sizes.
+pub fn mixed_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
+    (0..count)
+        .map(|i| {
+            let alg = if i % 3 == 2 { Alg::Cholesky } else { Alg::Lu };
+            let n = base_n + (i % 4) * base_n / 4;
+            let mut spec = JobSpec::new(i, alg, n);
+            spec.nb = 32;
+            if i % 5 == 4 {
+                spec.sigma = 0.01;
+            }
+            spec
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_minimal_lines() {
+        let text = "\
+# a comment
+lu n=512 nb=64 seed=7 sigma=0.5 class=spd backend=fpga
+
+cholesky n=384   # trailing comment
+";
+        let jobs = parse_manifest(text).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].alg, Alg::Lu);
+        assert_eq!((jobs[0].n, jobs[0].nb, jobs[0].seed), (512, 64, 7));
+        assert_eq!(jobs[0].sigma, 0.5);
+        assert_eq!(jobs[0].class, MatrixClass::Spd);
+        assert_eq!(jobs[0].backend, "fpga");
+        assert_eq!(jobs[1].alg, Alg::Cholesky);
+        assert_eq!(jobs[1].class, MatrixClass::Spd, "cholesky defaults to spd");
+        assert!(jobs[1].backend.is_empty());
+        assert_eq!(jobs[1].id, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_manifest("qr n=8").is_err());
+        assert!(parse_manifest("lu n=0").is_err());
+        assert!(parse_manifest("lu").is_err());
+        assert!(parse_manifest("lu n=8 bogus=1").is_err());
+        assert!(parse_manifest("lu n=8 nb=abc").is_err());
+        assert!(parse_manifest("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn mixed_manifest_is_deterministic_and_mixed() {
+        let a = mixed_manifest(32, 96);
+        let b = mixed_manifest(32, 96);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.seed, x.n, x.alg), (y.seed, y.n, y.alg));
+        }
+        assert!(a.iter().any(|j| j.alg == Alg::Cholesky));
+        assert!(a.iter().any(|j| j.alg == Alg::Lu));
+        assert!(a.iter().map(|j| j.n).collect::<std::collections::HashSet<_>>().len() > 1);
+    }
+}

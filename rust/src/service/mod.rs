@@ -1,0 +1,37 @@
+//! L4 service: the batched multi-factorization engine (the production
+//! layer the ROADMAP's north star asks for on top of the paper's §5.2
+//! offload machinery).
+//!
+//! The paper's accelerators earn their speedups on *streams* of dense
+//! factorizations; a single `GemmBackend` driven by one sequential driver
+//! leaves them idle between panels. This module turns the coordinator into
+//! a throughput system:
+//!
+//! * [`manifest`] — [`JobSpec`] and the plain-text job-manifest format
+//!   (`alg n=... nb=... seed=...` per line), plus a deterministic
+//!   [`mixed_manifest`] generator for benches/tests.
+//! * [`queue`] — one [`BatchQueue`] per shared backend: a dispatcher that
+//!   folds all pending trailing-update tiles — typically from *different*
+//!   jobs — into one contiguous [`GemmBackend::gemm_update_many`]
+//!   submission. Workers reach it through the [`QueueBackend`] proxy.
+//! * [`engine`] — the [`Engine`] worker pool sharding a manifest across
+//!   threads, per-job [`JobResult`]s (stats, error, fingerprint), and the
+//!   throughput [`ServiceReport`] with JSON emission (the `batch`/`serve`
+//!   CLI subcommands).
+//!
+//! **Bit-determinism contract:** for every job the factors and pivots are
+//! bit-identical to the sequential `coordinator::drivers` on the same
+//! spec, regardless of worker count, batch size, or interleaving — the
+//! scheduling layer chooses only *when* tiles run, never their operands or
+//! kernels. Pinned by `rust/tests/service_determinism.rs`.
+//!
+//! [`GemmBackend::gemm_update_many`]: crate::coordinator::GemmBackend::gemm_update_many
+//! [`GemmBackend`]: crate::coordinator::GemmBackend
+
+pub mod engine;
+pub mod manifest;
+pub mod queue;
+
+pub use engine::{fingerprint, run_job_sequential, Engine, JobResult, ServiceReport};
+pub use manifest::{mixed_manifest, parse_manifest, Alg, JobSpec, MatrixClass};
+pub use queue::{BatchQueue, QueueBackend, QueueReport};

@@ -1,0 +1,469 @@
+//! Per-backend dispatch queues: the batching heart of the service.
+//!
+//! Every shared [`GemmBackend`] gets one [`BatchQueue`]: a dispatcher
+//! thread that drains an MPSC channel of staged trailing-update tiles and
+//! hands everything currently pending to the backend as **one**
+//! [`GemmBackend::gemm_update_many`] submission. Workers running different
+//! factorization jobs therefore share accelerator submissions: with W
+//! workers in flight a batch typically carries up to W tiles, which the
+//! native backend spreads over the shared pool and a real accelerator
+//! would execute as one contiguous command buffer.
+//!
+//! Workers talk to the queue through [`QueueBackend`], a per-job proxy
+//! implementing [`GemmBackend`]: it stages the operands into owned,
+//! contiguous buffers (the same host-side staging the paper performs when
+//! shipping operands over PCIe), submits, blocks for the reply, and copies
+//! the result back. Blocking per call preserves the driver's sequential
+//! semantics within a job, so batching changes *scheduling only* — every
+//! tile is still computed by the backend's bit-exact kernel on the same
+//! operands, which is what makes service results bit-identical to the
+//! sequential drivers at any worker count.
+//!
+//! **Failure isolation:** a backend error fails the whole submission, and
+//! which tiles shared a submission is timing-dependent — so the proxy
+//! retries a failed tile once as a `solo` request that the dispatcher
+//! never folds with others (re-staged from the caller's C, which is only
+//! written on success). A tile therefore succeeds or fails exactly as it
+//! would in isolation, keeping per-job outcomes deterministic; retried
+//! tiles count twice in the queue's tile counter.
+
+use crate::coordinator::{GemmBackend, GemmJob};
+use crate::posit::Posit32;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// One staged tile: owned contiguous operands (`lda = m`, `ldb = k`,
+/// `ldc = m`) plus the reply channel of the submitting proxy.
+struct TileRequest {
+    m: usize,
+    k: usize,
+    n: usize,
+    a: Vec<Posit32>,
+    b: Vec<Posit32>,
+    c: Vec<Posit32>,
+    /// Execute in its own submission, never folded with other tiles. Used
+    /// by the failure-isolation retry: a tile's reported outcome is always
+    /// its outcome *in isolation*, so one bad tile cannot poison — or be
+    /// poisoned by — whatever happened to share its batch.
+    solo: bool,
+    reply: Sender<TileReply>,
+}
+
+/// The updated C buffer, or the backend error rendered to a string (an
+/// `anyhow::Error` is not `Clone`, and one backend failure has to fan out
+/// to every tile of the batch).
+type TileReply = std::result::Result<Vec<Posit32>, String>;
+
+/// Counters the service report surfaces per queue.
+#[derive(Default)]
+struct QueueCounters {
+    tiles: AtomicU64,
+    batches: AtomicU64,
+    max_batch: AtomicU64,
+}
+
+/// Snapshot of a queue's lifetime counters.
+#[derive(Clone, Debug)]
+pub struct QueueReport {
+    pub backend: String,
+    pub tiles: u64,
+    pub batches: u64,
+    pub max_batch: u64,
+}
+
+impl QueueReport {
+    /// Mean tiles per contiguous submission.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.tiles as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A dispatch queue bound to one shared backend instance.
+pub struct BatchQueue {
+    name: String,
+    backend: Arc<dyn GemmBackend>,
+    tx: Mutex<Option<Sender<TileRequest>>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    counters: Arc<QueueCounters>,
+}
+
+impl BatchQueue {
+    /// Start the dispatcher thread for `backend`. `max_batch` caps how many
+    /// pending tiles fold into one submission (bounds per-batch latency).
+    pub fn start(
+        name: impl Into<String>,
+        backend: Arc<dyn GemmBackend>,
+        max_batch: usize,
+    ) -> Arc<BatchQueue> {
+        let name = name.into();
+        let max_batch = max_batch.max(1);
+        let (tx, rx) = channel::<TileRequest>();
+        let counters = Arc::new(QueueCounters::default());
+        let dispatcher = {
+            let backend = Arc::clone(&backend);
+            let counters = Arc::clone(&counters);
+            std::thread::spawn(move || dispatch_loop(rx, backend, counters, max_batch))
+        };
+        Arc::new(BatchQueue {
+            name,
+            backend,
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            counters,
+        })
+    }
+
+    /// Queue (= backend) name used for manifest routing.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Modelled per-tile cost of the underlying backend (per-job stats).
+    pub fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
+        self.backend.simulated_cost(m, k, n)
+    }
+
+    /// Lifetime counters snapshot.
+    pub fn report(&self) -> QueueReport {
+        QueueReport {
+            backend: self.name.clone(),
+            tiles: self.counters.tiles.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            max_batch: self.counters.max_batch.load(Ordering::Relaxed),
+        }
+    }
+
+    fn submit(&self, req: TileRequest) -> Result<()> {
+        let tx = self.tx.lock().unwrap();
+        tx.as_ref()
+            .ok_or_else(|| anyhow!("dispatch queue '{}' is shut down", self.name))?
+            .send(req)
+            .map_err(|_| anyhow!("dispatch queue '{}' dispatcher exited", self.name))
+    }
+}
+
+impl Drop for BatchQueue {
+    fn drop(&mut self) {
+        // Close the channel so the dispatcher drains and exits, then join.
+        *self.tx.lock().unwrap() = None;
+        if let Some(handle) = self.dispatcher.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    rx: Receiver<TileRequest>,
+    backend: Arc<dyn GemmBackend>,
+    counters: Arc<QueueCounters>,
+    max_batch: usize,
+) {
+    // A solo request popped while folding must not join the batch; it is
+    // carried over and runs alone as the next submission.
+    let mut carry: Option<TileRequest> = None;
+    loop {
+        let first = match carry.take() {
+            Some(req) => req,
+            None => match rx.recv() {
+                Ok(req) => req,
+                Err(_) => break,
+            },
+        };
+        // Fold everything already pending into one contiguous submission.
+        let solo = first.solo;
+        let mut batch = vec![first];
+        while !solo && batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(req) if req.solo => {
+                    carry = Some(req);
+                    break;
+                }
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+        let mut views: Vec<GemmJob<'_>> = batch
+            .iter_mut()
+            .map(|req| GemmJob {
+                m: req.m,
+                k: req.k,
+                n: req.n,
+                a: &req.a,
+                lda: req.m,
+                b: &req.b,
+                ldb: req.k,
+                c: &mut req.c,
+                ldc: req.m,
+            })
+            .collect();
+        let result = backend.gemm_update_many(&mut views);
+        drop(views);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.tiles.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        counters
+            .max_batch
+            .fetch_max(batch.len() as u64, Ordering::Relaxed);
+        match result {
+            Ok(()) => {
+                for req in batch {
+                    let _ = req.reply.send(Ok(req.c));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Proxy presenting one dispatch queue as a plain [`GemmBackend`] to the
+/// sequential drivers. Cheap to construct (the service makes one per
+/// in-flight job for per-job tile counts) and safe to share across
+/// threads — every call uses its own reply channel.
+pub struct QueueBackend {
+    queue: Arc<BatchQueue>,
+    label: String,
+    tiles: AtomicU64,
+}
+
+impl QueueBackend {
+    pub fn new(queue: Arc<BatchQueue>) -> QueueBackend {
+        QueueBackend {
+            label: format!("{}+batched", queue.name()),
+            queue,
+            tiles: AtomicU64::new(0),
+        }
+    }
+}
+
+impl GemmBackend for QueueBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[Posit32],
+        lda: usize,
+        b: &[Posit32],
+        ldb: usize,
+        c: &mut [Posit32],
+        ldc: usize,
+    ) -> Result<()> {
+        // Stage operands contiguously (accelerator staging; also what lets
+        // the request own its data and cross threads without unsafe). The
+        // caller's C is only written on success, so a failed attempt can be
+        // re-staged from it unchanged. Each attempt gets its own reply
+        // channel, so the proxy is safe to share across threads (the
+        // `GemmBackend: Sync` contract) — concurrent calls can never
+        // receive each other's replies.
+        let stage_and_run = |solo: bool| -> Result<Vec<Posit32>> {
+            let mut sa = vec![Posit32::ZERO; m * k];
+            for l in 0..k {
+                sa[l * m..(l + 1) * m].copy_from_slice(&a[l * lda..l * lda + m]);
+            }
+            let mut sb = vec![Posit32::ZERO; k * n];
+            for j in 0..n {
+                sb[j * k..(j + 1) * k].copy_from_slice(&b[j * ldb..j * ldb + k]);
+            }
+            let mut sc = vec![Posit32::ZERO; m * n];
+            for j in 0..n {
+                sc[j * m..(j + 1) * m].copy_from_slice(&c[j * ldc..j * ldc + m]);
+            }
+            let (reply_tx, reply_rx) = channel();
+            self.queue.submit(TileRequest {
+                m,
+                k,
+                n,
+                a: sa,
+                b: sb,
+                c: sc,
+                solo,
+                reply: reply_tx,
+            })?;
+            let reply = reply_rx.recv().map_err(|_| {
+                anyhow!("dispatch queue '{}' dropped the reply", self.queue.name())
+            })?;
+            reply.map_err(|e| anyhow!("batched backend '{}': {e}", self.queue.name()))
+        };
+        let out = match stage_and_run(false) {
+            Ok(out) => out,
+            // The submission may have failed because of a batch-mate (the
+            // default gemm_update_many aborts the whole batch at the first
+            // error). Retry once in isolation: the tile's reported outcome
+            // is then deterministically its own.
+            Err(_) => stage_and_run(true)?,
+        };
+        for j in 0..n {
+            c[j * ldc..j * ldc + m].copy_from_slice(&out[j * m..(j + 1) * m]);
+        }
+        self.tiles.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
+        self.queue.simulated_cost(m, k, n)
+    }
+
+    fn tiles_dispatched(&self) -> u64 {
+        self.tiles.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::coordinator::NativeBackend;
+    use crate::rng::Pcg64;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Matrix<Posit32> {
+        let mut rng = Pcg64::seed(seed);
+        Matrix::random_normal(r, c, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn queued_updates_bit_match_direct_backend() {
+        let direct = NativeBackend::new(2);
+        let queue = BatchQueue::start("native", Arc::new(NativeBackend::new(2)), 8);
+        // Several proxies hammering the queue concurrently, odd shapes,
+        // strided C (ldc > m).
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let queue = Arc::clone(&queue);
+                let direct = &direct;
+                s.spawn(move || {
+                    let proxy = QueueBackend::new(queue);
+                    for i in 0..6u64 {
+                        let (m, k, n) = (17 + (i as usize % 3) * 5, 8, 13 + (t as usize % 2) * 6);
+                        let ldc = m + 3;
+                        let a = rand_mat(m, k, 1000 + 17 * t + i);
+                        let b = rand_mat(k, n, 2000 + 17 * t + i);
+                        let c0 = rand_mat(ldc, n, 3000 + 17 * t + i);
+                        let mut c1 = c0.clone();
+                        let mut c2 = c0.clone();
+                        direct
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, ldc)
+                            .unwrap();
+                        proxy
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, ldc)
+                            .unwrap();
+                        assert_eq!(c1.data, c2.data, "thread {t} iter {i}");
+                    }
+                    assert_eq!(proxy.tiles_dispatched(), 6);
+                });
+            }
+        });
+        let report = queue.report();
+        assert_eq!(report.tiles, 24);
+        assert!(report.batches >= 1 && report.batches <= 24);
+        assert!(report.max_batch >= 1);
+    }
+
+    /// Backend that deterministically rejects one tile shape — the stand-in
+    /// for, e.g., a PJRT artifact-shape mismatch.
+    struct PoisonBackend {
+        inner: NativeBackend,
+        bad_m: usize,
+    }
+
+    impl GemmBackend for PoisonBackend {
+        fn name(&self) -> &str {
+            "poison"
+        }
+        fn gemm_update(
+            &self,
+            m: usize,
+            k: usize,
+            n: usize,
+            a: &[Posit32],
+            lda: usize,
+            b: &[Posit32],
+            ldb: usize,
+            c: &mut [Posit32],
+            ldc: usize,
+        ) -> Result<()> {
+            anyhow::ensure!(m != self.bad_m, "poisoned tile shape m={m}");
+            self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
+        }
+    }
+
+    #[test]
+    fn bad_tile_cannot_poison_batch_mates() {
+        let bad_m = 13;
+        let queue = BatchQueue::start(
+            "poison",
+            Arc::new(PoisonBackend {
+                inner: NativeBackend::new(1),
+                bad_m,
+            }),
+            16,
+        );
+        let direct = NativeBackend::new(1);
+        // Good tiles from several threads racing against a thread that
+        // keeps submitting the poisoned shape; every good tile must still
+        // succeed bit-exactly, every bad tile must fail.
+        std::thread::scope(|s| {
+            {
+                let queue = Arc::clone(&queue);
+                s.spawn(move || {
+                    let proxy = QueueBackend::new(queue);
+                    for i in 0..8u64 {
+                        let (m, k, n) = (bad_m, 4, 9);
+                        let a = rand_mat(m, k, 9000 + i);
+                        let b = rand_mat(k, n, 9100 + i);
+                        let mut c = rand_mat(m, n, 9200 + i);
+                        let err = proxy
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c.data, m)
+                            .unwrap_err();
+                        assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+                    }
+                });
+            }
+            for t in 0..3u64 {
+                let queue = Arc::clone(&queue);
+                let direct = &direct;
+                s.spawn(move || {
+                    let proxy = QueueBackend::new(queue);
+                    for i in 0..8u64 {
+                        let (m, k, n) = (20 + t as usize, 4, 11);
+                        let a = rand_mat(m, k, 7000 + 31 * t + i);
+                        let b = rand_mat(k, n, 7100 + 31 * t + i);
+                        let c0 = rand_mat(m, n, 7200 + 31 * t + i);
+                        let mut c1 = c0.clone();
+                        let mut c2 = c0.clone();
+                        direct
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m)
+                            .unwrap();
+                        proxy
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+                            .unwrap();
+                        assert_eq!(c1.data, c2.data, "thread {t} iter {i}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn queue_reports_backend_name_and_survives_drop() {
+        let queue = BatchQueue::start("native", Arc::new(NativeBackend::new(1)), 4);
+        assert_eq!(queue.name(), "native");
+        let proxy = QueueBackend::new(Arc::clone(&queue));
+        assert!(proxy.name().contains("native"));
+        drop(proxy);
+        drop(queue); // Drop joins the dispatcher; must not hang.
+    }
+}

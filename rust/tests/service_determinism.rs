@@ -1,0 +1,131 @@
+//! Service-layer determinism: the headline contract of `crate::service`.
+//!
+//! The same job manifest is run with 1, 4 and 8 workers on a shared
+//! `NativeBackend` and a shared `TimedBackend`-modelled accelerator, and
+//! every factor matrix, pivot vector and fingerprint must be bit-identical
+//! to the sequential `*_offload` drivers on the same specs. Scheduling —
+//! worker count, batch folding, pool interleaving — must never leak into
+//! the numerics.
+
+use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
+use posit_accel::service::{mixed_manifest, run_job_sequential, Engine, JobResult};
+use std::sync::Arc;
+
+fn shared_backends() -> Vec<(&'static str, Arc<dyn GemmBackend>)> {
+    vec![
+        (
+            "native",
+            Arc::new(NativeBackend::new(2)) as Arc<dyn GemmBackend>,
+        ),
+        (
+            "timed-fpga",
+            Arc::new(TimedBackend::new(
+                "timed-fpga",
+                NativeBackend::new(2),
+                // Toy cost model; the value is irrelevant to the contract.
+                |m, k, n| (2 * m * k * n) as f64 / 200e9,
+            )) as Arc<dyn GemmBackend>,
+        ),
+    ]
+}
+
+#[test]
+fn factors_bit_identical_across_worker_counts_and_backends() {
+    let jobs = mixed_manifest(10, 48);
+    for (name, backend) in shared_backends() {
+        // Ground truth: the plain sequential drivers, job by job.
+        let baseline: Vec<JobResult> = jobs
+            .iter()
+            .map(|spec| run_job_sequential(spec, backend.as_ref(), true))
+            .collect();
+        for spec_result in &baseline {
+            assert!(
+                spec_result.error.is_none(),
+                "baseline {name} job {}: {:?}",
+                spec_result.id,
+                spec_result.error
+            );
+        }
+        for workers in [1usize, 4, 8] {
+            let engine = Engine::new(vec![(name.to_string(), Arc::clone(&backend))], 8);
+            let report = engine.run(&jobs, workers, true);
+            assert_eq!(report.results.len(), jobs.len());
+            for (seq, got) in baseline.iter().zip(&report.results) {
+                assert_eq!(seq.id, got.id);
+                assert!(got.error.is_none(), "{name} x{workers} job {}", got.id);
+                assert_eq!(
+                    seq.factors, got.factors,
+                    "factors differ: {name} x{workers} job {}",
+                    seq.id
+                );
+                assert_eq!(
+                    seq.ipiv, got.ipiv,
+                    "pivots differ: {name} x{workers} job {}",
+                    seq.id
+                );
+                assert_eq!(seq.fingerprint, got.fingerprint);
+                // The modelled accelerator seconds are part of the
+                // deterministic contract too (pure function of the tile
+                // shapes), unlike wall-clock phase timings.
+                assert!(
+                    (seq.stats.simulated_s - got.stats.simulated_s).abs() <= 1e-12,
+                    "{name} x{workers} job {}: simulated {} vs {}",
+                    seq.id,
+                    seq.stats.simulated_s,
+                    got.stats.simulated_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_on_one_engine_are_bit_stable() {
+    // A long-lived engine (the `serve` path) must reproduce itself round
+    // after round: no hidden state drift in queues or backends.
+    let jobs = mixed_manifest(6, 40);
+    let engine = Engine::new(
+        vec![(
+            "native".to_string(),
+            Arc::new(NativeBackend::new(2)) as Arc<dyn GemmBackend>,
+        )],
+        4,
+    );
+    let first = engine.run(&jobs, 4, false);
+    for _ in 0..2 {
+        let again = engine.run(&jobs, 3, false);
+        for (a, b) in first.results.iter().zip(&again.results) {
+            assert_eq!(a.fingerprint, b.fingerprint, "job {}", a.id);
+        }
+    }
+}
+
+#[test]
+fn batching_actually_happens_with_many_workers() {
+    // Not a numerics check: with 8 workers hammering one queue, at least
+    // one contiguous submission should carry more than one tile (the
+    // entire point of the dispatch queue). Retry a few times to keep the
+    // test robust on slow single-core machines, where workers may never
+    // overlap.
+    let jobs = mixed_manifest(16, 40);
+    for attempt in 0..5 {
+        let engine = Engine::new(
+            vec![(
+                "native".to_string(),
+                Arc::new(NativeBackend::new(1)) as Arc<dyn GemmBackend>,
+            )],
+            16,
+        );
+        let report = engine.run(&jobs, 8, false);
+        assert_eq!(report.ok_count(), jobs.len());
+        let q = &report.queues[0];
+        assert!(q.tiles > 0 && q.batches > 0);
+        if q.max_batch > 1 {
+            return;
+        }
+        eprintln!("attempt {attempt}: no batch folded (max_batch=1), retrying");
+    }
+    // Machines with a single hardware thread may legitimately never fold;
+    // don't fail the suite over scheduler behaviour.
+    eprintln!("warning: dispatch queue never folded a batch on this machine");
+}
