@@ -1,8 +1,16 @@
-"""Regenerate testdata/golden_posit32.txt from the PyPosit scalar oracle.
+"""Regenerate the committed golden vectors under rust/testdata/.
 
-The file is the cross-language arithmetic contract: pytest checks the jnp
-kernels against it and `cargo test` checks both Rust implementations
-against it. Regenerate only when extending coverage (`make golden`).
+* golden_posit32.txt — Posit(32,2) scalar ops from the PyPosit exact
+  rational oracle. The cross-language arithmetic contract: pytest checks
+  the jnp kernels against it and `cargo test` checks both Rust
+  implementations against it.
+* golden_f32.txt — the binary32 baseline path: IEEE-754 single scalar ops
+  (numpy float32, round-to-nearest-even) plus whole `gemm_update` tiles
+  computed with the repo's rounding contract (ascending-k accumulation,
+  one rounding per multiply and per add, then `C - t`). `cargo test`
+  checks the generic `NativeBackend<f32>` against these bit-for-bit.
+
+Regenerate only when extending coverage (`make golden`).
 """
 
 import sys
@@ -16,8 +24,10 @@ from compile.kernels.ref import PyPosit  # noqa: E402
 
 SEED = 1234
 
+TESTDATA = Path(__file__).resolve().parents[2] / "rust" / "testdata"
 
-def main():
+
+def write_posit32():
     py = PyPosit()
     rng = np.random.default_rng(SEED)
     lines = [
@@ -42,15 +52,117 @@ def main():
         lines.append(f"mul {a:08x} {b:08x} {py.mul(a, b):08x}")
         lines.append(f"div {a:08x} {b:08x} {py.div(a, b):08x}")
         lines.append(f"sqrt {a:08x} 00000000 {py.sqrt(a):08x}")
-    out = (
-        Path(__file__).resolve().parents[2]
-        / "rust"
-        / "testdata"
-        / "golden_posit32.txt"
-    )
+    out = TESTDATA / "golden_posit32.txt"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text("\n".join(lines) + "\n")
     print(f"wrote {len(lines)} lines to {out}")
+
+
+def _f32(x):
+    return np.float32(x)
+
+
+def _bits(x):
+    return int(np.array([np.float32(x)], dtype=np.float32).view(np.uint32)[0])
+
+
+def _val(b):
+    return np.array([b], dtype=np.uint32).view(np.float32)[0]
+
+
+def _is_nan_bits(b):
+    return (b & 0x7F800000) == 0x7F800000 and (b & 0x007FFFFF) != 0
+
+
+def _gemm_update_f32(m, k, n, a, b, c):
+    """`C - A·B` with the repo's rounding contract: per output element the
+    dot product accumulates from zero in ascending-k order with one float32
+    rounding per multiply and per add, then one rounding for `c - t`
+    (`combine(-1, t, 1, c)` in rust/src/blas/gemm.rs)."""
+    out = list(c)
+    for j in range(n):
+        for i in range(m):
+            t = _f32(0.0)
+            for l in range(k):
+                t = _f32(t + _f32(a[i + l * m] * b[l + j * k]))
+            out[i + j * m] = _f32(c[i + j * m] - t)
+    return out
+
+
+def write_f32():
+    rng = np.random.default_rng(SEED)
+    lines = [
+        "# golden binary32 (IEEE-754 single, round-to-nearest-even) vectors",
+        "# generator: python/tools/gen_golden.py (numpy float32 scalar oracle)",
+        f"# numpy default_rng seed: {SEED}",
+        '# scalar: "op a_hex b_hex result_hex" (b=0 for sqrt); vectors whose',
+        "# inputs or result are NaN are skipped (NaN payloads are not portable)",
+        '# gemm tiles: "gemm m k n" then rows "A ..." "B ..." "C ..." "OUT ..."',
+        "# of column-major f32 words; OUT = C - A*B per the rounding contract",
+        "# of rust/src/blas/gemm.rs (ascending-k, one rounding per op)",
+    ]
+    specials = [
+        0x00000000, 0x80000000, 0x3F800000, 0xBF800000, 0x7F7FFFFF,
+        0xFF7FFFFF, 0x00800000, 0x00000001, 0x80000001, 0x7F800000,
+        0xFF800000, 0x3F800001, 0x34000000, 0x00400000,
+    ]
+    pats = list(specials)
+    for sigma in [1.0, 1e-2, 1e2, 1e6, 1e-20, 1e20]:
+        pats += [_bits(v) for v in rng.normal(0, sigma, 80)]
+    pats += [int(v) for v in rng.integers(0, 2**32, 160) if not _is_nan_bits(int(v))]
+    rng.shuffle(pats)
+    n_scalar = 0
+    with np.errstate(all="ignore"):
+        for i in range(len(pats) // 2):
+            a, b = int(pats[2 * i]), int(pats[2 * i + 1])
+            av, bv = _val(a), _val(b)
+            for op, r in [
+                ("add", _f32(av + bv)),
+                ("mul", _f32(av * bv)),
+                ("div", _f32(av / bv)),
+            ]:
+                rb = _bits(r)
+                if _is_nan_bits(rb):
+                    continue
+                lines.append(f"{op} {a:08x} {b:08x} {rb:08x}")
+                n_scalar += 1
+            rs = _bits(np.sqrt(av))
+            if not _is_nan_bits(_bits(av)) and not _is_nan_bits(rs):
+                lines.append(f"sqrt {a:08x} 00000000 {rs:08x}")
+                n_scalar += 1
+        # gemm_update tiles: odd shapes, a k=1 and an n=1 edge, and one
+        # m > 128 tile crossing the blocked kernel's row-block boundary.
+        shapes = [
+            (1, 1, 1, 1.0),
+            (5, 3, 4, 1.0),
+            (8, 2, 7, 1e-3),
+            (6, 4, 1, 1.0),
+            (13, 5, 9, 1e4),
+            (17, 8, 11, 1.0),
+            (130, 3, 2, 1e-2),
+        ]
+        n_tiles = 0
+        for m, k, n, sigma in shapes:
+            a = [_f32(v) for v in rng.normal(0, sigma, m * k)]
+            b = [_f32(v) for v in rng.normal(0, sigma, k * n)]
+            c = [_f32(v) for v in rng.normal(0, sigma, m * n)]
+            out = _gemm_update_f32(m, k, n, a, b, c)
+            lines.append(f"gemm {m} {k} {n}")
+            for tag, vec in [("A", a), ("B", b), ("C", c), ("OUT", out)]:
+                lines.append(f"{tag} " + " ".join(f"{_bits(v):08x}" for v in vec))
+            n_tiles += 1
+    out_path = TESTDATA / "golden_f32.txt"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text("\n".join(lines) + "\n")
+    print(
+        f"wrote {n_scalar} scalar vectors + {n_tiles} gemm tiles "
+        f"({len(lines)} lines) to {out_path}"
+    )
+
+
+def main():
+    write_posit32()
+    write_f32()
 
 
 if __name__ == "__main__":

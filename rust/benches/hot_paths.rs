@@ -7,7 +7,14 @@
 //! * conversions and the quire;
 //! * GEMM: naive vs blocked vs parallel native, and the PJRT/Pallas
 //!   artifact path (per 128x64x128 tile);
-//! * blocked LU/Cholesky end to end.
+//! * blocked LU/Cholesky end to end;
+//! * service throughput per numeric format and worker count.
+//!
+//! The service section also writes machine-readable
+//! `results/BENCH_service.json` (one row per backend × format × worker
+//! count: jobs/s, aggregate update Gflops, mean achieved digits) — CI
+//! uploads it as an artifact so the throughput trajectory is tracked
+//! across PRs. Set `BENCH_QUICK=1` to shrink the workload (CI mode).
 
 use posit_accel::blas::{self, Matrix, Trans};
 use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend, TimedBackend};
@@ -16,23 +23,67 @@ use posit_accel::posit::generic::{NoTrace, PositSpec};
 use posit_accel::posit::{self, Posit32};
 use posit_accel::rng::Pcg64;
 use posit_accel::runtime::Runtime;
-use posit_accel::service::{mixed_manifest, Engine};
+use posit_accel::service::{
+    mixed_format_manifest, mixed_manifest, Engine, EngineBuilder, JobSpec, Precision,
+    ServiceReport,
+};
 use posit_accel::sim::systolic::SystolicConfig;
 use posit_accel::util::bench_stats;
 use std::sync::Arc;
 
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// One machine-readable service-throughput measurement.
+struct ServiceRow {
+    backend: String,
+    /// Manifest format mix: a single `Precision` name or "mixed".
+    format: String,
+    workers: usize,
+    jobs: usize,
+    jobs_per_s: f64,
+    update_gflops: f64,
+    /// Mean achieved decimal digits across ok jobs (NaN -> null).
+    mean_digits: f64,
+}
+
 struct Bench {
     rows: Vec<(String, f64, String)>,
+    service: Vec<ServiceRow>,
 }
 
 impl Bench {
     fn new() -> Self {
-        Bench { rows: vec![] }
+        Bench { rows: vec![], service: vec![] }
     }
     /// Record `name` at `per`-unit granularity (ns/op or Mflops).
     fn add(&mut self, name: &str, value: f64, unit: &str) {
         println!("{name:<48} {value:>12.2} {unit}");
         self.rows.push((name.to_string(), value, unit.to_string()));
+    }
+    /// Record one service report as a `BENCH_service.json` row.
+    fn add_service(&mut self, backend: &str, format: &str, workers: usize, r: &ServiceReport) {
+        let digits: Vec<f64> = r
+            .results
+            .iter()
+            .filter_map(|j| j.digits)
+            .filter(|d| d.is_finite())
+            .collect();
+        let mean_digits = if digits.is_empty() {
+            f64::NAN
+        } else {
+            digits.iter().sum::<f64>() / digits.len() as f64
+        };
+        self.service.push(ServiceRow {
+            backend: backend.to_string(),
+            format: format.to_string(),
+            workers,
+            jobs: r.results.len(),
+            jobs_per_s: r.jobs_per_s(),
+            update_gflops: r.agg_update_gflops(),
+            mean_digits,
+        });
     }
     fn save(&self) {
         let mut s = String::from("benchmark,value,unit\n");
@@ -42,6 +93,37 @@ impl Bench {
         std::fs::create_dir_all("results").ok();
         std::fs::write("results/hot_paths.csv", s).ok();
         println!("[saved results/hot_paths.csv]");
+
+        let jnum = |v: f64| {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        };
+        let rows: Vec<String> = self
+            .service
+            .iter()
+            .map(|r| {
+                format!(
+                    "  {{\"backend\": \"{}\", \"format\": \"{}\", \"workers\": {}, \"jobs\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"mean_digits\": {}}}",
+                    r.backend,
+                    r.format,
+                    r.workers,
+                    r.jobs,
+                    jnum(r.jobs_per_s),
+                    jnum(r.update_gflops),
+                    jnum(r.mean_digits),
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n\"quick\": {},\n\"rows\": [\n{}\n]\n}}\n",
+            quick(),
+            rows.join(",\n")
+        );
+        std::fs::write("results/BENCH_service.json", json).ok();
+        println!("[saved results/BENCH_service.json]");
     }
 }
 
@@ -212,17 +294,18 @@ fn bench_decompositions(b: &mut Bench) {
     );
 }
 
-/// Service throughput: jobs/sec and aggregate Gflops on a 32-job mixed
-/// manifest, 1 vs N workers, per backend. The per-job backend is
-/// single-threaded (`NativeBackend::new(1)`), so the worker count is the
-/// parallelism variable: 1 worker ~ one core; N workers scale with cores
-/// until the machine saturates. The acceptance bar (8 workers >= 3x the
-/// 1-worker jobs/sec on `native`) needs >= ~4 real cores to show.
+/// Service throughput: jobs/sec and aggregate Gflops on a mixed manifest,
+/// 1 vs N workers, per backend. The per-job backend is single-threaded
+/// (`NativeBackend::new(1)`), so the worker count is the parallelism
+/// variable: 1 worker ~ one core; N workers scale with cores until the
+/// machine saturates. The acceptance bar (8 workers >= 3x the 1-worker
+/// jobs/sec on `native`) needs >= ~4 real cores to show. Every report
+/// also lands in `results/BENCH_service.json` via [`Bench::add_service`].
 fn bench_service(b: &mut Bench) {
-    const JOBS: usize = 32;
-    const BASE_N: usize = 96;
+    let (jobs_count, base_n) = if quick() { (8, 48) } else { (32, 96) };
+    let worker_counts: &[usize] = if quick() { &[1, 4] } else { &[1, 2, 4, 8] };
     const MAX_BATCH: usize = 32;
-    let jobs = mixed_manifest(JOBS, BASE_N);
+    let jobs = mixed_manifest(jobs_count, base_n);
     let fpga = SystolicConfig::agilex_posit32();
     type Mk = Box<dyn Fn() -> Arc<dyn GemmBackend>>;
     let backends: Vec<(&str, Mk)> = vec![
@@ -243,7 +326,7 @@ fn bench_service(b: &mut Bench) {
     ];
     for (name, mk) in &backends {
         let mut base_jps = 0.0;
-        for &workers in &[1usize, 2, 4, 8] {
+        for &workers in worker_counts {
             let engine = Engine::new(vec![(name.to_string(), mk())], MAX_BATCH);
             // Warm once (pool spin-up, allocator), then measure one pass.
             engine.run(&jobs[..4.min(jobs.len())], workers, false);
@@ -254,7 +337,7 @@ fn bench_service(b: &mut Bench) {
                 base_jps = jps;
             }
             b.add(
-                &format!("service {name} {JOBS}-job manifest x{workers} workers"),
+                &format!("service {name} {jobs_count}-job manifest x{workers} workers"),
                 jps,
                 "jobs/s",
             );
@@ -270,16 +353,69 @@ fn bench_service(b: &mut Bench) {
                     "x",
                 );
             }
+            b.add_service(name, "posit32", workers, &report);
+        }
+    }
+}
+
+/// Format-comparison throughput: the same manifest instantiated per
+/// numeric format (the service's per-job `precision`), plus the
+/// heterogeneous mixed-format manifest — jobs/s per format and worker
+/// count, the `BENCH_service.json` rows the ISSUE's perf trajectory
+/// tracks. Posit(32,2) is software arithmetic, so its rows quantify the
+/// format's throughput cost against the hardware binary32/binary64
+/// baselines on identical workloads.
+fn bench_service_formats(b: &mut Bench) {
+    let (jobs_count, base_n) = if quick() { (8, 48) } else { (24, 96) };
+    let worker_counts: &[usize] = if quick() { &[1, 4] } else { &[1, 2, 4, 8] };
+    const MAX_BATCH: usize = 32;
+
+    let manifests: Vec<(String, Vec<JobSpec>)> = Precision::ALL
+        .iter()
+        .map(|&p| {
+            let jobs: Vec<JobSpec> = mixed_manifest(jobs_count, base_n)
+                .into_iter()
+                .map(|mut j| {
+                    j.precision = p;
+                    j
+                })
+                .collect();
+            (p.name().to_string(), jobs)
+        })
+        .chain(std::iter::once((
+            "mixed".to_string(),
+            mixed_format_manifest(jobs_count, base_n),
+        )))
+        .collect();
+
+    for (format, jobs) in &manifests {
+        for &workers in worker_counts {
+            let engine = EngineBuilder::new(MAX_BATCH)
+                .shared("native", Arc::new(NativeBackend::new(1)))
+                .build();
+            engine.run(&jobs[..4.min(jobs.len())], workers, false);
+            let report = engine.run(jobs, workers, false);
+            assert_eq!(report.ok_count(), jobs.len(), "{format} x{workers}");
+            b.add(
+                &format!("service native {format} manifest x{workers} workers"),
+                report.jobs_per_s(),
+                "jobs/s",
+            );
+            b.add_service("native", format, workers, &report);
         }
     }
 }
 
 fn main() {
     println!("hot_paths microbenchmarks (min of several reps)\n");
+    if quick() {
+        println!("[BENCH_QUICK=1: reduced workload]\n");
+    }
     let mut b = Bench::new();
     bench_scalar_ops(&mut b);
     bench_gemm(&mut b);
     bench_decompositions(&mut b);
     bench_service(&mut b);
+    bench_service_formats(&mut b);
     b.save();
 }

@@ -144,4 +144,88 @@ mod tests {
         let m = Matrix::<f32>::random_normal(5, 7, 2.0, &mut rng);
         assert_eq!(m.transposed().transposed(), m);
     }
+
+    /// Pins the "one rounding per entry, exact via f64" contract of
+    /// [`Matrix::cast`]: the f64 leg is exact for every supported format,
+    /// so casting *out of* a narrower format and back is the identity, and
+    /// casting *into* one is a single correctly-rounded conversion.
+    #[test]
+    fn cast_round_trips_are_exact_via_f64() {
+        use crate::prop::check;
+
+        // Posit32 -> f64 -> Posit32 is the identity on ALL bit patterns:
+        // every posit value (fraction <= 27 bits, |scale| <= 120) is
+        // exactly representable in f64, and NaR round-trips through NaN.
+        check(
+            "posit32 -> f64 -> posit32 identity",
+            4000,
+            |rng| rng.next_u32(),
+            |&bits| {
+                let p = Posit32(bits);
+                let back = Posit32::from_f64(p.to_f64());
+                (back == p)
+                    .then_some(())
+                    .ok_or_else(|| format!("{bits:#010x} -> {:#010x}", back.0))
+            },
+        );
+
+        // f32 -> f64 -> f32 is the identity on every non-NaN pattern
+        // (widening is exact; NaN payloads are not portable, so skipped).
+        check(
+            "f32 -> f64 -> f32 identity",
+            4000,
+            |rng| rng.next_u32(),
+            |&bits| {
+                let v = f32::from_bits(bits);
+                if v.is_nan() {
+                    return Ok(());
+                }
+                let back = (v as f64) as f32;
+                (back.to_bits() == bits)
+                    .then_some(())
+                    .ok_or_else(|| format!("{bits:#010x} -> {:#010x}", back.to_bits()))
+            },
+        );
+
+        // Matrix-level: the round trips above, plus "cast into a format is
+        // ONE rounding" — elementwise equal to the direct conversion, and
+        // Posit32 -> f32 goes through exact f64 (no hidden second rounding).
+        check(
+            "Matrix::cast round trips and single rounding",
+            200,
+            |rng| {
+                let vals: Vec<f64> = (0..16).map(|_| rng.normal_sigma(10.0)).collect();
+                vals
+            },
+            |vals| {
+                let m64 = Matrix::<f64>::from_fn(4, 4, |i, j| vals[i + 4 * j]);
+                let mp: Matrix<Posit32> = m64.cast();
+                let mf: Matrix<f32> = m64.cast();
+                for (idx, &v) in m64.data.iter().enumerate() {
+                    if mp.data[idx] != Posit32::from_f64(v) {
+                        return Err(format!("posit cast double-rounded at {idx}"));
+                    }
+                    if mf.data[idx].to_bits() != (v as f32).to_bits() {
+                        return Err(format!("f32 cast double-rounded at {idx}"));
+                    }
+                }
+                let mp2: Matrix<Posit32> = mp.cast::<f64>().cast();
+                if mp2.data != mp.data {
+                    return Err("posit32 -> f64 -> posit32 not identity".into());
+                }
+                let mf2: Matrix<f32> = mf.cast::<f64>().cast();
+                if mf2.data.iter().map(|v| v.to_bits()).ne(mf.data.iter().map(|v| v.to_bits())) {
+                    return Err("f32 -> f64 -> f32 not identity".into());
+                }
+                // Posit32 -> f32: exactly the direct f64-mediated rounding.
+                let pf: Matrix<f32> = mp.cast();
+                for (idx, &p) in mp.data.iter().enumerate() {
+                    if pf.data[idx].to_bits() != (p.to_f64() as f32).to_bits() {
+                        return Err(format!("posit32 -> f32 double-rounded at {idx}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

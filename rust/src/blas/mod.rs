@@ -67,6 +67,9 @@ pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
     fn from_f64(v: f64) -> Self;
     /// Convert to f64 (exact for all three instantiations).
     fn to_f64(self) -> f64;
+    /// Raw bit pattern, zero-extended to 64 bits — the identity used by
+    /// fingerprints and bit-exactness checks across formats.
+    fn bits(self) -> u64;
     /// NaR / NaN / Inf detection (failure propagation in factorizations).
     fn is_bad(self) -> bool;
     #[inline]
@@ -263,6 +266,10 @@ impl Scalar for Posit32 {
         Posit32::to_f64(self)
     }
     #[inline]
+    fn bits(self) -> u64 {
+        self.0 as u64
+    }
+    #[inline]
     fn is_bad(self) -> bool {
         self.is_nar()
     }
@@ -339,6 +346,10 @@ impl Scalar for f32 {
         self as f64
     }
     #[inline]
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+    #[inline]
     fn is_bad(self) -> bool {
         !self.is_finite()
     }
@@ -413,6 +424,10 @@ impl Scalar for f64 {
     #[inline]
     fn to_f64(self) -> f64 {
         self
+    }
+    #[inline]
+    fn bits(self) -> u64 {
+        self.to_bits()
     }
     #[inline]
     fn is_bad(self) -> bool {

@@ -9,6 +9,8 @@
 //! posit-accel solve --n 256 [--sigma 1.0]   factorize+solve, report errors
 //! posit-accel opbench                 posit op microbenchmarks by range
 //! posit-accel batch [--manifest f]    batched factorization service, one pass
+//!                                     (manifests mix posit32/f32/f64 jobs and
+//!                                     factor/refine modes per line)
 //! posit-accel serve [--rounds 3]      same, sustained rounds, JSON per round
 //! ```
 
@@ -87,16 +89,33 @@ Tables/figures print a paper-vs-model/measured comparison and save CSV
 under results/. PJRT backends need `make artifacts` first.
 
 batch/serve run a job manifest (one `lu|cholesky n=... [nb= seed= sigma=
-class= backend=]` per line; without --manifest, a deterministic mixed
-workload of --jobs jobs around size --n) through the batched service:
---workers factorization workers multiplex their trailing updates onto
-shared backends via per-backend dispatch queues. Factors are bit-identical
-to the sequential drivers at any worker count. `batch` prints a per-job
-table plus a JSON report (--json writes it to a file); `serve` repeats the
-manifest --rounds times and emits one aggregate JSON line per round
-(--json then appends those lines to FILE as a JSONL log).
-Backends: native (host), fpga/gpu (bit-exact numerics + modelled time),
-pjrt (AOT Pallas artifacts).";
+class= precision= mode= backend=]` per line; without --manifest, a
+deterministic mixed workload of --jobs jobs around size --n) through the
+batched service: --workers factorization workers multiplex their trailing
+updates onto shared backends via per-format, per-backend dispatch queues.
+Factors are bit-identical to the sequential drivers at any worker count.
+
+`precision=posit32|f32|f64` (default posit32) is the numeric format the
+job runs in — one manifest can mix formats, which is how a single batch
+run produces the paper's posit-vs-binary32 comparison. `mode=factor`
+(default) factorizes and probe-solves against the binary64 ground truth;
+`mode=refine` factorizes in the job's precision and iteratively refines
+residuals in binary64 (mixed-precision refinement). Every job reports its
+achieved accuracy in decimal digits next to the throughput numbers.
+
+A worked mixed-format manifest:
+
+  # the same problem in all three formats, plus a refined posit solve
+  lu n=512 seed=7 precision=posit32
+  lu n=512 seed=7 precision=f32
+  lu n=512 seed=7 precision=f64
+  lu n=512 seed=7 precision=posit32 mode=refine
+
+`batch` prints a per-job table plus a JSON report (--json writes it to a
+file); `serve` repeats the manifest --rounds times and emits one aggregate
+JSON line per round (--json then appends those lines to FILE as a JSONL
+log). Backends: native (host, all formats), fpga/gpu (bit-exact numerics +
+modelled time, all formats), pjrt (AOT Pallas artifacts, posit32 only).";
 
 #[cfg(test)]
 mod tests {

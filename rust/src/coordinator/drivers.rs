@@ -1,27 +1,35 @@
 //! Offloaded blocked factorizations: the paper's CPU-panel /
-//! accelerator-update split (§5.2), parameterized by [`GemmBackend`].
+//! accelerator-update split (§5.2), generic over the numeric format and
+//! parameterized by [`GemmBackend`].
 //!
 //! The loops mirror `lapack::getrf` / `lapack::potrf` exactly; only the
 //! trailing update goes through the backend, so for any backend the
 //! factors are bit-identical to the all-native LAPACK versions
-//! (integration-tested in rust/tests/end_to_end.rs).
+//! (integration-tested in rust/tests/end_to_end.rs). Instantiating the
+//! same driver at `Posit32`, `f32` and `f64` is what lets the service run
+//! the paper's format comparison through one code path.
+//!
+//! [`refine_offload`] adds the mixed-precision job mode: factorize in the
+//! working format `T` (posit32 or binary32, through the backend), then
+//! iteratively refine residuals computed in binary64 — the classic
+//! HPL-AI / `gerfs` scheme, with the achieved accuracy reported in
+//! decimal digits.
 
 use super::{GemmBackend, OffloadStats};
-use crate::blas::{trsm, Diag, Side, Trans, Uplo};
-use crate::lapack::{getf2, laswp, potf2, LapackError};
-use crate::posit::Posit32;
+use crate::blas::{gemm, trsm, Diag, Matrix, Scalar, Side, Trans, Uplo};
+use crate::lapack::{backward_error, getf2, getrs, laswp, potf2, potrs, LapackError};
 use std::time::Instant;
 
 /// Blocked LU with partial pivoting, trailing update on `backend`.
 /// Returns per-phase stats; factors land in `a`/`ipiv` as in LAPACK.
-pub fn getrf_offload(
+pub fn getrf_offload<T: Scalar>(
     m: usize,
     n: usize,
-    a: &mut [Posit32],
+    a: &mut [T],
     lda: usize,
     ipiv: &mut [usize],
     nb: usize,
-    backend: &dyn GemmBackend,
+    backend: &dyn GemmBackend<T>,
 ) -> Result<OffloadStats, LapackError> {
     let t_all = Instant::now();
     let mut stats = OffloadStats::default();
@@ -59,7 +67,7 @@ pub fn getrf_offload(
                 Diag::Unit,
                 jb,
                 n - j - jb,
-                Posit32::ONE,
+                T::one(),
                 a11,
                 lda,
                 a12,
@@ -76,7 +84,7 @@ pub fn getrf_offload(
             // Pack U12 (jb x ncols) to break the borrow overlap; the same
             // staging the paper performs when shipping operands to the
             // accelerator.
-            let mut u12 = vec![Posit32::ZERO; jb * ncols];
+            let mut u12 = vec![T::zero(); jb * ncols];
             for c in 0..ncols {
                 let base = j + (j + jb + c) * lda;
                 u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
@@ -109,12 +117,12 @@ pub fn getrf_offload(
 /// the trailing matrix"), the update is expressed as a GEMM with
 /// host-transposed A21 rather than a SYRK; only the lower triangle is
 /// meaningful afterwards.
-pub fn potrf_offload(
+pub fn potrf_offload<T: Scalar>(
     n: usize,
-    a: &mut [Posit32],
+    a: &mut [T],
     lda: usize,
     nb: usize,
-    backend: &dyn GemmBackend,
+    backend: &dyn GemmBackend<T>,
 ) -> Result<OffloadStats, LapackError> {
     let t_all = Instant::now();
     let mut stats = OffloadStats::default();
@@ -135,7 +143,7 @@ pub fn potrf_offload(
         if j + jb < n {
             let m2 = n - j - jb;
             // A21 = A21 L11^{-T} (host TRSM).
-            let mut l11 = vec![Posit32::ZERO; jb * jb];
+            let mut l11 = vec![T::zero(); jb * jb];
             for c in 0..jb {
                 let base = j + (j + c) * lda;
                 l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
@@ -148,7 +156,7 @@ pub fn potrf_offload(
                 Diag::NonUnit,
                 m2,
                 jb,
-                Posit32::ONE,
+                T::one(),
                 &l11,
                 jb,
                 a21,
@@ -159,8 +167,8 @@ pub fn potrf_offload(
             // Trailing update A22 -= A21 A21^T as a GEMM: stage A21 and its
             // host-side transpose (paper §3.1 does transposes on the host).
             let t1 = Instant::now();
-            let mut a21_copy = vec![Posit32::ZERO; m2 * jb];
-            let mut a21_t = vec![Posit32::ZERO; jb * m2];
+            let mut a21_copy = vec![T::zero(); m2 * jb];
+            let mut a21_t = vec![T::zero(); jb * m2];
             for c in 0..jb {
                 let base = (j + jb) + (j + c) * lda;
                 a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
@@ -188,6 +196,114 @@ pub fn potrf_offload(
     Ok(stats)
 }
 
+/// Which blocked factorization [`refine_offload`] runs in the working
+/// format (the service maps its manifest `Alg` onto this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Factorization {
+    Lu,
+    Cholesky,
+}
+
+/// Outcome of a mixed-precision refined solve ([`refine_offload`]).
+#[derive(Clone, Debug)]
+pub struct RefineOutcome {
+    /// Refined solution, kept in binary64.
+    pub x: Vec<f64>,
+    /// Refinement iterations actually performed.
+    pub iters: usize,
+    /// Final relative backward error `|b - A x|₂ / |b|₂`, in binary64.
+    pub backward_error: f64,
+    /// Factorization phase stats (`total_s` covers the whole solve).
+    pub stats: OffloadStats,
+}
+
+/// Mixed-precision iterative refinement through an offload backend: the
+/// paper's accuracy experiment as a service job mode.
+///
+/// Factorizes `a64` once in the working format `T` (trailing updates on
+/// `backend`, so under the service the factorization still multiplexes
+/// onto the shared dispatch queues), solves for `x`, then iterates the
+/// classic `gerfs` scheme with residuals computed in binary64:
+/// `r = b - A x` (f64), `d = A⁻¹ r` via the existing `T` factors,
+/// `x += d` (f64). Stops after `max_iter` rounds, when the relative
+/// correction stalls, or when it reaches the binary64 noise floor. Every
+/// step is a pure function of the inputs, so refined jobs keep the
+/// service's bit-determinism guarantee.
+pub fn refine_offload<T: Scalar>(
+    alg: Factorization,
+    a64: &Matrix<f64>,
+    b64: &[f64],
+    nb: usize,
+    max_iter: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<RefineOutcome, LapackError> {
+    let n = a64.rows;
+    assert_eq!(a64.cols, n);
+    assert_eq!(b64.len(), n);
+    let t_all = Instant::now();
+    // One rounding per entry into the working format (exact via f64).
+    let mut af: Matrix<T> = a64.cast();
+    let mut ipiv = vec![0usize; n];
+    let mut stats = match alg {
+        Factorization::Lu => {
+            getrf_offload(n, n, &mut af.data, n, &mut ipiv, nb, backend)?
+        }
+        Factorization::Cholesky => potrf_offload(n, &mut af.data, n, nb, backend)?,
+    };
+    let solve = |rhs: &mut [T]| match alg {
+        Factorization::Lu => getrs(n, 1, &af.data, n, &ipiv, rhs, n),
+        Factorization::Cholesky => potrs(n, 1, &af.data, n, rhs, n),
+    };
+
+    // Initial solve in T, then carry x in f64.
+    let mut xt: Vec<T> = b64.iter().map(|&v| T::from_f64(v)).collect();
+    solve(&mut xt);
+    let mut x: Vec<f64> = xt.iter().map(|&v| v.to_f64()).collect();
+
+    let mut last = f64::INFINITY;
+    let mut iters = 0;
+    for _ in 0..max_iter {
+        // r = b - A x, computed in binary64.
+        let mut r = b64.to_vec();
+        gemm(
+            Trans::No, Trans::No, n, 1, n, -1.0, &a64.data, n, &x, n, 1.0,
+            &mut r, n,
+        );
+        // d = A⁻¹ r via the existing working-format factors.
+        let mut d: Vec<T> = r.iter().map(|&v| T::from_f64(v)).collect();
+        solve(&mut d);
+        // Candidate update and its relative size; a non-improving step is
+        // discarded (gerfs-style), so the returned x is always the best
+        // iterate, never one past the stall.
+        let mut xn = x.clone();
+        let mut corr: f64 = 0.0;
+        for i in 0..n {
+            let di = d[i].to_f64();
+            xn[i] += di;
+            if xn[i] != 0.0 {
+                corr = corr.max((di / xn[i]).abs());
+            }
+        }
+        iters += 1;
+        if corr >= last {
+            break; // stalled or diverging: keep the previous iterate
+        }
+        x = xn;
+        last = corr;
+        if corr < 1e-14 {
+            break; // at the binary64 noise floor
+        }
+    }
+    let be = backward_error(a64, b64, &x);
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    Ok(RefineOutcome {
+        x,
+        iters,
+        backward_error: be,
+        stats,
+    })
+}
+
 /// Nominal operation counts the paper uses for Gflops (§5.2):
 /// LU: 2N³/3; Cholesky: N³/3.
 pub fn lu_ops(n: usize) -> f64 {
@@ -202,7 +318,9 @@ mod tests {
     use super::*;
     use crate::blas::Matrix;
     use crate::coordinator::NativeBackend;
+    use crate::experiments::matgen;
     use crate::lapack::{getrf, potrf};
+    use crate::posit::Posit32;
     use crate::rng::Pcg64;
 
     #[test]
@@ -219,6 +337,22 @@ mod tests {
         assert_eq!(p1, p2);
         assert_eq!(a1.data, a2.data, "offload LU must be bit-identical");
         assert!(stats.update_flops > 0.0 && stats.total_s > 0.0);
+    }
+
+    #[test]
+    fn offload_lu_generic_f32_bit_matches_lapack() {
+        // The same driver instantiated at the binary32 baseline.
+        let n = 80;
+        let mut rng = Pcg64::seed(52);
+        let a0 = Matrix::<f32>::random_normal(n, n, 1.0, &mut rng);
+        let mut a1 = a0.clone();
+        let mut a2 = a0.clone();
+        let (mut p1, mut p2) = (vec![0usize; n], vec![0usize; n]);
+        getrf(n, n, &mut a1.data, n, &mut p1, 32, 2).unwrap();
+        let be = NativeBackend::new(2);
+        getrf_offload(n, n, &mut a2.data, n, &mut p2, 32, &be).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(a1.data, a2.data, "f32 offload LU must be bit-identical");
     }
 
     #[test]
@@ -261,5 +395,64 @@ mod tests {
         let mut ipiv = vec![0; n];
         let err = getrf_offload(n, n, &mut a.data, n, &mut ipiv, 4, &be).unwrap_err();
         assert!(matches!(err, LapackError::SingularU(_)));
+    }
+
+    #[test]
+    fn refine_offload_reaches_f64_accuracy_from_f32_and_posit32() {
+        // Factorize in a 32-bit working format, refine residuals in f64:
+        // the refined backward error must beat the plain 32-bit solve by
+        // orders of magnitude (mixed-precision refinement's whole point).
+        let n = 64;
+        let mut rng = Pcg64::seed(90);
+        let a64 = matgen::normal_f64(n, 1.0, &mut rng);
+        let (_xsol, b64) = matgen::rhs_for(&a64);
+        let be = NativeBackend::new(2);
+
+        let r32 = refine_offload::<f32>(Factorization::Lu, &a64, &b64, 16, 8, &be).unwrap();
+        assert!(r32.iters >= 1);
+        assert!(
+            r32.backward_error < 1e-12,
+            "f32-factorize + f64-refine should reach ~f64 accuracy: {:.2e}",
+            r32.backward_error
+        );
+
+        let rp = refine_offload::<Posit32>(Factorization::Lu, &a64, &b64, 16, 8, &be).unwrap();
+        assert!(
+            rp.backward_error < 1e-12,
+            "posit32-factorize + f64-refine: {:.2e}",
+            rp.backward_error
+        );
+    }
+
+    #[test]
+    fn refine_offload_cholesky_and_determinism() {
+        let n = 48;
+        let mut rng = Pcg64::seed(91);
+        let a64 = matgen::spd_f64(n, 1.0, &mut rng);
+        let (_xsol, b64) = matgen::rhs_for(&a64);
+        let be = NativeBackend::new(2);
+        let r1 =
+            refine_offload::<Posit32>(Factorization::Cholesky, &a64, &b64, 16, 8, &be).unwrap();
+        let r2 =
+            refine_offload::<Posit32>(Factorization::Cholesky, &a64, &b64, 16, 8, &be).unwrap();
+        assert!(r1.backward_error < 1e-12, "{:.2e}", r1.backward_error);
+        // Bit-deterministic: same inputs, same refined solution bits.
+        let b1: Vec<u64> = r1.x.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u64> = r2.x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2);
+        assert_eq!(r1.iters, r2.iters);
+    }
+
+    #[test]
+    fn refine_offload_propagates_factorization_failure() {
+        let n = 8;
+        let a64 = Matrix::<f64>::from_fn(n, n, |i, j| ((i + 1) * (j + 1)) as f64);
+        let b64 = vec![1.0; n];
+        let be = NativeBackend::new(1);
+        assert!(refine_offload::<f32>(Factorization::Lu, &a64, &b64, 4, 3, &be).is_err());
+        assert!(
+            refine_offload::<f64>(Factorization::Cholesky, &a64, &b64, 4, 3, &be).is_err(),
+            "rank-1 matrix is not positive definite"
+        );
     }
 }

@@ -1,28 +1,38 @@
 //! L3 coordinator: the accelerator-offload layer (the paper's system
-//! design, §3/§5.2).
+//! design, §3/§5.2), **generic over the numeric format**.
 //!
 //! The paper factorizes dense matrices with the LAPACK blocked algorithms,
 //! running the *panel* on the host CPU and offloading the *trailing-matrix
 //! GEMM update* to an accelerator (FPGA systolic array or GPU posit
-//! kernels). This module reproduces that split:
+//! kernels). This module reproduces that split — and, because the paper's
+//! headline result is a *comparison* between Posit(32,2) and binary32 on
+//! the same algorithms, the whole offload API is parameterized by
+//! [`crate::blas::Scalar`], so the format is the only experimental
+//! variable on the accelerator path too:
 //!
-//! * [`GemmBackend`] — the accelerator interface (`C -= A·B` on posit
-//!   tiles). Implementations:
-//!   - [`NativeBackend`] — multithreaded host posit GEMM (the "CPU only"
-//!     rows of Table 5),
+//! * [`GemmBackend<T>`] — the accelerator interface (`C -= A·B` on tiles
+//!   of any supported format). Implementations:
+//!   - [`NativeBackend`] — multithreaded host GEMM, implementing
+//!     `GemmBackend<T>` for **every** `Scalar` (the "CPU only" rows of
+//!     Table 5, and the binary32/binary64 baselines),
 //!   - [`PjrtBackend`] — executes the AOT Pallas GEMM artifacts through
-//!     the PJRT runtime, tiling + zero-padding arbitrary updates onto the
-//!     fixed artifact shapes (zero padding is exact: padded products are
-//!     posit zeros and `add(t, 0) == t`),
+//!     the PJRT runtime; the artifacts are Posit(32,2) kernels, so this
+//!     backend implements `GemmBackend<Posit32>` only. Tiling +
+//!     zero-padding arbitrary updates onto the fixed artifact shapes is
+//!     exact: padded products are posit zeros and `add(t, 0) == t`,
 //!   - [`TimedBackend`] — wraps another backend and charges a hardware
-//!     cost model per call; this is how the FPGA/GPU rows of Figs 2-8 are
-//!     produced with *real numerics* and *modelled time*.
-//! * [`drivers`] — blocked LU / Cholesky drivers parameterized by backend.
+//!     cost model per call, for whatever formats the inner backend
+//!     supports; this is how the FPGA/GPU rows of Figs 2-8 are produced
+//!     with *real numerics* and *modelled time*.
+//! * [`drivers`] — blocked LU / Cholesky drivers parameterized by format
+//!   and backend, plus mixed-precision iterative refinement
+//!   ([`drivers::refine_offload`]: factorize in the working format,
+//!   refine residuals in binary64).
 //! * [`OffloadStats`] — per-phase timing the experiments report.
 
 pub mod drivers;
 
-use crate::blas::{gemm_parallel, gemm_parallel_scoped, pool, Trans};
+use crate::blas::{gemm_parallel, gemm_parallel_scoped, pool, Scalar, Trans};
 use crate::posit::Posit32;
 use crate::runtime::{ArtifactKind, Runtime};
 use anyhow::Result;
@@ -30,45 +40,51 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// One trailing-matrix update staged for a backend: borrowed views of
-/// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`. The unit of work of
-/// [`GemmBackend::gemm_update_many`], which the service's per-backend
-/// dispatch queues use to hand a whole batch of tiles — typically from
-/// *different* factorization jobs — to an accelerator in one contiguous
-/// submission.
-pub struct GemmJob<'a> {
+/// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)` in format `T`. The unit
+/// of work of [`GemmBackend::gemm_update_many`], which the service's
+/// per-backend dispatch queues use to hand a whole batch of tiles —
+/// typically from *different* factorization jobs — to an accelerator in
+/// one contiguous submission.
+pub struct GemmJob<'a, T = Posit32> {
     pub m: usize,
     pub k: usize,
     pub n: usize,
-    pub a: &'a [Posit32],
+    pub a: &'a [T],
     pub lda: usize,
-    pub b: &'a [Posit32],
+    pub b: &'a [T],
     pub ldb: usize,
-    pub c: &'a mut [Posit32],
+    pub c: &'a mut [T],
     pub ldc: usize,
 }
 
 /// An accelerator that can apply the trailing-matrix update
-/// `C <- C - A · B` on column-major Posit(32,2) tiles.
+/// `C <- C - A · B` on column-major tiles of format `T`.
+///
+/// The type parameter is the numeric format of the tiles; a host backend
+/// like [`NativeBackend`] implements it for every [`Scalar`], while a real
+/// artifact-backed accelerator implements only the formats it has kernels
+/// for (e.g. [`PjrtBackend`]: `Posit32`). `T` defaults to `Posit32`, the
+/// paper's format.
 ///
 /// Backends are `Send + Sync`: one instance is shared by every worker of
 /// the batched factorization service (`crate::service`), which multiplexes
 /// the trailing updates of concurrent jobs onto it.
-pub trait GemmBackend: Send + Sync {
+pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
     fn name(&self) -> &str;
 
-    /// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`; posit semantics per
-    /// DESIGN.md §7 (bit-identical across all backends).
+    /// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`; per-format rounding
+    /// semantics per DESIGN.md §7 (bit-identical across all backends).
     #[allow(clippy::too_many_arguments)]
     fn gemm_update(
         &self,
         m: usize,
         k: usize,
         n: usize,
-        a: &[Posit32],
+        a: &[T],
         lda: usize,
-        b: &[Posit32],
+        b: &[T],
         ldb: usize,
-        c: &mut [Posit32],
+        c: &mut [T],
         ldc: usize,
     ) -> Result<()>;
 
@@ -78,7 +94,7 @@ pub trait GemmBackend: Send + Sync {
     /// to looping `gemm_update` over the batch in order; only throughput
     /// differs. Implementations may consume (empty) the `c` views; callers
     /// keep their own handles to the underlying buffers.
-    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
         for j in jobs.iter_mut() {
             let (m, k, n) = (j.m, j.k, j.n);
             let (lda, ldb, ldc) = (j.lda, j.ldb, j.ldc);
@@ -105,7 +121,10 @@ pub trait GemmBackend: Send + Sync {
     }
 }
 
-/// Host CPU backend: the blocked multithreaded native GEMM.
+/// Host CPU backend: the blocked multithreaded native GEMM. Implements
+/// [`GemmBackend<T>`] for every [`Scalar`] — the same instance can serve
+/// posit32, binary32 and binary64 tiles (the service gives each format its
+/// own dispatch queue, so in practice one instance per format pool).
 pub struct NativeBackend {
     pub threads: usize,
 }
@@ -116,7 +135,7 @@ impl NativeBackend {
     }
 }
 
-impl GemmBackend for NativeBackend {
+impl<T: Scalar> GemmBackend<T> for NativeBackend {
     fn name(&self) -> &str {
         "native"
     }
@@ -125,14 +144,14 @@ impl GemmBackend for NativeBackend {
         m: usize,
         k: usize,
         n: usize,
-        a: &[Posit32],
+        a: &[T],
         lda: usize,
-        b: &[Posit32],
+        b: &[T],
         ldb: usize,
-        c: &mut [Posit32],
+        c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        let minus1 = Posit32::ONE.negate();
+        let minus1 = T::one().neg();
         gemm_parallel(
             self.threads,
             Trans::No,
@@ -145,7 +164,7 @@ impl GemmBackend for NativeBackend {
             lda,
             b,
             ldb,
-            Posit32::ONE,
+            T::one(),
             c,
             ldc,
         );
@@ -160,17 +179,17 @@ impl GemmBackend for NativeBackend {
     /// behind the previous one. Chunking never changes results: every
     /// output column is computed by the same serial kernel whichever chunk
     /// it lands in.
-    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
         if jobs.is_empty() {
             return Ok(());
         }
-        let minus1 = Posit32::ONE.negate();
+        let minus1 = T::one().neg();
         let chunks_per_job = self.threads.max(1).div_ceil(jobs.len()).max(1);
         pool::global().scope(|s| {
             for job in jobs.iter_mut() {
                 // Take the C view whole so chunk tasks can outlive this
                 // loop iteration (the trait allows consuming the views).
-                let c: &mut [Posit32] = std::mem::take(&mut job.c);
+                let c: &mut [T] = std::mem::take(&mut job.c);
                 gemm_parallel_scoped(
                     s,
                     chunks_per_job,
@@ -184,7 +203,7 @@ impl GemmBackend for NativeBackend {
                     job.lda,
                     job.b,
                     job.ldb,
-                    Posit32::ONE,
+                    T::one(),
                     c,
                     job.ldc,
                 );
@@ -197,6 +216,8 @@ impl GemmBackend for NativeBackend {
 /// PJRT backend: dispatches fixed-shape AOT artifacts, padding the update
 /// onto (TM, TK, TN) tiles. The default tile matches the exported
 /// `gemm_update_128x64x128` artifact (panel width = `lapack::DEFAULT_NB`).
+/// The artifacts are Posit(32,2) Pallas kernels, so this backend exists
+/// only at `GemmBackend<Posit32>`.
 pub struct PjrtBackend {
     rt: Runtime,
     pub tm: usize,
@@ -259,7 +280,7 @@ impl PjrtBackend {
     }
 }
 
-impl GemmBackend for PjrtBackend {
+impl GemmBackend<Posit32> for PjrtBackend {
     fn name(&self) -> &str {
         "pjrt"
     }
@@ -332,7 +353,9 @@ impl GemmBackend for PjrtBackend {
 /// Wraps a backend with a per-call hardware time model: numerics from the
 /// inner backend (bit-exact), accelerator-time from the model. This is the
 /// mechanism behind every "FPGA"/"GPU" performance row in the experiments
-/// (DESIGN.md §4, substitution table).
+/// (DESIGN.md §4, substitution table). The wrapper is format-transparent:
+/// `TimedBackend<B>` implements [`GemmBackend<T>`] for every format the
+/// inner backend supports, sharing one model and one accumulator.
 pub struct TimedBackend<B> {
     inner: B,
     label: String,
@@ -342,7 +365,7 @@ pub struct TimedBackend<B> {
     nanos: AtomicU64,
 }
 
-impl<B: GemmBackend> TimedBackend<B> {
+impl<B> TimedBackend<B> {
     pub fn new(
         label: impl Into<String>,
         inner: B,
@@ -357,7 +380,7 @@ impl<B: GemmBackend> TimedBackend<B> {
     }
 }
 
-impl<B: GemmBackend> GemmBackend for TimedBackend<B> {
+impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
     fn name(&self) -> &str {
         &self.label
     }
@@ -366,11 +389,11 @@ impl<B: GemmBackend> GemmBackend for TimedBackend<B> {
         m: usize,
         k: usize,
         n: usize,
-        a: &[Posit32],
+        a: &[T],
         lda: usize,
-        b: &[Posit32],
+        b: &[T],
         ldb: usize,
-        c: &mut [Posit32],
+        c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
         let secs = (self.model)(m, k, n);
@@ -380,7 +403,7 @@ impl<B: GemmBackend> GemmBackend for TimedBackend<B> {
     }
     /// Charge the whole batch, then forward it to the inner backend in one
     /// submission (so a batched native inner still overlaps the tiles).
-    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_>]) -> Result<()> {
+    fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
         let secs: f64 = jobs.iter().map(|j| (self.model)(j.m, j.k, j.n)).sum();
         self.nanos
             .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
@@ -447,14 +470,24 @@ mod tests {
         let c0 = rand_mat(m, n, 3);
         let mut c1 = c0.clone();
         let mut c2 = c0.clone();
-        NativeBackend::new(2)
-            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m)
-            .unwrap();
+        GemmBackend::<Posit32>::gemm_update(
+            &NativeBackend::new(2),
+            m,
+            k,
+            n,
+            &a.data,
+            m,
+            &b.data,
+            k,
+            &mut c1.data,
+            m,
+        )
+        .unwrap();
         let be = PjrtBackend::new(dir).unwrap();
         be.gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
             .unwrap();
         assert_eq!(c1.data, c2.data, "padded PJRT tiles must be bit-exact");
-        assert_eq!(be.tiles_dispatched(), 4); // ceil(150/128)*ceil(131/128)
+        assert_eq!(GemmBackend::<Posit32>::tiles_dispatched(&be), 4); // ceil(150/128)*ceil(131/128)
     }
 
     #[test]
@@ -469,7 +502,7 @@ mod tests {
         let timed = TimedBackend::new("model", NativeBackend::new(4), |m, k, n| {
             (2 * m * k * n) as f64 / 1e9
         });
-        for be in [&native as &dyn GemmBackend, &timed] {
+        for be in [&native as &dyn GemmBackend<Posit32>, &timed] {
             let mut seq: Vec<Matrix<Posit32>> = Vec::new();
             let mut ops = Vec::new();
             for (i, &(m, k, n, pad)) in shapes.iter().enumerate() {
@@ -482,7 +515,7 @@ mod tests {
                 seq.push(c1);
                 ops.push((a, b, c));
             }
-            let mut jobs: Vec<GemmJob<'_>> = ops
+            let mut jobs: Vec<GemmJob<'_, Posit32>> = ops
                 .iter_mut()
                 .zip(&shapes)
                 .map(|((a, b, c), &(m, k, n, pad))| GemmJob {
@@ -505,6 +538,7 @@ mod tests {
         }
         // The timed wrapper charged both paths: 2x the one-shot cost.
         let one: f64 = shapes.iter().map(|&(m, k, n, _)| (2 * m * k * n) as f64 / 1e9).sum();
+        let timed = &timed as &dyn GemmBackend<Posit32>;
         assert!((timed.simulated_seconds() - 2.0 * one).abs() < 1e-9);
         assert!((timed.simulated_cost(37, 8, 29) - 2.0 * 37.0 * 8.0 * 29.0 / 1e9).abs() < 1e-12);
     }
@@ -514,6 +548,7 @@ mod tests {
         let be = TimedBackend::new("model", NativeBackend::new(1), |m, k, n| {
             (2 * m * k * n) as f64 / 1e9
         });
+        let be = &be as &dyn GemmBackend<Posit32>;
         let (m, k, n) = (32, 8, 16);
         let a = rand_mat(m, k, 4);
         let b = rand_mat(k, n, 5);
@@ -524,5 +559,39 @@ mod tests {
             .unwrap();
         let want = 2.0 * (2 * m * k * n) as f64 / 1e9;
         assert!((be.simulated_seconds() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_backend_is_format_generic_and_matches_plain_gemm() {
+        // The same NativeBackend instance serves f32 and f64 tiles; each
+        // must equal the plain generic GEMM bit-for-bit.
+        let (m, k, n) = (23, 9, 17);
+        let be = NativeBackend::new(3);
+        let mut rng = Pcg64::seed(77);
+        let a = Matrix::<f32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f32>::random_normal(k, n, 1.0, &mut rng);
+        let c0 = Matrix::<f32>::random_normal(m, n, 1.0, &mut rng);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        crate::blas::gemm(
+            Trans::No, Trans::No, m, n, k, -1.0f32, &a.data, m, &b.data, k, 1.0,
+            &mut c1.data, m,
+        );
+        GemmBackend::<f32>::gemm_update(&be, m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+            .unwrap();
+        assert_eq!(c1.data, c2.data, "f32 backend == f32 gemm");
+
+        let a = Matrix::<f64>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f64>::random_normal(k, n, 1.0, &mut rng);
+        let c0 = Matrix::<f64>::random_normal(m, n, 1.0, &mut rng);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        crate::blas::gemm(
+            Trans::No, Trans::No, m, n, k, -1.0f64, &a.data, m, &b.data, k, 1.0,
+            &mut c1.data, m,
+        );
+        GemmBackend::<f64>::gemm_update(&be, m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+            .unwrap();
+        assert_eq!(c1.data, c2.data, "f64 backend == f64 gemm");
     }
 }

@@ -18,15 +18,25 @@
 //! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX /
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
 //!   Python never runs on the request path.
-//! * [`coordinator`] — the accelerator-offload layer: blocked LU/Cholesky
-//!   drivers that factorize panels on the host and dispatch trailing-matrix
-//!   GEMM updates to a pluggable [`coordinator::GemmBackend`] (single calls
-//!   or batched [`coordinator::GemmBackend::gemm_update_many`] submissions).
+//! * [`coordinator`] — the accelerator-offload layer, generic over the
+//!   format like the BLAS beneath it: blocked LU/Cholesky drivers that
+//!   factorize panels on the host and dispatch trailing-matrix GEMM
+//!   updates to a pluggable [`coordinator::GemmBackend<T>`] (single calls
+//!   or batched [`coordinator::GemmBackend::gemm_update_many`]
+//!   submissions; `NativeBackend`/`TimedBackend` serve every format, the
+//!   PJRT backend is `Posit32`-only). Mixed-precision iterative
+//!   refinement ([`coordinator::drivers::refine_offload`]) factorizes in
+//!   the working format and refines residuals in binary64.
 //! * [`service`] — the batched multi-factorization service: a job manifest
 //!   is sharded across a worker pool whose trailing updates multiplex onto
-//!   shared backends through per-backend dispatch queues, with per-job
-//!   stats and throughput JSON (`posit-accel batch`/`serve`). Results are
-//!   bit-identical to the sequential drivers at any worker count.
+//!   shared backends through per-format, per-backend dispatch queues, with
+//!   per-job stats, achieved-accuracy digits, and throughput JSON
+//!   (`posit-accel batch`/`serve`). The numeric format is per-job data
+//!   (`precision=posit32|f32|f64`, `mode=factor|refine`), so one run
+//!   carries the paper's format comparison; results are bit-identical to
+//!   the sequential drivers at any worker count.
+//!
+//! [`coordinator::GemmBackend<T>`]: coordinator::GemmBackend
 //! * [`sim`] — calibrated models of the paper's hardware: the Agilex
 //!   systolic array (cycles, resources, power) and the five GPUs
 //!   (instruction-driven timing, warp divergence, power capping).

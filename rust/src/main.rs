@@ -161,47 +161,48 @@ fn cmd_solve(args: &Args) {
     print!("{}", t.render());
 }
 
-/// Build the service engine: native always (the primary); FPGA/GPU as
-/// modelled accelerators (bit-exact numerics on the host, accelerator time
-/// from the calibrated models — the DESIGN.md substitution) and PJRT, each
-/// started only when some job actually routes to it, so a native-only
+/// Build the service engine: native always (the primary of every format
+/// pool); FPGA/GPU as modelled accelerators (bit-exact numerics on the
+/// host, accelerator time from the calibrated models — the DESIGN.md
+/// substitution), shared across all three format pools since the model
+/// wrapper is format-transparent; PJRT registered in the posit32 pool
+/// only (the AOT artifacts are Posit(32,2) kernels). Optional backends
+/// start only when some job actually routes to them, so a native-only
 /// manifest spawns no idle dispatcher threads.
 fn service_engine(jobs: &[service::JobSpec], max_batch: usize) -> service::Engine {
     let want = |name: &str| jobs.iter().any(|j| j.backend == name);
     let threads = blas::default_threads();
-    let mut backends: Vec<(String, Arc<dyn GemmBackend>)> = vec![(
-        "native".to_string(),
-        Arc::new(NativeBackend::new(threads)) as Arc<dyn GemmBackend>,
-    )];
+    let mut builder = service::EngineBuilder::new(max_batch)
+        .shared("native", Arc::new(NativeBackend::new(threads)));
     if want("fpga") {
         let fpga = SystolicConfig::agilex_posit32();
-        backends.push((
-            "fpga".to_string(),
+        builder = builder.shared(
+            "fpga",
             Arc::new(TimedBackend::new(
                 "fpga/agilex-16x16",
                 NativeBackend::new(threads),
                 move |m, k, n| fpga.gemm_seconds(m, k, n),
-            )) as Arc<dyn GemmBackend>,
-        ));
+            )),
+        );
     }
     if want("gpu") {
         let gm = GpuModel::new();
-        backends.push((
-            "gpu".to_string(),
+        builder = builder.shared(
+            "gpu",
             Arc::new(TimedBackend::new(
                 "gpu/rtx4090",
                 NativeBackend::new(threads),
                 move |m, k, n| gm.gemm_seconds(&RTX4090, m, k, n, 1.0),
-            )) as Arc<dyn GemmBackend>,
-        ));
+            )),
+        );
     }
     if want("pjrt") {
         match PjrtBackend::new(runtime::Runtime::default_dir()) {
-            Ok(be) => backends.push(("pjrt".to_string(), Arc::new(be) as Arc<dyn GemmBackend>)),
+            Ok(be) => builder = builder.posit32("pjrt", Arc::new(be)),
             Err(e) => die(&format!("pjrt backend: {e:#}")),
         }
     }
-    service::Engine::new(backends, max_batch)
+    builder.build()
 }
 
 fn cmd_batch(args: &Args, serve: bool) {
@@ -266,7 +267,10 @@ fn cmd_batch(args: &Args, serve: bool) {
                 report.workers,
                 max_batch
             ),
-            &["id", "alg", "n", "backend", "ok", "wall s", "upd Gflops", "sim s"],
+            &[
+                "id", "alg", "n", "prec", "mode", "backend", "ok", "wall s", "upd Gflops",
+                "sim s", "digits",
+            ],
         );
         for r in &report.results {
             let upd_gflops = if r.wall_s > 0.0 {
@@ -274,18 +278,34 @@ fn cmd_batch(args: &Args, serve: bool) {
             } else {
                 0.0
             };
+            let digits = match r.digits {
+                Some(d) if d.is_finite() => format!("{d:.2}"),
+                // +inf = zero residual; -inf/NaN = overflowed/invalid solve.
+                Some(d) if d == f64::INFINITY => "exact".to_string(),
+                _ => "-".to_string(),
+            };
             t.row(&[
                 r.id.to_string(),
                 r.alg.name().into(),
                 r.n.to_string(),
+                r.precision.name().into(),
+                r.mode.name().into(),
                 r.backend.clone(),
                 r.error.is_none().to_string(),
                 format!("{:.3}", r.wall_s),
                 format!("{upd_gflops:.3}"),
                 format!("{:.3}", r.stats.simulated_s),
+                digits,
             ]);
         }
         print!("{}", t.render());
+        for (p, jobs, ok, mean_digits) in report.format_summary() {
+            println!(
+                "format {:>8}: {jobs} jobs ({ok} ok), mean digits {:.2}",
+                p.name(),
+                mean_digits
+            );
+        }
         for r in &report.results {
             if let Some(e) = &r.error {
                 println!("job {} failed: {e}", r.id);

@@ -123,6 +123,10 @@ impl<const NBITS: u32, const ES: u32> Scalar for P<NBITS, ES> {
         Self::SPEC.to_f64(self.0)
     }
     #[inline]
+    fn bits(self) -> u64 {
+        self.0 as u64
+    }
+    #[inline]
     fn is_bad(self) -> bool {
         self.0 == Self::SPEC.nar()
     }

@@ -1,31 +1,53 @@
-//! Worker pool + per-job execution + throughput report.
+//! Worker pool + per-job execution + throughput report, with one backend
+//! pool per numeric format.
 //!
 //! [`Engine::run`] shards a manifest across `workers` OS threads. Each
-//! worker claims jobs off a shared counter, materializes the job's matrix
-//! (a pure function of the [`JobSpec`]), and runs the ordinary sequential
-//! drivers (`getrf_offload` / `potrf_offload`) against a [`QueueBackend`]
-//! proxy, so all workers' trailing updates multiplex onto the shared
-//! per-backend dispatch queues.
+//! worker claims jobs off a shared counter, materializes the job's
+//! *binary64* problem (a pure function of the [`JobSpec`]), rounds it once
+//! into the job's [`Precision`], and runs the ordinary sequential drivers
+//! (`getrf_offload` / `potrf_offload`, or [`refine_offload`] for
+//! `mode=refine` jobs) against a [`QueueBackend`] proxy — so all workers'
+//! trailing updates multiplex onto the shared per-backend dispatch queues
+//! of the job's *format pool*. One `batch` run can therefore carry
+//! posit32, binary32 and binary64 jobs at once: the format is per-job
+//! data, which is how the service runs the paper's format comparison as a
+//! single workload.
+//!
+//! Every successful job also reports its accuracy against the binary64
+//! ground truth: factorize-mode jobs run a host-side probe solve
+//! `A x = b` (`b = A·x_sol` built in f64, paper §5.1) through their
+//! factors; refine-mode jobs report the refined backward error. Both are
+//! surfaced as `digits = -log10(backward error)` next to the throughput
+//! numbers, so one JSON report contains the paper's accuracy-vs-format
+//! experiment at scale.
 //!
 //! **Determinism guarantee** (the service's headline contract, pinned by
 //! `rust/tests/service_determinism.rs`): for every job, the factor matrix
-//! and pivot vector are bit-identical to running the sequential driver on
-//! the same spec, for ANY worker count, batch size, pool size or
-//! interleaving. It holds by construction: scheduling decides only *when*
-//! a tile executes, never its operands, and every backend's tile kernel is
-//! bit-exact and order-free across independent output columns.
+//! (or refined solution), pivot vector, and error/digits numbers are
+//! bit-identical to running the sequential driver on the same spec, for
+//! ANY worker count, batch size, pool size or interleaving. It holds by
+//! construction: scheduling decides only *when* a tile executes, never its
+//! operands, and every backend's tile kernel is bit-exact and order-free
+//! across independent output columns.
 
-use super::manifest::{Alg, JobSpec, MatrixClass};
+use super::manifest::{Alg, JobSpec, MatrixClass, Mode, Precision};
 use super::queue::{BatchQueue, QueueBackend, QueueReport};
-use crate::blas::Matrix;
-use crate::coordinator::drivers::{chol_ops, getrf_offload, lu_ops, potrf_offload};
+use crate::blas::{Matrix, Scalar};
+use crate::coordinator::drivers::{
+    chol_ops, getrf_offload, lu_ops, potrf_offload, refine_offload, Factorization,
+};
 use crate::coordinator::{GemmBackend, OffloadStats};
 use crate::experiments::matgen;
+use crate::lapack::{backward_error, getrs, potrs};
 use crate::posit::Posit32;
 use crate::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Refinement rounds cap for `mode=refine` jobs; convergence usually stops
+/// the loop first (see [`refine_offload`]).
+pub const REFINE_MAX_ITER: usize = 10;
 
 /// Outcome of one job.
 #[derive(Clone, Debug)]
@@ -33,18 +55,32 @@ pub struct JobResult {
     pub id: usize,
     pub alg: Alg,
     pub n: usize,
+    /// Numeric format the job ran in.
+    pub precision: Precision,
+    pub mode: Mode,
     pub backend: String,
     /// `None` = success; `Some(msg)` = driver error (singularity, NaR,
-    /// backend failure, unknown queue). Failures are deterministic too.
+    /// backend failure, unknown queue/pool). Failures are deterministic too.
     pub error: Option<String>,
     pub stats: OffloadStats,
     /// Wall seconds for this job on its worker (generation + factorize).
     pub wall_s: f64,
-    /// FNV-1a over the factor bits and pivots: cheap cross-run identity.
+    /// Relative backward error vs the binary64 problem (factorize mode:
+    /// the probe solve; refine mode: the refined solution).
+    pub backward_error: Option<f64>,
+    /// Achieved decimal digits, `-log10(backward_error)` — the paper's
+    /// accuracy axis.
+    pub digits: Option<f64>,
+    /// Refinement iterations (refine-mode jobs only).
+    pub refine_iters: Option<usize>,
+    /// FNV-1a over the factor/solution bits and pivots: cheap cross-run
+    /// identity.
     pub fingerprint: u64,
-    /// Factor bit patterns (only when the run keeps factors, e.g. tests).
-    pub factors: Option<Vec<u32>>,
-    /// LU pivots (empty for Cholesky; only when keeping factors).
+    /// Factor bit patterns, zero-extended to 64 bits (refine mode: the
+    /// refined solution's binary64 bits). Only when the run keeps factors,
+    /// e.g. tests.
+    pub factors: Option<Vec<u64>>,
+    /// LU pivots (empty for Cholesky/refine; only when keeping factors).
     pub ipiv: Option<Vec<usize>>,
 }
 
@@ -58,18 +94,15 @@ pub struct ServiceReport {
     pub queues: Vec<QueueReport>,
 }
 
-/// The batched multi-factorization engine: a set of named dispatch queues
-/// (one per shared backend) that any number of runs can execute against.
-pub struct Engine {
-    queues: Vec<Arc<BatchQueue>>,
+/// The dispatch queues of one numeric format: jobs of that [`Precision`]
+/// route here by backend name (empty name = the pool's primary).
+struct FormatPool<T: Scalar> {
+    queues: Vec<Arc<BatchQueue<T>>>,
 }
 
-impl Engine {
-    /// Start one dispatch queue per `(name, backend)`; the first entry is
-    /// the primary backend (jobs with an empty `backend` route to it).
-    pub fn new(backends: Vec<(String, Arc<dyn GemmBackend>)>, max_batch: usize) -> Engine {
-        assert!(!backends.is_empty(), "engine needs at least one backend");
-        Engine {
+impl<T: Scalar> FormatPool<T> {
+    fn new(backends: Vec<(String, Arc<dyn GemmBackend<T>>)>, max_batch: usize) -> FormatPool<T> {
+        FormatPool {
             queues: backends
                 .into_iter()
                 .map(|(name, be)| BatchQueue::start(name, be, max_batch))
@@ -77,16 +110,161 @@ impl Engine {
         }
     }
 
-    /// Queue names, primary first.
-    pub fn backend_names(&self) -> Vec<String> {
-        self.queues.iter().map(|q| q.name().to_string()).collect()
-    }
-
-    fn queue_for(&self, name: &str) -> Option<&Arc<BatchQueue>> {
+    fn queue_for(&self, name: &str) -> Option<&Arc<BatchQueue<T>>> {
         if name.is_empty() {
             self.queues.first()
         } else {
             self.queues.iter().find(|q| q.name() == name)
+        }
+    }
+
+    fn run_job(&self, spec: &JobSpec, keep_factors: bool) -> JobResult {
+        match self.queue_for(&spec.backend) {
+            Some(queue) => {
+                let proxy = QueueBackend::new(Arc::clone(queue));
+                run_job_on(spec, &proxy, queue.name(), keep_factors)
+            }
+            None if self.queues.is_empty() => failed_result(
+                spec,
+                format!("engine has no {} backend pool", spec.precision.name()),
+            ),
+            None => failed_result(
+                spec,
+                format!(
+                    "no backend '{}' in the {} pool",
+                    spec.backend,
+                    spec.precision.name()
+                ),
+            ),
+        }
+    }
+
+    fn names(&self) -> impl Iterator<Item = &str> {
+        self.queues.iter().map(|q| q.name())
+    }
+
+    fn reports(&self) -> impl Iterator<Item = QueueReport> + '_ {
+        self.queues.iter().map(|q| q.report())
+    }
+}
+
+/// Builds an [`Engine`] with one backend pool per numeric format. The
+/// first backend registered in a pool is that pool's primary (jobs with an
+/// empty `backend=` route to it).
+#[derive(Default)]
+pub struct EngineBuilder {
+    max_batch: usize,
+    posit32: Vec<(String, Arc<dyn GemmBackend<Posit32>>)>,
+    f32pool: Vec<(String, Arc<dyn GemmBackend<f32>>)>,
+    f64pool: Vec<(String, Arc<dyn GemmBackend<f64>>)>,
+}
+
+impl EngineBuilder {
+    pub fn new(max_batch: usize) -> EngineBuilder {
+        EngineBuilder {
+            max_batch,
+            ..Default::default()
+        }
+    }
+
+    /// Register one *shared* format-transparent backend instance (e.g.
+    /// [`crate::coordinator::NativeBackend`] or a `TimedBackend` around
+    /// it) under `name` in all three pools. The instance really is shared:
+    /// simulated-seconds accumulate across formats.
+    pub fn shared<B>(mut self, name: impl Into<String>, backend: Arc<B>) -> EngineBuilder
+    where
+        B: GemmBackend<Posit32> + GemmBackend<f32> + GemmBackend<f64> + 'static,
+    {
+        let name = name.into();
+        self.posit32.push((
+            name.clone(),
+            Arc::clone(&backend) as Arc<dyn GemmBackend<Posit32>>,
+        ));
+        self.f32pool
+            .push((name.clone(), Arc::clone(&backend) as Arc<dyn GemmBackend<f32>>));
+        self.f64pool.push((name, backend as Arc<dyn GemmBackend<f64>>));
+        self
+    }
+
+    /// Register a Posit(32,2)-only backend (e.g.
+    /// [`crate::coordinator::PjrtBackend`], whose AOT artifacts are posit
+    /// kernels). Jobs of other formats naming it fail deterministically.
+    pub fn posit32(mut self, name: impl Into<String>, be: Arc<dyn GemmBackend<Posit32>>) -> Self {
+        self.posit32.push((name.into(), be));
+        self
+    }
+
+    /// Register a binary32-only backend.
+    pub fn f32(mut self, name: impl Into<String>, be: Arc<dyn GemmBackend<f32>>) -> Self {
+        self.f32pool.push((name.into(), be));
+        self
+    }
+
+    /// Register a binary64-only backend.
+    pub fn f64(mut self, name: impl Into<String>, be: Arc<dyn GemmBackend<f64>>) -> Self {
+        self.f64pool.push((name.into(), be));
+        self
+    }
+
+    /// Start all dispatch queues and hand back the engine.
+    pub fn build(self) -> Engine {
+        assert!(
+            !(self.posit32.is_empty() && self.f32pool.is_empty() && self.f64pool.is_empty()),
+            "engine needs at least one backend"
+        );
+        Engine {
+            posit32: FormatPool::new(self.posit32, self.max_batch),
+            f32pool: FormatPool::new(self.f32pool, self.max_batch),
+            f64pool: FormatPool::new(self.f64pool, self.max_batch),
+        }
+    }
+}
+
+/// The batched multi-factorization engine: per-format sets of named
+/// dispatch queues (one per shared backend) that any number of runs can
+/// execute against.
+pub struct Engine {
+    posit32: FormatPool<Posit32>,
+    f32pool: FormatPool<f32>,
+    f64pool: FormatPool<f64>,
+}
+
+impl Engine {
+    /// Posit(32,2)-only engine (the PR-1 API): one dispatch queue per
+    /// `(name, backend)`, first entry primary. Jobs asking for `f32`/`f64`
+    /// fail per-job with "engine has no ... pool"; use [`EngineBuilder`]
+    /// for heterogeneous-format manifests.
+    pub fn new(backends: Vec<(String, Arc<dyn GemmBackend>)>, max_batch: usize) -> Engine {
+        assert!(!backends.is_empty(), "engine needs at least one backend");
+        let mut b = EngineBuilder::new(max_batch);
+        for (name, be) in backends {
+            b = b.posit32(name, be);
+        }
+        b.build()
+    }
+
+    /// Queue names per format pool, primaries first, deduplicated across
+    /// pools (a `shared` backend appears once).
+    pub fn backend_names(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for name in self
+            .posit32
+            .names()
+            .chain(self.f32pool.names())
+            .chain(self.f64pool.names())
+        {
+            if !out.iter().any(|n| n == name) {
+                out.push(name.to_string());
+            }
+        }
+        out
+    }
+
+    fn run_one(&self, spec: &JobSpec, keep_factors: bool) -> JobResult {
+        match spec.precision {
+            Precision::Posit32 => self.posit32.run_job(spec, keep_factors),
+            Precision::F32 => self.f32pool.run_job(spec, keep_factors),
+            Precision::F64 => self.f64pool.run_job(spec, keep_factors),
         }
     }
 
@@ -104,17 +282,7 @@ impl Engine {
                     if i >= jobs.len() {
                         break;
                     }
-                    let spec = &jobs[i];
-                    let result = match self.queue_for(&spec.backend) {
-                        Some(queue) => {
-                            let proxy = QueueBackend::new(Arc::clone(queue));
-                            run_job_on(spec, &proxy, queue.name(), keep_factors)
-                        }
-                        None => failed_result(
-                            spec,
-                            format!("unknown backend '{}'", spec.backend),
-                        ),
-                    };
+                    let result = self.run_one(&jobs[i], keep_factors);
                     results.lock().unwrap().push(result);
                 });
             }
@@ -126,65 +294,155 @@ impl Engine {
             results,
             workers,
             wall_s,
-            queues: self.queues.iter().map(|q| q.report()).collect(),
+            queues: self
+                .posit32
+                .reports()
+                .chain(self.f32pool.reports())
+                .chain(self.f64pool.reports())
+                .collect(),
         }
     }
 }
 
-/// Run one job straight through the sequential drivers on `backend` — the
-/// ground-truth path the determinism tests compare the service against.
-pub fn run_job_sequential(
+/// Run one job straight through the sequential drivers on a backend of
+/// the job's format — the ground-truth path the determinism tests compare
+/// the service against. The caller must hand a backend whose format
+/// matches `spec.precision` (debug-asserted inside).
+pub fn run_job_sequential<T: Scalar>(
     spec: &JobSpec,
-    backend: &dyn GemmBackend,
+    backend: &dyn GemmBackend<T>,
     keep_factors: bool,
 ) -> JobResult {
     run_job_on(spec, backend, backend.name(), keep_factors)
 }
 
-/// Materialize the job's input matrix: a pure function of the spec.
-fn build_matrix(spec: &JobSpec) -> Matrix<Posit32> {
-    let mut rng = Pcg64::seed(spec.seed);
-    match spec.class {
-        MatrixClass::Normal => {
-            Matrix::<Posit32>::random_normal(spec.n, spec.n, spec.sigma, &mut rng)
-        }
-        MatrixClass::Spd => matgen::spd_f64(spec.n, spec.sigma, &mut rng).cast(),
+/// Like [`run_job_sequential`], but picks the format from the spec: works
+/// for any backend implementing all three formats (e.g. `NativeBackend`,
+/// `TimedBackend<NativeBackend>`), so one helper can baseline a whole
+/// mixed-format manifest.
+pub fn run_job_sequential_any<B>(spec: &JobSpec, backend: &B, keep_factors: bool) -> JobResult
+where
+    B: GemmBackend<Posit32> + GemmBackend<f32> + GemmBackend<f64>,
+{
+    match spec.precision {
+        Precision::Posit32 => run_job_sequential::<Posit32>(spec, backend, keep_factors),
+        Precision::F32 => run_job_sequential::<f32>(spec, backend, keep_factors),
+        Precision::F64 => run_job_sequential::<f64>(spec, backend, keep_factors),
     }
 }
 
-fn run_job_on(
+/// Materialize the job's binary64 problem matrix: a pure function of the
+/// spec. Every format sees this same matrix rounded once into its grid
+/// (`Matrix::cast`), which is Eq. (5)'s controlled comparison.
+fn build_matrix64(spec: &JobSpec) -> Matrix<f64> {
+    let mut rng = Pcg64::seed(spec.seed);
+    match spec.class {
+        MatrixClass::Normal => matgen::normal_f64(spec.n, spec.sigma, &mut rng),
+        MatrixClass::Spd => matgen::spd_f64(spec.n, spec.sigma, &mut rng),
+    }
+}
+
+fn run_job_on<T: Scalar>(
     spec: &JobSpec,
-    backend: &dyn GemmBackend,
+    backend: &dyn GemmBackend<T>,
     backend_label: &str,
     keep_factors: bool,
 ) -> JobResult {
+    debug_assert_eq!(
+        spec.precision.scalar_name(),
+        T::NAME,
+        "job {} routed to the wrong format pool",
+        spec.id
+    );
     let t0 = Instant::now();
     let n = spec.n;
-    let mut a = build_matrix(spec);
-    let mut ipiv = Vec::new();
-    let outcome = match spec.alg {
-        Alg::Lu => {
-            ipiv = vec![0usize; n];
-            getrf_offload(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+    let a64 = build_matrix64(spec);
+    match spec.mode {
+        Mode::Factorize => {
+            let mut a: Matrix<T> = a64.cast();
+            let mut ipiv = Vec::new();
+            let outcome = match spec.alg {
+                Alg::Lu => {
+                    ipiv = vec![0usize; n];
+                    getrf_offload(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+                }
+                Alg::Cholesky => potrf_offload(n, &mut a.data, n, spec.nb, backend),
+            };
+            let (stats, error) = match outcome {
+                Ok(stats) => (stats, None),
+                Err(e) => (OffloadStats::default(), Some(e.to_string())),
+            };
+            // Accuracy probe (host-side, pure function of the factors):
+            // solve A x = b for the paper's b = A·x_sol and measure the
+            // backward error against the binary64 problem.
+            let berr = if error.is_none() {
+                let (_xsol, b64) = matgen::rhs_for(&a64);
+                let mut x: Vec<T> = b64.iter().map(|&v| T::from_f64(v)).collect();
+                match spec.alg {
+                    Alg::Lu => getrs(n, 1, &a.data, n, &ipiv, &mut x, n),
+                    Alg::Cholesky => potrs(n, 1, &a.data, n, &mut x, n),
+                }
+                Some(backward_error(&a64, &b64, &x))
+            } else {
+                None
+            };
+            JobResult {
+                id: spec.id,
+                alg: spec.alg,
+                n,
+                precision: spec.precision,
+                mode: spec.mode,
+                backend: backend_label.to_string(),
+                error,
+                stats,
+                wall_s: t0.elapsed().as_secs_f64(),
+                backward_error: berr,
+                digits: berr.map(digits_of),
+                refine_iters: None,
+                fingerprint: fingerprint(&a.data, &ipiv),
+                factors: keep_factors.then(|| a.data.iter().map(|v| v.bits()).collect()),
+                ipiv: keep_factors.then(|| ipiv.clone()),
+            }
         }
-        Alg::Cholesky => potrf_offload(n, &mut a.data, n, spec.nb, backend),
-    };
-    let (stats, error) = match outcome {
-        Ok(stats) => (stats, None),
-        Err(e) => (OffloadStats::default(), Some(e.to_string())),
-    };
-    JobResult {
-        id: spec.id,
-        alg: spec.alg,
-        n,
-        backend: backend_label.to_string(),
-        error,
-        stats,
-        wall_s: t0.elapsed().as_secs_f64(),
-        fingerprint: fingerprint(&a.data, &ipiv),
-        factors: keep_factors.then(|| a.data.iter().map(|p| p.0).collect()),
-        ipiv: keep_factors.then(|| ipiv.clone()),
+        Mode::Refine => {
+            let (_xsol, b64) = matgen::rhs_for(&a64);
+            let alg = match spec.alg {
+                Alg::Lu => Factorization::Lu,
+                Alg::Cholesky => Factorization::Cholesky,
+            };
+            match refine_offload::<T>(alg, &a64, &b64, spec.nb, REFINE_MAX_ITER, backend) {
+                Ok(out) => JobResult {
+                    id: spec.id,
+                    alg: spec.alg,
+                    n,
+                    precision: spec.precision,
+                    mode: spec.mode,
+                    backend: backend_label.to_string(),
+                    error: None,
+                    stats: out.stats,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    backward_error: Some(out.backward_error),
+                    digits: Some(digits_of(out.backward_error)),
+                    refine_iters: Some(out.iters),
+                    fingerprint: fingerprint(&out.x, &[]),
+                    factors: keep_factors.then(|| out.x.iter().map(|v| v.to_bits()).collect()),
+                    ipiv: keep_factors.then(Vec::new),
+                },
+                Err(e) => {
+                    let mut r = failed_result(spec, e.to_string());
+                    r.backend = backend_label.to_string();
+                    r.wall_s = t0.elapsed().as_secs_f64();
+                    r
+                }
+            }
+        }
     }
+}
+
+/// `-log10(backward error)` — the paper's "achieved decimal digits" axis
+/// (∞ for an exactly-zero residual; rendered as JSON null).
+fn digits_of(backward_error: f64) -> f64 {
+    -backward_error.log10()
 }
 
 fn failed_result(spec: &JobSpec, error: String) -> JobResult {
@@ -192,23 +450,29 @@ fn failed_result(spec: &JobSpec, error: String) -> JobResult {
         id: spec.id,
         alg: spec.alg,
         n: spec.n,
+        precision: spec.precision,
+        mode: spec.mode,
         backend: spec.backend.clone(),
         error: Some(error),
         stats: OffloadStats::default(),
         wall_s: 0.0,
+        backward_error: None,
+        digits: None,
+        refine_iters: None,
         fingerprint: 0,
         factors: None,
         ipiv: None,
     }
 }
 
-/// FNV-1a over factor bit patterns and pivots.
-pub fn fingerprint(a: &[Posit32], ipiv: &[usize]) -> u64 {
+/// FNV-1a over bit patterns ([`Scalar::bits`], zero-extended) and pivots.
+/// For `Posit32` data this reproduces the PR-1 fingerprints exactly.
+pub fn fingerprint<T: Scalar>(a: &[T], ipiv: &[usize]) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = OFFSET;
-    for p in a {
-        h = (h ^ p.0 as u64).wrapping_mul(PRIME);
+    for &p in a {
+        h = (h ^ p.bits()).wrapping_mul(PRIME);
     }
     for &i in ipiv {
         h = (h ^ i as u64).wrapping_mul(PRIME);
@@ -263,6 +527,36 @@ impl ServiceReport {
         }
     }
 
+    /// Per-format rollup: `(precision, jobs, ok, mean digits)` — the
+    /// format-comparison summary. The mean covers jobs with *finite*
+    /// digits only: zero-residual (`+inf`) and overflowed/invalid solves
+    /// (`-inf`/NaN) are excluded rather than poisoning the mean — consult
+    /// the per-job rows for those.
+    pub fn format_summary(&self) -> Vec<(Precision, usize, usize, f64)> {
+        Precision::ALL
+            .iter()
+            .filter_map(|&p| {
+                let rows: Vec<&JobResult> =
+                    self.results.iter().filter(|r| r.precision == p).collect();
+                if rows.is_empty() {
+                    return None;
+                }
+                let ok = rows.iter().filter(|r| r.error.is_none()).count();
+                let digits: Vec<f64> = rows
+                    .iter()
+                    .filter_map(|r| r.digits)
+                    .filter(|d| d.is_finite())
+                    .collect();
+                let mean = if digits.is_empty() {
+                    f64::NAN
+                } else {
+                    digits.iter().sum::<f64>() / digits.len() as f64
+                };
+                Some((p, rows.len(), ok, mean))
+            })
+            .collect()
+    }
+
     /// Full report as JSON: per-job rows plus aggregate and queue stats.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n  \"workers\": ");
@@ -283,8 +577,9 @@ impl ServiceReport {
                 out.push_str(", ");
             }
             out.push_str(&format!(
-                "{{\"backend\": \"{}\", \"tiles\": {}, \"batches\": {}, \"max_batch\": {}, \"mean_batch\": {}}}",
+                "{{\"backend\": \"{}\", \"format\": \"{}\", \"tiles\": {}, \"batches\": {}, \"max_batch\": {}, \"mean_batch\": {}}}",
                 esc(&q.backend),
+                q.format,
                 q.tiles,
                 q.batches,
                 q.max_batch,
@@ -296,9 +591,24 @@ impl ServiceReport {
     }
 
     /// The aggregate object alone (one line; `serve` emits this per round).
+    /// Includes the per-format rollup so a mixed manifest's JSON carries
+    /// the paper's accuracy comparison directly.
     pub fn aggregate_json(&self) -> String {
+        let formats: Vec<String> = self
+            .format_summary()
+            .into_iter()
+            .map(|(p, jobs, ok, mean_digits)| {
+                format!(
+                    "{{\"precision\": \"{}\", \"jobs\": {}, \"ok\": {}, \"mean_digits\": {}}}",
+                    p.name(),
+                    jobs,
+                    ok,
+                    jnum(mean_digits),
+                )
+            })
+            .collect();
         format!(
-            "{{\"jobs\": {}, \"ok\": {}, \"failed\": {}, \"workers\": {}, \"wall_s\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"nominal_gflops\": {}}}",
+            "{{\"jobs\": {}, \"ok\": {}, \"failed\": {}, \"workers\": {}, \"wall_s\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"nominal_gflops\": {}, \"formats\": [{}]}}",
             self.results.len(),
             self.ok_count(),
             self.failed_count(),
@@ -307,6 +617,7 @@ impl ServiceReport {
             jnum(self.jobs_per_s()),
             jnum(self.agg_update_gflops()),
             jnum(self.agg_nominal_gflops()),
+            formats.join(", "),
         )
     }
 }
@@ -318,11 +629,17 @@ impl JobResult {
             Some(e) => format!("\"{}\"", esc(e)),
             None => "null".to_string(),
         };
+        let refine_iters = match self.refine_iters {
+            Some(i) => i.to_string(),
+            None => "null".to_string(),
+        };
         format!(
-            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"fingerprint\": \"{:#018x}\"}}",
+            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
             self.id,
             self.alg.name(),
             self.n,
+            self.precision.name(),
+            self.mode.name(),
             esc(&self.backend),
             self.error.is_none(),
             error,
@@ -331,6 +648,9 @@ impl JobResult {
             jnum(self.stats.update_s),
             jnum(self.stats.simulated_s),
             jnum(self.stats.update_flops),
+            jopt(self.backward_error),
+            jopt(self.digits),
+            refine_iters,
             self.fingerprint,
         )
     }
@@ -343,6 +663,14 @@ fn jnum(v: f64) -> String {
         format!("{v}")
     } else {
         "null".to_string()
+    }
+}
+
+/// Optional JSON number (`None` and non-finite both render as null).
+fn jopt(v: Option<f64>) -> String {
+    match v {
+        Some(v) => jnum(v),
+        None => "null".to_string(),
     }
 }
 
@@ -364,7 +692,7 @@ fn esc(s: &str) -> String {
 
 #[cfg(test)]
 mod tests {
-    use super::super::manifest::mixed_manifest;
+    use super::super::manifest::{mixed_format_manifest, mixed_manifest};
     use super::*;
     use crate::coordinator::NativeBackend;
 
@@ -378,6 +706,12 @@ mod tests {
         )
     }
 
+    fn shared_engine() -> Engine {
+        EngineBuilder::new(8)
+            .shared("native", Arc::new(NativeBackend::new(2)))
+            .build()
+    }
+
     #[test]
     fn engine_smoke_all_jobs_succeed_and_report() {
         let jobs = mixed_manifest(6, 40);
@@ -388,11 +722,53 @@ mod tests {
             assert_eq!(r.id, i, "results must be ordered by id");
             assert!(r.stats.update_flops > 0.0);
             assert!(r.wall_s > 0.0);
+            // Every successful job reports its accuracy probe.
+            assert!(r.digits.unwrap() > 3.0, "job {i}: {:?}", r.digits);
         }
         assert!(report.jobs_per_s() > 0.0);
         assert!(report.agg_update_gflops() > 0.0);
         let q = &report.queues[0];
         assert!(q.tiles > 0 && q.batches > 0 && q.max_batch >= 1);
+    }
+
+    #[test]
+    fn mixed_format_manifest_runs_all_formats_and_modes() {
+        let jobs = mixed_format_manifest(10, 40);
+        let report = shared_engine().run(&jobs, 4, false);
+        assert_eq!(report.ok_count(), jobs.len(), "{:?}", report.results);
+        for (spec, r) in jobs.iter().zip(&report.results) {
+            assert_eq!(r.precision, spec.precision);
+            assert_eq!(r.mode, spec.mode);
+            assert!(r.digits.is_some(), "job {}", r.id);
+            if spec.mode == Mode::Refine {
+                assert!(r.refine_iters.unwrap() >= 1);
+                // Refined jobs reach ~binary64 accuracy regardless of the
+                // 32-bit working format.
+                assert!(r.digits.unwrap() > 10.0, "job {}: {:?}", r.id, r.digits);
+            }
+        }
+        // binary64 factorize jobs are far more accurate than 32-bit ones.
+        let summary = report.format_summary();
+        assert_eq!(summary.len(), 3);
+        let digits_of = |p: Precision| {
+            summary.iter().find(|s| s.0 == p).map(|s| s.3).unwrap()
+        };
+        assert!(digits_of(Precision::F64) > digits_of(Precision::F32) + 4.0);
+        // Tiles went through per-format queues.
+        for fmt in ["posit32", "binary32", "binary64"] {
+            let q = report.queues.iter().find(|q| q.format == fmt).unwrap();
+            assert!(q.tiles > 0, "{fmt} queue saw no tiles");
+        }
+    }
+
+    #[test]
+    fn posit_only_engine_fails_f32_jobs_deterministically() {
+        let mut jobs = mixed_manifest(2, 32);
+        jobs[1].precision = Precision::F32;
+        let report = engine().run(&jobs, 2, false);
+        assert!(report.results[0].error.is_none());
+        let err = report.results[1].error.as_deref().unwrap();
+        assert!(err.contains("f32"), "{err}");
     }
 
     #[test]
@@ -408,13 +784,16 @@ mod tests {
 
     #[test]
     fn report_json_is_well_formed_enough() {
-        let jobs = mixed_manifest(3, 32);
-        let report = engine().run(&jobs, 2, false);
+        let jobs = mixed_format_manifest(4, 32);
+        let report = shared_engine().run(&jobs, 2, false);
         let json = report.to_json();
-        assert_eq!(json.matches("\"id\":").count(), 3);
+        assert_eq!(json.matches("\"id\":").count(), 4);
         assert!(json.contains("\"aggregate\""));
         assert!(json.contains("\"queues\""));
         assert!(json.contains("\"jobs_per_s\""));
+        assert!(json.contains("\"precision\""));
+        assert!(json.contains("\"digits\""));
+        assert!(json.contains("\"formats\""));
         // Balanced braces/brackets (cheap structural check).
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
@@ -424,9 +803,9 @@ mod tests {
     fn fingerprint_distinguishes_and_is_stable() {
         let jobs = mixed_manifest(2, 32);
         let be = NativeBackend::new(1);
-        let r1 = run_job_sequential(&jobs[0], &be, false);
-        let r2 = run_job_sequential(&jobs[0], &be, false);
-        let r3 = run_job_sequential(&jobs[1], &be, false);
+        let r1 = run_job_sequential::<crate::posit::Posit32>(&jobs[0], &be, false);
+        let r2 = run_job_sequential::<crate::posit::Posit32>(&jobs[0], &be, false);
+        let r3 = run_job_sequential::<crate::posit::Posit32>(&jobs[1], &be, false);
         assert_eq!(r1.fingerprint, r2.fingerprint);
         assert_ne!(r1.fingerprint, r3.fingerprint);
     }

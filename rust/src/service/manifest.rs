@@ -5,7 +5,8 @@
 //! ```text
 //! # alg     key=value options (any order)
 //! lu        n=512 nb=64 seed=7 sigma=1.0 class=normal backend=native
-//! cholesky  n=384 sigma=0.01
+//! cholesky  n=384 sigma=0.01 precision=f32
+//! lu        n=256 precision=f32 mode=refine    # factorize f32, refine in f64
 //! ```
 //!
 //! * `alg` — `lu`/`getrf` or `cholesky`/`potrf`.
@@ -16,7 +17,16 @@
 //! * `sigma` — entry standard deviation (default 1).
 //! * `class` — `normal` or `spd` (default: `normal` for LU, `spd` for
 //!   Cholesky; a non-SPD Cholesky job simply fails and is reported).
-//! * `backend` — dispatch-queue name (default: the engine's primary).
+//! * `backend` — dispatch-queue name within the job's format pool
+//!   (default: the pool's primary).
+//! * `precision` — numeric format the job runs in: `posit32` (default),
+//!   `f32` or `f64`. One manifest can mix formats; the engine routes each
+//!   job to the format-matched backend pool, which is how a single
+//!   `batch` run produces the paper's posit-vs-binary32 comparison.
+//! * `mode` — `factor` (default) or `refine`: `refine` factorizes in the
+//!   job's precision and then iteratively refines residuals in binary64
+//!   ([`crate::coordinator::drivers::refine_offload`]), reporting the
+//!   achieved accuracy in decimal digits.
 //!
 //! `#` starts a comment; blank lines are skipped. Matrix generation is a
 //! pure function of the spec, so the same manifest produces bit-identical
@@ -76,6 +86,76 @@ impl MatrixClass {
     }
 }
 
+/// Numeric format a job runs in — the experimental variable the paper
+/// compares. Every format has its own backend pool in the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Posit(32,2), the paper's format.
+    Posit32,
+    /// IEEE binary32 (the paper's baseline).
+    F32,
+    /// IEEE binary64 (ground truth / refinement target).
+    F64,
+}
+
+impl Precision {
+    /// Manifest spelling (`precision=` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Posit32 => "posit32",
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    /// The matching [`crate::blas::Scalar::NAME`].
+    pub fn scalar_name(self) -> &'static str {
+        match self {
+            Precision::Posit32 => "posit32",
+            Precision::F32 => "binary32",
+            Precision::F64 => "binary64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "posit32" | "posit" => Ok(Precision::Posit32),
+            "f32" | "binary32" | "float" => Ok(Precision::F32),
+            "f64" | "binary64" | "double" => Ok(Precision::F64),
+            other => bail!("unknown precision '{other}' (want posit32|f32|f64)"),
+        }
+    }
+
+    pub const ALL: [Precision; 3] = [Precision::Posit32, Precision::F32, Precision::F64];
+}
+
+/// What a job does with its factorization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Factorize only (plus the accuracy probe solve).
+    Factorize,
+    /// Factorize in the job's precision, then mixed-precision iterative
+    /// refinement with binary64 residuals.
+    Refine,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Factorize => "factor",
+            Mode::Refine => "refine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "factor" | "factorize" => Ok(Mode::Factorize),
+            "refine" => Ok(Mode::Refine),
+            other => bail!("unknown mode '{other}' (want factor|refine)"),
+        }
+    }
+}
+
 /// One factorization job; see the module docs for field semantics.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
@@ -86,7 +166,11 @@ pub struct JobSpec {
     pub seed: u64,
     pub sigma: f64,
     pub class: MatrixClass,
-    /// Dispatch-queue name; empty selects the engine's primary backend.
+    /// Numeric format the job runs in (selects the backend pool).
+    pub precision: Precision,
+    /// Factorize-only or mixed-precision refinement.
+    pub mode: Mode,
+    /// Dispatch-queue name; empty selects the pool's primary backend.
     pub backend: String,
 }
 
@@ -104,6 +188,8 @@ impl JobSpec {
                 Alg::Lu => MatrixClass::Normal,
                 Alg::Cholesky => MatrixClass::Spd,
             },
+            precision: Precision::Posit32,
+            mode: Mode::Factorize,
             backend: String::new(),
         }
     }
@@ -136,6 +222,13 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
                 "class" => {
                     spec.class = MatrixClass::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
                 }
+                "precision" => {
+                    spec.precision =
+                        Precision::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
+                }
+                "mode" => {
+                    spec.mode = Mode::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
+                }
                 "backend" => spec.backend = val.to_string(),
                 other => bail!("line {lineno}: unknown key '{other}'"),
             }
@@ -157,7 +250,8 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
 /// Deterministic mixed workload used by the benches and tests: alternating
 /// LU/Cholesky over a ladder of sizes `base_n .. base_n + 3*base_n/4`,
 /// with an occasional small-σ job. Panel width 32 keeps several trailing
-/// updates per job even at small sizes.
+/// updates per job even at small sizes. All jobs run in Posit(32,2); see
+/// [`mixed_format_manifest`] for the heterogeneous-format variant.
 pub fn mixed_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
     (0..count)
         .map(|i| {
@@ -173,6 +267,31 @@ pub fn mixed_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
         .collect()
 }
 
+/// Deterministic heterogeneous-format workload: like [`mixed_manifest`]
+/// but cycling `posit32`/`f32`/`f64` jobs (decoupled from the alg cycle so
+/// every format sees both algorithms) and marking every 7th-ish job as a
+/// mixed-precision refinement job. The workload the format-comparison
+/// benches and the mixed-format determinism tests run.
+pub fn mixed_format_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
+    (0..count)
+        .map(|i| {
+            let alg = if i % 3 == 2 { Alg::Cholesky } else { Alg::Lu };
+            let n = base_n + (i % 4) * base_n / 4;
+            let mut spec = JobSpec::new(i, alg, n);
+            spec.nb = 32;
+            spec.precision = match i % 5 {
+                0 | 3 => Precision::Posit32,
+                1 | 4 => Precision::F32,
+                _ => Precision::F64,
+            };
+            if i % 7 == 3 {
+                spec.mode = Mode::Refine;
+            }
+            spec
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,7 +300,7 @@ mod tests {
     fn parses_full_and_minimal_lines() {
         let text = "\
 # a comment
-lu n=512 nb=64 seed=7 sigma=0.5 class=spd backend=fpga
+lu n=512 nb=64 seed=7 sigma=0.5 class=spd backend=fpga precision=f32 mode=refine
 
 cholesky n=384   # trailing comment
 ";
@@ -192,10 +311,29 @@ cholesky n=384   # trailing comment
         assert_eq!(jobs[0].sigma, 0.5);
         assert_eq!(jobs[0].class, MatrixClass::Spd);
         assert_eq!(jobs[0].backend, "fpga");
+        assert_eq!(jobs[0].precision, Precision::F32);
+        assert_eq!(jobs[0].mode, Mode::Refine);
         assert_eq!(jobs[1].alg, Alg::Cholesky);
         assert_eq!(jobs[1].class, MatrixClass::Spd, "cholesky defaults to spd");
+        assert_eq!(jobs[1].precision, Precision::Posit32, "default format");
+        assert_eq!(jobs[1].mode, Mode::Factorize, "default mode");
         assert!(jobs[1].backend.is_empty());
         assert_eq!(jobs[1].id, 1);
+    }
+
+    #[test]
+    fn parses_precision_spellings() {
+        for (s, want) in [
+            ("posit32", Precision::Posit32),
+            ("posit", Precision::Posit32),
+            ("f32", Precision::F32),
+            ("binary32", Precision::F32),
+            ("f64", Precision::F64),
+            ("binary64", Precision::F64),
+        ] {
+            assert_eq!(Precision::parse(s).unwrap(), want, "{s}");
+        }
+        assert!(Precision::parse("f16").is_err());
     }
 
     #[test]
@@ -205,6 +343,8 @@ cholesky n=384   # trailing comment
         assert!(parse_manifest("lu").is_err());
         assert!(parse_manifest("lu n=8 bogus=1").is_err());
         assert!(parse_manifest("lu n=8 nb=abc").is_err());
+        assert!(parse_manifest("lu n=8 precision=f16").is_err());
+        assert!(parse_manifest("lu n=8 mode=turbo").is_err());
         assert!(parse_manifest("# only comments\n").is_err());
     }
 
@@ -218,6 +358,24 @@ cholesky n=384   # trailing comment
         }
         assert!(a.iter().any(|j| j.alg == Alg::Cholesky));
         assert!(a.iter().any(|j| j.alg == Alg::Lu));
+        assert!(a.iter().all(|j| j.precision == Precision::Posit32));
         assert!(a.iter().map(|j| j.n).collect::<std::collections::HashSet<_>>().len() > 1);
+    }
+
+    #[test]
+    fn mixed_format_manifest_covers_formats_algs_and_modes() {
+        let jobs = mixed_format_manifest(30, 48);
+        for p in Precision::ALL {
+            assert!(
+                jobs.iter().any(|j| j.precision == p && j.alg == Alg::Lu),
+                "missing lu {p:?}"
+            );
+            assert!(
+                jobs.iter().any(|j| j.precision == p && j.alg == Alg::Cholesky),
+                "missing cholesky {p:?}"
+            );
+        }
+        assert!(jobs.iter().any(|j| j.mode == Mode::Refine));
+        assert!(jobs.iter().filter(|j| j.mode == Mode::Refine).count() >= 2);
     }
 }

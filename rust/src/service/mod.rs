@@ -1,29 +1,42 @@
 //! L4 service: the batched multi-factorization engine (the production
 //! layer the ROADMAP's north star asks for on top of the paper's §5.2
-//! offload machinery).
+//! offload machinery), **generic over the numeric format**.
 //!
 //! The paper's accelerators earn their speedups on *streams* of dense
 //! factorizations; a single `GemmBackend` driven by one sequential driver
-//! leaves them idle between panels. This module turns the coordinator into
-//! a throughput system:
+//! leaves them idle between panels. And the paper's headline result is a
+//! *comparison* — Posit(32,2) vs binary32 on the same problems — so the
+//! throughput layer treats the format as per-job data. This module turns
+//! the coordinator into a throughput system:
 //!
 //! * [`manifest`] — [`JobSpec`] and the plain-text job-manifest format
-//!   (`alg n=... nb=... seed=...` per line), plus a deterministic
-//!   [`mixed_manifest`] generator for benches/tests.
-//! * [`queue`] — one [`BatchQueue`] per shared backend: a dispatcher that
-//!   folds all pending trailing-update tiles — typically from *different*
-//!   jobs — into one contiguous [`GemmBackend::gemm_update_many`]
-//!   submission. Workers reach it through the [`QueueBackend`] proxy.
+//!   (`alg n=... nb=... seed=... precision=... mode=...` per line) with a
+//!   per-job [`Precision`] (`posit32`/`f32`/`f64`) and [`Mode`]
+//!   (`factor`/`refine`), plus deterministic [`mixed_manifest`] /
+//!   [`mixed_format_manifest`] generators for benches/tests.
+//! * [`queue`] — one [`BatchQueue<T>`] per shared backend *per format*: a
+//!   dispatcher that folds all pending trailing-update tiles — typically
+//!   from *different* jobs of the same format — into one contiguous
+//!   [`GemmBackend::gemm_update_many`] submission. Workers reach it
+//!   through the [`QueueBackend<T>`] proxy.
 //! * [`engine`] — the [`Engine`] worker pool sharding a manifest across
-//!   threads, per-job [`JobResult`]s (stats, error, fingerprint), and the
-//!   throughput [`ServiceReport`] with JSON emission (the `batch`/`serve`
-//!   CLI subcommands).
+//!   threads and routing every job to its format-matched backend pool
+//!   (built with [`EngineBuilder`]; [`Engine::new`] keeps the posit-only
+//!   PR-1 API). Per-job [`JobResult`]s carry stats, error, fingerprint,
+//!   and the job's achieved accuracy in decimal digits (factorize jobs
+//!   probe-solve against the binary64 ground truth; `mode=refine` jobs
+//!   factorize in the working format and iteratively refine residuals in
+//!   binary64 via [`crate::coordinator::drivers::refine_offload`]). The
+//!   throughput [`ServiceReport`] renders everything — including a
+//!   per-format accuracy rollup — as JSON (the `batch`/`serve` CLI
+//!   subcommands).
 //!
-//! **Bit-determinism contract:** for every job the factors and pivots are
-//! bit-identical to the sequential `coordinator::drivers` on the same
-//! spec, regardless of worker count, batch size, or interleaving — the
-//! scheduling layer chooses only *when* tiles run, never their operands or
-//! kernels. Pinned by `rust/tests/service_determinism.rs`.
+//! **Bit-determinism contract:** for every job the factors (or refined
+//! solution), pivots and accuracy numbers are bit-identical to the
+//! sequential `coordinator::drivers` on the same spec, regardless of
+//! worker count, batch size, format mix, or interleaving — the scheduling
+//! layer chooses only *when* tiles run, never their operands or kernels.
+//! Pinned by `rust/tests/service_determinism.rs`.
 //!
 //! [`GemmBackend::gemm_update_many`]: crate::coordinator::GemmBackend::gemm_update_many
 //! [`GemmBackend`]: crate::coordinator::GemmBackend
@@ -32,6 +45,12 @@ pub mod engine;
 pub mod manifest;
 pub mod queue;
 
-pub use engine::{fingerprint, run_job_sequential, Engine, JobResult, ServiceReport};
-pub use manifest::{mixed_manifest, parse_manifest, Alg, JobSpec, MatrixClass};
+pub use engine::{
+    fingerprint, run_job_sequential, run_job_sequential_any, Engine, EngineBuilder, JobResult,
+    ServiceReport, REFINE_MAX_ITER,
+};
+pub use manifest::{
+    mixed_format_manifest, mixed_manifest, parse_manifest, Alg, JobSpec, MatrixClass, Mode,
+    Precision,
+};
 pub use queue::{BatchQueue, QueueBackend, QueueReport};

@@ -1,16 +1,23 @@
-//! Per-backend dispatch queues: the batching heart of the service.
+//! Per-backend dispatch queues: the batching heart of the service,
+//! generic over the numeric format.
 //!
-//! Every shared [`GemmBackend`] gets one [`BatchQueue`]: a dispatcher
-//! thread that drains an MPSC channel of staged trailing-update tiles and
-//! hands everything currently pending to the backend as **one**
+//! Every shared [`GemmBackend<T>`] gets one [`BatchQueue<T>`]: a
+//! dispatcher thread that drains an MPSC channel of staged trailing-update
+//! tiles and hands everything currently pending to the backend as **one**
 //! [`GemmBackend::gemm_update_many`] submission. Workers running different
 //! factorization jobs therefore share accelerator submissions: with W
 //! workers in flight a batch typically carries up to W tiles, which the
 //! native backend spreads over the shared pool and a real accelerator
 //! would execute as one contiguous command buffer.
 //!
-//! Workers talk to the queue through [`QueueBackend`], a per-job proxy
-//! implementing [`GemmBackend`]: it stages the operands into owned,
+//! Tiles only ever fold with tiles of the *same* format: the engine keeps
+//! one queue set per [`super::manifest::Precision`], so a mixed-format
+//! manifest multiplexes each job onto its format-matched pool and a
+//! posit32 submission never has to carry an f32 tile (real accelerators
+//! have per-format kernels; see [`crate::coordinator::PjrtBackend`]).
+//!
+//! Workers talk to the queue through [`QueueBackend<T>`], a per-job proxy
+//! implementing [`GemmBackend<T>`]: it stages the operands into owned,
 //! contiguous buffers (the same host-side staging the paper performs when
 //! shipping operands over PCIe), submits, blocks for the reply, and copies
 //! the result back. Blocking per call preserves the driver's sequential
@@ -27,6 +34,7 @@
 //! would in isolation, keeping per-job outcomes deterministic; retried
 //! tiles count twice in the queue's tile counter.
 
+use crate::blas::Scalar;
 use crate::coordinator::{GemmBackend, GemmJob};
 use crate::posit::Posit32;
 use anyhow::{anyhow, Result};
@@ -36,25 +44,25 @@ use std::sync::{Arc, Mutex};
 
 /// One staged tile: owned contiguous operands (`lda = m`, `ldb = k`,
 /// `ldc = m`) plus the reply channel of the submitting proxy.
-struct TileRequest {
+struct TileRequest<T> {
     m: usize,
     k: usize,
     n: usize,
-    a: Vec<Posit32>,
-    b: Vec<Posit32>,
-    c: Vec<Posit32>,
+    a: Vec<T>,
+    b: Vec<T>,
+    c: Vec<T>,
     /// Execute in its own submission, never folded with other tiles. Used
     /// by the failure-isolation retry: a tile's reported outcome is always
     /// its outcome *in isolation*, so one bad tile cannot poison — or be
     /// poisoned by — whatever happened to share its batch.
     solo: bool,
-    reply: Sender<TileReply>,
+    reply: Sender<TileReply<T>>,
 }
 
 /// The updated C buffer, or the backend error rendered to a string (an
 /// `anyhow::Error` is not `Clone`, and one backend failure has to fan out
 /// to every tile of the batch).
-type TileReply = std::result::Result<Vec<Posit32>, String>;
+type TileReply<T> = std::result::Result<Vec<T>, String>;
 
 /// Counters the service report surfaces per queue.
 #[derive(Default)]
@@ -68,6 +76,8 @@ struct QueueCounters {
 #[derive(Clone, Debug)]
 pub struct QueueReport {
     pub backend: String,
+    /// Numeric format of the queue's tiles ([`Scalar::NAME`]).
+    pub format: &'static str,
     pub tiles: u64,
     pub batches: u64,
     pub max_batch: u64,
@@ -84,26 +94,26 @@ impl QueueReport {
     }
 }
 
-/// A dispatch queue bound to one shared backend instance.
-pub struct BatchQueue {
+/// A dispatch queue bound to one shared backend instance of format `T`.
+pub struct BatchQueue<T: Scalar = Posit32> {
     name: String,
-    backend: Arc<dyn GemmBackend>,
-    tx: Mutex<Option<Sender<TileRequest>>>,
+    backend: Arc<dyn GemmBackend<T>>,
+    tx: Mutex<Option<Sender<TileRequest<T>>>>,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     counters: Arc<QueueCounters>,
 }
 
-impl BatchQueue {
+impl<T: Scalar> BatchQueue<T> {
     /// Start the dispatcher thread for `backend`. `max_batch` caps how many
     /// pending tiles fold into one submission (bounds per-batch latency).
     pub fn start(
         name: impl Into<String>,
-        backend: Arc<dyn GemmBackend>,
+        backend: Arc<dyn GemmBackend<T>>,
         max_batch: usize,
-    ) -> Arc<BatchQueue> {
+    ) -> Arc<BatchQueue<T>> {
         let name = name.into();
         let max_batch = max_batch.max(1);
-        let (tx, rx) = channel::<TileRequest>();
+        let (tx, rx) = channel::<TileRequest<T>>();
         let counters = Arc::new(QueueCounters::default());
         let dispatcher = {
             let backend = Arc::clone(&backend);
@@ -133,13 +143,14 @@ impl BatchQueue {
     pub fn report(&self) -> QueueReport {
         QueueReport {
             backend: self.name.clone(),
+            format: T::NAME,
             tiles: self.counters.tiles.load(Ordering::Relaxed),
             batches: self.counters.batches.load(Ordering::Relaxed),
             max_batch: self.counters.max_batch.load(Ordering::Relaxed),
         }
     }
 
-    fn submit(&self, req: TileRequest) -> Result<()> {
+    fn submit(&self, req: TileRequest<T>) -> Result<()> {
         let tx = self.tx.lock().unwrap();
         tx.as_ref()
             .ok_or_else(|| anyhow!("dispatch queue '{}' is shut down", self.name))?
@@ -148,7 +159,7 @@ impl BatchQueue {
     }
 }
 
-impl Drop for BatchQueue {
+impl<T: Scalar> Drop for BatchQueue<T> {
     fn drop(&mut self) {
         // Close the channel so the dispatcher drains and exits, then join.
         *self.tx.lock().unwrap() = None;
@@ -158,15 +169,15 @@ impl Drop for BatchQueue {
     }
 }
 
-fn dispatch_loop(
-    rx: Receiver<TileRequest>,
-    backend: Arc<dyn GemmBackend>,
+fn dispatch_loop<T: Scalar>(
+    rx: Receiver<TileRequest<T>>,
+    backend: Arc<dyn GemmBackend<T>>,
     counters: Arc<QueueCounters>,
     max_batch: usize,
 ) {
     // A solo request popped while folding must not join the batch; it is
     // carried over and runs alone as the next submission.
-    let mut carry: Option<TileRequest> = None;
+    let mut carry: Option<TileRequest<T>> = None;
     loop {
         let first = match carry.take() {
             Some(req) => req,
@@ -188,7 +199,7 @@ fn dispatch_loop(
                 Err(_) => break,
             }
         }
-        let mut views: Vec<GemmJob<'_>> = batch
+        let mut views: Vec<GemmJob<'_, T>> = batch
             .iter_mut()
             .map(|req| GemmJob {
                 m: req.m,
@@ -225,18 +236,18 @@ fn dispatch_loop(
     }
 }
 
-/// Proxy presenting one dispatch queue as a plain [`GemmBackend`] to the
-/// sequential drivers. Cheap to construct (the service makes one per
+/// Proxy presenting one dispatch queue as a plain [`GemmBackend<T>`] to
+/// the sequential drivers. Cheap to construct (the service makes one per
 /// in-flight job for per-job tile counts) and safe to share across
 /// threads — every call uses its own reply channel.
-pub struct QueueBackend {
-    queue: Arc<BatchQueue>,
+pub struct QueueBackend<T: Scalar = Posit32> {
+    queue: Arc<BatchQueue<T>>,
     label: String,
     tiles: AtomicU64,
 }
 
-impl QueueBackend {
-    pub fn new(queue: Arc<BatchQueue>) -> QueueBackend {
+impl<T: Scalar> QueueBackend<T> {
+    pub fn new(queue: Arc<BatchQueue<T>>) -> QueueBackend<T> {
         QueueBackend {
             label: format!("{}+batched", queue.name()),
             queue,
@@ -245,7 +256,7 @@ impl QueueBackend {
     }
 }
 
-impl GemmBackend for QueueBackend {
+impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
     fn name(&self) -> &str {
         &self.label
     }
@@ -255,11 +266,11 @@ impl GemmBackend for QueueBackend {
         m: usize,
         k: usize,
         n: usize,
-        a: &[Posit32],
+        a: &[T],
         lda: usize,
-        b: &[Posit32],
+        b: &[T],
         ldb: usize,
-        c: &mut [Posit32],
+        c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
         // Stage operands contiguously (accelerator staging; also what lets
@@ -269,16 +280,16 @@ impl GemmBackend for QueueBackend {
         // channel, so the proxy is safe to share across threads (the
         // `GemmBackend: Sync` contract) — concurrent calls can never
         // receive each other's replies.
-        let stage_and_run = |solo: bool| -> Result<Vec<Posit32>> {
-            let mut sa = vec![Posit32::ZERO; m * k];
+        let stage_and_run = |solo: bool| -> Result<Vec<T>> {
+            let mut sa = vec![T::zero(); m * k];
             for l in 0..k {
                 sa[l * m..(l + 1) * m].copy_from_slice(&a[l * lda..l * lda + m]);
             }
-            let mut sb = vec![Posit32::ZERO; k * n];
+            let mut sb = vec![T::zero(); k * n];
             for j in 0..n {
                 sb[j * k..(j + 1) * k].copy_from_slice(&b[j * ldb..j * ldb + k]);
             }
-            let mut sc = vec![Posit32::ZERO; m * n];
+            let mut sc = vec![T::zero(); m * n];
             for j in 0..n {
                 sc[j * m..(j + 1) * m].copy_from_slice(&c[j * ldc..j * ldc + m]);
             }
@@ -337,7 +348,8 @@ mod tests {
     #[test]
     fn queued_updates_bit_match_direct_backend() {
         let direct = NativeBackend::new(2);
-        let queue = BatchQueue::start("native", Arc::new(NativeBackend::new(2)), 8);
+        let queue =
+            BatchQueue::<Posit32>::start("native", Arc::new(NativeBackend::new(2)), 8);
         // Several proxies hammering the queue concurrently, odd shapes,
         // strided C (ldc > m).
         std::thread::scope(|s| {
@@ -367,9 +379,34 @@ mod tests {
             }
         });
         let report = queue.report();
+        assert_eq!(report.format, "posit32");
         assert_eq!(report.tiles, 24);
         assert!(report.batches >= 1 && report.batches <= 24);
         assert!(report.max_batch >= 1);
+    }
+
+    #[test]
+    fn f64_queue_bit_matches_direct_backend() {
+        // The same queue machinery at a different format: binary64 tiles
+        // through the dispatcher must equal the direct backend bit-for-bit.
+        let direct = NativeBackend::new(2);
+        let queue = BatchQueue::<f64>::start("native", Arc::new(NativeBackend::new(2)), 4);
+        let proxy = QueueBackend::new(Arc::clone(&queue));
+        let mut rng = Pcg64::seed(4242);
+        let (m, k, n) = (19, 7, 11);
+        let a = Matrix::<f64>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f64>::random_normal(k, n, 1.0, &mut rng);
+        let c0 = Matrix::<f64>::random_normal(m, n, 1.0, &mut rng);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        direct
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m)
+            .unwrap();
+        proxy
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+            .unwrap();
+        assert_eq!(c1.data, c2.data);
+        assert_eq!(queue.report().format, "binary64");
     }
 
     /// Backend that deterministically rejects one tile shape — the stand-in
@@ -403,7 +440,7 @@ mod tests {
     #[test]
     fn bad_tile_cannot_poison_batch_mates() {
         let bad_m = 13;
-        let queue = BatchQueue::start(
+        let queue = BatchQueue::<Posit32>::start(
             "poison",
             Arc::new(PoisonBackend {
                 inner: NativeBackend::new(1),
@@ -459,7 +496,7 @@ mod tests {
 
     #[test]
     fn queue_reports_backend_name_and_survives_drop() {
-        let queue = BatchQueue::start("native", Arc::new(NativeBackend::new(1)), 4);
+        let queue = BatchQueue::<Posit32>::start("native", Arc::new(NativeBackend::new(1)), 4);
         assert_eq!(queue.name(), "native");
         let proxy = QueueBackend::new(Arc::clone(&queue));
         assert!(proxy.name().contains("native"));

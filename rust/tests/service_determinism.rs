@@ -6,9 +6,17 @@
 //! to the sequential `*_offload` drivers on the same specs. Scheduling —
 //! worker count, batch folding, pool interleaving — must never leak into
 //! the numerics.
+//!
+//! The mixed-format tests extend the contract across the format-generic
+//! API: one manifest carrying posit32 + f32 + f64 jobs (including
+//! `mode=refine` mixed-precision jobs) must be bit-identical to the
+//! sequential drivers *per format* at any worker count.
 
 use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
-use posit_accel::service::{mixed_manifest, run_job_sequential, Engine, JobResult};
+use posit_accel::service::{
+    mixed_format_manifest, mixed_manifest, run_job_sequential, run_job_sequential_any, Engine,
+    EngineBuilder, JobResult, Mode, Precision,
+};
 use std::sync::Arc;
 
 fn shared_backends() -> Vec<(&'static str, Arc<dyn GemmBackend>)> {
@@ -77,6 +85,95 @@ fn factors_bit_identical_across_worker_counts_and_backends() {
             }
         }
     }
+}
+
+/// Mixed-format determinism: one manifest carrying posit32 + f32 + f64
+/// jobs (factorize and refine modes) through a shared format-transparent
+/// backend must be bit-identical to the sequential drivers per format at
+/// any worker count.
+fn assert_mixed_manifest_deterministic<B>(name: &str, backend: Arc<B>)
+where
+    B: GemmBackend<posit_accel::posit::Posit32>
+        + GemmBackend<f32>
+        + GemmBackend<f64>
+        + 'static,
+{
+    let mut jobs = mixed_format_manifest(12, 48);
+    // The generator marks posit32 refine jobs (ids 3, 10); add an f32 and
+    // an f64 refinement job so every format exercises the refine path.
+    jobs[4].mode = Mode::Refine; // id 4: f32
+    jobs[7].mode = Mode::Refine; // id 7: f64
+    for p in Precision::ALL {
+        assert!(jobs.iter().any(|j| j.precision == p), "manifest must mix formats");
+    }
+    assert!(jobs.iter().any(|j| j.mode == Mode::Refine && j.precision == Precision::F32));
+
+    // Ground truth: the plain sequential drivers, job by job, format picked
+    // from the spec.
+    let baseline: Vec<JobResult> = jobs
+        .iter()
+        .map(|spec| run_job_sequential_any(spec, &*backend, true))
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "baseline {name} job {}: {:?}", r.id, r.error);
+    }
+
+    for workers in [1usize, 4, 8] {
+        let engine = EngineBuilder::new(8).shared(name, Arc::clone(&backend)).build();
+        let report = engine.run(&jobs, workers, true);
+        assert_eq!(report.results.len(), jobs.len());
+        for (seq, got) in baseline.iter().zip(&report.results) {
+            assert_eq!(seq.id, got.id);
+            assert!(got.error.is_none(), "{name} x{workers} job {}", got.id);
+            assert_eq!(got.precision, jobs[got.id].precision);
+            assert_eq!(
+                seq.factors, got.factors,
+                "factors/solution differ: {name} x{workers} job {} ({})",
+                seq.id,
+                seq.precision.name()
+            );
+            assert_eq!(seq.ipiv, got.ipiv, "pivots differ: {name} x{workers} job {}", seq.id);
+            assert_eq!(seq.fingerprint, got.fingerprint);
+            // The accuracy numbers are pure functions of the factors — part
+            // of the bit-determinism contract (compared as bits, not ≈).
+            assert_eq!(
+                seq.backward_error.map(f64::to_bits),
+                got.backward_error.map(f64::to_bits),
+                "{name} x{workers} job {}",
+                seq.id
+            );
+            assert_eq!(seq.refine_iters, got.refine_iters);
+            assert!(
+                (seq.stats.simulated_s - got.stats.simulated_s).abs() <= 1e-12,
+                "{name} x{workers} job {}: simulated {} vs {}",
+                seq.id,
+                seq.stats.simulated_s,
+                got.stats.simulated_s
+            );
+        }
+        // Tiles must have flowed through every format's own queue.
+        for fmt in ["posit32", "binary32", "binary64"] {
+            let q = report.queues.iter().find(|q| q.format == fmt).unwrap();
+            assert!(q.tiles > 0, "{name} x{workers}: {fmt} queue saw no tiles");
+        }
+    }
+}
+
+#[test]
+fn mixed_format_manifest_bit_identical_across_worker_counts() {
+    assert_mixed_manifest_deterministic("native", Arc::new(NativeBackend::new(2)));
+}
+
+#[test]
+fn mixed_format_manifest_bit_identical_on_modelled_accelerator() {
+    assert_mixed_manifest_deterministic(
+        "timed-fpga",
+        Arc::new(TimedBackend::new(
+            "timed-fpga",
+            NativeBackend::new(2),
+            |m, k, n| (2 * m * k * n) as f64 / 200e9,
+        )),
+    );
 }
 
 #[test]
