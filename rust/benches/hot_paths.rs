@@ -48,14 +48,33 @@ struct ServiceRow {
     mean_digits: f64,
 }
 
+/// One machine-readable GEMM-kernel measurement (`BENCH_gemm.json`).
+struct GemmRow {
+    kernel: &'static str,
+    format: &'static str,
+    n: usize,
+    seconds: f64,
+    /// Gposit-op/s: 2·n³ posit operations (one add + one mul per mac, the
+    /// operation counting of `posit::counting`) per wall second — directly
+    /// comparable to the paper's Gflops framing.
+    gops: f64,
+}
+
 struct Bench {
     rows: Vec<(String, f64, String)>,
     service: Vec<ServiceRow>,
+    gemm: Vec<GemmRow>,
 }
 
 impl Bench {
     fn new() -> Self {
-        Bench { rows: vec![], service: vec![] }
+        Bench { rows: vec![], service: vec![], gemm: vec![] }
+    }
+    /// Record one GEMM kernel point (also mirrored into the CSV rows).
+    fn add_gemm(&mut self, kernel: &'static str, format: &'static str, n: usize, seconds: f64) {
+        let gops = 2.0 * (n as f64).powi(3) / seconds / 1e9;
+        self.add(&format!("gemm {kernel} {format} {n}^3"), gops, "Gop/s");
+        self.gemm.push(GemmRow { kernel, format, n, seconds, gops });
     }
     /// Record `name` at `per`-unit granularity (ns/op or Mflops).
     fn add(&mut self, name: &str, value: f64, unit: &str) {
@@ -124,6 +143,28 @@ impl Bench {
         );
         std::fs::write("results/BENCH_service.json", json).ok();
         println!("[saved results/BENCH_service.json]");
+
+        let grows: Vec<String> = self
+            .gemm
+            .iter()
+            .map(|r| {
+                format!(
+                    "  {{\"kernel\": \"{}\", \"format\": \"{}\", \"n\": {}, \"seconds\": {}, \"gposit_ops_per_s\": {}}}",
+                    r.kernel,
+                    r.format,
+                    r.n,
+                    jnum(r.seconds),
+                    jnum(r.gops),
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n\"quick\": {},\n\"rows\": [\n{}\n]\n}}\n",
+            quick(),
+            grows.join(",\n")
+        );
+        std::fs::write("results/BENCH_gemm.json", json).ok();
+        println!("[saved results/BENCH_gemm.json]");
     }
 }
 
@@ -222,12 +263,19 @@ fn bench_gemm(b: &mut Bench) {
     });
     b.add("gemm native naive 192^3", flops / st.min / 1e6, "Mflops");
     let st = bench_stats(3, || {
-        blas::gemm(
+        blas::gemm_blocked_ref(
             Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bb.data,
             n, Posit32::ZERO, &mut c.data, n,
         )
     });
     b.add("gemm native blocked 192^3", flops / st.min / 1e6, "Mflops");
+    let st = bench_stats(3, || {
+        blas::gemm(
+            Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bb.data,
+            n, Posit32::ZERO, &mut c.data, n,
+        )
+    });
+    b.add("gemm native packed 192^3", flops / st.min / 1e6, "Mflops");
     let threads = blas::default_threads();
     let st = bench_stats(3, || {
         blas::gemm_parallel(
@@ -245,7 +293,7 @@ fn bench_gemm(b: &mut Bench) {
     let bf: Matrix<f32> = bb.cast();
     let mut cf = Matrix::<f32>::zeros(n, n);
     let st = bench_stats(3, || {
-        blas::gemm(
+        blas::gemm_blocked_ref(
             Trans::No, Trans::No, n, n, n, 1.0f32, &af.data, n, &bf.data, n,
             0.0, &mut cf.data, n,
         )
@@ -266,6 +314,125 @@ fn bench_gemm(b: &mut Bench) {
             });
             b.add("gemm_update pjrt 128x64x128 tile", tile_flops / st.min / 1e6, "Mflops");
         }
+    }
+}
+
+/// GEMM kernel ladder for `results/BENCH_gemm.json`: naive vs the
+/// retained PR-2 blocked kernel ([`blas::gemm_blocked_ref`]) vs the
+/// decode-once packed microkernel ([`blas::gemm_packed`]), per numeric
+/// format and size, in Gposit-op/s (2·n³ posit operations per multiply —
+/// one add + one mul per mac, the operation counting of
+/// `posit::counting` — so the numbers sit in the paper's Gflops framing).
+///
+/// Always opens with the cheap **bit-identity gate**: packed vs naive on
+/// the smoke shapes, all four transpose combinations. A divergence aborts
+/// the bench with a nonzero exit — this is the CI guard that every push
+/// keeps the packed kernel bit-identical. Quick mode then times small
+/// sizes only; full mode climbs to n = 1024 (naive posit32 is capped at
+/// n = 256: it is decode-bound O(n³) and would dominate the run).
+fn bench_gemm_kernels(b: &mut Bench) {
+    let mut rng = Pcg64::seed(0xB117);
+    for &(m, n, k) in &[(33usize, 29usize, 17usize), (64, 64, 64), (40, 3, 51)] {
+        for ta in [Trans::No, Trans::Yes] {
+            for tb in [Trans::No, Trans::Yes] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let a = Matrix::<Posit32>::random_normal(ar, ac, 1.0, &mut rng);
+                let bb = Matrix::<Posit32>::random_normal(br, bc, 1.0, &mut rng);
+                let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+                let mut c1 = c0.clone();
+                let mut c2 = c0.clone();
+                blas::gemm_naive(
+                    ta, tb, m, n, k, Posit32::ONE, &a.data, ar, &bb.data, br,
+                    Posit32::ONE, &mut c1.data, m,
+                );
+                blas::gemm_packed(
+                    ta, tb, m, n, k, Posit32::ONE, &a.data, ar, &bb.data, br,
+                    Posit32::ONE, &mut c2.data, m,
+                );
+                assert_eq!(
+                    c1.data, c2.data,
+                    "BIT-IDENTITY VIOLATION: gemm_packed != gemm_naive at {m}x{n}x{k} {ta:?}{tb:?}"
+                );
+            }
+        }
+    }
+    println!("[gemm bit-identity gate passed: packed == naive on all smoke shapes]");
+
+    let sizes: &[usize] = if quick() { &[64, 128] } else { &[128, 256, 512, 1024] };
+    for &n in sizes {
+        let reps = if n <= 128 {
+            5
+        } else if n <= 256 {
+            3
+        } else {
+            1
+        };
+        let mut rng = Pcg64::seed(4242 + n as u64);
+        let a = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let bm = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut c = Matrix::<Posit32>::zeros(n, n);
+        if n <= 256 {
+            let st = bench_stats(reps, || {
+                blas::gemm_naive(
+                    Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n,
+                    &bm.data, n, Posit32::ZERO, &mut c.data, n,
+                )
+            });
+            b.add_gemm("naive", "posit32", n, st.min);
+        }
+        if n <= 512 {
+            let st = bench_stats(reps, || {
+                blas::gemm_blocked_ref(
+                    Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n,
+                    &bm.data, n, Posit32::ZERO, &mut c.data, n,
+                )
+            });
+            b.add_gemm("blocked", "posit32", n, st.min);
+        }
+        let st = bench_stats(reps, || {
+            blas::gemm_packed(
+                Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bm.data,
+                n, Posit32::ZERO, &mut c.data, n,
+            )
+        });
+        b.add_gemm("packed", "posit32", n, st.min);
+
+        let af: Matrix<f32> = a.cast();
+        let bf: Matrix<f32> = bm.cast();
+        let mut cf = Matrix::<f32>::zeros(n, n);
+        let st = bench_stats(reps, || {
+            blas::gemm_blocked_ref(
+                Trans::No, Trans::No, n, n, n, 1.0f32, &af.data, n, &bf.data, n,
+                0.0, &mut cf.data, n,
+            )
+        });
+        b.add_gemm("blocked", "binary32", n, st.min);
+        let st = bench_stats(reps, || {
+            blas::gemm_packed(
+                Trans::No, Trans::No, n, n, n, 1.0f32, &af.data, n, &bf.data, n,
+                0.0, &mut cf.data, n,
+            )
+        });
+        b.add_gemm("packed", "binary32", n, st.min);
+
+        let ad: Matrix<f64> = a.cast();
+        let bd: Matrix<f64> = bm.cast();
+        let mut cd = Matrix::<f64>::zeros(n, n);
+        let st = bench_stats(reps, || {
+            blas::gemm_blocked_ref(
+                Trans::No, Trans::No, n, n, n, 1.0f64, &ad.data, n, &bd.data, n,
+                0.0, &mut cd.data, n,
+            )
+        });
+        b.add_gemm("blocked", "binary64", n, st.min);
+        let st = bench_stats(reps, || {
+            blas::gemm_packed(
+                Trans::No, Trans::No, n, n, n, 1.0f64, &ad.data, n, &bd.data, n,
+                0.0, &mut cd.data, n,
+            )
+        });
+        b.add_gemm("packed", "binary64", n, st.min);
     }
 }
 
@@ -414,6 +581,7 @@ fn main() {
     let mut b = Bench::new();
     bench_scalar_ops(&mut b);
     bench_gemm(&mut b);
+    bench_gemm_kernels(&mut b);
     bench_decompositions(&mut b);
     bench_service(&mut b);
     bench_service_formats(&mut b);

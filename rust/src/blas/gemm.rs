@@ -7,6 +7,18 @@
 //! (with `beta = 0` overwriting, LAPACK-style). Every backend — this native
 //! code, the blocked/parallel variants, the Pallas kernel, the FPGA PE
 //! model — produces bit-identical results because they share this order.
+//!
+//! Kernels, all bit-identical and all routed through [`gemm`]:
+//!
+//! * [`gemm_naive`] — per-element sequential dots; the semantic ground
+//!   truth.
+//! * [`gemm_packed`] — the production path: decode-once packed panels +
+//!   `MR x NR` register-blocked microkernel in the unpacked domain
+//!   (transposes resolved at pack time). This is what [`gemm_parallel`],
+//!   the pool workers and the coordinator backends execute.
+//! * [`gemm_blocked_ref`] — the previous decode-hoisted blocked kernel,
+//!   kept as the `BENCH_gemm.json` baseline and as a third independent
+//!   implementation for the bit-identity tests.
 
 use super::Scalar;
 
@@ -31,6 +43,50 @@ fn at<T: Copy>(x: &[T], ld: usize, i: usize, j: usize) -> T {
     x[i + j * ld]
 }
 
+/// Debug-mode validation of GEMM dimensions and strides, applied at every
+/// public entry point: a malformed call (e.g. a bad manifest job with
+/// inconsistent `n`/`ld`) fails loudly at the API boundary with a message
+/// naming the offending operand, instead of panicking on an out-of-bounds
+/// index somewhere mid-tile.
+#[allow(clippy::too_many_arguments)]
+fn validate_dims<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    c: &[T],
+    ldc: usize,
+) {
+    let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+    let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+    debug_assert!(lda >= ar.max(1), "gemm: lda {lda} < op(A) rows {ar}");
+    debug_assert!(ldb >= br.max(1), "gemm: ldb {ldb} < op(B) rows {br}");
+    debug_assert!(ldc >= m.max(1), "gemm: ldc {ldc} < m {m}");
+    // Buffer-length checks: an operand with a zero dimension (k == 0) is
+    // never referenced, so either extent being 0 skips the check
+    // (LAPACK-style: A may be empty when op(A) has no columns OR no rows).
+    debug_assert!(
+        ar == 0 || ac == 0 || a.len() >= lda * (ac - 1) + ar,
+        "gemm: A buffer len {} too small for {ar}x{ac} at lda {lda}",
+        a.len()
+    );
+    debug_assert!(
+        br == 0 || bc == 0 || b.len() >= ldb * (bc - 1) + br,
+        "gemm: B buffer len {} too small for {br}x{bc} at ldb {ldb}",
+        b.len()
+    );
+    debug_assert!(
+        n == 0 || c.len() >= ldc * (n - 1) + m,
+        "gemm: C buffer len {} too small for {m}x{n} at ldc {ldc}",
+        c.len()
+    );
+}
+
 /// Reference GEMM: per-element sequential dot. The semantic ground truth
 /// against which the optimized variants are tested bit-for-bit.
 #[allow(clippy::too_many_arguments)]
@@ -49,6 +105,10 @@ pub fn gemm_naive<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_dims(ta, tb, m, n, k, a, lda, b, ldb, c, ldc);
     for j in 0..n {
         for i in 0..m {
             let mut t = T::zero();
@@ -84,9 +144,15 @@ pub fn combine<T: Scalar>(alpha: T, t: T, beta: T, c: T) -> T {
     }
 }
 
-/// Cache-blocked, column-ordered GEMM. Bit-identical to [`gemm_naive`]:
-/// blocking tiles `i`/`j` only; `k` runs full-length in ascending order
-/// per output element.
+/// Work threshold (in `m*n*k` macs) below which the packed kernel's
+/// buffer setup costs more than its decode savings; tiny or degenerate
+/// shapes take the reference path instead (bit-identical either way).
+const PACKED_MIN_WORK: usize = 4096;
+
+/// The production GEMM entry point. Bit-identical to [`gemm_naive`] for
+/// every shape, transpose combination and format — it only picks the
+/// fastest kernel: the decode-once packed microkernel ([`gemm_packed`])
+/// for real tiles, the reference path for degenerate ones.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm<T: Scalar>(
     ta: Trans,
@@ -106,10 +172,189 @@ pub fn gemm<T: Scalar>(
     if m == 0 || n == 0 {
         return;
     }
+    validate_dims(ta, tb, m, n, k, a, lda, b, ldb, c, ldc);
+    // The packed kernel computes full MR x NR tiles, so very thin shapes
+    // pay for padded lanes: route to it only when the padded mac count
+    // stays within 2x the true work (a 1-column GEMV-like call would pay
+    // NR x) and the tile is big enough to amortize the pack buffers.
+    let work = m * n * k;
+    let padded = (m.div_ceil(MR) * MR) * (n.div_ceil(NR) * NR) * k;
+    if work < PACKED_MIN_WORK || padded > 2 * work {
+        return gemm_blocked_ref(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+    }
+    gemm_packed(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// The pre-packing blocked GEMM (decode-hoisted NN kernel, naive for the
+/// transposed combinations) — the PR-2 hot path, retained verbatim as the
+/// perf baseline for `results/BENCH_gemm.json` and as an extra
+/// bit-identity cross-check of [`gemm_packed`]. Bit-identical to
+/// [`gemm_naive`]: blocking tiles `i`/`j` only; `k` runs full-length in
+/// ascending order per output element.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked_ref<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_dims(ta, tb, m, n, k, a, lda, b, ldb, c, ldc);
     match (ta, tb) {
         // The hot case for the decomposition drivers: no transposes.
         (Trans::No, Trans::No) => gemm_nn(m, n, k, alpha, a, lda, b, ldb, beta, c, ldc),
         _ => gemm_naive(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc),
+    }
+}
+
+/// Microkernel register-tile dimensions: MR x NR accumulators held live
+/// across the whole ascending-k loop, giving the out-of-order core
+/// MR*NR independent posit dependency chains to overlap.
+const MR: usize = 4;
+const NR: usize = 4;
+/// Row-panel height: op(A) is packed (and decoded) once per `MC x k`
+/// panel; within one column panel the row panels are disjoint, so every
+/// A element is decoded exactly once per column panel.
+const MC: usize = 64;
+/// Cap on the packed op(B) panel, in elements: the column-panel width NC
+/// adapts as `PACKED_PANEL_ELEMS / k`, bounding the transient buffer to
+/// ~16 MB (posit planes are 8 B) however large `k * n` grows. 2^21
+/// elements covers `k = n = 1024` — the largest shape the benches run —
+/// in a single panel, so A is decoded once per call there too; beyond
+/// that, A is re-decoded once per column panel while B stays
+/// decode-once.
+const PACKED_PANEL_ELEMS: usize = 1 << 21;
+
+/// Decode-once, cache-blocked GEMM over the unpacked domain — the
+/// software analogue of the paper's §3.1 decode-once PE datapath.
+///
+/// op(A) and op(B) are packed into pre-decoded slab buffers (every B
+/// element decoded **exactly once** per call and every A element once per
+/// column panel — once per call whenever B fits the
+/// `PACKED_PANEL_ELEMS` budget, i.e. all of this repo's workloads — all
+/// four transpose combinations resolved at pack time, killing the
+/// per-element `match` in the inner loop), then an `MR x NR`
+/// register-blocked microkernel runs the ascending-k accumulation
+/// entirely in [`Scalar::UAcc`] form, and each output element is
+/// re-encoded once and combined via [`combine`].
+///
+/// Bit-identical to [`gemm_naive`] (DESIGN §7 / README rounding
+/// contract): decode is pure, the accumulator is rounded to the format
+/// after every multiply and every add exactly like the scalar ops, and
+/// `k` runs ascending per output element — only the pack/unpack
+/// marshalling between consecutive hot-loop operations is removed.
+/// Partial edge tiles are padded with [`Scalar::unpacked_pad`]; padded
+/// lanes are computed and discarded, never written back.
+#[allow(clippy::too_many_arguments)]
+#[allow(clippy::needless_range_loop)]
+pub fn gemm_packed<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_dims(ta, tb, m, n, k, a, lda, b, ldb, c, ldc);
+    // Column-panel width: whole-B when it fits the element budget,
+    // NR-aligned and at least one slab otherwise.
+    let nc = (PACKED_PANEL_ELEMS / k.max(1)).div_ceil(NR).max(1) * NR;
+    let mut bp: Vec<T::Unpacked> = Vec::with_capacity(nc.min(n.div_ceil(NR) * NR) * k);
+    let mut ap: Vec<T::Unpacked> = Vec::with_capacity(MC.min(m).div_ceil(MR) * MR * k);
+    for jc0 in (0..n).step_by(nc) {
+        let ncols = nc.min(n - jc0);
+        // Pack op(B) columns jc0..jc0+ncols: NR-wide column slabs,
+        // k-major inside each slab, transpose resolved here.
+        let nslabs = ncols.div_ceil(NR);
+        bp.clear();
+        for js in 0..nslabs {
+            let j0 = jc0 + js * NR;
+            let jb = NR.min(n - j0);
+            for l in 0..k {
+                for jj in 0..NR {
+                    bp.push(if jj < jb {
+                        match tb {
+                            Trans::No => at(b, ldb, l, j0 + jj).unpack(),
+                            Trans::Yes => at(b, ldb, j0 + jj, l).unpack(),
+                        }
+                    } else {
+                        T::unpacked_pad()
+                    });
+                }
+            }
+        }
+        // op(A) row panels: MC rows at a time, MR-wide row slabs, k-major
+        // inside each slab.
+        for i0 in (0..m).step_by(MC) {
+            let ib = MC.min(m - i0);
+            let islabs = ib.div_ceil(MR);
+            ap.clear();
+            for is in 0..islabs {
+                let r0 = i0 + is * MR;
+                let rb = MR.min(m - r0);
+                for l in 0..k {
+                    for ii in 0..MR {
+                        ap.push(if ii < rb {
+                            match ta {
+                                Trans::No => at(a, lda, r0 + ii, l).unpack(),
+                                Trans::Yes => at(a, lda, l, r0 + ii).unpack(),
+                            }
+                        } else {
+                            T::unpacked_pad()
+                        });
+                    }
+                }
+            }
+            for js in 0..nslabs {
+                let jb = NR.min(ncols - js * NR);
+                let bs = &bp[js * k * NR..(js + 1) * k * NR];
+                for is in 0..islabs {
+                    let asl = &ap[is * k * MR..(is + 1) * k * MR];
+                    // MR x NR register tile over the full ascending-k range.
+                    let mut acc = [T::uacc_zero(); MR * NR];
+                    for l in 0..k {
+                        let av = &asl[l * MR..l * MR + MR];
+                        let bv = &bs[l * NR..l * NR + NR];
+                        for jj in 0..NR {
+                            let bvj = bv[jj];
+                            for ii in 0..MR {
+                                acc[jj * MR + ii] = T::uacc_mac(acc[jj * MR + ii], av[ii], bvj);
+                            }
+                        }
+                    }
+                    let r0 = i0 + is * MR;
+                    let rows = MR.min(m - r0);
+                    for jj in 0..jb {
+                        let j = jc0 + js * NR + jj;
+                        for ii in 0..rows {
+                            let cij = &mut c[r0 + ii + j * ldc];
+                            *cij = combine(alpha, T::uacc_finish(acc[jj * MR + ii]), beta, *cij);
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -232,6 +477,7 @@ pub fn gemm_parallel_scoped<'env, T: Scalar>(
     if m == 0 || n == 0 {
         return;
     }
+    validate_dims(ta, tb, m, n, k, a, lda, b, ldb, c, ldc);
     let chunks = threads.max(1).min(n);
     let cols_per = n.div_ceil(chunks);
     let mut rest = c;
@@ -384,6 +630,97 @@ mod tests {
             );
             assert_eq!(c1.data, c2.data, "{tb:?}");
         }
+    }
+
+    #[test]
+    fn packed_equals_naive_bitwise_all_transposes_posit() {
+        let (m, n, k) = (21, 19, 23);
+        let mut rng = Pcg64::seed(9);
+        for ta in [Trans::No, Trans::Yes] {
+            for tb in [Trans::No, Trans::Yes] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let a = Matrix::<Posit32>::random_normal(ar, ac, 1.0, &mut rng);
+                let b = Matrix::<Posit32>::random_normal(br, bc, 1.0, &mut rng);
+                let alpha = Posit32::from_f64(0.75);
+                let beta = Posit32::from_f64(-0.5);
+                let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+                let mut c1 = c0.clone();
+                let mut c2 = c0.clone();
+                let mut c3 = c0.clone();
+                gemm_naive(
+                    ta, tb, m, n, k, alpha, &a.data, a.ld(), &b.data, b.ld(), beta,
+                    &mut c1.data, m,
+                );
+                gemm_packed(
+                    ta, tb, m, n, k, alpha, &a.data, a.ld(), &b.data, b.ld(), beta,
+                    &mut c2.data, m,
+                );
+                gemm_blocked_ref(
+                    ta, tb, m, n, k, alpha, &a.data, a.ld(), &b.data, b.ld(), beta,
+                    &mut c3.data, m,
+                );
+                assert_eq!(c1.data, c2.data, "packed vs naive {ta:?}{tb:?}");
+                assert_eq!(c1.data, c3.data, "blocked_ref vs naive {ta:?}{tb:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_handles_specials_like_naive() {
+        // NaR and zero operands plus an exact-cancellation column: the
+        // packed kernel's flag lanes must reproduce the scalar specials.
+        let (m, n, k) = (9, 8, 12);
+        let mut rng = Pcg64::seed(10);
+        let mut a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let mut b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        a[(2, 3)] = Posit32::NAR;
+        a[(4, 0)] = Posit32::ZERO;
+        b[(1, 5)] = Posit32::ZERO;
+        for l in 0..k {
+            let v = b[(l, 1)];
+            b[(l, 2)] = v.negate();
+        }
+        // Row of ones against an alternating +v/-v column: the accumulator
+        // cancels to exact zero after every even step.
+        for l in 0..k {
+            a[(5, l)] = Posit32::ONE;
+            b[(l, 3)] = Posit32::from_f64(if l % 2 == 0 { 1.25 } else { -1.25 });
+        }
+        let mut c1 = Matrix::<Posit32>::zeros(m, n);
+        let mut c2 = Matrix::<Posit32>::zeros(m, n);
+        gemm_naive(
+            Trans::No, Trans::No, m, n, k, Posit32::ONE, &a.data, m, &b.data, k,
+            Posit32::ZERO, &mut c1.data, m,
+        );
+        gemm_packed(
+            Trans::No, Trans::No, m, n, k, Posit32::ONE, &a.data, m, &b.data, k,
+            Posit32::ZERO, &mut c2.data, m,
+        );
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn packed_equals_naive_bitwise_ieee_formats() {
+        let (m, n, k) = (18, 13, 27);
+        let mut rng = Pcg64::seed(12);
+        let a = Matrix::<f32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f32>::random_normal(n, k, 1.0, &mut rng);
+        let c0 = Matrix::<f32>::random_normal(m, n, 1.0, &mut rng);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        gemm_naive(
+            Trans::No, Trans::Yes, m, n, k, 1.5f32, &a.data, m, &b.data, n, 0.5,
+            &mut c1.data, m,
+        );
+        gemm_packed(
+            Trans::No, Trans::Yes, m, n, k, 1.5f32, &a.data, m, &b.data, n, 0.5,
+            &mut c2.data, m,
+        );
+        assert_eq!(
+            c1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -19,7 +19,10 @@ pub mod pool;
 pub mod syrk;
 pub mod trsm;
 
-pub use gemm::{default_threads, gemm, gemm_naive, gemm_parallel, gemm_parallel_scoped, Trans};
+pub use gemm::{
+    default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_parallel,
+    gemm_parallel_scoped, Trans,
+};
 pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
 pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};
 pub use matrix::Matrix;
@@ -51,6 +54,35 @@ pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
     /// per-operation rounding — bit-identical to `acc.add(a.mul(b))`.
     fn acc_mac(acc: Self::Acc, a: Self::Pre, b: Self::Pre) -> Self::Acc;
     fn acc_finish(acc: Self::Acc) -> Self;
+
+    /// Decode-once operand element for the packed GEMM microkernel
+    /// ([`gemm_packed`]): produced exactly once per matrix element at
+    /// pack time, consumed O(n) times by the inner loops. IEEE types pass
+    /// the value through; posits carry sign/scale/significand planes
+    /// ([`posit::unpacked::U32`] / `posit::formats::GUnpacked`). Decoding
+    /// is pure, which is why hoisting it cannot change numerics (see the
+    /// rounding-contract note in README.md).
+    type Unpacked: Copy + Send + Sync;
+    /// Packed-kernel accumulator: the running dot product, rounded to the
+    /// format after every mac exactly like the scalar path.
+    type UAcc: Copy + Send + Sync;
+
+    /// Decode once (pure: no rounding, no state).
+    fn unpack(self) -> Self::Unpacked;
+    /// Padding element for partial microkernel tiles. Any *real* value
+    /// works — padded lanes are computed and discarded, never written
+    /// back — but it must keep every arithmetic lane well-defined.
+    #[inline]
+    fn unpacked_pad() -> Self::Unpacked {
+        Self::one().unpack()
+    }
+    fn uacc_zero() -> Self::UAcc;
+    /// One fused step `acc = round(acc + round(a*b))` on the unpacked
+    /// planes — bit-identical to `acc.add(a.mul(b))`.
+    fn uacc_mac(acc: Self::UAcc, a: Self::Unpacked, b: Self::Unpacked) -> Self::UAcc;
+    /// Re-encode the accumulator once per output element (exact: the
+    /// accumulator is kept on representable values).
+    fn uacc_finish(acc: Self::UAcc) -> Self;
 
     fn zero() -> Self;
     fn one() -> Self;
@@ -215,6 +247,29 @@ impl Scalar for Posit32 {
         acc.pack()
     }
 
+    type Unpacked = posit::unpacked::U32;
+    type UAcc = posit::unpacked::Acc32;
+    #[inline]
+    fn unpack(self) -> posit::unpacked::U32 {
+        posit::unpacked::U32::decode(self)
+    }
+    #[inline]
+    fn uacc_zero() -> posit::unpacked::Acc32 {
+        posit::unpacked::Acc32::ZERO
+    }
+    #[inline]
+    fn uacc_mac(
+        acc: posit::unpacked::Acc32,
+        a: posit::unpacked::U32,
+        b: posit::unpacked::U32,
+    ) -> posit::unpacked::Acc32 {
+        posit::unpacked::mac(acc, a, b)
+    }
+    #[inline]
+    fn uacc_finish(acc: posit::unpacked::Acc32) -> Posit32 {
+        posit::unpacked::round_encode(acc)
+    }
+
     #[inline]
     fn zero() -> Self {
         Posit32::ZERO
@@ -297,6 +352,24 @@ impl Scalar for f32 {
     fn acc_finish(acc: f32) -> f32 {
         acc
     }
+    type Unpacked = f32;
+    type UAcc = f32;
+    #[inline]
+    fn unpack(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn uacc_zero() -> f32 {
+        0.0
+    }
+    #[inline]
+    fn uacc_mac(acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+    #[inline]
+    fn uacc_finish(acc: f32) -> f32 {
+        acc
+    }
     #[inline]
     fn zero() -> Self {
         0.0
@@ -375,6 +448,24 @@ impl Scalar for f64 {
     }
     #[inline]
     fn acc_finish(acc: f64) -> f64 {
+        acc
+    }
+    type Unpacked = f64;
+    type UAcc = f64;
+    #[inline]
+    fn unpack(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn uacc_zero() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn uacc_mac(acc: f64, a: f64, b: f64) -> f64 {
+        acc + a * b
+    }
+    #[inline]
+    fn uacc_finish(acc: f64) -> f64 {
         acc
     }
     #[inline]

@@ -121,10 +121,13 @@ pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
     }
 }
 
-/// Host CPU backend: the blocked multithreaded native GEMM. Implements
-/// [`GemmBackend<T>`] for every [`Scalar`] — the same instance can serve
-/// posit32, binary32 and binary64 tiles (the service gives each format its
-/// own dispatch queue, so in practice one instance per format pool).
+/// Host CPU backend: the multithreaded native GEMM, routed through the
+/// decode-once packed microkernel (`blas::gemm_packed`) per column chunk.
+/// Implements [`GemmBackend<T>`] for every [`Scalar`] — the same instance
+/// can serve posit32, binary32 and binary64 tiles (the service gives each
+/// format its own dispatch queue, so in practice one instance per format
+/// pool). Bit-identical to the naive reference kernel on every tile
+/// (pinned by the service determinism tests).
 pub struct NativeBackend {
     pub threads: usize,
 }

@@ -15,6 +15,11 @@
 //!   (and friends) generic over a [`blas::Scalar`] trait, instantiated at
 //!   `Posit32`, `f32` (the paper's binary32 baseline) and `f64` (ground
 //!   truth), so the numeric format is the *only* experimental variable.
+//!   The production GEMM is [`blas::gemm_packed`]: operands are decoded
+//!   once into unpacked planes at pack time (transposes included) and a
+//!   register-blocked microkernel accumulates with branch-free per-mac
+//!   rounding ([`posit::unpacked`]) — bit-identical to the naive
+//!   reference, per the repo-wide rounding contract (README).
 //! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX /
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
 //!   Python never runs on the request path.

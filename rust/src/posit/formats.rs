@@ -10,7 +10,7 @@
 //! Not a hot path (the engine is the branchy oracle); Posit32 keeps its
 //! dedicated branchless implementation.
 
-use super::generic::{NoTrace, PositSpec};
+use super::generic::{Decoded, NoTrace, PositSpec};
 use crate::blas::Scalar;
 
 /// A posit value of `NBITS` total bits and `ES` exponent bits.
@@ -34,6 +34,118 @@ impl<const NBITS: u32, const ES: u32> P<NBITS, ES> {
     #[inline]
     fn t() -> NoTrace {
         NoTrace
+    }
+}
+
+/// Decode-once element/accumulator for the packed GEMM microkernel
+/// ([`crate::blas::gemm_packed`]) at arbitrary formats: the engine's
+/// [`Decoded`] planes plus special-value flags. [`GUnpacked::mac`]
+/// reproduces the scalar `acc.add(a.mul(b))` chain bit-for-bit — the
+/// product is rounded with [`PositSpec::round_decoded`] (one rounding),
+/// added in the decoded domain via [`PositSpec::add_decoded`] and rounded
+/// once more — so only the pack/unpack bit marshalling between
+/// consecutive operations is elided (decode is a pure bijection on
+/// representable values). Not a hot path (the engine is the branchy
+/// oracle); Posit32 uses the dedicated branch-free planes in
+/// [`crate::posit::unpacked`].
+#[derive(Clone, Copy, Debug)]
+pub struct GUnpacked<const NBITS: u32, const ES: u32> {
+    neg: bool,
+    scale: i32,
+    sig: u64,
+    flags: u8, // 0 = real, 1 = zero, 2 = NaR
+}
+
+impl<const NBITS: u32, const ES: u32> GUnpacked<NBITS, ES> {
+    const REAL: u8 = 0;
+    const ZERO_F: u8 = 1;
+    const NAR_F: u8 = 2;
+    const ZERO: Self = GUnpacked {
+        neg: false,
+        scale: 0,
+        sig: 1 << 63,
+        flags: Self::ZERO_F,
+    };
+    const NAR: Self = GUnpacked {
+        neg: false,
+        scale: 0,
+        sig: 1 << 63,
+        flags: Self::NAR_F,
+    };
+
+    /// Decode once (pure; specials become flags).
+    #[inline]
+    fn decode(p: P<NBITS, ES>) -> Self {
+        let spec = P::<NBITS, ES>::SPEC;
+        if p.0 & spec.mask() == 0 {
+            return Self::ZERO;
+        }
+        match spec.decode(p.0, &mut NoTrace) {
+            Some(d) => GUnpacked {
+                neg: d.neg,
+                scale: d.scale,
+                sig: d.sig,
+                flags: Self::REAL,
+            },
+            None => Self::NAR,
+        }
+    }
+
+    #[inline]
+    fn d(self) -> Decoded {
+        Decoded {
+            neg: self.neg,
+            scale: self.scale,
+            sig: self.sig,
+        }
+    }
+
+    #[inline]
+    fn from_d(d: Decoded) -> Self {
+        GUnpacked {
+            neg: d.neg,
+            scale: d.scale,
+            sig: d.sig,
+            flags: Self::REAL,
+        }
+    }
+
+    /// `round(self + round(a*b))`, bit-identical to the scalar engine
+    /// chain (pinned by the exhaustive Posit(8,2) GEMM sweep).
+    #[inline]
+    fn mac(self, a: Self, b: Self) -> Self {
+        if self.flags == Self::NAR_F || a.flags == Self::NAR_F || b.flags == Self::NAR_F {
+            return Self::NAR;
+        }
+        if a.flags == Self::ZERO_F || b.flags == Self::ZERO_F {
+            return self; // + exact 0
+        }
+        let spec = P::<NBITS, ES>::SPEC;
+        let mut t = NoTrace;
+        let (pn, ps, psig) = spec.mul_decoded(a.d(), b.d(), &mut t);
+        let prod = spec.round_decoded(pn, ps, psig);
+        if self.flags == Self::ZERO_F {
+            return Self::from_d(prod);
+        }
+        // Exact cancellation: decode is injective, so plane equality with
+        // opposite signs is exactly the scalar path's `a == negate(b)`.
+        if self.neg != prod.neg && self.scale == prod.scale && self.sig == prod.sig {
+            return Self::ZERO;
+        }
+        let (n, s, sig) = spec.add_decoded(self.d(), prod, &mut t);
+        Self::from_d(spec.round_decoded(n, s, sig))
+    }
+
+    /// Final encode: exact, because the planes always hold a
+    /// representable (already-rounded) value.
+    #[inline]
+    fn encode(self) -> P<NBITS, ES> {
+        let spec = P::<NBITS, ES>::SPEC;
+        match self.flags {
+            Self::ZERO_F => P(0),
+            Self::NAR_F => P(spec.nar()),
+            _ => P(spec.encode(self.neg, self.scale, self.sig, &mut NoTrace)),
+        }
     }
 }
 
@@ -68,6 +180,29 @@ impl<const NBITS: u32, const ES: u32> Scalar for P<NBITS, ES> {
     #[inline]
     fn acc_finish(acc: Self) -> Self {
         acc
+    }
+
+    type Unpacked = GUnpacked<NBITS, ES>;
+    type UAcc = GUnpacked<NBITS, ES>;
+    #[inline]
+    fn unpack(self) -> GUnpacked<NBITS, ES> {
+        GUnpacked::decode(self)
+    }
+    #[inline]
+    fn uacc_zero() -> GUnpacked<NBITS, ES> {
+        GUnpacked::ZERO
+    }
+    #[inline]
+    fn uacc_mac(
+        acc: GUnpacked<NBITS, ES>,
+        a: GUnpacked<NBITS, ES>,
+        b: GUnpacked<NBITS, ES>,
+    ) -> GUnpacked<NBITS, ES> {
+        acc.mac(a, b)
+    }
+    #[inline]
+    fn uacc_finish(acc: GUnpacked<NBITS, ES>) -> Self {
+        acc.encode()
     }
 
     #[inline]

@@ -305,7 +305,18 @@ impl PositSpec {
         }
         let da = self.decode(a, t).unwrap();
         let db = self.decode(b, t).unwrap();
+        let (neg, scale, sig64) = self.add_decoded(da, db, t);
+        self.encode(neg, scale, sig64, t)
+    }
 
+    /// Decoded-domain core of [`Self::add`]: magnitude ordering, alignment,
+    /// signed sum and renormalization — everything between decode and the
+    /// final rounding. Returns `(neg, scale, sig)` with a Q1.63 significand
+    /// (sticky in bit 0), ready for [`Self::encode`] /
+    /// [`Self::round_decoded`]. Callers must rule out zeros, NaR and exact
+    /// cancellation first, exactly like [`Self::add`] does — this is the
+    /// entry the packed GEMM path uses to stay in the unpacked domain.
+    pub fn add_decoded<T: Tracer>(self, da: Decoded, db: Decoded, t: &mut T) -> (bool, i32, u64) {
         // Order operands by magnitude.
         let swap = (db.scale, db.sig) > (da.scale, da.sig);
         t.branch(site::ADD_SWAP, swap);
@@ -358,7 +369,7 @@ impl PositSpec {
             t.branch(site::ADD_NORM_LOOP, false);
             sig64 = (diff >> 30) as u64 | ((sticky || diff & ((1u128 << 30) - 1) != 0) as u64);
         }
-        self.encode(hi.neg, scale, sig64, t)
+        (hi.neg, scale, sig64)
     }
 
     /// Subtraction via negation (exact) + add.
@@ -383,6 +394,15 @@ impl PositSpec {
         t.branch(site::SPECIAL_ZERO, false);
         let da = self.decode(a, t).unwrap();
         let db = self.decode(b, t).unwrap();
+        let (neg, scale, sig) = self.mul_decoded(da, db, t);
+        self.encode(neg, scale, sig, t)
+    }
+
+    /// Decoded-domain core of [`Self::mul`]: the exact product of two
+    /// decoded operands as `(neg, scale, sig)` with a Q1.63 significand
+    /// (sticky in bit 0), pre-rounding. Operands must be real (nonzero,
+    /// non-NaR) — the packed GEMM path guards those with flags.
+    pub fn mul_decoded<T: Tracer>(self, da: Decoded, db: Decoded, t: &mut T) -> (bool, i32, u64) {
         let mut scale = da.scale + db.scale;
         // Q1.63 * Q1.63 -> Q2.126.
         let prod = (da.sig as u128) * (db.sig as u128);
@@ -396,7 +416,20 @@ impl PositSpec {
             (prod >> 63, (1u128 << 63) - 1)
         };
         let sig = top as u64 | ((prod & mask != 0) as u64);
-        self.encode(da.neg != db.neg, scale, sig, t)
+        (da.neg != db.neg, scale, sig)
+    }
+
+    /// Round a decoded-domain `(neg, scale, sig)` (Q1.63 significand,
+    /// sticky in bit 0) to the nearest representable posit of this format
+    /// and return it **still decoded** — semantically
+    /// `decode(encode(...))`, the generic formats' `round_encode` step.
+    /// This is what lets the packed GEMM microkernel keep `P<N, ES>`
+    /// accumulation in the unpacked domain with rounding points identical
+    /// to the scalar ops.
+    pub fn round_decoded(self, neg: bool, scale: i32, sig: u64) -> Decoded {
+        let bits = self.encode(neg, scale, sig, &mut NoTrace);
+        self.decode(bits, &mut NoTrace)
+            .expect("posit rounding of a normalized significand never yields zero or NaR")
     }
 
     /// Division (one rounding). `x/0 = NaR`.
@@ -599,6 +632,40 @@ mod tests {
                 } else {
                     assert_eq!(add, 0x80);
                     assert_eq!(mul, 0x80);
+                }
+            }
+        }
+    }
+
+    /// The decoded-domain cores + `round_decoded` must compose to the
+    /// bit-level ops exactly — the contract the packed GEMM path for the
+    /// generic formats (`posit::formats::GUnpacked`) is built on.
+    #[test]
+    fn decoded_domain_ops_compose_to_scalar_ops() {
+        for spec in [PositSpec::P32, PositSpec::P16, PositSpec::P8, PositSpec::P8E0] {
+            let mut rng = Pcg64::seed(0xDEC0DE ^ spec.nbits as u64);
+            let mut t = NoTrace;
+            for _ in 0..4000 {
+                let a = rng.next_u32() & spec.mask();
+                let b = rng.next_u32() & spec.mask();
+                if a == 0 || a == spec.nar() || b == 0 || b == spec.nar() {
+                    continue;
+                }
+                let da = spec.decode(a, &mut t).unwrap();
+                let db = spec.decode(b, &mut t).unwrap();
+                let (n, s, sig) = spec.mul_decoded(da, db, &mut t);
+                let mul = spec.encode(n, s, sig, &mut t);
+                assert_eq!(mul, spec.mul(a, b, &mut t), "mul {a:#x} {b:#x}");
+                // round_decoded is decode∘encode: re-encoding is exact.
+                let r = spec.round_decoded(n, s, sig);
+                assert_eq!(spec.encode(r.neg, r.scale, r.sig, &mut t), mul);
+                if a != spec.negate(b) {
+                    let (n, s, sig) = spec.add_decoded(da, db, &mut t);
+                    assert_eq!(
+                        spec.encode(n, s, sig, &mut t),
+                        spec.add(a, b, &mut t),
+                        "add {a:#x} {b:#x}"
+                    );
                 }
             }
         }

@@ -21,13 +21,17 @@
 //!
 //! Submodules: [`convert`] (f32/f64/int conversions), [`quire`] (512-bit
 //! exact accumulator), [`generic`] (Posit(n,es) engine for exhaustive
-//! small-format tests), [`counting`] (instrumented SoftPosit-style ops).
+//! small-format tests), [`counting`] (instrumented SoftPosit-style ops),
+//! [`unpacked`] (decode-once, branch-free sign/scale/fraction planes for
+//! the packed GEMM microkernel — the software analogue of §3.1's
+//! decode-once PE datapath).
 
 pub mod convert;
 pub mod counting;
 pub mod formats;
 pub mod generic;
 pub mod quire;
+pub mod unpacked;
 
 mod ops;
 

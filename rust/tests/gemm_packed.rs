@@ -1,0 +1,218 @@
+//! Bit-identity of the decode-once packed GEMM microkernel.
+//!
+//! The contract (DESIGN §7 / README rounding contract): `gemm_packed` —
+//! and therefore `gemm`, `gemm_parallel` and every backend routed through
+//! them — produces results **bit-identical** to the `gemm_naive` ground
+//! truth for every format, every transpose combination, odd shapes and
+//! over-allocated leading dimensions.
+//!
+//! The Posit(8,2) sweep is exhaustive in the operand values: the packed
+//! tiles are constructed so that every 8-bit pattern (zero, NaR, both
+//! signs, every regime) appears in op(A) and op(B), and every ordered
+//! operand *pair* occurs in some inner product — the same closure style
+//! as the 256×256 scalar-op sweeps in `posit8_exhaustive.rs`, but through
+//! the whole GEMM stack (pack, microkernel, unpacked mac, re-encode).
+
+use posit_accel::blas::{gemm, gemm_naive, gemm_packed, Scalar, Trans};
+use posit_accel::posit::formats::{P16, P8};
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
+
+const NAR8: P8 = P8(0x80);
+
+/// Column-major buffer with `ld > rows`: padding rows hold `sentinel` (a
+/// poison value — the kernels must neither read nor write them).
+fn strided<T: Scalar>(
+    rows: usize,
+    cols: usize,
+    ld: usize,
+    mut gen: impl FnMut(usize, usize) -> T,
+    sentinel: T,
+) -> Vec<T> {
+    assert!(ld >= rows);
+    let mut v = vec![sentinel; ld * cols.max(1)];
+    for j in 0..cols {
+        for i in 0..rows {
+            v[i + j * ld] = gen(i, j);
+        }
+    }
+    v
+}
+
+fn bits_of<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.bits()).collect()
+}
+
+/// Exhaustive Posit(8,2) value/pair coverage through the full GEMM stack.
+#[test]
+fn p8_exhaustive_pattern_sweep_packed_vs_naive() {
+    // A (5 x 256): every row walks all 256 bit patterns; B (256 x 256):
+    // the (x, y) operand pair occurs at (l = x, j = y - 5x mod 256) in
+    // row 0's inner products. Odd m, ld > rows on every operand.
+    let (m, k, n) = (5usize, 256usize, 256usize);
+    let (lda, ldb, ldc) = (m + 2, k + 1, m + 3);
+    let a = strided(m, k, lda, |i, l| P8(((l + 3 * i) & 255) as u32), NAR8);
+    let b = strided(k, n, ldb, |l, j| P8(((5 * l + j) & 255) as u32), NAR8);
+    for (alpha, beta) in [(1.0, 0.0), (-2.0, 1.0), (0.5, -0.25)] {
+        let al = P8::from_f64(alpha);
+        let be = P8::from_f64(beta);
+        let c0 = strided(
+            m,
+            n,
+            ldc,
+            |i, j| P8::from_f64(((i * 7 + j) % 5) as f64 - 2.0),
+            NAR8,
+        );
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        gemm_naive(
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            al,
+            &a,
+            lda,
+            &b,
+            ldb,
+            be,
+            &mut c1,
+            ldc,
+        );
+        gemm_packed(
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            al,
+            &a,
+            lda,
+            &b,
+            ldb,
+            be,
+            &mut c2,
+            ldc,
+        );
+        assert_eq!(bits_of(&c1), bits_of(&c2), "alpha {alpha} beta {beta}");
+        // Padding rows of C must be untouched by the packed writeback.
+        for j in 0..n {
+            for i in m..ldc {
+                assert_eq!(c2[i + j * ldc], NAR8, "padding clobbered at ({i},{j})");
+            }
+        }
+    }
+}
+
+/// Random Posit(8,2) tiles (all 256 patterns equally likely, so zero/NaR
+/// and every regime keep appearing): all four transpose combinations, odd
+/// m/n/k, leading dimensions strictly greater than the operand rows.
+#[test]
+fn p8_random_tiles_all_transposes_odd_dims_strided() {
+    let mut rng = Pcg64::seed(0x8888);
+    for &(m, n, k) in &[(13usize, 11usize, 17usize), (7, 5, 9), (21, 3, 25), (3, 19, 7)] {
+        for ta in [Trans::No, Trans::Yes] {
+            for tb in [Trans::No, Trans::Yes] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let (lda, ldb, ldc) = (ar + 3, br + 1, m + 2);
+                let a = strided(ar, ac, lda, |_, _| P8(rng.next_u32() & 255), NAR8);
+                let b = strided(br, bc, ldb, |_, _| P8(rng.next_u32() & 255), NAR8);
+                let c0 = strided(m, n, ldc, |_, _| P8(rng.next_u32() & 255), NAR8);
+                let al = P8::from_f64(1.0);
+                let be = P8::from_f64(1.0);
+                let mut c1 = c0.clone();
+                let mut c2 = c0.clone();
+                let mut c3 = c0.clone();
+                gemm_naive(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c1, ldc);
+                gemm_packed(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c2, ldc);
+                gemm(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c3, ldc);
+                assert_eq!(bits_of(&c1), bits_of(&c2), "packed {m}x{n}x{k} {ta:?}{tb:?}");
+                assert_eq!(bits_of(&c1), bits_of(&c3), "routed {m}x{n}x{k} {ta:?}{tb:?}");
+            }
+        }
+    }
+}
+
+/// Posit32 across the whole dynamic range (scales from 2^-100 to 2^100,
+/// where regimes are long and the saturation slow path engages), plus
+/// sprinkled zeros and NaR — every transpose combination, strided.
+#[test]
+fn posit32_wide_range_tiles_packed_vs_naive_all_transposes() {
+    let mut rng = Pcg64::seed(0x3232);
+    let val = |rng: &mut Pcg64| -> Posit32 {
+        match rng.next_u32() % 16 {
+            0 => Posit32::ZERO,
+            1 => Posit32::NAR,
+            2..=5 => Posit32::from_f64(rng.normal()),
+            6..=9 => {
+                let e = (rng.next_u32() % 200) as i32 - 100;
+                Posit32::from_f64(rng.normal() * 2f64.powi(e))
+            }
+            _ => Posit32(rng.next_u32()),
+        }
+    };
+    for &(m, n, k) in &[(33usize, 29usize, 41usize), (17, 9, 5)] {
+        for ta in [Trans::No, Trans::Yes] {
+            for tb in [Trans::No, Trans::Yes] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let (lda, ldb, ldc) = (ar + 2, br + 5, m + 1);
+                let a = strided(ar, ac, lda, |_, _| val(&mut rng), Posit32::NAR);
+                let b = strided(br, bc, ldb, |_, _| val(&mut rng), Posit32::NAR);
+                let c0 = strided(m, n, ldc, |_, _| val(&mut rng), Posit32::NAR);
+                let al = Posit32::from_f64(-1.0);
+                let be = Posit32::ONE;
+                let mut c1 = c0.clone();
+                let mut c2 = c0.clone();
+                gemm_naive(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c1, ldc);
+                gemm_packed(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c2, ldc);
+                assert_eq!(bits_of(&c1), bits_of(&c2), "{m}x{n}x{k} {ta:?}{tb:?}");
+            }
+        }
+    }
+}
+
+/// The other formats ride the same packed kernel: P<16,1> through the
+/// generic engine, f32/f64 through the trivial passthrough planes.
+#[test]
+fn p16_f32_f64_packed_vs_naive() {
+    let mut rng = Pcg64::seed(0x1616);
+    let (m, n, k) = (19usize, 15usize, 21usize);
+    // P<16,1>
+    {
+        let a = strided(m, k, m + 1, |_, _| P16(rng.next_u32() & 0xFFFF), P16(0x8000));
+        let b = strided(k, n, k + 2, |_, _| P16(rng.next_u32() & 0xFFFF), P16(0x8000));
+        let c0 = strided(m, n, m + 3, |_, _| P16(rng.next_u32() & 0xFFFF), P16(0x8000));
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        let one = P16::from_f64(1.0);
+        gemm_naive(Trans::No, Trans::No, m, n, k, one, &a, m + 1, &b, k + 2, one, &mut c1, m + 3);
+        gemm_packed(Trans::No, Trans::No, m, n, k, one, &a, m + 1, &b, k + 2, one, &mut c2, m + 3);
+        assert_eq!(bits_of(&c1), bits_of(&c2), "P<16,1>");
+    }
+    // f32 / f64 (NaN-free tiles; IEEE passthrough planes).
+    {
+        // op(A) = A^T with A of shape (k, m).
+        let a = strided(k, m, k + 1, |_, _| rng.normal() as f32, 0.0f32);
+        let b = strided(k, n, k + 2, |_, _| rng.normal() as f32, 0.0f32);
+        let c0 = strided(m, n, m + 3, |_, _| rng.normal() as f32, 0.0f32);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        gemm_naive(Trans::Yes, Trans::No, m, n, k, 2.0f32, &a, k + 1, &b, k + 2, 0.0, &mut c1, m + 3);
+        gemm_packed(Trans::Yes, Trans::No, m, n, k, 2.0f32, &a, k + 1, &b, k + 2, 0.0, &mut c2, m + 3);
+        assert_eq!(bits_of(&c1), bits_of(&c2), "f32");
+    }
+    {
+        // op(B) = B^T with B of shape (n, k).
+        let a = strided(m, k, m + 4, |_, _| rng.normal(), 0.0f64);
+        let b = strided(n, k, n + 1, |_, _| rng.normal(), 0.0f64);
+        let c0 = strided(m, n, m + 2, |_, _| rng.normal(), 0.0f64);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        gemm_naive(Trans::No, Trans::Yes, m, n, k, 1.0f64, &a, m + 4, &b, n + 1, 0.5, &mut c1, m + 2);
+        gemm_packed(Trans::No, Trans::Yes, m, n, k, 1.0f64, &a, m + 4, &b, n + 1, 0.5, &mut c2, m + 2);
+        assert_eq!(bits_of(&c1), bits_of(&c2), "f64");
+    }
+}

@@ -12,12 +12,56 @@
 //! `mode=refine` mixed-precision jobs) must be bit-identical to the
 //! sequential drivers *per format* at any worker count.
 
+use posit_accel::blas::{gemm_naive, Scalar, Trans};
 use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
 use posit_accel::service::{
     mixed_format_manifest, mixed_manifest, run_job_sequential, run_job_sequential_any, Engine,
     EngineBuilder, JobResult, Mode, Precision,
 };
 use std::sync::Arc;
+
+/// A backend that applies every update with the *reference* `gemm_naive`
+/// kernel — the pre-packing GEMM semantics in their simplest form. The
+/// engine's `NativeBackend` (now routed through `gemm_packed`) must
+/// reproduce it bit-for-bit: rewiring the backends through the packed
+/// microkernel must not change a single job output.
+struct NaiveRefBackend;
+
+impl<T: Scalar> GemmBackend<T> for NaiveRefBackend {
+    fn name(&self) -> &str {
+        "naive-ref"
+    }
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> anyhow::Result<()> {
+        let minus1 = T::one().neg();
+        gemm_naive(
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            minus1,
+            a,
+            lda,
+            b,
+            ldb,
+            T::one(),
+            c,
+            ldc,
+        );
+        Ok(())
+    }
+}
 
 fn shared_backends() -> Vec<(&'static str, Arc<dyn GemmBackend>)> {
     vec![
@@ -174,6 +218,78 @@ fn mixed_format_manifest_bit_identical_on_modelled_accelerator() {
             |m, k, n| (2 * m * k * n) as f64 / 200e9,
         )),
     );
+}
+
+/// PR-4 guard: the whole engine — NativeBackend routed through the
+/// decode-once packed GEMM, batched dispatch, any worker count — must be
+/// bit-identical to the sequential drivers running on the naive reference
+/// kernel, i.e. to the pre-packing semantics. Covers every format and
+/// both factor and refine modes.
+#[test]
+fn packed_engine_matches_pre_packing_naive_semantics() {
+    // Posit32 manifest.
+    let jobs = mixed_manifest(8, 48);
+    let baseline: Vec<JobResult> = jobs
+        .iter()
+        .map(|spec| {
+            run_job_sequential::<posit_accel::posit::Posit32>(spec, &NaiveRefBackend, true)
+        })
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "naive baseline job {}: {:?}", r.id, r.error);
+    }
+    for workers in [1usize, 4] {
+        let engine = Engine::new(
+            vec![(
+                "native".to_string(),
+                Arc::new(NativeBackend::new(2)) as Arc<dyn GemmBackend>,
+            )],
+            8,
+        );
+        let report = engine.run(&jobs, workers, true);
+        for (seq, got) in baseline.iter().zip(&report.results) {
+            assert!(got.error.is_none(), "x{workers} job {}", got.id);
+            assert_eq!(
+                seq.factors, got.factors,
+                "packed engine factors differ from naive drivers: x{workers} job {}",
+                seq.id
+            );
+            assert_eq!(seq.ipiv, got.ipiv, "x{workers} job {}", seq.id);
+            assert_eq!(seq.fingerprint, got.fingerprint, "x{workers} job {}", seq.id);
+        }
+    }
+
+    // Mixed-format manifest (posit32 + f32 + f64, refine included).
+    let mut mjobs = mixed_format_manifest(9, 40);
+    mjobs[4].mode = Mode::Refine;
+    let baseline: Vec<JobResult> = mjobs
+        .iter()
+        .map(|spec| run_job_sequential_any(spec, &NaiveRefBackend, true))
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "naive baseline job {}: {:?}", r.id, r.error);
+    }
+    let engine = EngineBuilder::new(8)
+        .shared("native", Arc::new(NativeBackend::new(2)))
+        .build();
+    let report = engine.run(&mjobs, 4, true);
+    for (seq, got) in baseline.iter().zip(&report.results) {
+        assert!(got.error.is_none(), "mixed job {}", got.id);
+        assert_eq!(
+            seq.factors, got.factors,
+            "packed engine differs from naive drivers: mixed job {} ({})",
+            seq.id,
+            seq.precision.name()
+        );
+        assert_eq!(seq.ipiv, got.ipiv, "mixed job {}", seq.id);
+        assert_eq!(seq.fingerprint, got.fingerprint, "mixed job {}", seq.id);
+        assert_eq!(
+            seq.backward_error.map(f64::to_bits),
+            got.backward_error.map(f64::to_bits),
+            "mixed job {}",
+            seq.id
+        );
+    }
 }
 
 #[test]
