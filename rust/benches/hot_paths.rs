@@ -7,7 +7,9 @@
 //! * conversions and the quire;
 //! * GEMM: naive vs blocked vs parallel native, and the PJRT/Pallas
 //!   artifact path (per 128x64x128 tile);
-//! * blocked LU/Cholesky end to end;
+//! * blocked LU/Cholesky end to end — including the decode-once
+//!   factorization pipeline vs the scalar path (`BENCH_factor.json`, with
+//!   its own bit-identity gate);
 //! * service throughput per numeric format and worker count.
 //!
 //! The service section also writes machine-readable
@@ -60,15 +62,54 @@ struct GemmRow {
     gops: f64,
 }
 
+/// One machine-readable factorization measurement (`BENCH_factor.json`):
+/// the decode-once pipeline (`packed`) vs the retained scalar path
+/// (`scalar-ref`), per algorithm, format and size, with the panel/update
+/// wall split from `OffloadStats` on the packed rows.
+struct FactorRow {
+    alg: &'static str,
+    format: &'static str,
+    n: usize,
+    kernel: &'static str,
+    seconds: f64,
+    gflops: f64,
+    /// Host panel seconds (packed rows only; NaN -> null).
+    panel_s: f64,
+    /// Trailing-update seconds (packed rows only; NaN -> null).
+    update_s: f64,
+}
+
 struct Bench {
     rows: Vec<(String, f64, String)>,
     service: Vec<ServiceRow>,
     gemm: Vec<GemmRow>,
+    factor: Vec<FactorRow>,
 }
 
 impl Bench {
     fn new() -> Self {
-        Bench { rows: vec![], service: vec![], gemm: vec![] }
+        Bench { rows: vec![], service: vec![], gemm: vec![], factor: vec![] }
+    }
+    /// Record one factorization point (also mirrored into the CSV rows).
+    #[allow(clippy::too_many_arguments)]
+    fn add_factor(
+        &mut self,
+        alg: &'static str,
+        format: &'static str,
+        n: usize,
+        kernel: &'static str,
+        seconds: f64,
+        ops: f64,
+        panel_s: f64,
+        update_s: f64,
+    ) {
+        let gflops = ops / seconds / 1e9;
+        self.add(
+            &format!("{alg} {kernel} {format} {n}"),
+            gflops * 1e3,
+            "Mflops",
+        );
+        self.factor.push(FactorRow { alg, format, n, kernel, seconds, gflops, panel_s, update_s });
     }
     /// Record one GEMM kernel point (also mirrored into the CSV rows).
     fn add_gemm(&mut self, kernel: &'static str, format: &'static str, n: usize, seconds: f64) {
@@ -165,6 +206,31 @@ impl Bench {
         );
         std::fs::write("results/BENCH_gemm.json", json).ok();
         println!("[saved results/BENCH_gemm.json]");
+
+        let frows: Vec<String> = self
+            .factor
+            .iter()
+            .map(|r| {
+                format!(
+                    "  {{\"alg\": \"{}\", \"format\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \"seconds\": {}, \"gflops\": {}, \"panel_s\": {}, \"update_s\": {}}}",
+                    r.alg,
+                    r.format,
+                    r.n,
+                    r.kernel,
+                    jnum(r.seconds),
+                    jnum(r.gflops),
+                    jnum(r.panel_s),
+                    jnum(r.update_s),
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n\"quick\": {},\n\"rows\": [\n{}\n]\n}}\n",
+            quick(),
+            frows.join(",\n")
+        );
+        std::fs::write("results/BENCH_factor.json", json).ok();
+        println!("[saved results/BENCH_factor.json]");
     }
 }
 
@@ -461,6 +527,155 @@ fn bench_decompositions(b: &mut Bench) {
     );
 }
 
+/// Factorization ladder for `results/BENCH_factor.json`: the decode-once
+/// pipeline (`getrf_offload`/`potrf_offload` on the native backend —
+/// unpacked panels + unpacked TRSM + pack-plan reuse in the trailing
+/// update) vs the retained scalar path (`lapack::getrf_ref`/`potrf_ref`:
+/// scalar panels, scalar TRSM, re-packing GEMM), per algorithm × format ×
+/// size, with the packed rows carrying the panel/update wall split from
+/// `OffloadStats`.
+///
+/// Always opens with the **bit-identity gate**: on smoke shapes the
+/// decode-once factorizations must reproduce the scalar path's factors
+/// and pivots exactly (posit32 and binary32, LU and Cholesky). A
+/// divergence aborts the bench with a nonzero exit — the CI guard that
+/// every push keeps the pipeline rewiring at zero output-bit change.
+fn bench_factorization(b: &mut Bench) {
+    use posit_accel::coordinator::drivers::{chol_ops, getrf_offload, lu_ops, potrf_offload};
+    use posit_accel::experiments::matgen;
+    use posit_accel::lapack::{getrf_ref, potrf_ref};
+
+    // ---- bit-identity gate (smoke shapes, nb does not divide n) -------
+    {
+        let (n, nb) = (72usize, 28usize);
+        let mut rng = Pcg64::seed(0xFAC7);
+        let be = NativeBackend::new(2);
+        let a0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut w = a0.clone();
+        let mut wp = vec![0usize; n];
+        getrf_ref(n, n, &mut w.data, n, &mut wp, nb, 2).unwrap();
+        let mut g = a0.clone();
+        let mut gp = vec![0usize; n];
+        getrf_offload(n, n, &mut g.data, n, &mut gp, nb, &be).unwrap();
+        assert_eq!(
+            (&wp, &w.data),
+            (&gp, &g.data),
+            "BIT-IDENTITY VIOLATION: decode-once LU != scalar path (posit32)"
+        );
+        let af: Matrix<f32> = a0.cast();
+        let mut wf = af.clone();
+        let mut wfp = vec![0usize; n];
+        getrf_ref(n, n, &mut wf.data, n, &mut wfp, nb, 2).unwrap();
+        let mut gf = af.clone();
+        let mut gfp = vec![0usize; n];
+        getrf_offload(n, n, &mut gf.data, n, &mut gfp, nb, &be).unwrap();
+        assert_eq!(
+            (&wfp, &wf.data),
+            (&gfp, &gf.data),
+            "BIT-IDENTITY VIOLATION: decode-once LU != scalar path (f32)"
+        );
+        let spd = matgen::spd_f64(n, 1.0, &mut rng);
+        let sp: Matrix<Posit32> = spd.cast();
+        let mut wc = sp.clone();
+        potrf_ref(n, &mut wc.data, n, nb).unwrap();
+        let mut gc = sp.clone();
+        potrf_offload(n, &mut gc.data, n, nb, &be).unwrap();
+        for j in 0..n {
+            for i in j..n {
+                assert_eq!(
+                    wc[(i, j)],
+                    gc[(i, j)],
+                    "BIT-IDENTITY VIOLATION: decode-once Cholesky != scalar path at L({i},{j})"
+                );
+            }
+        }
+        println!("[factorization bit-identity gate passed: decode-once == scalar path]");
+    }
+
+    // ---- timing ladder ------------------------------------------------
+    let nb = 64usize;
+    let sizes: &[usize] = if quick() { &[128, 256] } else { &[256, 512, 1024] };
+    let threads = blas::default_threads();
+    let be = NativeBackend::new(threads);
+    for &n in sizes {
+        let reps = if n <= 256 { 3 } else { 1 };
+        let mut rng = Pcg64::seed(7000 + n as u64);
+        let a64 = matgen::normal_f64(n, 1.0, &mut rng);
+        let spd = matgen::spd_f64(n, 1.0, &mut rng);
+
+        // LU and Cholesky at posit32 and binary32 through one macro-free
+        // generic closure pair per format.
+        let ap: Matrix<Posit32> = a64.cast();
+        let sp: Matrix<Posit32> = spd.cast();
+        let af: Matrix<f32> = a64.cast();
+        let sf: Matrix<f32> = spd.cast();
+
+        // --- posit32 LU.
+        let st = bench_stats(reps, || {
+            let mut a = ap.clone();
+            let mut piv = vec![0usize; n];
+            getrf_ref(n, n, &mut a.data, n, &mut piv, nb, threads).unwrap();
+        });
+        b.add_factor("getrf", "posit32", n, "scalar-ref", st.min, lu_ops(n), f64::NAN, f64::NAN);
+        let mut last_stats = posit_accel::coordinator::OffloadStats::default();
+        let st = bench_stats(reps, || {
+            let mut a = ap.clone();
+            let mut piv = vec![0usize; n];
+            last_stats = getrf_offload(n, n, &mut a.data, n, &mut piv, nb, &be).unwrap();
+        });
+        b.add_factor(
+            "getrf", "posit32", n, "packed", st.min, lu_ops(n),
+            last_stats.panel_s, last_stats.update_s,
+        );
+
+        // --- posit32 Cholesky.
+        let st = bench_stats(reps, || {
+            let mut a = sp.clone();
+            potrf_ref(n, &mut a.data, n, nb).unwrap();
+        });
+        b.add_factor("potrf", "posit32", n, "scalar-ref", st.min, chol_ops(n), f64::NAN, f64::NAN);
+        let st = bench_stats(reps, || {
+            let mut a = sp.clone();
+            last_stats = potrf_offload(n, &mut a.data, n, nb, &be).unwrap();
+        });
+        b.add_factor(
+            "potrf", "posit32", n, "packed", st.min, chol_ops(n),
+            last_stats.panel_s, last_stats.update_s,
+        );
+
+        // --- binary32 LU + Cholesky (decode-once is passthrough; these
+        // rows isolate the restructuring + pack-plan effect alone).
+        let st = bench_stats(reps, || {
+            let mut a = af.clone();
+            let mut piv = vec![0usize; n];
+            getrf_ref(n, n, &mut a.data, n, &mut piv, nb, threads).unwrap();
+        });
+        b.add_factor("getrf", "binary32", n, "scalar-ref", st.min, lu_ops(n), f64::NAN, f64::NAN);
+        let st = bench_stats(reps, || {
+            let mut a = af.clone();
+            let mut piv = vec![0usize; n];
+            last_stats = getrf_offload(n, n, &mut a.data, n, &mut piv, nb, &be).unwrap();
+        });
+        b.add_factor(
+            "getrf", "binary32", n, "packed", st.min, lu_ops(n),
+            last_stats.panel_s, last_stats.update_s,
+        );
+        let st = bench_stats(reps, || {
+            let mut a = sf.clone();
+            potrf_ref(n, &mut a.data, n, nb).unwrap();
+        });
+        b.add_factor("potrf", "binary32", n, "scalar-ref", st.min, chol_ops(n), f64::NAN, f64::NAN);
+        let st = bench_stats(reps, || {
+            let mut a = sf.clone();
+            last_stats = potrf_offload(n, &mut a.data, n, nb, &be).unwrap();
+        });
+        b.add_factor(
+            "potrf", "binary32", n, "packed", st.min, chol_ops(n),
+            last_stats.panel_s, last_stats.update_s,
+        );
+    }
+}
+
 /// Service throughput: jobs/sec and aggregate Gflops on a mixed manifest,
 /// 1 vs N workers, per backend. The per-job backend is single-threaded
 /// (`NativeBackend::new(1)`), so the worker count is the parallelism
@@ -582,6 +797,7 @@ fn main() {
     bench_scalar_ops(&mut b);
     bench_gemm(&mut b);
     bench_gemm_kernels(&mut b);
+    bench_factorization(&mut b);
     bench_decompositions(&mut b);
     bench_service(&mut b);
     bench_service_formats(&mut b);

@@ -19,6 +19,11 @@
 //! * [`gemm_blocked_ref`] — the previous decode-hoisted blocked kernel,
 //!   kept as the `BENCH_gemm.json` baseline and as a third independent
 //!   implementation for the bit-identity tests.
+//! * [`gemm_prepacked`] (+ [`PackedA`]/[`PackedB`]/[`PackPlan`]) — the
+//!   same microkernel over operands the *caller* packed: the decode-once
+//!   factorization pipeline marshals its still-decoded panel/TRSM planes
+//!   into slabs and reuses them across the trailing update instead of
+//!   re-decoding the scalar matrix every blocked step.
 
 use super::Scalar;
 
@@ -331,18 +336,7 @@ pub fn gemm_packed<T: Scalar>(
                 let bs = &bp[js * k * NR..(js + 1) * k * NR];
                 for is in 0..islabs {
                     let asl = &ap[is * k * MR..(is + 1) * k * MR];
-                    // MR x NR register tile over the full ascending-k range.
-                    let mut acc = [T::uacc_zero(); MR * NR];
-                    for l in 0..k {
-                        let av = &asl[l * MR..l * MR + MR];
-                        let bv = &bs[l * NR..l * NR + NR];
-                        for jj in 0..NR {
-                            let bvj = bv[jj];
-                            for ii in 0..MR {
-                                acc[jj * MR + ii] = T::uacc_mac(acc[jj * MR + ii], av[ii], bvj);
-                            }
-                        }
-                    }
+                    let acc = microtile::<T>(k, asl, bs);
                     let r0 = i0 + is * MR;
                     let rows = MR.min(m - r0);
                     for jj in 0..jb {
@@ -355,6 +349,337 @@ pub fn gemm_packed<T: Scalar>(
                 }
             }
         }
+    }
+}
+
+/// The shared `MR x NR` register-tile microkernel: one tile of unpacked
+/// accumulators over the full ascending-k range. Both [`gemm_packed`] and
+/// the prepacked pipeline ([`gemm_prepacked`]) consume slabs through this
+/// one function, so their per-element operation sequences are identical by
+/// construction.
+#[inline]
+#[allow(clippy::needless_range_loop)]
+fn microtile<T: Scalar>(k: usize, asl: &[T::Unpacked], bsl: &[T::Unpacked]) -> [T::UAcc; MR * NR] {
+    let mut acc = [T::uacc_zero(); MR * NR];
+    for l in 0..k {
+        let av = &asl[l * MR..l * MR + MR];
+        let bv = &bsl[l * NR..l * NR + NR];
+        for jj in 0..NR {
+            let bvj = bv[jj];
+            for ii in 0..MR {
+                acc[jj * MR + ii] = T::uacc_mac(acc[jj * MR + ii], av[ii], bvj);
+            }
+        }
+    }
+    acc
+}
+
+/// `op(A)` packed once into decode-once microkernel slabs: `ceil(m/MR)`
+/// row slabs, each `MR` wide and k-major inside, padded rows holding
+/// [`Scalar::unpacked_pad`]. This is exactly the slab layout
+/// [`gemm_packed`] builds transiently per call — materialized as an owned
+/// value so a *producer* that already holds the operand decoded (the
+/// `getf2` panel sweep, an unpacked TRSM) can marshal its planes straight
+/// into microkernel form and hand them to every consumer without the
+/// scalar matrix ever being decoded again (the pack-plan reuse of the
+/// decode-once factorization pipeline).
+pub struct PackedA<T: Scalar> {
+    /// Rows of op(A) — the GEMM `m`.
+    pub rows: usize,
+    /// Columns of op(A) — the GEMM `k`.
+    pub cols: usize,
+    data: Vec<T::Unpacked>,
+}
+
+impl<T: Scalar> PackedA<T> {
+    /// Decode-and-pack `op(A)` from a scalar matrix (each element decoded
+    /// exactly once; the transpose is resolved here).
+    pub fn pack(ta: Trans, m: usize, k: usize, a: &[T], lda: usize) -> PackedA<T> {
+        PackedA::from_fn(m, k, |i, l| match ta {
+            Trans::No => at(a, lda, i, l).unpack(),
+            Trans::Yes => at(a, lda, l, i).unpack(),
+        })
+    }
+
+    /// Build the slabs from already-decoded planes, `f(i, l)` returning
+    /// element `(i, l)` of op(A): pure bit marshalling, no decode — the
+    /// entry the factorization drivers use to reuse panels that are still
+    /// hot in their decoded form.
+    pub fn from_fn(
+        m: usize,
+        k: usize,
+        mut f: impl FnMut(usize, usize) -> T::Unpacked,
+    ) -> PackedA<T> {
+        let islabs = m.div_ceil(MR);
+        let mut data = Vec::with_capacity(islabs * k * MR);
+        for is in 0..islabs {
+            let r0 = is * MR;
+            let rb = MR.min(m - r0);
+            for l in 0..k {
+                for ii in 0..MR {
+                    data.push(if ii < rb { f(r0 + ii, l) } else { T::unpacked_pad() });
+                }
+            }
+        }
+        PackedA { rows: m, cols: k, data }
+    }
+
+    #[inline]
+    fn slab(&self, is: usize) -> &[T::Unpacked] {
+        &self.data[is * self.cols * MR..(is + 1) * self.cols * MR]
+    }
+}
+
+impl<T: Scalar> Clone for PackedA<T> {
+    fn clone(&self) -> Self {
+        PackedA {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.clone(),
+        }
+    }
+}
+
+/// `op(B)` packed once into decode-once microkernel slabs: `ceil(n/NR)`
+/// column slabs, each `NR` wide and k-major inside — the [`gemm_packed`]
+/// B layout as an owned, reusable value (see [`PackedA`]).
+pub struct PackedB<T: Scalar> {
+    /// Rows of op(B) — the GEMM `k`.
+    pub rows: usize,
+    /// Columns of op(B) — the GEMM `n`.
+    pub cols: usize,
+    data: Vec<T::Unpacked>,
+}
+
+impl<T: Scalar> PackedB<T> {
+    /// Decode-and-pack `op(B)` from a scalar matrix.
+    pub fn pack(tb: Trans, k: usize, n: usize, b: &[T], ldb: usize) -> PackedB<T> {
+        PackedB::from_fn(k, n, |l, j| match tb {
+            Trans::No => at(b, ldb, l, j).unpack(),
+            Trans::Yes => at(b, ldb, j, l).unpack(),
+        })
+    }
+
+    /// Build the slabs from already-decoded planes, `f(l, j)` returning
+    /// element `(l, j)` of op(B) (pure marshalling; see
+    /// [`PackedA::from_fn`]).
+    pub fn from_fn(
+        k: usize,
+        n: usize,
+        mut f: impl FnMut(usize, usize) -> T::Unpacked,
+    ) -> PackedB<T> {
+        let jslabs = n.div_ceil(NR);
+        let mut data = Vec::with_capacity(jslabs * k * NR);
+        for js in 0..jslabs {
+            let j0 = js * NR;
+            let jb = NR.min(n - j0);
+            for l in 0..k {
+                for jj in 0..NR {
+                    data.push(if jj < jb { f(l, j0 + jj) } else { T::unpacked_pad() });
+                }
+            }
+        }
+        PackedB { rows: k, cols: n, data }
+    }
+
+    #[inline]
+    fn slab(&self, js: usize) -> &[T::Unpacked] {
+        &self.data[js * self.rows * NR..(js + 1) * self.rows * NR]
+    }
+}
+
+impl<T: Scalar> Clone for PackedB<T> {
+    fn clone(&self) -> Self {
+        PackedB {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.clone(),
+        }
+    }
+}
+
+/// A complete pack plan for one trailing update `C -= A · B`: both
+/// operands in microkernel slab form. The factorization drivers build one
+/// per blocked step from the decoded panel (`L21`) and the unpacked TRSM
+/// output (`U12` / `A21ᵀ`) while those are still hot, and thread it to
+/// the backend (`GemmBackend::gemm_update_prepacked`) — so the packed
+/// GEMM pipeline never re-decodes operand data the panel phase already
+/// had in plane form.
+pub struct PackPlan<T: Scalar> {
+    pub a: PackedA<T>,
+    pub b: PackedB<T>,
+}
+
+impl<T: Scalar> PackPlan<T> {
+    pub fn new(a: PackedA<T>, b: PackedB<T>) -> PackPlan<T> {
+        debug_assert_eq!(a.cols, b.rows, "pack plan: op(A) cols != op(B) rows");
+        PackPlan { a, b }
+    }
+}
+
+impl<T: Scalar> Clone for PackPlan<T> {
+    fn clone(&self) -> Self {
+        PackPlan {
+            a: self.a.clone(),
+            b: self.b.clone(),
+        }
+    }
+}
+
+/// GEMM over pre-packed operands: the [`gemm_packed`] microkernel with the
+/// pack phase already done by the caller. Bit-identical to [`gemm_naive`]
+/// for every shape — the slabs and the microkernel are exactly those of
+/// [`gemm_packed`]; only *when* the packing happened differs (and decoding
+/// is pure, so it cannot matter).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_prepacked<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    pa: &PackedA<T>,
+    pb: &PackedB<T>,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_prepacked(m, n, k, pa, pb, c, ldc);
+    gemm_prepacked_range(m, k, alpha, pa, pb, beta, 0, n, c, ldc);
+}
+
+/// Debug-mode validation of a prepacked call (the analogue of
+/// [`validate_dims`] for plan-carrying entry points).
+fn validate_prepacked<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    pa: &PackedA<T>,
+    pb: &PackedB<T>,
+    c: &[T],
+    ldc: usize,
+) {
+    debug_assert_eq!(pa.rows, m, "prepacked: op(A) rows {} != m {m}", pa.rows);
+    debug_assert_eq!(pa.cols, k, "prepacked: op(A) cols {} != k {k}", pa.cols);
+    debug_assert_eq!(pb.rows, k, "prepacked: op(B) rows {} != k {k}", pb.rows);
+    debug_assert_eq!(pb.cols, n, "prepacked: op(B) cols {} != n {n}", pb.cols);
+    debug_assert!(ldc >= m.max(1), "prepacked: ldc {ldc} < m {m}");
+    debug_assert!(
+        n == 0 || c.len() >= ldc * (n - 1) + m,
+        "prepacked: C buffer len {} too small for {m}x{n} at ldc {ldc}",
+        c.len()
+    );
+}
+
+/// Serial prepacked kernel over C columns `[j0, j1)`, with `j0` NR-slab
+/// aligned and `c` covering exactly those columns. Each output element's
+/// ascending-k mac chain is the [`microtile`] one, so any column split
+/// yields identical bits.
+#[allow(clippy::too_many_arguments)]
+fn gemm_prepacked_range<T: Scalar>(
+    m: usize,
+    k: usize,
+    alpha: T,
+    pa: &PackedA<T>,
+    pb: &PackedB<T>,
+    beta: T,
+    j0: usize,
+    j1: usize,
+    c: &mut [T],
+    ldc: usize,
+) {
+    debug_assert!(j0 % NR == 0);
+    let islabs = m.div_ceil(MR);
+    for js in (j0 / NR)..j1.div_ceil(NR) {
+        let jb = NR.min(j1 - js * NR);
+        let bs = pb.slab(js);
+        for is in 0..islabs {
+            let acc = microtile::<T>(k, pa.slab(is), bs);
+            let r0 = is * MR;
+            let rows = MR.min(m - r0);
+            for jj in 0..jb {
+                let j = js * NR + jj - j0;
+                for ii in 0..rows {
+                    let cij = &mut c[r0 + ii + j * ldc];
+                    *cij = combine(alpha, T::uacc_finish(acc[jj * MR + ii]), beta, *cij);
+                }
+            }
+        }
+    }
+}
+
+/// Multithreaded prepacked GEMM on the shared pool: C columns split at
+/// NR-slab boundaries, each chunk running the serial prepacked kernel —
+/// bit-identical for any `threads` (the per-element chains never change).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_prepacked_parallel<T: Scalar>(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    pa: &PackedA<T>,
+    pb: &PackedB<T>,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_prepacked(m, n, k, pa, pb, c, ldc);
+    let chunks = threads.max(1).min(n.div_ceil(NR));
+    if chunks == 1 {
+        return gemm_prepacked_range(m, k, alpha, pa, pb, beta, 0, n, c, ldc);
+    }
+    super::pool::global().scope(|scope| {
+        gemm_prepacked_scoped(scope, chunks, m, n, k, alpha, pa, pb, beta, c, ldc);
+    });
+}
+
+/// Prepacked column-split into an *existing* pool scope (the batched
+/// backends spawn several prepacked updates into one scope so tiles from
+/// different jobs overlap). Splits at NR-slab boundaries only; like BLAS,
+/// `c` need only extend to the last column's last row.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_prepacked_scoped<'env, T: Scalar>(
+    scope: &super::pool::Scope<'_, 'env>,
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    pa: &'env PackedA<T>,
+    pb: &'env PackedB<T>,
+    beta: T,
+    c: &'env mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    validate_prepacked(m, n, k, pa, pb, c, ldc);
+    let nslabs = n.div_ceil(NR);
+    let chunks = threads.max(1).min(nslabs);
+    let slabs_per = nslabs.div_ceil(chunks);
+    let mut rest = c;
+    let mut js0 = 0;
+    while js0 < nslabs {
+        let jse = (js0 + slabs_per).min(nslabs);
+        let j0 = js0 * NR;
+        let j1 = (jse * NR).min(n);
+        let (mine, tail) = if j1 < n {
+            rest.split_at_mut(ldc * (j1 - j0))
+        } else {
+            (rest, &mut [][..])
+        };
+        rest = tail;
+        scope.spawn(move || {
+            gemm_prepacked_range(m, k, alpha, pa, pb, beta, j0, j1, mine, ldc);
+        });
+        js0 = jse;
     }
 }
 
@@ -721,6 +1046,66 @@ mod tests {
             c1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             c2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn prepacked_equals_naive_bitwise_all_transposes() {
+        // The caller-packed pipeline must be bit-identical to gemm_naive
+        // whatever the transpose resolved at pack time, including odd
+        // shapes where edge slabs are padded, serial and pool-parallel.
+        let (m, n, k) = (27, 22, 19);
+        let mut rng = Pcg64::seed(31);
+        for ta in [Trans::No, Trans::Yes] {
+            for tb in [Trans::No, Trans::Yes] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let a = Matrix::<Posit32>::random_normal(ar, ac, 1.0, &mut rng);
+                let b = Matrix::<Posit32>::random_normal(br, bc, 1.0, &mut rng);
+                let alpha = Posit32::from_f64(-1.0);
+                let beta = Posit32::ONE;
+                let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+                let pa = PackedA::pack(ta, m, k, &a.data, a.ld());
+                let pb = PackedB::pack(tb, k, n, &b.data, b.ld());
+                let mut c1 = c0.clone();
+                let mut c2 = c0.clone();
+                let mut c3 = c0.clone();
+                gemm_naive(
+                    ta, tb, m, n, k, alpha, &a.data, a.ld(), &b.data, b.ld(), beta,
+                    &mut c1.data, m,
+                );
+                gemm_prepacked(m, n, k, alpha, &pa, &pb, beta, &mut c2.data, m);
+                gemm_prepacked_parallel(4, m, n, k, alpha, &pa, &pb, beta, &mut c3.data, m);
+                assert_eq!(c1.data, c2.data, "prepacked vs naive {ta:?}{tb:?}");
+                assert_eq!(c1.data, c3.data, "prepacked parallel {ta:?}{tb:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_from_fn_matches_pack_from_scalar() {
+        // Marshalling already-decoded planes (the drivers' reuse path)
+        // must build the exact slabs that decode-and-pack builds.
+        let (m, n, k) = (13, 9, 8);
+        let mut rng = Pcg64::seed(32);
+        let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        let au: Vec<_> = a.data.iter().map(|v| v.unpack()).collect();
+        let bu: Vec<_> = b.data.iter().map(|v| v.unpack()).collect();
+        let pa1 = PackedA::<Posit32>::pack(Trans::No, m, k, &a.data, m);
+        let pa2 = PackedA::<Posit32>::from_fn(m, k, |i, l| au[i + l * m]);
+        let pb1 = PackedB::<Posit32>::pack(Trans::No, k, n, &b.data, k);
+        let pb2 = PackedB::<Posit32>::from_fn(k, n, |l, j| bu[l + j * k]);
+        assert_eq!(pa1.data, pa2.data);
+        assert_eq!(pb1.data, pb2.data);
+        let plan = PackPlan::new(pa2, pb2);
+        let mut c1 = Matrix::<Posit32>::zeros(m, n);
+        let mut c2 = Matrix::<Posit32>::zeros(m, n);
+        gemm_naive(
+            Trans::No, Trans::No, m, n, k, Posit32::ONE, &a.data, m, &b.data, k,
+            Posit32::ZERO, &mut c1.data, m,
+        );
+        gemm_prepacked(m, n, k, Posit32::ONE, &plan.a, &plan.b, Posit32::ZERO, &mut c2.data, m);
+        assert_eq!(c1.data, c2.data);
     }
 
     #[test]

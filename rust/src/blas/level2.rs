@@ -4,11 +4,49 @@
 //! Used by the unblocked factorization kernels and the iterative
 //! refinement solver; also part of making the library a complete BLAS
 //! substrate rather than a GEMM-only demo.
+//!
+//! §Perf (decode-once factorization pipeline): every kernel decodes its
+//! vector operand(s) **once** and keeps the per-element accumulator in the
+//! unpacked domain across its whole reduction — for posits this removes
+//! the `O(rows · cols)` re-decodes of `x` (used once per output row in
+//! the scalar formulation) and every accumulator pack/unpack round trip,
+//! while performing the exact same single rounding per operation
+//! (`Scalar::uacc_mac` == `add(mul(..))`, `Scalar::unpacked_mul` ==
+//! `mul`). Results are bit-identical to the scalar formulation — pinned
+//! by the in-module tests and `rust/tests/factor_packed.rs`.
+//!
+//! All entry points carry the PR-3-style `debug_assert!` dimension /
+//! stride / buffer-length guards, so malformed calls fail loudly at the
+//! API boundary.
 
 use super::gemm::Trans;
 use super::Scalar;
 
+/// Debug-mode guard for a strided vector argument.
+fn validate_vec<T: Scalar>(name: &str, v: &[T], len: usize, inc: usize) {
+    debug_assert!(inc >= 1, "level2: {name} stride {inc} < 1");
+    debug_assert!(
+        len == 0 || v.len() >= (len - 1) * inc + 1,
+        "level2: {name} buffer len {} too small for {len} elements at stride {inc}",
+        v.len()
+    );
+}
+
+/// Debug-mode guard for a column-major matrix argument.
+fn validate_mat<T: Scalar>(name: &str, a: &[T], rows: usize, cols: usize, lda: usize) {
+    debug_assert!(lda >= rows.max(1), "level2: {name} lda {lda} < rows {rows}");
+    debug_assert!(
+        rows == 0 || cols == 0 || a.len() >= lda * (cols - 1) + rows,
+        "level2: {name} buffer len {} too small for {rows}x{cols} at lda {lda}",
+        a.len()
+    );
+}
+
 /// `y = alpha * op(A) x + beta * y` (GEMV). A is m×n column-major.
+///
+/// Decode-once: `x` is decoded one time (the scalar loop re-decoded it
+/// once per output row) and each dot product accumulates in unpacked
+/// planes; bit-identical to the naive formulation.
 #[allow(clippy::too_many_arguments)]
 pub fn gemv<T: Scalar>(
     trans: Trans,
@@ -27,21 +65,29 @@ pub fn gemv<T: Scalar>(
         Trans::No => (m, n),
         Trans::Yes => (n, m),
     };
+    validate_mat("gemv A", a, m, n, lda);
+    validate_vec("gemv x", x, cols, incx);
+    validate_vec("gemv y", y, rows, incy);
+    let xu: Vec<T::Unpacked> = (0..cols).map(|l| x[l * incx].unpack()).collect();
     for i in 0..rows {
-        let mut t = T::zero();
+        let mut t = T::uacc_zero();
         for l in 0..cols {
             let av = match trans {
                 Trans::No => a[i + l * lda],
                 Trans::Yes => a[l + i * lda],
             };
-            t = t.mac(av, x[l * incx]);
+            t = T::uacc_mac(t, av.unpack(), xu[l]);
         }
         let yi = &mut y[i * incy];
-        *yi = super::gemm::combine(alpha, t, beta, *yi);
+        *yi = super::gemm::combine(alpha, T::uacc_finish(t), beta, *yi);
     }
 }
 
 /// Rank-1 update `A += alpha * x * y^T` (GER).
+///
+/// Decode-once: `x` is decoded one time (the scalar loop re-decoded it
+/// once per column) and `alpha * y_j` is formed in the decoded domain
+/// with the same single rounding; bit-identical to the scalar loop.
 #[allow(clippy::too_many_arguments)]
 pub fn ger<T: Scalar>(
     m: usize,
@@ -54,18 +100,26 @@ pub fn ger<T: Scalar>(
     a: &mut [T],
     lda: usize,
 ) {
+    validate_vec("ger x", x, m, incx);
+    validate_vec("ger y", y, n, incy);
+    validate_mat("ger A", a, m, n, lda);
+    let alpha_u = alpha.unpack();
+    let xu: Vec<T::Unpacked> = (0..m).map(|i| x[i * incx].unpack()).collect();
     for j in 0..n {
-        let ayj = alpha.mul(y[j * incy]);
-        if ayj.is_zero() {
+        let ayj = T::unpacked_mul(alpha_u, y[j * incy].unpack());
+        if T::unpacked_is_zero(ayj) {
             continue;
         }
         for i in 0..m {
-            a[i + j * lda] = a[i + j * lda].add(x[i * incx].mul(ayj));
+            let acc = T::uacc_mac(T::uacc_load(a[i + j * lda].unpack()), xu[i], ayj);
+            a[i + j * lda] = T::uacc_finish(acc);
         }
     }
 }
 
 /// Triangular solve `op(A) x = b` for a single vector (TRSV), in place.
+/// Delegates to the decode-once TRSM, so it shares its bit-identity
+/// contract with the scalar reference.
 pub fn trsv<T: Scalar>(
     uplo: super::Uplo,
     trans: Trans,
@@ -76,6 +130,8 @@ pub fn trsv<T: Scalar>(
     x: &mut [T],
     incx: usize,
 ) {
+    validate_mat("trsv A", a, n, n, lda);
+    validate_vec("trsv x", x, n, incx);
     // Delegate to TRSM with one RHS held at stride 1; handle stride by
     // gathering (level-2 calls in this codebase are incx == 1 in practice).
     if incx == 1 {
@@ -103,6 +159,9 @@ pub fn trsv<T: Scalar>(
 
 /// Symmetric matrix-vector product using only the lower triangle
 /// (SYMV, lower): `y = alpha * A x + beta * y`.
+///
+/// Decode-once: `x` decoded one time, unpacked accumulation per output
+/// element; bit-identical to the scalar formulation.
 #[allow(clippy::too_many_arguments)]
 pub fn symv_lower<T: Scalar>(
     n: usize,
@@ -113,27 +172,39 @@ pub fn symv_lower<T: Scalar>(
     beta: T,
     y: &mut [T],
 ) {
+    validate_mat("symv A", a, n, n, lda);
+    validate_vec("symv x", x, n, 1);
+    validate_vec("symv y", y, n, 1);
+    let xu: Vec<T::Unpacked> = x.iter().take(n).map(|v| v.unpack()).collect();
     for i in 0..n {
-        let mut t = T::zero();
+        let mut t = T::uacc_zero();
         for l in 0..n {
             // a(i,l) with only the lower triangle stored.
             let av = if i >= l { a[i + l * lda] } else { a[l + i * lda] };
-            t = t.mac(av, x[l]);
+            t = T::uacc_mac(t, av.unpack(), xu[l]);
         }
-        y[i] = super::gemm::combine(alpha, t, beta, y[i]);
+        y[i] = super::gemm::combine(alpha, T::uacc_finish(t), beta, y[i]);
     }
 }
 
 /// Symmetric rank-1 update of the lower triangle (SYR, lower):
 /// `A += alpha * x x^T`.
+///
+/// Decode-once: `x` decoded one time and reused as both factors of every
+/// product; bit-identical to the scalar formulation.
 pub fn syr_lower<T: Scalar>(n: usize, alpha: T, x: &[T], a: &mut [T], lda: usize) {
+    validate_vec("syr x", x, n, 1);
+    validate_mat("syr A", a, n, n, lda);
+    let alpha_u = alpha.unpack();
+    let xu: Vec<T::Unpacked> = x.iter().take(n).map(|v| v.unpack()).collect();
     for j in 0..n {
-        let axj = alpha.mul(x[j]);
-        if axj.is_zero() {
+        let axj = T::unpacked_mul(alpha_u, xu[j]);
+        if T::unpacked_is_zero(axj) {
             continue;
         }
         for i in j..n {
-            a[i + j * lda] = a[i + j * lda].add(x[i].mul(axj));
+            let acc = T::uacc_mac(T::uacc_load(a[i + j * lda].unpack()), xu[i], axj);
+            a[i + j * lda] = T::uacc_finish(acc);
         }
     }
 }
@@ -213,6 +284,89 @@ mod tests {
             }
             assert!((s - b[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn decode_once_kernels_match_scalar_formulation_bitwise() {
+        // The pre-pipeline scalar formulations, written out literally: the
+        // decode-once kernels must reproduce them bit-for-bit on
+        // wide-dynamic-range posit data (zeros included so the skip paths
+        // fire).
+        let (m, n) = (11, 7);
+        let mut rng = Pcg64::seed(64);
+        let mut val = {
+            let mut k = 0u32;
+            move |rng: &mut Pcg64| {
+                k += 1;
+                if k % 9 == 0 {
+                    return Posit32::ZERO;
+                }
+                let e = (rng.next_u32() % 80) as i32 - 40;
+                Posit32::from_f64(rng.normal() * 2f64.powi(e))
+            }
+        };
+        let a0 = Matrix::<Posit32>::from_fn(m, n, |_, _| val(&mut rng));
+        let x: Vec<Posit32> = (0..n.max(m)).map(|_| val(&mut rng)).collect();
+        let y0: Vec<Posit32> = (0..m.max(n)).map(|_| val(&mut rng)).collect();
+        let alpha = Posit32::from_f64(-1.5);
+        let beta = Posit32::from_f64(0.25);
+
+        // gemv vs the naive mac loop.
+        let mut y1 = y0[..m].to_vec();
+        gemv(Trans::No, m, n, alpha, &a0.data, m, &x[..n], 1, beta, &mut y1, 1);
+        let mut y2 = y0[..m].to_vec();
+        for i in 0..m {
+            let mut t = Posit32::ZERO;
+            for l in 0..n {
+                t = t.mac(a0[(i, l)], x[l]);
+            }
+            y2[i] = super::super::gemm::combine(alpha, t, beta, y2[i]);
+        }
+        assert_eq!(y1, y2, "gemv");
+
+        // ger vs the naive rank-1 loop.
+        let mut a1 = a0.clone();
+        ger(m, n, alpha, &x[..m], 1, &y0[..n], 1, &mut a1.data, m);
+        let mut a2 = a0.clone();
+        for j in 0..n {
+            let ayj = alpha.mul(y0[j]);
+            if ayj.is_zero() {
+                continue;
+            }
+            for i in 0..m {
+                a2[(i, j)] = a2[(i, j)].add(x[i].mul(ayj));
+            }
+        }
+        assert_eq!(a1.data, a2.data, "ger");
+
+        // symv/syr (lower) vs their naive loops.
+        let s = Matrix::<Posit32>::from_fn(n, n, |_, _| val(&mut rng));
+        let mut z1 = y0[..n].to_vec();
+        symv_lower(n, alpha, &s.data, n, &x[..n], beta, &mut z1);
+        let mut z2 = y0[..n].to_vec();
+        for i in 0..n {
+            let mut t = Posit32::ZERO;
+            for l in 0..n {
+                let av = if i >= l { s[(i, l)] } else { s[(l, i)] };
+                t = t.mac(av, x[l]);
+            }
+            z2[i] = super::super::gemm::combine(alpha, t, beta, z2[i]);
+        }
+        assert_eq!(z1, z2, "symv_lower");
+
+        let mut s1 = s.clone();
+        syr_lower(n, alpha, &x[..n], &mut s1.data, n);
+        let mut s2 = s.clone();
+        for j in 0..n {
+            let axj = alpha.mul(x[j]);
+            if axj.is_zero() {
+                continue;
+            }
+            for i in j..n {
+                s2[(i, j)] = s2[(i, j)].add(x[i].mul(axj));
+            }
+        }
+        assert_eq!(s1.data, s2.data, "syr_lower");
     }
 
     #[test]

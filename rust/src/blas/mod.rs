@@ -21,13 +21,14 @@ pub mod trsm;
 
 pub use gemm::{
     default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_parallel,
-    gemm_parallel_scoped, Trans,
+    gemm_parallel_scoped, gemm_prepacked, gemm_prepacked_parallel, gemm_prepacked_scoped,
+    PackPlan, PackedA, PackedB, Trans,
 };
 pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
 pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};
 pub use matrix::Matrix;
 pub use syrk::syrk_lower;
-pub use trsm::{trsm, Diag, Side, Uplo};
+pub use trsm::{trsm, trsm_ref, trsm_unpacked, Diag, Side, Uplo};
 
 use crate::posit::{self, Posit32};
 
@@ -83,6 +84,46 @@ pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
     /// Re-encode the accumulator once per output element (exact: the
     /// accumulator is kept on representable values).
     fn uacc_finish(acc: Self::UAcc) -> Self;
+
+    // --- Decode-once domain beyond GEMM -------------------------------
+    // The factorization pipeline (TRSM, level-2 kernels, getf2/potf2
+    // panel sweeps) keeps whole operands decoded across their sweeps.
+    // Every method below is either exact bit marshalling or one rounding
+    // bit-identical to the corresponding scalar op — which is why routing
+    // the solves through the decoded domain cannot change numerics. All
+    // passthrough for the IEEE formats.
+
+    /// Exact negation of a decoded operand (posit negation and IEEE sign
+    /// flips are exact).
+    fn unpacked_neg(u: Self::Unpacked) -> Self::Unpacked;
+    /// `round(a * b)` — one rounding, bit-identical to [`Scalar::mul`] on
+    /// the encoded values (alpha pre-scaling, rank-1 column scalings).
+    fn unpacked_mul(a: Self::Unpacked, b: Self::Unpacked) -> Self::Unpacked;
+    /// Lift a decoded value into an accumulator (exact).
+    fn uacc_load(u: Self::Unpacked) -> Self::UAcc;
+    /// Marshal a (rounded) accumulator back to a decoded operand (exact —
+    /// the inverse of [`Scalar::uacc_load`] on representable values).
+    fn uacc_store(acc: Self::UAcc) -> Self::Unpacked;
+    /// `round(acc / d)` — one rounding, bit-identical to [`Scalar::div`]
+    /// (the TRSM divide-update and the panel pivot scalings).
+    fn uacc_div(acc: Self::UAcc, d: Self::Unpacked) -> Self::UAcc;
+    /// `round(sqrt(acc))` — one rounding, bit-identical to
+    /// [`Scalar::sqrt`] (`potf2`'s pivot roots).
+    fn uacc_sqrt(acc: Self::UAcc) -> Self::UAcc;
+    /// Encode a decoded operand back to the storage type (exact; the one
+    /// encode per element when a panel sweep writes back).
+    fn unpacked_encode(u: Self::Unpacked) -> Self;
+    /// Exact `== zero` on the decoded value (skip/singularity checks).
+    fn unpacked_is_zero(u: Self::Unpacked) -> bool;
+    /// Exact magnitude ordering, identical to [`Scalar::abs_gt`] on the
+    /// encoded values — the `getf2` pivot search in the decoded domain.
+    fn unpacked_abs_gt(a: Self::Unpacked, b: Self::Unpacked) -> bool;
+    /// NaR / NaN / Inf detection on the accumulator ([`Scalar::is_bad`]).
+    fn uacc_is_bad(acc: Self::UAcc) -> bool;
+    /// Exact sign test `value <= 0` on the accumulator's encoded value
+    /// (`potf2`'s positive-definite check; NaN/NaR report false exactly
+    /// like `to_f64() <= 0.0` would).
+    fn uacc_le_zero(acc: Self::UAcc) -> bool;
 
     fn zero() -> Self;
     fn one() -> Self;
@@ -271,6 +312,51 @@ impl Scalar for Posit32 {
     }
 
     #[inline]
+    fn unpacked_neg(u: posit::unpacked::U32) -> posit::unpacked::U32 {
+        u.negate()
+    }
+    #[inline]
+    fn unpacked_mul(a: posit::unpacked::U32, b: posit::unpacked::U32) -> posit::unpacked::U32 {
+        posit::unpacked::mul_rounded(a, b)
+    }
+    #[inline]
+    fn uacc_load(u: posit::unpacked::U32) -> posit::unpacked::Acc32 {
+        u.to_acc()
+    }
+    #[inline]
+    fn uacc_store(acc: posit::unpacked::Acc32) -> posit::unpacked::U32 {
+        posit::unpacked::U32::from_acc(acc)
+    }
+    #[inline]
+    fn uacc_div(acc: posit::unpacked::Acc32, d: posit::unpacked::U32) -> posit::unpacked::Acc32 {
+        posit::unpacked::div_rounded(acc, d)
+    }
+    #[inline]
+    fn uacc_sqrt(acc: posit::unpacked::Acc32) -> posit::unpacked::Acc32 {
+        posit::unpacked::sqrt_rounded(acc)
+    }
+    #[inline]
+    fn unpacked_encode(u: posit::unpacked::U32) -> Posit32 {
+        posit::unpacked::encode_value(u)
+    }
+    #[inline]
+    fn unpacked_is_zero(u: posit::unpacked::U32) -> bool {
+        u.is_zero()
+    }
+    #[inline]
+    fn unpacked_abs_gt(a: posit::unpacked::U32, b: posit::unpacked::U32) -> bool {
+        a.abs_key() > b.abs_key()
+    }
+    #[inline]
+    fn uacc_is_bad(acc: posit::unpacked::Acc32) -> bool {
+        acc.is_nar()
+    }
+    #[inline]
+    fn uacc_le_zero(acc: posit::unpacked::Acc32) -> bool {
+        acc.le_zero()
+    }
+
+    #[inline]
     fn zero() -> Self {
         Posit32::ZERO
     }
@@ -371,6 +457,50 @@ impl Scalar for f32 {
         acc
     }
     #[inline]
+    fn unpacked_neg(u: f32) -> f32 {
+        -u
+    }
+    #[inline]
+    fn unpacked_mul(a: f32, b: f32) -> f32 {
+        a * b
+    }
+    #[inline]
+    fn uacc_load(u: f32) -> f32 {
+        u
+    }
+    #[inline]
+    fn uacc_store(acc: f32) -> f32 {
+        acc
+    }
+    #[inline]
+    fn uacc_div(acc: f32, d: f32) -> f32 {
+        acc / d
+    }
+    #[inline]
+    fn uacc_sqrt(acc: f32) -> f32 {
+        f32::sqrt(acc)
+    }
+    #[inline]
+    fn unpacked_encode(u: f32) -> f32 {
+        u
+    }
+    #[inline]
+    fn unpacked_is_zero(u: f32) -> bool {
+        u == 0.0
+    }
+    #[inline]
+    fn unpacked_abs_gt(a: f32, b: f32) -> bool {
+        f32::abs(a) > f32::abs(b)
+    }
+    #[inline]
+    fn uacc_is_bad(acc: f32) -> bool {
+        !acc.is_finite()
+    }
+    #[inline]
+    fn uacc_le_zero(acc: f32) -> bool {
+        acc <= 0.0
+    }
+    #[inline]
     fn zero() -> Self {
         0.0
     }
@@ -467,6 +597,50 @@ impl Scalar for f64 {
     #[inline]
     fn uacc_finish(acc: f64) -> f64 {
         acc
+    }
+    #[inline]
+    fn unpacked_neg(u: f64) -> f64 {
+        -u
+    }
+    #[inline]
+    fn unpacked_mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+    #[inline]
+    fn uacc_load(u: f64) -> f64 {
+        u
+    }
+    #[inline]
+    fn uacc_store(acc: f64) -> f64 {
+        acc
+    }
+    #[inline]
+    fn uacc_div(acc: f64, d: f64) -> f64 {
+        acc / d
+    }
+    #[inline]
+    fn uacc_sqrt(acc: f64) -> f64 {
+        f64::sqrt(acc)
+    }
+    #[inline]
+    fn unpacked_encode(u: f64) -> f64 {
+        u
+    }
+    #[inline]
+    fn unpacked_is_zero(u: f64) -> bool {
+        u == 0.0
+    }
+    #[inline]
+    fn unpacked_abs_gt(a: f64, b: f64) -> bool {
+        f64::abs(a) > f64::abs(b)
+    }
+    #[inline]
+    fn uacc_is_bad(acc: f64) -> bool {
+        !acc.is_finite()
+    }
+    #[inline]
+    fn uacc_le_zero(acc: f64) -> bool {
+        acc <= 0.0
     }
     #[inline]
     fn zero() -> Self {

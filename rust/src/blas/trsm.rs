@@ -6,6 +6,21 @@
 //! The blocked factorizations use: Left/Lower/NoTrans/Unit (LU panel
 //! update), Right/Lower/Trans/NonUnit (Cholesky panel), and the solvers
 //! use Left Lower/Upper against single right-hand sides.
+//!
+//! §Perf (decode-once factorization pipeline): [`trsm`] routes through
+//! [`trsm_unpacked`], which decodes the used triangle of A **once** for
+//! all `n` right-hand sides and keeps the solution in decoded planes
+//! across the whole substitution — each X element is decoded/encoded
+//! exactly once instead of once per downstream use, and the running
+//! substitution accumulator never round-trips through the bit pattern
+//! between consecutive operations. The per-element operation sequence
+//! (one rounding per multiply, subtract-add and divide, in the fixed
+//! MPLAPACK order) is exactly that of the scalar reference [`trsm_ref`],
+//! so results are bit-identical (pinned by the tests here and the
+//! exhaustive Posit(8,2) sweeps in `rust/tests/factor_packed.rs`). The
+//! decoded solution is returned so the blocked drivers can marshal it
+//! straight into a trailing-update pack plan (`blas::PackPlan`) while it
+//! is still hot.
 
 use super::Scalar;
 
@@ -27,10 +42,269 @@ pub enum Diag {
 
 use super::gemm::Trans;
 
+/// Debug-mode validation of TRSM dimensions, strides and buffer lengths
+/// (the PR-3-style entry-point guards): malformed calls fail loudly at the
+/// API boundary instead of mid-substitution.
+fn validate_trsm<T: Scalar>(
+    side: Side,
+    m: usize,
+    n: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+) {
+    let asz = if side == Side::Left { m } else { n };
+    debug_assert!(lda >= asz.max(1), "trsm: lda {lda} < A order {asz}");
+    debug_assert!(ldb >= m.max(1), "trsm: ldb {ldb} < m {m}");
+    debug_assert!(
+        asz == 0 || a.len() >= lda * (asz - 1) + asz,
+        "trsm: A buffer len {} too small for {asz}x{asz} at lda {lda}",
+        a.len()
+    );
+    debug_assert!(
+        n == 0 || b.len() >= ldb * (n - 1) + m,
+        "trsm: B buffer len {} too small for {m}x{n} at ldb {ldb}",
+        b.len()
+    );
+}
+
 /// Triangular solve; `b` is m×n (column-major, leading dimension `ldb`),
-/// `a` is the triangular factor (m×m for Left, n×n for Right).
+/// `a` is the triangular factor (m×m for Left, n×n for Right). Routed
+/// through the decode-once kernel ([`trsm_unpacked`]); bit-identical to
+/// the scalar reference [`trsm_ref`] for every variant and format.
 #[allow(clippy::too_many_arguments)]
 pub fn trsm<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    // Decode-once pays off when triangle elements are reused across the
+    // free dimension (RHS columns for Left, rows for Right). A
+    // single-vector solve reads each element exactly once, so it takes
+    // the streaming scalar path — bit-identical either way — and skips
+    // the plane buffers (which would double a big solve's footprint).
+    let reuse = if side == Side::Left { n } else { m };
+    if reuse < 2 {
+        return trsm_ref(side, uplo, trans, diag, m, n, alpha, a, lda, b, ldb);
+    }
+    trsm_unpacked(side, uplo, trans, diag, m, n, alpha, a, lda, b, ldb);
+}
+
+/// Decode-once TRSM. Solves like [`trsm`] (writing X over `b`) and
+/// additionally returns the solution **still decoded** as a dense
+/// column-major `m*n` plane buffer — the handoff the blocked
+/// factorization drivers use to build the trailing update's pack plan
+/// without re-decoding `U12`/`A21` from the scalar matrix.
+///
+/// Bit-identity argument: decoding is a pure bijection on representable
+/// values, every multiply/subtract/divide below performs the same single
+/// rounding as its scalar counterpart (`Scalar::uacc_mac` ==
+/// `sub(mul(..))` with the exact negation folded into the multiplicand,
+/// `Scalar::uacc_div` == `div`), and the substitution order per element is
+/// exactly [`trsm_ref`]'s — the Right-side variants are restructured from
+/// column sweeps to per-element accumulation, which touches each output's
+/// update sequence in the same ascending order and is therefore
+/// observationally identical.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_unpacked<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) -> Vec<T::Unpacked> {
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    validate_trsm(side, m, n, a, lda, b, ldb);
+    let asz = if side == Side::Left { m } else { n };
+    // Decode the used triangle of A once (for all n right-hand sides).
+    // Entries the algorithm never reads — the other triangle, and the
+    // diagonal under Diag::Unit (whose stored values are ignored by
+    // contract) — stay as padding and are never consumed.
+    let mut au: Vec<T::Unpacked> = vec![T::unpacked_pad(); asz * asz];
+    for j in 0..asz {
+        for i in 0..asz {
+            let used = match uplo {
+                Uplo::Lower => i > j || (i == j && diag == Diag::NonUnit),
+                Uplo::Upper => i < j || (i == j && diag == Diag::NonUnit),
+            };
+            if used {
+                au[i + j * asz] = a[i + j * lda].unpack();
+            }
+        }
+    }
+    let at = |i: usize, j: usize| au[i + j * asz];
+    // Decode B once, applying the alpha pre-scale with one rounding per
+    // element exactly like the scalar reference's pre-pass.
+    let scale = !(alpha == T::one());
+    let alpha_u = alpha.unpack();
+    let mut x: Vec<T::Unpacked> = Vec::with_capacity(m * n);
+    for j in 0..n {
+        for i in 0..m {
+            let v = b[i + j * ldb].unpack();
+            x.push(if scale { T::unpacked_mul(alpha_u, v) } else { v });
+        }
+    }
+    match (side, uplo, trans) {
+        // Solve L X = B: forward substitution down the rows.
+        (Side::Left, Uplo::Lower, Trans::No) => {
+            for j in 0..n {
+                let col = &mut x[j * m..(j + 1) * m];
+                for i in 0..m {
+                    let mut acc = T::uacc_load(col[i]);
+                    for l in 0..i {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(at(i, l)), col[l]);
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(i, i));
+                    }
+                    col[i] = T::uacc_store(acc);
+                }
+            }
+        }
+        // Solve U X = B: backward substitution up the rows.
+        (Side::Left, Uplo::Upper, Trans::No) => {
+            for j in 0..n {
+                let col = &mut x[j * m..(j + 1) * m];
+                for i in (0..m).rev() {
+                    let mut acc = T::uacc_load(col[i]);
+                    for l in i + 1..m {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(at(i, l)), col[l]);
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(i, i));
+                    }
+                    col[i] = T::uacc_store(acc);
+                }
+            }
+        }
+        // Solve L^T X = B == upper system: backward substitution.
+        (Side::Left, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                let col = &mut x[j * m..(j + 1) * m];
+                for i in (0..m).rev() {
+                    let mut acc = T::uacc_load(col[i]);
+                    for l in i + 1..m {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(at(l, i)), col[l]);
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(i, i));
+                    }
+                    col[i] = T::uacc_store(acc);
+                }
+            }
+        }
+        // Solve U^T X = B == lower system: forward substitution.
+        (Side::Left, Uplo::Upper, Trans::Yes) => {
+            for j in 0..n {
+                let col = &mut x[j * m..(j + 1) * m];
+                for i in 0..m {
+                    let mut acc = T::uacc_load(col[i]);
+                    for l in 0..i {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(at(l, i)), col[l]);
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(i, i));
+                    }
+                    col[i] = T::uacc_store(acc);
+                }
+            }
+        }
+        // X L = B: columns right-to-left (X_j depends on later columns);
+        // per element, the update sequence runs l = j+1..n ascending,
+        // exactly the reference's column-sweep order.
+        (Side::Right, Uplo::Lower, Trans::No) => {
+            for j in (0..n).rev() {
+                for i in 0..m {
+                    let mut acc = T::uacc_load(x[i + j * m]);
+                    for l in j + 1..n {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(x[i + l * m]), at(l, j));
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(j, j));
+                    }
+                    x[i + j * m] = T::uacc_store(acc);
+                }
+            }
+        }
+        // X U = B: left-to-right.
+        (Side::Right, Uplo::Upper, Trans::No) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut acc = T::uacc_load(x[i + j * m]);
+                    for l in 0..j {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(x[i + l * m]), at(l, j));
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(j, j));
+                    }
+                    x[i + j * m] = T::uacc_store(acc);
+                }
+            }
+        }
+        // X L^T = B (the Cholesky panel update): left-to-right, using rows
+        // of L as columns of L^T.
+        (Side::Right, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut acc = T::uacc_load(x[i + j * m]);
+                    for l in 0..j {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(x[i + l * m]), at(j, l));
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(j, j));
+                    }
+                    x[i + j * m] = T::uacc_store(acc);
+                }
+            }
+        }
+        // X U^T = B: right-to-left.
+        (Side::Right, Uplo::Upper, Trans::Yes) => {
+            for j in (0..n).rev() {
+                for i in 0..m {
+                    let mut acc = T::uacc_load(x[i + j * m]);
+                    for l in j + 1..n {
+                        acc = T::uacc_mac(acc, T::unpacked_neg(x[i + l * m]), at(j, l));
+                    }
+                    if diag == Diag::NonUnit {
+                        acc = T::uacc_div(acc, at(j, j));
+                    }
+                    x[i + j * m] = T::uacc_store(acc);
+                }
+            }
+        }
+    }
+    // One encode per element (exact: every plane holds a rounded value).
+    for j in 0..n {
+        for i in 0..m {
+            b[i + j * ldb] = T::unpacked_encode(x[i + j * m]);
+        }
+    }
+    x
+}
+
+/// The scalar reference TRSM: per-operation decode/encode through the
+/// storage type, exactly as before the decode-once pipeline. Retained as
+/// the bit-identity ground truth for [`trsm_unpacked`] (tests and the
+/// factorization bench gate) and as the perf baseline.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_ref<T: Scalar>(
     side: Side,
     uplo: Uplo,
     trans: Trans,
@@ -46,6 +320,7 @@ pub fn trsm<T: Scalar>(
     if m == 0 || n == 0 {
         return;
     }
+    validate_trsm(side, m, n, a, lda, b, ldb);
     if !(alpha == T::one()) {
         for j in 0..n {
             for i in 0..m {
@@ -191,6 +466,7 @@ pub fn trsm<T: Scalar>(
 mod tests {
     use super::*;
     use crate::blas::{gemm, Matrix};
+    use crate::posit::Posit32;
     use crate::rng::Pcg64;
 
     /// Build a well-conditioned triangular matrix (unit-ish diagonal).
@@ -256,6 +532,55 @@ mod tests {
                             err < 1e-10,
                             "{side:?} {uplo:?} {trans:?} {diag:?}: err {err}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpacked_matches_scalar_reference_bitwise_posit() {
+        // Every variant, posit operands across the dynamic range: the
+        // decode-once kernel must equal the scalar reference bit-for-bit,
+        // and the returned planes must encode to exactly the written X.
+        let (m, n) = (7, 5);
+        let mut rng = Pcg64::seed(78);
+        let val = |rng: &mut Pcg64| {
+            let e = (rng.next_u32() % 60) as i32 - 30;
+            Posit32::from_f64(rng.normal() * 2f64.powi(e))
+        };
+        for side in [Side::Left, Side::Right] {
+            for uplo in [Uplo::Lower, Uplo::Upper] {
+                for trans in [Trans::No, Trans::Yes] {
+                    for diag in [Diag::NonUnit, Diag::Unit] {
+                        for alpha in [Posit32::ONE, Posit32::from_f64(-0.75)] {
+                            let asz = if side == Side::Left { m } else { n };
+                            let a = Matrix::<Posit32>::from_fn(asz, asz, |_, _| val(&mut rng));
+                            let b0 = Matrix::<Posit32>::from_fn(m, n, |_, _| val(&mut rng));
+                            let mut b1 = b0.clone();
+                            let mut b2 = b0.clone();
+                            trsm_ref(
+                                side, uplo, trans, diag, m, n, alpha, &a.data, asz,
+                                &mut b1.data, m,
+                            );
+                            let x = trsm_unpacked(
+                                side, uplo, trans, diag, m, n, alpha, &a.data, asz,
+                                &mut b2.data, m,
+                            );
+                            assert_eq!(
+                                b1.data, b2.data,
+                                "{side:?} {uplo:?} {trans:?} {diag:?} alpha {alpha:?}"
+                            );
+                            for j in 0..n {
+                                for i in 0..m {
+                                    assert_eq!(
+                                        <Posit32 as Scalar>::unpacked_encode(x[i + j * m]),
+                                        b2[(i, j)],
+                                        "returned planes ({i},{j})"
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
             }

@@ -9,6 +9,16 @@
 //! same driver at `Posit32`, `f32` and `f64` is what lets the service run
 //! the paper's format comparison through one code path.
 //!
+//! §Perf (decode-once factorization pipeline): the host phase runs the
+//! unpacked panel ([`getf2_unpacked`]) and unpacked TRSM
+//! ([`trsm_unpacked`]), and every trailing update ships a
+//! [`PackPlan`] marshalled from their still-hot decoded planes — so a
+//! host backend's packed GEMM never re-decodes (nor re-packs) `L21`/`U12`
+//! from the scalar matrix, and the per-step pack pass collapses to pure
+//! bit marshalling. Backends that want raw bit patterns (PJRT) still get
+//! the staged scalar tiles and ignore the plan; numerics are identical
+//! either way (decode/pack are pure).
+//!
 //! [`refine_offload`] adds the mixed-precision job mode: factorize in the
 //! working format `T` (posit32 or binary32, through the backend), then
 //! iteratively refine residuals computed in binary64 — the classic
@@ -16,8 +26,10 @@
 //! decimal digits.
 
 use super::{GemmBackend, OffloadStats};
-use crate::blas::{gemm, trsm, Diag, Matrix, Scalar, Side, Trans, Uplo};
-use crate::lapack::{backward_error, getf2, getrs, laswp, potf2, potrs, LapackError};
+use crate::blas::{
+    gemm, trsm_unpacked, Diag, Matrix, PackPlan, PackedA, PackedB, Scalar, Side, Trans, Uplo,
+};
+use crate::lapack::{backward_error, getf2_unpacked, getrs, laswp, potf2, potrs, LapackError};
 use std::time::Instant;
 
 /// Blocked LU with partial pivoting, trailing update on `backend`.
@@ -38,12 +50,18 @@ pub fn getrf_offload<T: Scalar>(
     let mut j = 0;
     while j < kmin {
         let jb = nb.min(kmin - j);
+        let pm = m - j; // panel height
         let t0 = Instant::now();
-        // Panel (host).
+        // Panel (host), decoded once for the whole sweep; the decoded
+        // planes are kept so the trailing update's L21 slabs can be
+        // marshalled from them while they are hot.
+        let panel_u;
         {
             let panel = &mut a[j + j * lda..];
             let mut piv = vec![0usize; jb];
-            if let Err(e) = getf2(m - j, jb, panel, lda, &mut piv) {
+            let (pu, res) = getf2_unpacked(pm, jb, panel, lda, &mut piv);
+            panel_u = pu;
+            if let Err(e) = res {
                 info.get_or_insert(match e {
                     LapackError::SingularU(i) => LapackError::SingularU(i + j),
                     other => other,
@@ -54,13 +72,15 @@ pub fn getrf_offload<T: Scalar>(
             }
         }
         laswp(j, a, lda, j, j + jb, ipiv);
+        let mut u12_u: Option<Vec<T::Unpacked>> = None;
         if j + jb < n {
             laswp(n - j - jb, &mut a[(j + jb) * lda..], lda, j, j + jb, ipiv);
-            // U12 = L11^{-1} A12 (host TRSM, panel-sized).
+            // U12 = L11^{-1} A12 (host TRSM, panel-sized, decode-once; its
+            // decoded output becomes the update's B-side slabs).
             let (a11_part, a12_part) = a.split_at_mut((j + jb) * lda);
             let a11 = &a11_part[j + j * lda..];
             let a12 = &mut a12_part[j..];
-            trsm(
+            u12_u = Some(trsm_unpacked(
                 Side::Left,
                 Uplo::Lower,
                 Trans::No,
@@ -72,7 +92,7 @@ pub fn getrf_offload<T: Scalar>(
                 lda,
                 a12,
                 lda,
-            );
+            ));
         }
         stats.panel_s += t0.elapsed().as_secs_f64();
 
@@ -81,19 +101,33 @@ pub fn getrf_offload<T: Scalar>(
             let t1 = Instant::now();
             let ncols = n - j - jb;
             let nrows = m - j - jb;
-            // Pack U12 (jb x ncols) to break the borrow overlap; the same
-            // staging the paper performs when shipping operands to the
-            // accelerator.
-            let mut u12 = vec![T::zero(); jb * ncols];
-            for c in 0..ncols {
-                let base = j + (j + jb + c) * lda;
-                u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            // Pack plan: L21 from the decoded panel (rows jb..), U12 from
+            // the decoded TRSM output — pure marshalling into microkernel
+            // slabs, no re-decode of the scalar matrix (the pack-plan
+            // reuse of the decode-once pipeline).
+            let u12_planes = u12_u.as_ref().expect("u12 computed when j + jb < n");
+            let plan = PackPlan::new(
+                PackedA::<T>::from_fn(nrows, jb, |i, l| panel_u[(jb + i) + l * pm]),
+                PackedB::<T>::from_fn(jb, ncols, |l, c| u12_planes[l + c * jb]),
+            );
+            // Stage U12 contiguously only for backends that consume raw
+            // scalar tiles (PJRT ships bit patterns) — the same staging
+            // the paper performs when shipping operands to the
+            // accelerator. Plan-consuming backends get an empty view and
+            // run entirely off the slabs.
+            let mut u12 = Vec::new();
+            if backend.wants_scalar_tiles() {
+                u12 = vec![T::zero(); jb * ncols];
+                for c in 0..ncols {
+                    let base = j + (j + jb + c) * lda;
+                    u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                }
             }
             let (left, right) = a.split_at_mut((j + jb) * lda);
             let l21 = &left[(j + jb) + j * lda..];
             let a22 = &mut right[j + jb..];
             backend
-                .gemm_update(nrows, jb, ncols, l21, lda, &u12, jb, a22, lda)
+                .gemm_update_prepacked(nrows, jb, ncols, l21, lda, &u12, jb, &plan, a22, lda)
                 .map_err(|_| LapackError::BadValue(j + 1))?;
             stats.update_s += t1.elapsed().as_secs_f64();
             stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
@@ -142,14 +176,16 @@ pub fn potrf_offload<T: Scalar>(
         }
         if j + jb < n {
             let m2 = n - j - jb;
-            // A21 = A21 L11^{-T} (host TRSM).
+            // A21 = A21 L11^{-T} (host TRSM, decode-once; the decoded
+            // output feeds BOTH sides of the trailing update's pack plan —
+            // A21 and its transpose — without any re-decode).
             let mut l11 = vec![T::zero(); jb * jb];
             for c in 0..jb {
                 let base = j + (j + c) * lda;
                 l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
             }
             let a21 = &mut a[(j + jb) + j * lda..];
-            trsm(
+            let a21_u = trsm_unpacked(
                 Side::Right,
                 Uplo::Lower,
                 Trans::Yes,
@@ -164,23 +200,37 @@ pub fn potrf_offload<T: Scalar>(
             );
             stats.panel_s += t0.elapsed().as_secs_f64();
 
-            // Trailing update A22 -= A21 A21^T as a GEMM: stage A21 and its
-            // host-side transpose (paper §3.1 does transposes on the host).
+            // Trailing update A22 -= A21 A21^T as a GEMM: the pack plan is
+            // marshalled from the hot decoded TRSM output (the transpose
+            // resolved during marshalling — paper §3.1 does transposes on
+            // the host); the scalar staging below is kept for backends
+            // that consume raw bit-pattern tiles.
             let t1 = Instant::now();
-            let mut a21_copy = vec![T::zero(); m2 * jb];
-            let mut a21_t = vec![T::zero(); jb * m2];
-            for c in 0..jb {
-                let base = (j + jb) + (j + c) * lda;
-                a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
-            }
-            for c in 0..jb {
-                for r in 0..m2 {
-                    a21_t[c + r * jb] = a21_copy[r + c * m2];
+            let plan = PackPlan::new(
+                PackedA::<T>::from_fn(m2, jb, |i, l| a21_u[i + l * m2]),
+                PackedB::<T>::from_fn(jb, m2, |l, c| a21_u[c + l * m2]),
+            );
+            // Scalar staging (A21 and its host-side transpose) only for
+            // backends that consume raw bit-pattern tiles; plan-consuming
+            // backends get empty views.
+            let mut a21_copy = Vec::new();
+            let mut a21_t = Vec::new();
+            if backend.wants_scalar_tiles() {
+                a21_copy = vec![T::zero(); m2 * jb];
+                a21_t = vec![T::zero(); jb * m2];
+                for c in 0..jb {
+                    let base = (j + jb) + (j + c) * lda;
+                    a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+                }
+                for c in 0..jb {
+                    for r in 0..m2 {
+                        a21_t[c + r * jb] = a21_copy[r + c * m2];
+                    }
                 }
             }
             let a22 = &mut a[(j + jb) + (j + jb) * lda..];
             backend
-                .gemm_update(m2, jb, m2, &a21_copy, m2, &a21_t, jb, a22, lda)
+                .gemm_update_prepacked(m2, jb, m2, &a21_copy, m2, &a21_t, jb, &plan, a22, lda)
                 .map_err(|_| LapackError::BadValue(j + 1))?;
             stats.update_s += t1.elapsed().as_secs_f64();
             stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;

@@ -32,7 +32,10 @@
 
 pub mod drivers;
 
-use crate::blas::{gemm_parallel, gemm_parallel_scoped, pool, Scalar, Trans};
+use crate::blas::{
+    gemm_parallel, gemm_parallel_scoped, gemm_prepacked_parallel, gemm_prepacked_scoped, pool,
+    PackPlan, Scalar, Trans,
+};
 use crate::posit::Posit32;
 use crate::runtime::{ArtifactKind, Runtime};
 use anyhow::Result;
@@ -45,7 +48,7 @@ use std::sync::Mutex;
 /// per-backend dispatch queues use to hand a whole batch of tiles —
 /// typically from *different* factorization jobs — to an accelerator in
 /// one contiguous submission.
-pub struct GemmJob<'a, T = Posit32> {
+pub struct GemmJob<'a, T: Scalar = Posit32> {
     pub m: usize,
     pub k: usize,
     pub n: usize,
@@ -55,6 +58,12 @@ pub struct GemmJob<'a, T = Posit32> {
     pub ldb: usize,
     pub c: &'a mut [T],
     pub ldc: usize,
+    /// Decode-once pack plan for this tile, when the producer still had
+    /// the operands in plane form (the factorization drivers' panel/TRSM
+    /// outputs). Host backends consume it to skip their pack pass;
+    /// accelerator backends that need raw bit patterns ignore it and use
+    /// the scalar views — either way the numerics are identical.
+    pub plan: Option<&'a PackPlan<T>>,
 }
 
 /// An accelerator that can apply the trailing-matrix update
@@ -88,17 +97,60 @@ pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
         ldc: usize,
     ) -> Result<()>;
 
+    /// Trailing update with a caller-supplied decode-once pack plan: the
+    /// operands both as scalar views (for backends that ship raw bit
+    /// patterns, e.g. PJRT) and as prepacked microkernel slabs marshalled
+    /// from the producer's still-hot decoded planes. Host backends
+    /// override this to run the packed pipeline without re-decoding or
+    /// re-packing; the default simply ignores the plan — bit-identical
+    /// either way, since packing is pure.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_update_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        plan: &PackPlan<T>,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let _ = plan;
+        self.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
+    }
+
+    /// Whether plan-carrying updates still need the scalar `a`/`b` tile
+    /// views. Backends that execute entirely off the decode-once slabs
+    /// return `false`, letting the drivers skip the O(n²)-per-step scalar
+    /// staging copies (they then pass empty views alongside the plan);
+    /// backends that ship raw bit patterns — PJRT, and any implementation
+    /// keeping this default — return `true` and always receive real
+    /// tiles. A backend returning `false` MUST consume the plan in
+    /// [`GemmBackend::gemm_update_prepacked`].
+    fn wants_scalar_tiles(&self) -> bool {
+        true
+    }
+
     /// Apply a batch of updates in one submission. Tiles are independent
     /// (each has its own `C`), so every implementation — including ones
     /// that execute the batch concurrently — produces results bit-identical
     /// to looping `gemm_update` over the batch in order; only throughput
     /// differs. Implementations may consume (empty) the `c` views; callers
-    /// keep their own handles to the underlying buffers.
+    /// keep their own handles to the underlying buffers. Tiles carrying a
+    /// pack plan execute as if through [`GemmBackend::gemm_update_prepacked`].
     fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
         for j in jobs.iter_mut() {
             let (m, k, n) = (j.m, j.k, j.n);
             let (lda, ldb, ldc) = (j.lda, j.ldb, j.ldc);
-            self.gemm_update(m, k, n, j.a, lda, j.b, ldb, j.c, ldc)?;
+            match j.plan {
+                Some(plan) => {
+                    self.gemm_update_prepacked(m, k, n, j.a, lda, j.b, ldb, plan, j.c, ldc)?
+                }
+                None => self.gemm_update(m, k, n, j.a, lda, j.b, ldb, j.c, ldc)?,
+            }
         }
         Ok(())
     }
@@ -174,11 +226,40 @@ impl<T: Scalar> GemmBackend<T> for NativeBackend {
         Ok(())
     }
 
+    /// Prepacked override: run the packed microkernel straight off the
+    /// plan's slabs (pool-parallel at NR-slab column boundaries) — the
+    /// scalar views are not touched, so the trailing update performs zero
+    /// decodes. Bit-identical to the plain `gemm_update` path (shared
+    /// microkernel, same per-element chains).
+    fn gemm_update_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        _a: &[T],
+        _lda: usize,
+        _b: &[T],
+        _ldb: usize,
+        plan: &PackPlan<T>,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let minus1 = T::one().neg();
+        gemm_prepacked_parallel(self.threads, m, n, k, minus1, &plan.a, &plan.b, T::one(), c, ldc);
+        Ok(())
+    }
+
+    /// Runs plan-carrying updates entirely off the slabs.
+    fn wants_scalar_tiles(&self) -> bool {
+        false
+    }
+
     /// Batched override: one pool wave over the whole batch. Each tile is
-    /// spawned into the scope via the shared column-split engine
-    /// ([`gemm_parallel_scoped`]) with `self.threads` spread across the
-    /// batch (at least one task per tile), so tiles from different jobs
-    /// fill the workers concurrently instead of each tile serializing
+    /// spawned into the scope via the shared column-split engines
+    /// ([`gemm_parallel_scoped`], or [`gemm_prepacked_scoped`] for tiles
+    /// carrying a decode-once pack plan) with `self.threads` spread across
+    /// the batch (at least one task per tile), so tiles from different
+    /// jobs fill the workers concurrently instead of each tile serializing
     /// behind the previous one. Chunking never changes results: every
     /// output column is computed by the same serial kernel whichever chunk
     /// it lands in.
@@ -193,23 +274,38 @@ impl<T: Scalar> GemmBackend<T> for NativeBackend {
                 // Take the C view whole so chunk tasks can outlive this
                 // loop iteration (the trait allows consuming the views).
                 let c: &mut [T] = std::mem::take(&mut job.c);
-                gemm_parallel_scoped(
-                    s,
-                    chunks_per_job,
-                    Trans::No,
-                    Trans::No,
-                    job.m,
-                    job.n,
-                    job.k,
-                    minus1,
-                    job.a,
-                    job.lda,
-                    job.b,
-                    job.ldb,
-                    T::one(),
-                    c,
-                    job.ldc,
-                );
+                match job.plan {
+                    Some(plan) => gemm_prepacked_scoped(
+                        s,
+                        chunks_per_job,
+                        job.m,
+                        job.n,
+                        job.k,
+                        minus1,
+                        &plan.a,
+                        &plan.b,
+                        T::one(),
+                        c,
+                        job.ldc,
+                    ),
+                    None => gemm_parallel_scoped(
+                        s,
+                        chunks_per_job,
+                        Trans::No,
+                        Trans::No,
+                        job.m,
+                        job.n,
+                        job.k,
+                        minus1,
+                        job.a,
+                        job.lda,
+                        job.b,
+                        job.ldb,
+                        T::one(),
+                        c,
+                        job.ldc,
+                    ),
+                }
             }
         });
         Ok(())
@@ -404,6 +500,36 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
             .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
         self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
     }
+    /// Charge the model, then forward the plan-carrying call to the inner
+    /// backend (bit-exact numerics, modelled time — same contract as the
+    /// plain `gemm_update` wrapper).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_update_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        plan: &PackPlan<T>,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let secs = (self.model)(m, k, n);
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.inner
+            .gemm_update_prepacked(m, k, n, a, lda, b, ldb, plan, c, ldc)
+    }
+
+    /// Time-only wrapper: the inner backend decides whether it needs the
+    /// scalar tiles.
+    fn wants_scalar_tiles(&self) -> bool {
+        self.inner.wants_scalar_tiles()
+    }
+
     /// Charge the whole batch, then forward it to the inner backend in one
     /// submission (so a batched native inner still overlaps the tiles).
     fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
@@ -531,6 +657,7 @@ mod tests {
                     ldb: k,
                     c: &mut c.data,
                     ldc: m + pad,
+                    plan: None,
                 })
                 .collect();
             be.gemm_update_many(&mut jobs).unwrap();
@@ -544,6 +671,59 @@ mod tests {
         let timed = &timed as &dyn GemmBackend<Posit32>;
         assert!((timed.simulated_seconds() - 2.0 * one).abs() < 1e-9);
         assert!((timed.simulated_cost(37, 8, 29) - 2.0 * 37.0 * 8.0 * 29.0 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prepacked_update_bit_matches_plain_update_across_backends() {
+        // A plan built from the scalar operands must produce exactly the
+        // plain gemm_update bits through the native backend, the timed
+        // wrapper, and the batched path with a plan-carrying job.
+        use crate::blas::{PackPlan, PackedA, PackedB};
+        let (m, k, n) = (29, 8, 23);
+        let a = rand_mat(m, k, 70);
+        let b = rand_mat(k, n, 71);
+        let c0 = rand_mat(m, n, 72);
+        let plan = PackPlan::new(
+            PackedA::<Posit32>::pack(Trans::No, m, k, &a.data, m),
+            PackedB::<Posit32>::pack(Trans::No, k, n, &b.data, k),
+        );
+        let native = NativeBackend::new(3);
+        let timed = TimedBackend::new("model", NativeBackend::new(3), |m, k, n| {
+            (2 * m * k * n) as f64 / 1e9
+        });
+        let mut want = c0.clone();
+        GemmBackend::<Posit32>::gemm_update(
+            &native, m, k, n, &a.data, m, &b.data, k, &mut want.data, m,
+        )
+        .unwrap();
+        for be in [&native as &dyn GemmBackend<Posit32>, &timed] {
+            let mut c1 = c0.clone();
+            be.gemm_update_prepacked(
+                m, k, n, &a.data, m, &b.data, k, &plan, &mut c1.data, m,
+            )
+            .unwrap();
+            assert_eq!(c1.data, want.data, "prepacked on {}", be.name());
+            let mut c2 = c0.clone();
+            let mut jobs = vec![GemmJob {
+                m,
+                k,
+                n,
+                a: &a.data,
+                lda: m,
+                b: &b.data,
+                ldb: k,
+                c: &mut c2.data,
+                ldc: m,
+                plan: Some(&plan),
+            }];
+            be.gemm_update_many(&mut jobs).unwrap();
+            drop(jobs);
+            assert_eq!(c2.data, want.data, "batched plan on {}", be.name());
+        }
+        // The timed wrapper charged the prepacked calls too.
+        let timed = &timed as &dyn GemmBackend<Posit32>;
+        let one = (2 * m * k * n) as f64 / 1e9;
+        assert!((timed.simulated_seconds() - 2.0 * one).abs() < 1e-12);
     }
 
     #[test]

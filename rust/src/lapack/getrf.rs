@@ -6,14 +6,121 @@
 //! factor a panel of `nb` columns, apply the pivots, TRSM the row block,
 //! then one big GEMM on the trailing matrix — the operation the paper
 //! offloads to the FPGA/GPU.
+//!
+//! §Perf (decode-once factorization pipeline): [`getf2`] decodes the
+//! whole panel into unpacked planes **once**, runs every elimination step
+//! (pivot search, swaps, scalings, rank-1 updates) in the decoded domain,
+//! and encodes each element back once at the end — instead of
+//! re-decoding/encoding every operand of every rank-1 mac. The operation
+//! sequence per element is exactly the scalar reference [`getf2_ref`]'s
+//! (one rounding per divide/multiply/subtract, identical pivot ordering),
+//! so factors and pivots are bit-identical — pinned by tests here and the
+//! exhaustive Posit(8,2) sweeps in `rust/tests/factor_packed.rs`.
+//! [`getf2_unpacked`] additionally hands the decoded panel back so the
+//! blocked callers can marshal `L21` straight into the trailing update's
+//! pack plan ([`crate::blas::PackPlan`]) while it is still hot.
 
 use super::LapackError;
-use crate::blas::{gemm::Trans, iamax, trsm, Diag, Side, Uplo};
-use crate::blas::{gemm_parallel, Scalar};
+use crate::blas::{gemm::Trans, iamax, trsm_ref, trsm_unpacked, Diag, Side, Uplo};
+use crate::blas::{gemm_parallel, gemm_prepacked_parallel, PackedA, PackedB, Scalar};
 
-/// Unblocked LU with partial pivoting on an m×n panel (LAPACK `getf2`).
-/// Returns the first singular column if any (factorization continues).
+/// Unblocked LU with partial pivoting on an m×n panel (LAPACK `getf2`),
+/// via the decode-once panel sweep. Returns the first singular column if
+/// any (factorization continues). Bit-identical to [`getf2_ref`].
 pub fn getf2<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+) -> Result<(), LapackError> {
+    getf2_unpacked(m, n, a, lda, ipiv).1
+}
+
+/// Decode-once `getf2`: decodes the panel into a dense column-major
+/// `m*n` plane buffer once, runs the full elimination sweep there, and
+/// encodes back once per element. Returns the decoded panel (post-sweep,
+/// post-swaps — i.e. exactly the `L\U` planes of the written factors)
+/// together with the LAPACK-style result, so blocked callers can reuse
+/// the `L21` rows for the trailing update without re-decoding.
+pub fn getf2_unpacked<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+) -> (Vec<T::Unpacked>, Result<(), LapackError>) {
+    debug_assert!(lda >= m.max(1), "getf2: lda {lda} < m {m}");
+    debug_assert!(
+        m == 0 || n == 0 || a.len() >= lda * (n - 1) + m,
+        "getf2: buffer len {} too small for {m}x{n} at lda {lda}",
+        a.len()
+    );
+    debug_assert!(ipiv.len() >= n.min(m), "getf2: ipiv len {}", ipiv.len());
+    // Decode the panel once.
+    let mut w: Vec<T::Unpacked> = Vec::with_capacity(m * n);
+    for j in 0..n {
+        for i in 0..m {
+            w.push(a[i + j * lda].unpack());
+        }
+    }
+    let mut first_singular: Option<usize> = None;
+    for j in 0..n.min(m) {
+        // Pivot: largest |a(i,j)| for i >= j — the decoded-domain iamax
+        // (first strict maximum, exact magnitude ordering).
+        let mut p = j;
+        for i in j + 1..m {
+            if T::unpacked_abs_gt(w[i + j * m], w[p + j * m]) {
+                p = i;
+            }
+        }
+        ipiv[j] = p;
+        if T::unpacked_is_zero(w[p + j * m]) {
+            first_singular.get_or_insert(j + 1);
+            continue; // LAPACK records info and moves on
+        }
+        if p != j {
+            for c in 0..n {
+                w.swap(j + c * m, p + c * m);
+            }
+        }
+        // Scale the column below the pivot: one division each.
+        let piv = w[j + j * m];
+        for i in j + 1..m {
+            w[i + j * m] = T::uacc_store(T::uacc_div(T::uacc_load(w[i + j * m]), piv));
+        }
+        // Rank-1 trailing update (unblocked): a(i,l) -= a(i,j) * a(j,l) as
+        // one decoded-domain mac with the exact negation folded into the
+        // multiplicand (round((-x)·y) = -round(x·y)).
+        for l in j + 1..n {
+            let ajl = w[j + l * m];
+            if T::unpacked_is_zero(ajl) {
+                continue;
+            }
+            for i in j + 1..m {
+                let acc = T::uacc_mac(T::uacc_load(w[i + l * m]), T::unpacked_neg(w[i + j * m]), ajl);
+                w[i + l * m] = T::uacc_store(acc);
+            }
+        }
+    }
+    // Encode back once per element (exact marshalling: untouched elements
+    // round-trip decode -> encode, touched ones are post-rounding).
+    for j in 0..n {
+        for i in 0..m {
+            a[i + j * lda] = T::unpacked_encode(w[i + j * m]);
+        }
+    }
+    let res = match first_singular {
+        Some(i) => Err(LapackError::SingularU(i)),
+        None => Ok(()),
+    };
+    (w, res)
+}
+
+/// The scalar reference `getf2`: per-operation decode/encode through the
+/// storage type, exactly as before the decode-once pipeline. Retained as
+/// the bit-identity ground truth and the factorization bench baseline.
+pub fn getf2_ref<T: Scalar>(
     m: usize,
     n: usize,
     a: &mut [T],
@@ -72,11 +179,17 @@ pub fn laswp<T: Scalar>(
     }
 }
 
-/// Blocked right-looking LU with partial pivoting (LAPACK `getrf`).
+/// Blocked right-looking LU with partial pivoting (LAPACK `getrf`),
+/// running the decode-once pipeline end to end: unpacked panel, unpacked
+/// TRSM, and a trailing GEMM whose operands are marshalled from the
+/// still-decoded panel/TRSM planes into a prepacked slab pair — the
+/// scalar matrix is never re-decoded (nor re-packed) for the update.
 ///
 /// `nb` is the panel width; `threads` parallelizes the trailing GEMM.
 /// Bit-identical for any `nb`/`threads` — the k-dimension of every GEMM is
-/// a full panel, never split (DESIGN.md §7).
+/// a full panel, never split (DESIGN.md §7) — and bit-identical to the
+/// scalar-path [`getrf_ref`] (decode is pure; every kernel keeps its
+/// per-operation rounding points).
 pub fn getrf<T: Scalar>(
     m: usize,
     n: usize,
@@ -94,11 +207,99 @@ pub fn getrf<T: Scalar>(
     let mut j = 0;
     while j < k {
         let jb = nb.min(k - j);
+        let pm = m - j; // panel height
+        // --- Panel factorization (host CPU in the paper's split); the
+        // decoded panel is kept for the trailing update's A-side slabs.
+        let panel_u;
+        {
+            let panel = &mut a[j + j * lda..];
+            let mut piv = vec![0usize; jb];
+            let (pu, res) = getf2_unpacked(pm, jb, panel, lda, &mut piv);
+            panel_u = pu;
+            if let Err(e) = res {
+                info.get_or_insert(match e {
+                    LapackError::SingularU(i) => LapackError::SingularU(i + j),
+                    other => other,
+                });
+            }
+            for (t, &p) in ipiv[j..j + jb].iter_mut().zip(&piv) {
+                *t = p + j;
+            }
+        }
+        // --- Apply the panel's pivots to the rest of the matrix. --------
+        // Left of the panel:
+        laswp(j, a, lda, j, j + jb, ipiv);
+        if j + jb < n {
+            // Right of the panel:
+            laswp(n - j - jb, &mut a[(j + jb) * lda..], lda, j, j + jb, ipiv);
+            // --- Row block: U12 = L11^{-1} A12 (decode-once TRSM; its
+            // decoded output becomes the update's B-side slabs). ---------
+            let ncols = n - j - jb;
+            let (a11_part, a12_part) = a.split_at_mut((j + jb) * lda);
+            let a11 = &a11_part[j + j * lda..];
+            let a12 = &mut a12_part[j..];
+            let u12_u = trsm_unpacked(
+                Side::Left,
+                Uplo::Lower,
+                Trans::No,
+                Diag::Unit,
+                jb,
+                ncols,
+                T::one(),
+                a11,
+                lda,
+                a12,
+                lda,
+            );
+            if j + jb < m {
+                // --- Trailing update: A22 -= L21 * U12 (the offloaded
+                // GEMM), with both operands marshalled from the hot
+                // decoded planes — no decode, no scalar staging copy.
+                let nrows = m - j - jb;
+                let pa = PackedA::<T>::from_fn(nrows, jb, |i, l| panel_u[(jb + i) + l * pm]);
+                let pb = PackedB::<T>::from_fn(jb, ncols, |l, c| u12_u[l + c * jb]);
+                let (_, right) = a.split_at_mut((j + jb) * lda);
+                let a22 = &mut right[j + jb..];
+                let minus_one = T::zero().sub(T::one());
+                gemm_prepacked_parallel(
+                    threads, nrows, ncols, jb, minus_one, &pa, &pb, T::one(), a22, lda,
+                );
+            }
+        }
+        j += jb;
+    }
+    match info {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// The pre-pipeline blocked LU: scalar panel ([`getf2_ref`]), scalar TRSM
+/// ([`trsm_ref`]) and a trailing GEMM that re-packs its operands from the
+/// scalar matrix every blocked step. Retained verbatim as the
+/// bit-identity ground truth and the `BENCH_factor.json` baseline.
+pub fn getrf_ref<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+    nb: usize,
+    threads: usize,
+) -> Result<(), LapackError> {
+    let k = m.min(n);
+    if nb <= 1 || nb >= k {
+        return getf2_ref(m, n, a, lda, ipiv);
+    }
+    let mut info: Option<LapackError> = None;
+    let mut j = 0;
+    while j < k {
+        let jb = nb.min(k - j);
         // --- Panel factorization (host CPU in the paper's split). -------
         {
             let panel = &mut a[j + j * lda..];
             let mut piv = vec![0usize; jb];
-            if let Err(e) = getf2(m - j, jb, panel, lda, &mut piv) {
+            if let Err(e) = getf2_ref(m - j, jb, panel, lda, &mut piv) {
                 info.get_or_insert(match e {
                     LapackError::SingularU(i) => LapackError::SingularU(i + j),
                     other => other,
@@ -118,7 +319,7 @@ pub fn getrf<T: Scalar>(
             let (a11_part, a12_part) = a.split_at_mut((j + jb) * lda);
             let a11 = &a11_part[j + j * lda..];
             let a12 = &mut a12_part[j..];
-            trsm(
+            trsm_ref(
                 Side::Left,
                 Uplo::Lower,
                 Trans::No,
@@ -243,6 +444,38 @@ mod tests {
         let a0f: Matrix<f64> = a0.cast();
         let (e1, e2) = (r1.max_abs_diff(&a0f), r2.max_abs_diff(&a0f));
         assert!(e1 < 1e-4 && e2 < 1e-4, "residuals {e1} {e2}");
+    }
+
+    #[test]
+    fn decode_once_pipeline_matches_scalar_reference_bitwise() {
+        // getf2 vs getf2_ref and getrf vs getrf_ref on posit data across
+        // the dynamic range: factors, pivots and info must be identical.
+        let mut rng = Pcg64::seed(103);
+        let val = |rng: &mut Pcg64| {
+            let e = (rng.next_u32() % 60) as i32 - 30;
+            Posit32::from_f64(rng.normal() * 2f64.powi(e))
+        };
+        for (m, n) in [(19usize, 19usize), (23, 11), (9, 21)] {
+            let a0 = Matrix::<Posit32>::from_fn(m, n, |_, _| val(&mut rng));
+            let kk = m.min(n);
+            let mut a1 = a0.clone();
+            let mut a2 = a0.clone();
+            let (mut p1, mut p2) = (vec![0usize; kk], vec![0usize; kk]);
+            let r1 = getf2_ref(m, n, &mut a1.data, m, &mut p1);
+            let r2 = getf2(m, n, &mut a2.data, m, &mut p2);
+            assert_eq!(r1, r2, "{m}x{n} info");
+            assert_eq!(p1, p2, "{m}x{n} pivots");
+            assert_eq!(a1.data, a2.data, "{m}x{n} factors");
+
+            let mut b1 = a0.clone();
+            let mut b2 = a0.clone();
+            let (mut q1, mut q2) = (vec![0usize; kk], vec![0usize; kk]);
+            let s1 = getrf_ref(m, n, &mut b1.data, m, &mut q1, 5, 2);
+            let s2 = getrf(m, n, &mut b2.data, m, &mut q2, 5, 2);
+            assert_eq!(s1, s2, "{m}x{n} blocked info");
+            assert_eq!(q1, q2, "{m}x{n} blocked pivots");
+            assert_eq!(b1.data, b2.data, "{m}x{n} blocked factors");
+        }
     }
 
     #[test]

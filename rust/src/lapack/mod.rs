@@ -19,8 +19,8 @@ mod solve;
 pub use error::{backward_error, forward_error, solve_residual_f64};
 pub use refine::{gesv_refine, RefineResult};
 pub use scale::{equilibrate_pow2, gesv_scaled, Equilibration};
-pub use getrf::{getf2, getrf, laswp};
-pub use potrf::{potf2, potrf};
+pub use getrf::{getf2, getf2_ref, getf2_unpacked, getrf, getrf_ref, laswp};
+pub use potrf::{potf2, potf2_ref, potrf, potrf_ref};
 pub use solve::{getrs, potrs};
 
 /// Failure modes of the factorizations (LAPACK `info` codes, typed).

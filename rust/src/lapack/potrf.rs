@@ -1,13 +1,86 @@
 //! Cholesky factorization (`Rpotrf` / LAPACK `dpotrf`), lower variant:
 //! `A = L * L^T` for symmetric positive definite A. Right-looking blocked
 //! algorithm; the trailing SYRK/GEMM update is the paper's offload target.
+//!
+//! §Perf (decode-once factorization pipeline): [`potf2`] decodes the
+//! block's lower triangle **once**, runs the whole sweep — dot-product
+//! subtractions, the positive-definite pivot checks, square roots and
+//! column scalings — in the decoded domain, and encodes back once per
+//! element. Same rounding points as the scalar reference [`potf2_ref`]
+//! (one per multiply/subtract/divide/sqrt), identical error behaviour
+//! including the partially-updated state a failed sweep leaves behind —
+//! bit-identity pinned by the tests and
+//! `rust/tests/factor_packed.rs`.
 
 use super::LapackError;
-use crate::blas::{syrk_lower, trsm, Diag, Scalar, Side, Trans, Uplo};
+use crate::blas::{syrk_lower, trsm, trsm_ref, Diag, Scalar, Side, Trans, Uplo};
 
-/// Unblocked lower Cholesky (LAPACK `potf2`). Overwrites the lower
-/// triangle of the leading n×n block of `a`; upper triangle untouched.
+/// Unblocked lower Cholesky (LAPACK `potf2`) via the decode-once panel
+/// sweep. Overwrites the lower triangle of the leading n×n block of `a`;
+/// upper triangle untouched. Bit-identical to [`potf2_ref`], including
+/// the partial state left by a failed sweep.
 pub fn potf2<T: Scalar>(n: usize, a: &mut [T], lda: usize) -> Result<(), LapackError> {
+    debug_assert!(lda >= n.max(1), "potf2: lda {lda} < n {n}");
+    debug_assert!(
+        n == 0 || a.len() >= lda * (n - 1) + n,
+        "potf2: buffer len {} too small for {n}x{n} at lda {lda}",
+        a.len()
+    );
+    if n == 0 {
+        return Ok(());
+    }
+    // Decode the lower triangle once (the upper is never read or written).
+    let mut w: Vec<T::Unpacked> = vec![T::unpacked_pad(); n * n];
+    for j in 0..n {
+        for i in j..n {
+            w[i + j * n] = a[i + j * lda].unpack();
+        }
+    }
+    let mut result = Ok(());
+    for j in 0..n {
+        // d = a(j,j) - sum_{l<j} a(j,l)^2, sequentially rounded (the
+        // exact negation folded into the multiplicand).
+        let mut d = T::uacc_load(w[j + j * n]);
+        for l in 0..j {
+            let v = w[j + l * n];
+            d = T::uacc_mac(d, T::unpacked_neg(v), v);
+        }
+        if T::uacc_is_bad(d) {
+            result = Err(LapackError::BadValue(j + 1));
+            break;
+        }
+        // Positive-definite check: the paper's Rpotrf fails the same way
+        // LAPACK does (info = j+1) when the pivot is not positive — an
+        // exact sign test on the decoded planes.
+        if T::uacc_le_zero(d) {
+            result = Err(LapackError::NotPositiveDefinite(j + 1));
+            break;
+        }
+        let ljj = T::uacc_store(T::uacc_sqrt(d));
+        w[j + j * n] = ljj;
+        // Column below: a(i,j) = (a(i,j) - sum_{l<j} a(i,l) a(j,l)) / ljj.
+        for i in j + 1..n {
+            let mut s = T::uacc_load(w[i + j * n]);
+            for l in 0..j {
+                s = T::uacc_mac(s, T::unpacked_neg(w[i + l * n]), w[j + l * n]);
+            }
+            w[i + j * n] = T::uacc_store(T::uacc_div(s, ljj));
+        }
+    }
+    // Encode the lower triangle back once per element. On error this
+    // reproduces the scalar reference's partial state exactly: columns
+    // before the failing one are updated, the rest round-trip unchanged.
+    for j in 0..n {
+        for i in j..n {
+            a[i + j * lda] = T::unpacked_encode(w[i + j * n]);
+        }
+    }
+    result
+}
+
+/// The scalar reference `potf2`, retained as the bit-identity ground
+/// truth and the factorization bench baseline.
+pub fn potf2_ref<T: Scalar>(n: usize, a: &mut [T], lda: usize) -> Result<(), LapackError> {
     for j in 0..n {
         // d = a(j,j) - sum_{l<j} a(j,l)^2, sequentially rounded.
         let mut d = a[j + j * lda];
@@ -109,6 +182,66 @@ pub fn potrf<T: Scalar>(
     Ok(())
 }
 
+/// The pre-pipeline blocked Cholesky: scalar `potf2_ref` panels and
+/// scalar `trsm_ref`, with the same SYRK trailing update. Retained as the
+/// bit-identity ground truth and the `BENCH_factor.json` baseline.
+pub fn potrf_ref<T: Scalar>(
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    nb: usize,
+) -> Result<(), LapackError> {
+    if nb <= 1 || nb >= n {
+        return potf2_ref(n, a, lda);
+    }
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        {
+            let diag = &mut a[j + j * lda..];
+            potf2_ref(jb, diag, lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => {
+                    LapackError::NotPositiveDefinite(i + j)
+                }
+                LapackError::BadValue(i) => LapackError::BadValue(i + j),
+                other => other,
+            })?;
+        }
+        if j + jb < n {
+            let m2 = n - j - jb;
+            let mut l11 = vec![T::zero(); jb * jb];
+            for c in 0..jb {
+                let base = j + (j + c) * lda;
+                l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let a21 = &mut a[(j + jb) + j * lda..];
+            trsm_ref(
+                Side::Right,
+                Uplo::Lower,
+                Trans::Yes,
+                Diag::NonUnit,
+                m2,
+                jb,
+                T::one(),
+                &l11,
+                jb,
+                a21,
+                lda,
+            );
+            let mut a21_copy = vec![T::zero(); m2 * jb];
+            for c in 0..jb {
+                let base = (j + jb) + (j + c) * lda;
+                a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+            }
+            let a22 = &mut a[(j + jb) + (j + jb) * lda..];
+            let minus_one = T::zero().sub(T::one());
+            syrk_lower(m2, jb, minus_one, &a21_copy, m2, T::one(), a22, lda);
+        }
+        j += jb;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +312,36 @@ mod tests {
         let mut b = ap.clone();
         potrf(n, &mut b.data, n, 8).unwrap();
         check_llt(&a0, &b, 1e-5);
+    }
+
+    #[test]
+    fn decode_once_pipeline_matches_scalar_reference_bitwise() {
+        // potf2 vs potf2_ref and potrf vs potrf_ref: identical factors on
+        // SPD posit data, identical error + identical partial state on
+        // indefinite data.
+        let n = 20;
+        let mut rng = Pcg64::seed(202);
+        let a0 = spd(n, 1.0, &mut rng);
+        let ap: Matrix<Posit32> = a0.cast();
+        let mut u1 = ap.clone();
+        let mut u2 = ap.clone();
+        assert_eq!(potf2_ref(n, &mut u1.data, n), potf2(n, &mut u2.data, n));
+        assert_eq!(u1.data, u2.data, "potf2 factors");
+        let mut b1 = ap.clone();
+        let mut b2 = ap.clone();
+        assert_eq!(potrf_ref(n, &mut b1.data, n, 6), potrf(n, &mut b2.data, n, 6));
+        assert_eq!(b1.data, b2.data, "potrf factors");
+
+        // Indefinite: flip a diagonal entry mid-matrix; both paths must
+        // fail at the same column with the same partially-updated matrix.
+        let mut bad = ap.clone();
+        bad[(n / 2, n / 2)] = Posit32::from_f64(-3.0);
+        let mut c1 = bad.clone();
+        let mut c2 = bad.clone();
+        let e1 = potf2_ref(n, &mut c1.data, n).unwrap_err();
+        let e2 = potf2(n, &mut c2.data, n).unwrap_err();
+        assert_eq!(e1, e2);
+        assert_eq!(c1.data, c2.data, "partial state after failure");
     }
 
     #[test]

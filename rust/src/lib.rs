@@ -19,7 +19,11 @@
 //!   once into unpacked planes at pack time (transposes included) and a
 //!   register-blocked microkernel accumulates with branch-free per-mac
 //!   rounding ([`posit::unpacked`]) — bit-identical to the naive
-//!   reference, per the repo-wide rounding contract (README).
+//!   reference, per the repo-wide rounding contract (README). The whole
+//!   blocked solve is decode-once too: `trsm`, the level-2 kernels and
+//!   the `getf2`/`potf2` panel sweeps run in the unpacked domain, and
+//!   the factorization drivers reuse the decoded panel/TRSM planes as
+//!   prepacked GEMM slabs ([`blas::PackPlan`]) for the trailing updates.
 //! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX /
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
 //!   Python never runs on the request path.

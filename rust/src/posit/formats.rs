@@ -147,6 +147,80 @@ impl<const NBITS: u32, const ES: u32> GUnpacked<NBITS, ES> {
             _ => P(spec.encode(self.neg, self.scale, self.sig, &mut NoTrace)),
         }
     }
+
+    /// Exact negation (specials are fixed points, like the scalar negate).
+    #[inline]
+    fn negate(self) -> Self {
+        if self.flags != Self::REAL {
+            return self;
+        }
+        GUnpacked {
+            neg: !self.neg,
+            ..self
+        }
+    }
+
+    /// `round(self * o)` — one rounding, bit-identical to the scalar
+    /// engine's `mul` (same special order, same decoded core).
+    #[inline]
+    fn mul_once(self, o: Self) -> Self {
+        if self.flags == Self::NAR_F || o.flags == Self::NAR_F {
+            return Self::NAR;
+        }
+        if self.flags == Self::ZERO_F || o.flags == Self::ZERO_F {
+            return Self::ZERO;
+        }
+        let spec = P::<NBITS, ES>::SPEC;
+        let mut t = NoTrace;
+        let (n, s, sig) = spec.mul_decoded(self.d(), o.d(), &mut t);
+        Self::from_d(spec.round_decoded(n, s, sig))
+    }
+
+    /// `round(self / o)` — one rounding, bit-identical to the scalar
+    /// engine's `div` (`x/0` and NaR operands give NaR, then `0/x = 0`).
+    #[inline]
+    fn div_once(self, o: Self) -> Self {
+        if self.flags == Self::NAR_F || o.flags == Self::NAR_F || o.flags == Self::ZERO_F {
+            return Self::NAR;
+        }
+        if self.flags == Self::ZERO_F {
+            return Self::ZERO;
+        }
+        let spec = P::<NBITS, ES>::SPEC;
+        let mut t = NoTrace;
+        let (n, s, sig) = spec.div_decoded(self.d(), o.d(), &mut t);
+        Self::from_d(spec.round_decoded(n, s, sig))
+    }
+
+    /// `round(sqrt(self))` — one rounding, bit-identical to the scalar
+    /// engine's `sqrt` (negative and NaR give NaR, zero gives zero).
+    #[inline]
+    fn sqrt_once(self) -> Self {
+        if self.flags == Self::NAR_F || (self.flags == Self::REAL && self.neg) {
+            return Self::NAR;
+        }
+        if self.flags == Self::ZERO_F {
+            return Self::ZERO;
+        }
+        let spec = P::<NBITS, ES>::SPEC;
+        let mut t = NoTrace;
+        let (s, sig) = spec.sqrt_decoded(self.d(), &mut t);
+        Self::from_d(spec.round_decoded(false, s, sig))
+    }
+
+    /// Magnitude rank ordering exactly like `|x|` on the encoded patterns
+    /// (zero < reals by (scale, sig) < NaR, whose abs is the top pattern):
+    /// decode is injective and the positive patterns order by
+    /// (scale, significand), so tuple comparison reproduces the scalar
+    /// `abs_gt` pivot ordering bit-for-bit.
+    #[inline]
+    fn abs_rank(self) -> (u8, i32, u64) {
+        match self.flags {
+            Self::ZERO_F => (0, 0, 0),
+            Self::NAR_F => (2, 0, 0),
+            _ => (1, self.scale, self.sig),
+        }
+    }
 }
 
 impl<const NBITS: u32, const ES: u32> core::fmt::Debug for P<NBITS, ES> {
@@ -203,6 +277,52 @@ impl<const NBITS: u32, const ES: u32> Scalar for P<NBITS, ES> {
     #[inline]
     fn uacc_finish(acc: GUnpacked<NBITS, ES>) -> Self {
         acc.encode()
+    }
+
+    #[inline]
+    fn unpacked_neg(u: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        u.negate()
+    }
+    #[inline]
+    fn unpacked_mul(a: GUnpacked<NBITS, ES>, b: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        a.mul_once(b)
+    }
+    #[inline]
+    fn uacc_load(u: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        u
+    }
+    #[inline]
+    fn uacc_store(acc: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        acc
+    }
+    #[inline]
+    fn uacc_div(acc: GUnpacked<NBITS, ES>, d: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        acc.div_once(d)
+    }
+    #[inline]
+    fn uacc_sqrt(acc: GUnpacked<NBITS, ES>) -> GUnpacked<NBITS, ES> {
+        acc.sqrt_once()
+    }
+    #[inline]
+    fn unpacked_encode(u: GUnpacked<NBITS, ES>) -> Self {
+        u.encode()
+    }
+    #[inline]
+    fn unpacked_is_zero(u: GUnpacked<NBITS, ES>) -> bool {
+        u.flags == GUnpacked::<NBITS, ES>::ZERO_F
+    }
+    #[inline]
+    fn unpacked_abs_gt(a: GUnpacked<NBITS, ES>, b: GUnpacked<NBITS, ES>) -> bool {
+        a.abs_rank() > b.abs_rank()
+    }
+    #[inline]
+    fn uacc_is_bad(acc: GUnpacked<NBITS, ES>) -> bool {
+        acc.flags == GUnpacked::<NBITS, ES>::NAR_F
+    }
+    #[inline]
+    fn uacc_le_zero(acc: GUnpacked<NBITS, ES>) -> bool {
+        acc.flags == GUnpacked::<NBITS, ES>::ZERO_F
+            || (acc.flags == GUnpacked::<NBITS, ES>::REAL && acc.neg)
     }
 
     #[inline]

@@ -448,6 +448,16 @@ impl PositSpec {
         t.branch(site::SPECIAL_ZERO, false);
         let da = self.decode(a, t).unwrap();
         let db = self.decode(b, t).unwrap();
+        let (neg, scale, sig) = self.div_decoded(da, db, t);
+        self.encode(neg, scale, sig, t)
+    }
+
+    /// Decoded-domain core of [`Self::div`]: the quotient of two decoded
+    /// real operands as `(neg, scale, sig)` with a Q1.63 significand
+    /// (sticky in bit 0), pre-rounding. Operands must be real — the
+    /// decode-once factorization kernels guard specials with flags,
+    /// exactly like [`Self::div`]'s own special checks.
+    pub fn div_decoded<T: Tracer>(self, da: Decoded, db: Decoded, t: &mut T) -> (bool, i32, u64) {
         let mut scale = da.scale - db.scale;
         // (Q1.63 << 63) / Q1.63: quotient in (2^62, 2^64).
         let num = (da.sig as u128) << 63;
@@ -466,7 +476,7 @@ impl PositSpec {
         } else {
             q as u64
         };
-        self.encode(da.neg != db.neg, scale, sig | rem as u64, t)
+        (da.neg != db.neg, scale, sig | rem as u64)
     }
 
     /// Square root (one rounding). Negative / NaR -> NaR.
@@ -484,6 +494,15 @@ impl PositSpec {
         }
         t.branch(site::SPECIAL_ZERO, false);
         let d = self.decode(a, t).unwrap();
+        let (scale, sig) = self.sqrt_decoded(d, t);
+        self.encode(false, scale, sig, t)
+    }
+
+    /// Decoded-domain core of [`Self::sqrt`]: the root of a decoded
+    /// positive operand as `(scale, sig)` with a Q1.63 significand (sticky
+    /// in bit 0), pre-rounding. The operand must be a positive real —
+    /// callers guard zero/NaR/negative exactly like [`Self::sqrt`] does.
+    pub fn sqrt_decoded<T: Tracer>(self, d: Decoded, t: &mut T) -> (i32, u64) {
         let odd = d.scale & 1 != 0;
         t.branch(site::SQRT_ODD, odd);
         let scale = (d.scale - odd as i32) >> 1;
@@ -508,7 +527,7 @@ impl PositSpec {
         }
         t.inst(2);
         let exact = res * res == m;
-        self.encode(false, scale, res as u64 | (!exact) as u64, t)
+        (scale, res as u64 | (!exact) as u64)
     }
 
     /// Round an f64 to this posit format (single rounding).
@@ -665,6 +684,20 @@ mod tests {
                         spec.encode(n, s, sig, &mut t),
                         spec.add(a, b, &mut t),
                         "add {a:#x} {b:#x}"
+                    );
+                }
+                let (n, s, sig) = spec.div_decoded(da, db, &mut t);
+                assert_eq!(
+                    spec.encode(n, s, sig, &mut t),
+                    spec.div(a, b, &mut t),
+                    "div {a:#x} {b:#x}"
+                );
+                if a >> (spec.nbits - 1) == 0 {
+                    let (s, sig) = spec.sqrt_decoded(da, &mut t);
+                    assert_eq!(
+                        spec.encode(false, s, sig, &mut t),
+                        spec.sqrt(a, &mut t),
+                        "sqrt {a:#x}"
                     );
                 }
             }

@@ -248,7 +248,7 @@ pub fn sqrt(a: u32) -> u32 {
 /// fix-up. The f64 sqrt of a <= 62-bit integer is within 2 ulp of the
 /// true root, so two correction rounds suffice (debug-asserted).
 #[inline]
-fn isqrt_u64(n: u64) -> u64 {
+pub(crate) fn isqrt_u64(n: u64) -> u64 {
     if n == 0 {
         return 0;
     }

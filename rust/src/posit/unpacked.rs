@@ -1,4 +1,6 @@
-//! Decode-once Posit(32,2) planes for the packed GEMM microkernel.
+//! Decode-once Posit(32,2) planes for the packed GEMM microkernel and —
+//! since the decode-once factorization pipeline — for TRSM, the level-2
+//! kernels and the `getf2`/`potf2` panel sweeps.
 //!
 //! The paper's accelerators (§3.1) decode a posit **once** — a priority
 //! encoder splits the word into sign/scale/fraction planes — and keep the
@@ -18,7 +20,16 @@
 //!   are exactly those of the scalar ops; only the pack/unpack bit
 //!   marshalling *between* consecutive operations is gone, which is sound
 //!   because decode is a pure bijection on representable values.
-//! * [`round_encode`] — the single final encode per output element.
+//! * [`mul_rounded`], [`div_rounded`], [`sqrt_rounded`] — the remaining
+//!   scalar operations of the blocked solves (TRSM's divide-updates, the
+//!   panel scalings, `potf2`'s pivot square roots), each one posit
+//!   rounding, bit-identical to [`posit::mul`]/[`posit::div`]/
+//!   [`posit::sqrt`](crate::posit::sqrt) on the encoded values.
+//! * [`round_encode`] / [`encode_value`] — the single final encode per
+//!   output element; exact, never rounds.
+//!
+//! [`posit::mul`]: crate::posit::mul
+//! [`posit::div`]: crate::posit::div
 //!
 //! Unlike [`super::ops`] (whose operand ordering, conditional negation
 //! and round-up decisions are data-dependent branches — ~50% mispredicted
@@ -33,6 +44,7 @@
 //! cases and chained accumulations; the tests below pin the same contract
 //! against the in-crate scalar ops.
 
+use super::ops::isqrt_u64;
 use super::{frac_bits_for_scale, pack32, unpack32, Posit32, NAR_BITS, ZERO_BITS};
 
 /// Scale bias used in the packed [`U32`] layout (scale ∈ [-120, 120] maps
@@ -69,6 +81,80 @@ impl U32 {
         }
         let u = unpack32(p.0);
         U32((u.frac as u64) | (((u.scale + SCALE_BIAS) as u64) << 32) | ((u.neg as u64) << 40))
+    }
+
+    /// Exact negation in the decoded domain: flip the sign plane (posit
+    /// negation is exact). Specials are fixed points (`-0 = 0`,
+    /// `-NaR = NaR`), exactly like [`Posit32::negate`].
+    #[inline]
+    pub fn negate(self) -> U32 {
+        if self.0 >> 41 != 0 {
+            return self;
+        }
+        U32(self.0 ^ (1 << 40))
+    }
+
+    /// True iff the planes encode posit zero (exact: only the flag lane).
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 & F_ZERO != 0
+    }
+
+    /// True iff the planes encode NaR.
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.0 & F_NAR != 0
+    }
+
+    /// Magnitude key ordering exactly like `|x|` on the encoded bit
+    /// patterns (the `getf2` pivot search): zero < every real (by the
+    /// biased-scale/fraction lanes, which order lexicographically exactly
+    /// like the positive posit patterns) < NaR (whose abs *is* the NaR
+    /// pattern `0x8000_0000`, the largest unsigned magnitude — LAPACK-ish:
+    /// a NaR wins the pivot search and then poisons the column, exactly
+    /// like the scalar `iamax`). Validated pairwise against
+    /// `Posit32::abs` ordering in the tests below.
+    #[inline]
+    pub fn abs_key(self) -> u64 {
+        if self.0 & F_NAR != 0 {
+            return 1 << 63;
+        }
+        if self.0 & F_ZERO != 0 {
+            return 0;
+        }
+        self.0 & 0xFF_FFFF_FFFF
+    }
+
+    /// Lift a decoded value into an accumulator (exact bit marshalling —
+    /// the planes are identical, only the significand width changes).
+    #[inline]
+    pub fn to_acc(self) -> Acc32 {
+        if self.0 & F_NAR != 0 {
+            return Acc32::NAR;
+        }
+        if self.0 & F_ZERO != 0 {
+            return Acc32::ZERO;
+        }
+        Acc32 {
+            sig: (self.0 as u32 as u64) << 32,
+            scale: ((self.0 >> 32) & 0xFF) as i32 - SCALE_BIAS,
+            neg: (self.0 >> 40) & 1 != 0,
+            zero: false,
+            nar: false,
+        }
+    }
+
+    /// Marshal a (rounded, hence representable) accumulator back to the
+    /// operand planes. Exact: the inverse of [`U32::to_acc`].
+    #[inline]
+    pub fn from_acc(acc: Acc32) -> U32 {
+        if acc.nar {
+            return U32(DUMMY | F_NAR);
+        }
+        if acc.zero {
+            return U32(DUMMY | F_ZERO);
+        }
+        U32((acc.sig >> 32) | (((acc.scale + SCALE_BIAS) as u64) << 32) | ((acc.neg as u64) << 40))
     }
 }
 
@@ -119,6 +205,20 @@ impl Acc32 {
             zero: false,
             nar: false,
         }
+    }
+
+    /// True iff the accumulator holds NaR (the decoded-domain `is_bad`).
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.nar
+    }
+
+    /// Exact sign test `value <= 0` on the encoded posit (the `potf2`
+    /// positive-definite check): zero or a negative real. NaR reports
+    /// false, like `NaN <= 0.0` — callers test [`Acc32::is_nar`] first.
+    #[inline]
+    pub fn le_zero(self) -> bool {
+        self.zero || (!self.nar && self.neg)
     }
 }
 
@@ -251,6 +351,120 @@ pub fn round_encode(acc: Acc32) -> Posit32 {
     Posit32(pack32(acc.neg, acc.scale, acc.sig))
 }
 
+/// Encode a decoded operand back to its bit pattern. Exact: [`U32`] planes
+/// always hold a representable (already-rounded) value, so this is the
+/// same pure marshalling as [`round_encode`] — the one encode per element
+/// when a decode-once panel sweep writes its results back.
+#[inline]
+pub fn encode_value(u: U32) -> Posit32 {
+    if u.0 & F_NAR != 0 {
+        return Posit32::NAR;
+    }
+    if u.0 & F_ZERO != 0 {
+        return Posit32::ZERO;
+    }
+    Posit32(pack32(
+        (u.0 >> 40) & 1 != 0,
+        ((u.0 >> 32) & 0xFF) as i32 - SCALE_BIAS,
+        (u.0 as u32 as u64) << 32,
+    ))
+}
+
+/// `round(a * b)` on the decoded planes — one posit rounding, bit-identical
+/// to [`crate::posit::mul`] on the encoded values (the TRSM alpha pre-pass
+/// and the level-2 `alpha * y_j` scalings). Same product/normalize/round
+/// steps as [`mac`]'s product half.
+#[inline]
+pub fn mul_rounded(a: U32, b: U32) -> U32 {
+    let sp = (a.0 | b.0) >> 41;
+    if sp != 0 {
+        if sp >> 1 != 0 {
+            return U32(DUMMY | F_NAR);
+        }
+        return U32(DUMMY | F_ZERO);
+    }
+    let af = a.0 as u32 as u64;
+    let bf = b.0 as u32 as u64;
+    let asc = ((a.0 >> 32) & 0xFF) as i32 - SCALE_BIAS;
+    let bsc = ((b.0 >> 32) & 0xFF) as i32 - SCALE_BIAS;
+    let neg = ((a.0 ^ b.0) >> 40) & 1;
+    let prod = af * bf;
+    let carry = (prod >> 63) as u32;
+    let (rs, rsig) = round63(asc + bsc + carry as i32, prod << (1 - carry));
+    U32((rsig >> 32) | (((rs + SCALE_BIAS) as u64) << 32) | (neg << 40))
+}
+
+/// `round(num / den)` — one posit rounding, bit-identical to
+/// [`crate::posit::div`] on the encoded values: the TRSM divide-update and
+/// the `getf2`/`potf2` panel scalings, with the numerator already in
+/// accumulator planes (it is the mac-chain result being divided). Special
+/// cases follow the posit standard exactly like the scalar op: `x/0` and
+/// anything with NaR is NaR, `0/x` is zero.
+#[inline]
+pub fn div_rounded(num: Acc32, den: U32) -> Acc32 {
+    // NaR operands and division by zero are NaR; only then does a zero
+    // numerator short-circuit — the scalar op's exact check order.
+    if num.nar || den.0 >> 41 != 0 {
+        return Acc32::NAR;
+    }
+    if num.zero {
+        return Acc32::ZERO;
+    }
+    let dsc = ((den.0 >> 32) & 0xFF) as i32 - SCALE_BIAS;
+    let neg = num.neg != ((den.0 >> 40) & 1 != 0);
+    let mut scale = num.scale - dsc;
+    // Same Q1.31 / Q1.31 long division as `posit::div`: numerator fraction
+    // at 62 extra bits, quotient in (2^61, 2^63), remainder -> sticky.
+    let n = ((num.sig >> 32) as u128) << 62;
+    let d = (den.0 as u32) as u128;
+    let q = n / d;
+    let rem_nonzero = n % d != 0;
+    let sig = if q >> 62 != 0 {
+        (q << 1) as u64
+    } else {
+        scale -= 1;
+        (q << 2) as u64
+    };
+    let (rs, rsig) = round63(scale, sig | rem_nonzero as u64);
+    Acc32 {
+        sig: rsig,
+        scale: rs,
+        neg,
+        zero: false,
+        nar: false,
+    }
+}
+
+/// `round(sqrt(x))` — one posit rounding, bit-identical to
+/// [`crate::posit::sqrt`] on the encoded value (`potf2`'s pivot root).
+/// Negative and NaR inputs give NaR, zero gives zero, like the scalar op.
+#[inline]
+pub fn sqrt_rounded(x: Acc32) -> Acc32 {
+    if x.nar || (!x.zero && x.neg) {
+        return Acc32::NAR;
+    }
+    if x.zero {
+        return Acc32::ZERO;
+    }
+    // Fold the scale's parity into the significand (same as `posit::sqrt`):
+    // m in [2^60, 2^62), integer root in [2^30, 2^31) — a Q1.30
+    // significand whose remainder becomes the sticky bit.
+    let odd = (x.scale & 1) != 0;
+    let scale = (x.scale - odd as i32) >> 1;
+    let m = (x.sig >> 32) << (29 + odd as u32);
+    let r = isqrt_u64(m);
+    debug_assert!(r >> 30 == 1, "{r:#x}");
+    let exact = r * r == m;
+    let (rs, rsig) = round63(scale, (r << 33) | (!exact) as u64);
+    Acc32 {
+        sig: rsig,
+        scale: rs,
+        neg: false,
+        zero: false,
+        nar: false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +586,92 @@ mod tests {
                 got = mac(got, U32::decode(*x), U32::decode(*y));
             }
             assert_eq!(round_encode(got), want, "trial {trial} k {k}");
+        }
+    }
+
+    #[test]
+    fn mul_div_sqrt_rounded_match_scalar_ops() {
+        // The decoded-domain ops of the factorization pipeline, pinned
+        // bit-for-bit against the scalar bit-pattern ops over structured
+        // values (every special pairing) and wide-range random operands.
+        let mut vals = structured_values();
+        let mut rng = Pcg64::seed(0xD1F5);
+        for i in 0..30_000u64 {
+            vals.push(interesting(&mut rng, i));
+        }
+        for (i, &a) in vals.iter().enumerate() {
+            // sqrt: every value (negatives and NaR -> NaR).
+            assert_eq!(
+                round_encode(sqrt_rounded(Acc32::from_posit(a))),
+                Posit32(posit::sqrt(a.0)),
+                "sqrt {a:?}"
+            );
+            // negate: exact.
+            assert_eq!(
+                round_encode(U32::decode(a).negate().to_acc()),
+                a.negate(),
+                "negate {a:?}"
+            );
+            // Pair the value stream against a shifted copy of itself.
+            let b = vals[(i * 7 + 13) % vals.len()];
+            assert_eq!(
+                round_encode(mul_rounded(U32::decode(a), U32::decode(b)).to_acc()),
+                Posit32(posit::mul(a.0, b.0)),
+                "mul {a:?} {b:?}"
+            );
+            assert_eq!(
+                round_encode(div_rounded(Acc32::from_posit(a), U32::decode(b))),
+                Posit32(posit::div(a.0, b.0)),
+                "div {a:?} {b:?}"
+            );
+        }
+        // All special pairings explicitly.
+        for &a in &structured_values() {
+            for &b in &structured_values() {
+                assert_eq!(
+                    round_encode(div_rounded(Acc32::from_posit(a), U32::decode(b))),
+                    Posit32(posit::div(a.0, b.0)),
+                    "div {a:?} {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abs_key_orders_exactly_like_scalar_abs() {
+        let mut vals = structured_values();
+        let mut rng = Pcg64::seed(0xAB5);
+        for i in 0..2_000u64 {
+            vals.push(interesting(&mut rng, i));
+        }
+        let keys: Vec<u64> = vals.iter().map(|&v| U32::decode(v).abs_key()).collect();
+        for (i, &a) in vals.iter().enumerate() {
+            for (j, &b) in vals.iter().enumerate() {
+                let want = Posit32::abs(a).0 > Posit32::abs(b).0;
+                assert_eq!(keys[i] > keys[j], want, "abs ordering {a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn acc_u32_marshalling_round_trips_and_predicates_match() {
+        let mut rng = Pcg64::seed(0x3A25);
+        for i in 0..20_000u64 {
+            let p = interesting(&mut rng, i);
+            let u = U32::decode(p);
+            // to_acc/from_acc are exact inverses on decoded values.
+            assert_eq!(U32::from_acc(u.to_acc()), u, "{p:?}");
+            assert_eq!(round_encode(u.to_acc()), p, "{p:?}");
+            assert_eq!(encode_value(u), p, "{p:?}");
+            assert_eq!(u.is_zero(), p.is_zero(), "{p:?}");
+            assert_eq!(u.is_nar(), p.is_nar(), "{p:?}");
+            assert_eq!(u.to_acc().is_nar(), p.is_nar(), "{p:?}");
+            // le_zero == (to_f64 <= 0) for every non-NaR value.
+            if !p.is_nar() {
+                assert_eq!(u.to_acc().le_zero(), p.to_f64() <= 0.0, "{p:?}");
+            } else {
+                assert!(!u.to_acc().le_zero());
+            }
         }
     }
 

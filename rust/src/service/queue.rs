@@ -34,7 +34,7 @@
 //! would in isolation, keeping per-job outcomes deterministic; retried
 //! tiles count twice in the queue's tile counter.
 
-use crate::blas::Scalar;
+use crate::blas::{PackPlan, Scalar};
 use crate::coordinator::{GemmBackend, GemmJob};
 use crate::posit::Posit32;
 use anyhow::{anyhow, Result};
@@ -44,13 +44,20 @@ use std::sync::{Arc, Mutex};
 
 /// One staged tile: owned contiguous operands (`lda = m`, `ldb = k`,
 /// `ldc = m`) plus the reply channel of the submitting proxy.
-struct TileRequest<T> {
+struct TileRequest<T: Scalar> {
     m: usize,
     k: usize,
     n: usize,
     a: Vec<T>,
     b: Vec<T>,
     c: Vec<T>,
+    /// The caller's decode-once pack plan, staged alongside the scalar
+    /// operands so plan-carrying driver calls keep their pack reuse
+    /// across the dispatch queue: the folded [`GemmJob`] hands the plan
+    /// to the backend, and a host backend skips its pack pass. `Arc` so
+    /// the one unavoidable clone (borrow -> owned for the channel) is
+    /// shared by the failure-isolation retry.
+    plan: Option<Arc<PackPlan<T>>>,
     /// Execute in its own submission, never folded with other tiles. Used
     /// by the failure-isolation retry: a tile's reported outcome is always
     /// its outcome *in isolation*, so one bad tile cannot poison — or be
@@ -139,6 +146,13 @@ impl<T: Scalar> BatchQueue<T> {
         self.backend.simulated_cost(m, k, n)
     }
 
+    /// Whether the executing backend consumes scalar tile views on
+    /// plan-carrying updates (forwarded so the proxy can report it to the
+    /// drivers — the queue itself never reads the operands).
+    pub fn wants_scalar_tiles(&self) -> bool {
+        self.backend.wants_scalar_tiles()
+    }
+
     /// Lifetime counters snapshot.
     pub fn report(&self) -> QueueReport {
         QueueReport {
@@ -211,6 +225,7 @@ fn dispatch_loop<T: Scalar>(
                 ldb: req.k,
                 c: &mut req.c,
                 ldc: req.m,
+                plan: req.plan.as_deref(),
             })
             .collect();
         let result = backend.gemm_update_many(&mut views);
@@ -256,12 +271,12 @@ impl<T: Scalar> QueueBackend<T> {
     }
 }
 
-impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
-    fn name(&self) -> &str {
-        &self.label
-    }
-
-    fn gemm_update(
+impl<T: Scalar> QueueBackend<T> {
+    /// Stage one tile (operands copied into owned contiguous buffers, the
+    /// plan cloned when present), submit, block for the reply, copy the
+    /// result back. Shared by the plain and plan-carrying entry points.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_tile(
         &self,
         m: usize,
         k: usize,
@@ -270,6 +285,7 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
         lda: usize,
         b: &[T],
         ldb: usize,
+        plan: Option<&PackPlan<T>>,
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
@@ -279,16 +295,29 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
         // re-staged from it unchanged. Each attempt gets its own reply
         // channel, so the proxy is safe to share across threads (the
         // `GemmBackend: Sync` contract) — concurrent calls can never
-        // receive each other's replies.
+        // receive each other's replies. Plan-carrying calls whose
+        // executing backend runs off the slabs arrive with EMPTY a/b
+        // views (the drivers skipped the scalar staging); those stay
+        // empty here too, and the plan is cloned into an Arc once, shared
+        // by both attempts.
+        let plan_arc: Option<Arc<PackPlan<T>>> = plan.map(|p| Arc::new(p.clone()));
+        // When the executing backend runs plan-carrying tiles off the
+        // slabs, neither operand view is consumed downstream: skip both
+        // scalar stagings, not just the ones the driver already skipped.
+        let skip_scalars = plan_arc.is_some() && !self.queue.wants_scalar_tiles();
         let stage_and_run = |solo: bool| -> Result<Vec<T>> {
-            let mut sa = vec![T::zero(); m * k];
-            for l in 0..k {
-                sa[l * m..(l + 1) * m].copy_from_slice(&a[l * lda..l * lda + m]);
-            }
-            let mut sb = vec![T::zero(); k * n];
-            for j in 0..n {
-                sb[j * k..(j + 1) * k].copy_from_slice(&b[j * ldb..j * ldb + k]);
-            }
+            let stage = |src: &[T], rows: usize, cols: usize, ld: usize| -> Vec<T> {
+                if skip_scalars || src.is_empty() {
+                    return Vec::new();
+                }
+                let mut s = vec![T::zero(); rows * cols];
+                for j in 0..cols {
+                    s[j * rows..(j + 1) * rows].copy_from_slice(&src[j * ld..j * ld + rows]);
+                }
+                s
+            };
+            let sa = stage(a, m, k, lda);
+            let sb = stage(b, k, n, ldb);
             let mut sc = vec![T::zero(); m * n];
             for j in 0..n {
                 sc[j * m..(j + 1) * m].copy_from_slice(&c[j * ldc..j * ldc + m]);
@@ -301,6 +330,7 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
                 a: sa,
                 b: sb,
                 c: sc,
+                plan: plan_arc.clone(),
                 solo,
                 reply: reply_tx,
             })?;
@@ -323,9 +353,57 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
         self.tiles.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
+}
+
+impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        self.submit_tile(m, k, n, a, lda, b, ldb, None, c, ldc)
+    }
+
+    /// Plan-carrying tiles keep their decode-once slabs across the queue:
+    /// the plan rides the staged request (owned clone — pure plane data,
+    /// no borrows cross the channel) and the dispatcher's folded batch
+    /// hands it back to the executing backend.
+    fn gemm_update_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        plan: &PackPlan<T>,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        self.submit_tile(m, k, n, a, lda, b, ldb, Some(plan), c, ldc)
+    }
 
     fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
         self.queue.simulated_cost(m, k, n)
+    }
+
+    /// The proxy stages whatever the *executing* backend needs: scalar
+    /// staging is skipped end to end exactly when the backend behind the
+    /// queue runs plan-carrying tiles off the slabs.
+    fn wants_scalar_tiles(&self) -> bool {
+        self.queue.wants_scalar_tiles()
     }
 
     fn tiles_dispatched(&self) -> u64 {
@@ -383,6 +461,37 @@ mod tests {
         assert_eq!(report.tiles, 24);
         assert!(report.batches >= 1 && report.batches <= 24);
         assert!(report.max_batch >= 1);
+    }
+
+    #[test]
+    fn plan_carrying_tiles_bit_match_direct_backend() {
+        // A decode-once pack plan submitted through the proxy must survive
+        // the staging + dispatcher fold and produce exactly the direct
+        // backend's bits (the engine's drivers all take this path now).
+        use crate::blas::{PackPlan, PackedA, PackedB, Trans};
+        let direct = NativeBackend::new(2);
+        let queue = BatchQueue::<Posit32>::start("native", Arc::new(NativeBackend::new(2)), 8);
+        let proxy = QueueBackend::new(Arc::clone(&queue));
+        for i in 0..4u64 {
+            let (m, k, n) = (15 + i as usize, 6, 11);
+            let a = rand_mat(m, k, 500 + i);
+            let b = rand_mat(k, n, 600 + i);
+            let c0 = rand_mat(m, n, 700 + i);
+            let plan = PackPlan::new(
+                PackedA::<Posit32>::pack(Trans::No, m, k, &a.data, m),
+                PackedB::<Posit32>::pack(Trans::No, k, n, &b.data, k),
+            );
+            let mut c1 = c0.clone();
+            let mut c2 = c0.clone();
+            direct
+                .gemm_update_prepacked(m, k, n, &a.data, m, &b.data, k, &plan, &mut c1.data, m)
+                .unwrap();
+            proxy
+                .gemm_update_prepacked(m, k, n, &a.data, m, &b.data, k, &plan, &mut c2.data, m)
+                .unwrap();
+            assert_eq!(c1.data, c2.data, "iter {i}");
+        }
+        assert_eq!(proxy.tiles_dispatched(), 4);
     }
 
     #[test]

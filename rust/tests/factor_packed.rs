@@ -1,0 +1,403 @@
+//! Bit-identity of the decode-once factorization pipeline.
+//!
+//! The contract (the README rounding-contract note for TRSM/panels):
+//! `trsm`/`trsv`, the `getf2`/`potf2` panel sweeps and the offloaded
+//! blocked drivers — all routed through the unpacked domain — produce
+//! results **bit-identical** to the scalar references (`trsm_ref`,
+//! `getf2_ref`, `potf2_ref`, `getrf_ref`, `potrf_ref`), including pivot
+//! choices, error codes and the partial state failed sweeps leave behind.
+//!
+//! The Posit(8,2) sweeps are exhaustive in the operand values, in the
+//! style of `gemm_packed.rs`: every ordered bit-pattern pair flows
+//! through the pipeline's divide (1×1 solves), multiply-subtract (2-row
+//! unit solves), pivot-compare/scale (2×2 `getf2`) and sqrt/divide (2×2
+//! `potf2`) paths. Wide-dynamic-range Posit32 cases (long regimes,
+//! cancellation, zeros, NaR) cover the 32-bit plane arithmetic's
+//! saturation and special-value selects.
+
+use posit_accel::blas::{
+    trsm_ref, trsm_unpacked, trsv, Diag, Matrix, Scalar, Side, Trans, Uplo,
+};
+use posit_accel::coordinator::drivers::{getrf_offload, potrf_offload};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
+use posit_accel::lapack::{
+    getf2, getf2_ref, getrf_ref, potf2, potf2_ref, potrf_ref,
+};
+use posit_accel::posit::formats::P8;
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
+
+fn bits_of<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.bits()).collect()
+}
+
+/// Every ordered Posit(8,2) pair through the TRSM divide path: the 1×1
+/// NonUnit solve is exactly `x = b / a` with one rounding.
+#[test]
+fn p8_trsm_divide_pairs_exhaustive() {
+    for a in 0u32..256 {
+        // One call per divisor, all 256 numerators as right-hand sides.
+        let diag = [P8(a)];
+        let b0: Vec<P8> = (0u32..256).map(P8).collect();
+        let mut b1 = b0.clone();
+        let mut b2 = b0.clone();
+        trsm_ref(
+            Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, 1, 256,
+            P8::from_f64(1.0), &diag, 1, &mut b1, 1,
+        );
+        trsm_unpacked(
+            Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, 1, 256,
+            P8::from_f64(1.0), &diag, 1, &mut b2, 1,
+        );
+        assert_eq!(bits_of(&b1), bits_of(&b2), "divisor {a:#x}");
+    }
+}
+
+/// Every ordered Posit(8,2) pair through the TRSM multiply-subtract path:
+/// in the 2-row unit-lower solve, `x2 = r - p*q` with `x1 = q` — so one
+/// call per multiplier `p` covers all 256 `q` against rotating `r`.
+#[test]
+fn p8_trsm_mac_pairs_exhaustive() {
+    let rset = [P8(0x00), P8(0x40), P8(0x80), P8(0xC7)];
+    for p in 0u32..256 {
+        // Unit diag: store garbage on the diagonal to prove it is ignored.
+        let a = [P8(0x7F), P8(p), P8(0x55), P8(0x7F)]; // column-major 2x2
+        for (ri, r) in rset.iter().enumerate() {
+            let mut b0 = Vec::with_capacity(2 * 256);
+            for q in 0..256u32 {
+                b0.push(P8(q));
+                b0.push(*r);
+            }
+            let mut b1 = b0.clone();
+            let mut b2 = b0.clone();
+            trsm_ref(
+                Side::Left, Uplo::Lower, Trans::No, Diag::Unit, 2, 256,
+                P8::from_f64(1.0), &a, 2, &mut b1, 2,
+            );
+            trsm_unpacked(
+                Side::Left, Uplo::Lower, Trans::No, Diag::Unit, 2, 256,
+                P8::from_f64(1.0), &a, 2, &mut b2, 2,
+            );
+            assert_eq!(bits_of(&b1), bits_of(&b2), "p {p:#x} r set {ri}");
+        }
+    }
+}
+
+/// Random Posit(8,2) systems (every pattern equally likely, so zero/NaR
+/// and every regime keep appearing): all eight side/uplo/trans variants,
+/// both diags, several alphas — unpacked vs scalar reference bitwise.
+#[test]
+fn p8_trsm_all_variants_random_bitwise() {
+    let mut rng = Pcg64::seed(0xF8);
+    let alphas = [
+        P8::from_f64(1.0),
+        P8::from_f64(-2.0),
+        P8(0x00), // zero: scales everything to 0 (or NaR against NaR)
+        P8(0x80), // NaR alpha poisons the whole solve
+    ];
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            for trans in [Trans::No, Trans::Yes] {
+                for diag in [Diag::NonUnit, Diag::Unit] {
+                    for &alpha in &alphas {
+                        let (m, n) = (5usize, 7usize);
+                        let asz = if side == Side::Left { m } else { n };
+                        let a: Vec<P8> =
+                            (0..asz * asz).map(|_| P8(rng.next_u32() & 255)).collect();
+                        let b0: Vec<P8> =
+                            (0..m * n).map(|_| P8(rng.next_u32() & 255)).collect();
+                        let mut b1 = b0.clone();
+                        let mut b2 = b0.clone();
+                        trsm_ref(
+                            side, uplo, trans, diag, m, n, alpha, &a, asz, &mut b1, m,
+                        );
+                        trsm_unpacked(
+                            side, uplo, trans, diag, m, n, alpha, &a, asz, &mut b2, m,
+                        );
+                        assert_eq!(
+                            bits_of(&b1),
+                            bits_of(&b2),
+                            "{side:?} {uplo:?} {trans:?} {diag:?} alpha {alpha:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// TRSV (strided) rides the decode-once TRSM: bitwise vs the scalar
+/// reference gathered to a contiguous solve.
+#[test]
+fn p8_trsv_strided_matches_trsm_ref() {
+    let mut rng = Pcg64::seed(0x75);
+    for uplo in [Uplo::Lower, Uplo::Upper] {
+        for trans in [Trans::No, Trans::Yes] {
+            for diag in [Diag::NonUnit, Diag::Unit] {
+                let n = 9usize;
+                let a: Vec<P8> = (0..n * n).map(|_| P8(rng.next_u32() & 255)).collect();
+                let x0: Vec<P8> = (0..n).map(|_| P8(rng.next_u32() & 255)).collect();
+                // Reference: contiguous solve through the scalar TRSM.
+                let mut want = x0.clone();
+                trsm_ref(
+                    Side::Left, uplo, trans, diag, n, 1, P8::from_f64(1.0), &a, n,
+                    &mut want, n,
+                );
+                // trsv on a stride-3 embedding.
+                let mut xs = vec![P8(0x33); 3 * n];
+                for i in 0..n {
+                    xs[3 * i] = x0[i];
+                }
+                trsv(uplo, trans, diag, n, &a, n, &mut xs, 3);
+                for i in 0..n {
+                    assert_eq!(
+                        xs[3 * i].bits(),
+                        want[i].bits(),
+                        "{uplo:?} {trans:?} {diag:?} x[{i}]"
+                    );
+                }
+                // Untouched stride padding.
+                for (i, v) in xs.iter().enumerate() {
+                    if i % 3 != 0 {
+                        assert_eq!(v.bits(), 0x33, "padding at {i}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every ordered Posit(8,2) pair through the `getf2` pivot-compare,
+/// swap, divide and multiply-subtract paths: 2×2 panels `[[p, u], [q, v]]`
+/// with (p, q) exhaustive and (u, v) rotating. Pivots, factors and info
+/// must match the scalar reference exactly.
+#[test]
+fn p8_getf2_pivot_divide_pairs_exhaustive() {
+    // Two trailing-column pairs keep the debug-mode runtime in budget
+    // while still driving the update path against a real, a zero and a
+    // NaR trailing value; the (p, q) pivot/divide pair is exhaustive.
+    let uvset = [(P8(0x40), P8(0x52)), (P8(0x80), P8(0x00))];
+    for p in 0u32..256 {
+        for q in 0u32..256 {
+            for &(u, v) in &uvset {
+                let a0 = [P8(p), P8(q), u, v]; // column-major 2x2
+                let mut a1 = a0;
+                let mut a2 = a0;
+                let mut p1 = [0usize; 2];
+                let mut p2 = [0usize; 2];
+                let r1 = getf2_ref(2, 2, &mut a1, 2, &mut p1);
+                let r2 = getf2(2, 2, &mut a2, 2, &mut p2);
+                assert_eq!(r1, r2, "info p={p:#x} q={q:#x}");
+                assert_eq!(p1, p2, "pivots p={p:#x} q={q:#x}");
+                assert_eq!(bits_of(&a1), bits_of(&a2), "factors p={p:#x} q={q:#x}");
+            }
+        }
+    }
+}
+
+/// A structured Posit(8,2) panel where every bit pattern appears both as
+/// a pivot-column candidate and as a trailing-row multiplier, through the
+/// full multi-step elimination (6 pivot steps over 256 columns).
+#[test]
+fn p8_getf2_structured_panel_sweep() {
+    let (m, n) = (6usize, 256usize);
+    let a0: Vec<P8> = {
+        let mut v = Vec::with_capacity(m * n);
+        for j in 0..n {
+            for i in 0..m {
+                v.push(P8(((j + 41 * i) & 255) as u32));
+            }
+        }
+        v
+    };
+    let mut a1 = a0.clone();
+    let mut a2 = a0.clone();
+    let mut p1 = vec![0usize; m.min(n)];
+    let mut p2 = vec![0usize; m.min(n)];
+    let r1 = getf2_ref(m, n, &mut a1, m, &mut p1);
+    let r2 = getf2(m, n, &mut a2, m, &mut p2);
+    assert_eq!(r1, r2);
+    assert_eq!(p1, p2);
+    assert_eq!(bits_of(&a1), bits_of(&a2));
+}
+
+/// Every ordered Posit(8,2) pair through `potf2`'s sqrt and divide paths:
+/// 2×2 lower blocks `[[p, *], [q, r]]` with (p, q) exhaustive. Factors,
+/// error codes and the partial state of failed sweeps must all match.
+#[test]
+fn p8_potf2_sqrt_divide_pairs_exhaustive() {
+    let rset = [P8(0x48), P8(0x80)];
+    for p in 0u32..256 {
+        for q in 0u32..256 {
+            for (ri, r) in rset.iter().enumerate() {
+                // Upper-triangle entry is garbage: potf2 must not read it.
+                let a0 = [P8(p), P8(q), P8(0x7F), *r]; // column-major 2x2
+                let mut a1 = a0;
+                let mut a2 = a0;
+                let r1 = potf2_ref(2, &mut a1, 2);
+                let r2 = potf2(2, &mut a2, 2);
+                assert_eq!(r1, r2, "info p={p:#x} q={q:#x} r set {ri}");
+                assert_eq!(
+                    bits_of(&a1),
+                    bits_of(&a2),
+                    "state p={p:#x} q={q:#x} r set {ri}"
+                );
+            }
+        }
+    }
+}
+
+/// Wide-dynamic-range Posit32 values (long regimes, huge/tiny scales,
+/// zeros, NaR, cancellation-prone mixes) through every TRSM variant and
+/// both panel factorizations, unpacked vs scalar reference bitwise.
+#[test]
+fn posit32_wide_range_trsm_and_panels_vs_ref() {
+    let mut rng = Pcg64::seed(0x32F);
+    let val = |rng: &mut Pcg64| -> Posit32 {
+        match rng.next_u32() % 16 {
+            0 => Posit32::ZERO,
+            1 => Posit32::NAR,
+            2..=5 => Posit32::from_f64(rng.normal()),
+            6..=9 => {
+                let e = (rng.next_u32() % 200) as i32 - 100;
+                Posit32::from_f64(rng.normal() * 2f64.powi(e))
+            }
+            _ => Posit32(rng.next_u32()),
+        }
+    };
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            for trans in [Trans::No, Trans::Yes] {
+                for diag in [Diag::NonUnit, Diag::Unit] {
+                    let (m, n) = (9usize, 6usize);
+                    let asz = if side == Side::Left { m } else { n };
+                    let a: Vec<Posit32> = (0..asz * asz).map(|_| val(&mut rng)).collect();
+                    let b0: Vec<Posit32> = (0..m * n).map(|_| val(&mut rng)).collect();
+                    let mut b1 = b0.clone();
+                    let mut b2 = b0.clone();
+                    trsm_ref(
+                        side, uplo, trans, diag, m, n, Posit32::ONE, &a, asz, &mut b1, m,
+                    );
+                    trsm_unpacked(
+                        side, uplo, trans, diag, m, n, Posit32::ONE, &a, asz, &mut b2, m,
+                    );
+                    assert_eq!(
+                        bits_of(&b1),
+                        bits_of(&b2),
+                        "{side:?} {uplo:?} {trans:?} {diag:?}"
+                    );
+                }
+            }
+        }
+    }
+    // getf2 with NaR/zero injections, repeated trials.
+    for trial in 0..40u64 {
+        let (m, n) = (11usize, 8usize);
+        let mut a0: Vec<Posit32> = (0..m * n).map(|_| val(&mut rng)).collect();
+        if trial % 3 == 0 {
+            a0[(trial as usize * 5) % (m * n)] = Posit32::NAR;
+        }
+        let mut a1 = a0.clone();
+        let mut a2 = a0.clone();
+        let mut p1 = vec![0usize; n];
+        let mut p2 = vec![0usize; n];
+        let r1 = getf2_ref(m, n, &mut a1, m, &mut p1);
+        let r2 = getf2(m, n, &mut a2, m, &mut p2);
+        assert_eq!(r1, r2, "trial {trial}");
+        assert_eq!(p1, p2, "trial {trial}");
+        assert_eq!(bits_of(&a1), bits_of(&a2), "trial {trial}");
+    }
+    // potf2 on SPD casts, plus corrupted variants (negative diag, NaR).
+    for trial in 0..20u64 {
+        let n = 10usize;
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut s = Matrix::<f64>::identity(n);
+        for v in s.data.iter_mut() {
+            *v *= n as f64;
+        }
+        posit_accel::blas::gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 1.0,
+            &mut s.data, n,
+        );
+        let mut ap: Matrix<Posit32> = s.cast();
+        match trial % 3 {
+            1 => ap[(n / 2, n / 2)] = Posit32::from_f64(-1.0),
+            2 => ap[(n - 2, n - 3)] = Posit32::NAR,
+            _ => {}
+        }
+        let mut a1 = ap.clone();
+        let mut a2 = ap.clone();
+        let r1 = potf2_ref(n, &mut a1.data, n);
+        let r2 = potf2(n, &mut a2.data, n);
+        assert_eq!(r1, r2, "trial {trial}");
+        assert_eq!(bits_of(&a1.data), bits_of(&a2.data), "trial {trial}");
+    }
+}
+
+/// End-to-end: the offloaded drivers (decode-once panels + TRSM + pack
+/// plans through the backend) must be bit-identical to the pre-pipeline
+/// scalar-path blocked factorizations — through the plain native backend
+/// AND a timed wrapper (which forwards the plan), at posit32 and f32,
+/// with block sizes that do and do not divide n.
+#[test]
+fn offload_pipeline_bit_matches_scalar_path_factorizations() {
+    let timed = TimedBackend::new("model", NativeBackend::new(2), |m, k, n| {
+        (2 * m * k * n) as f64 / 1e9
+    });
+    let native = NativeBackend::new(2);
+    for (n, nb) in [(64usize, 16usize), (90, 24)] {
+        let mut rng = Pcg64::seed(9000 + n as u64);
+        // --- LU, posit32.
+        let a0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut want = a0.clone();
+        let mut want_piv = vec![0usize; n];
+        getrf_ref(n, n, &mut want.data, n, &mut want_piv, nb, 2).unwrap();
+        for be in [&native as &dyn GemmBackend<Posit32>, &timed] {
+            let mut got = a0.clone();
+            let mut piv = vec![0usize; n];
+            let stats = getrf_offload(n, n, &mut got.data, n, &mut piv, nb, be).unwrap();
+            assert_eq!(want_piv, piv, "{} n={n}", be.name());
+            assert_eq!(want.data, got.data, "{} n={n}", be.name());
+            assert!(stats.update_flops > 0.0);
+        }
+        // --- LU, f32 (the decode-once machinery is passthrough there, but
+        // the pipeline rewiring must still change nothing).
+        let af: Matrix<f32> = a0.cast();
+        let mut wantf = af.clone();
+        let mut wantf_piv = vec![0usize; n];
+        getrf_ref(n, n, &mut wantf.data, n, &mut wantf_piv, nb, 2).unwrap();
+        let mut gotf = af.clone();
+        let mut pivf = vec![0usize; n];
+        getrf_offload(n, n, &mut gotf.data, n, &mut pivf, nb, &native).unwrap();
+        assert_eq!(wantf_piv, pivf, "f32 n={n}");
+        assert_eq!(bits_of(&wantf.data), bits_of(&gotf.data), "f32 n={n}");
+        // --- Cholesky, posit32 (lower triangle only: the offload update
+        // overwrites the upper with GEMM results, like the pre-PR driver).
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut s = Matrix::<f64>::identity(n);
+        for v in s.data.iter_mut() {
+            *v *= 0.5 * n as f64;
+        }
+        posit_accel::blas::gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 1.0,
+            &mut s.data, n,
+        );
+        let sp: Matrix<Posit32> = s.cast();
+        let mut wantc = sp.clone();
+        potrf_ref(n, &mut wantc.data, n, nb).unwrap();
+        for be in [&native as &dyn GemmBackend<Posit32>, &timed] {
+            let mut gotc = sp.clone();
+            potrf_offload(n, &mut gotc.data, n, nb, be).unwrap();
+            for j in 0..n {
+                for i in j..n {
+                    assert_eq!(
+                        wantc[(i, j)],
+                        gotc[(i, j)],
+                        "{} L({i},{j}) n={n}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+}
