@@ -1,0 +1,249 @@
+#!/usr/bin/env python3
+"""Bisimulation check of the Rust lane-parallel mac against the scalar mac.
+
+``rust/src/posit/unpacked.rs`` claims ``mac_lanes`` is bit-identical to L
+calls of the scalar ``mac``. This harness transcribes both functions'
+*hot paths* into Python, bit for bit (u64 wrapping arithmetic, the same
+selects, the same shared in-range rounding helper), and drives millions
+of lane bundles of structurally valid planes through them:
+
+* operands are representable Posit(32,2) planes (hidden bit set, frac
+  truncated to the scale's fraction width, scale in [-120, 120]);
+* accumulators are representable Q1.63 planes (low ``63 - fs`` bits
+  clear), plus the ZERO accumulator and exact-cancellation setups;
+* whenever either side reaches a rare path (special operands, NaR
+  accumulator, out-of-range rounding) it returns a ``('slow', ...)``
+  marker carrying the exact replay inputs — in Rust both sides then call
+  the *same* scalar ``mac``/``round63`` slow code, so marker equality
+  implies result equality (the bisimulation argument; the scalar mac
+  itself was validated against the exact-rational oracle in earlier PRs
+  and is pinned by in-crate tests).
+
+Run: ``python3 python/tools/check_mac_lanes.py`` — exits nonzero on any
+divergence. This is the authoring-time validation net for the lane
+kernel; the in-crate ``mac_lanes_matches_scalar_mac_*`` property tests
+pin the same contract against the real implementation.
+"""
+
+import random
+import sys
+
+M64 = (1 << 64) - 1
+SCALE_BIAS = 128
+F_ZERO = 1 << 41
+F_NAR = 1 << 42
+ES = 2
+
+ZERO = ("zero",)
+NAR = ("nar",)
+
+
+def frac_bits_for_scale(scale):
+    # Direct transcription of the Rust saturating u32 arithmetic.
+    k = scale >> ES  # Python's >> on ints is arithmetic, like i32 >>
+    rs = k + 2 if k >= 0 else -k + 1
+    a = 31 - rs if rs <= 31 else 0  # 31u32.saturating_sub(rs)
+    b = a - ES if a >= ES else 0  # .saturating_sub(ES)
+    return min(b, 27)
+
+
+def round63_in_range(scale, sig):
+    fs = frac_bits_for_scale(scale)
+    cut = 63 - fs
+    kept = sig >> cut
+    rnd = (sig >> (cut - 1)) & 1
+    sticky = 1 if (sig & ((1 << (cut - 1)) - 1)) != 0 else 0
+    m = kept + (rnd & (sticky | (kept & 1)))
+    ovf = m >> (fs + 1)
+    return scale + ovf, ((m >> ovf) << cut) & M64
+
+
+def in_range(scale):
+    return -104 <= scale <= 104
+
+
+def align_and_sum(accsig, accscale, accneg, psig, psc, pneg):
+    """The shared magnitude-order/align/add half of both mac paths."""
+    akey = ((accscale + 256) << 28) | (accsig >> 36)
+    pkey = ((psc + 256) << 28) | (psig >> 36)
+    swap = pkey > akey
+    hs, ls = (psig, accsig) if swap else (accsig, psig)
+    hsc, lsc = (psc, accscale) if swap else (accscale, psc)
+    hn, ln = (pneg, accneg) if swap else (accneg, pneg)
+    d = hsc - lsc
+    hi62 = hs >> 1
+    lo_full = ls >> 1
+    lo62 = lo_full >> d if d < 64 else 0
+    smask = ((1 << d) - 1) & M64 if d < 64 else M64
+    sticky = 1 if (lo_full & smask) != 0 else 0
+    lo_term = (-(lo62 + sticky)) & M64 if hn != ln else (lo62 + sticky)
+    s = (hi62 + lo_term) & M64
+    cancel = s == 0
+    sum2 = s | ((1 << 63) if cancel else 0)
+    lz = 64 - sum2.bit_length()
+    return hsc + 1 - lz, ((sum2 << lz) & M64) | sticky, hn, cancel
+
+
+def mac(acc, a, b):
+    """Scalar mac hot path; ('slow', ...) marks a rare-path exit whose
+    result both Rust paths compute with the same code."""
+    sp = (a | b) >> 41
+    if sp != 0 or acc == NAR:
+        if (sp >> 1) != 0 or acc == NAR:
+            return NAR
+        return acc
+    af = a & 0xFFFF_FFFF
+    bf = b & 0xFFFF_FFFF
+    asc = ((a >> 32) & 0xFF) - SCALE_BIAS
+    bsc = ((b >> 32) & 0xFF) - SCALE_BIAS
+    pneg = ((a ^ b) >> 40) & 1 != 0
+    prod = af * bf  # Q1.31 x Q1.31 fits 64 bits exactly
+    carry = (prod >> 63) & 1
+    pscale_in = asc + bsc + carry
+    psig_in = (prod << (1 - carry)) & M64
+    if not in_range(pscale_in):
+        return ("slow", "prod", pscale_in, psig_in, acc, a, b)
+    psc, psig = round63_in_range(pscale_in, psig_in)
+    if acc == ZERO:
+        return (psig, psc, pneg)
+    accsig, accscale, accneg = acc
+    sscale_in, ssig_in, hn, cancel = align_and_sum(
+        accsig, accscale, accneg, psig, psc, pneg
+    )
+    if cancel:
+        # Rust computes round63 first but discards it on cancel, so the
+        # (possibly slow) rounding cannot influence the result.
+        return ZERO
+    if not in_range(sscale_in):
+        return ("slow", "sum", sscale_in, ssig_in, acc, a, b)
+    rscale, rsig = round63_in_range(sscale_in, ssig_in)
+    return (rsig, rscale, hn)
+
+
+def mac_lanes(accs, a, bs):
+    """Lane transcription: same staged structure as the Rust mac_lanes."""
+    flags = a
+    for b in bs:
+        flags |= b
+    if (flags >> 41) != 0 or any(x == NAR for x in accs):
+        return [mac(x, a, b) for x, b in zip(accs, bs)]
+    L = len(bs)
+    af = a & 0xFFFF_FFFF
+    asc = ((a >> 32) & 0xFF) - SCALE_BIAS
+    psig, psc, pneg = [0] * L, [0] * L, [False] * L
+    oor = False
+    for j in range(L):
+        bj = bs[j]
+        bf = bj & 0xFFFF_FFFF
+        bsc = ((bj >> 32) & 0xFF) - SCALE_BIAS
+        pneg[j] = ((a ^ bj) >> 40) & 1 != 0
+        prod = af * bf
+        carry = (prod >> 63) & 1
+        sc = asc + bsc + carry
+        oor |= not in_range(sc)
+        psc[j], psig[j] = round63_in_range(
+            max(-104, min(104, sc)), (prod << (1 - carry)) & M64
+        )
+    rsig, rscale, hneg = [0] * L, [0] * L, [False] * L
+    cancel = [False] * L
+    live_oor = False
+    for j in range(L):
+        aj = accs[j]
+        accsig, accscale, accneg = (1 << 63, 0, False) if aj == ZERO else aj
+        sscale_in, ssig_in, hn, cj = align_and_sum(
+            accsig, accscale, accneg, psig[j], psc[j], pneg[j]
+        )
+        hneg[j] = hn
+        cancel[j] = cj
+        o = not in_range(sscale_in)
+        rscale[j], rsig[j] = round63_in_range(
+            max(-104, min(104, sscale_in)), ssig_in
+        )
+        live_oor |= o and aj != ZERO and not cj
+    if oor or live_oor:
+        return [mac(x, a, b) for x, b in zip(accs, bs)]
+    out = []
+    for j in range(L):
+        z = accs[j] == ZERO
+        if cancel[j] and not z:
+            out.append(ZERO)
+        elif z:
+            out.append((psig[j], psc[j], pneg[j]))
+        else:
+            out.append((rsig[j], rscale[j], hneg[j]))
+    return out
+
+
+def rand_u32_planes(rng, specials=True):
+    """A representable decoded operand (or a special, when allowed)."""
+    if specials:
+        r = rng.randrange(16)
+        if r == 0:
+            return (1 << 31) | (SCALE_BIAS << 32) | F_ZERO
+        if r == 1:
+            return (1 << 31) | (SCALE_BIAS << 32) | F_NAR
+    scale = rng.randrange(-120, 121)
+    fs = frac_bits_for_scale(scale)
+    frac = (1 << 31) | ((rng.getrandbits(fs) << (31 - fs)) if fs else 0)
+    neg = rng.randrange(2)
+    return frac | ((scale + SCALE_BIAS) << 32) | (neg << 40)
+
+
+def rand_acc_planes(rng):
+    r = rng.randrange(12)
+    if r == 0:
+        return ZERO
+    if r == 1:
+        return NAR
+    scale = rng.randrange(-120, 121)
+    fs = frac_bits_for_scale(scale)
+    sig = (1 << 63) | ((rng.getrandbits(fs) << (63 - fs)) if fs else 0)
+    return (sig, scale, rng.randrange(2) == 1)
+
+
+def neg_of_prod(a, b):
+    """An accumulator equal to -round(a*b) (exact-cancellation setup), or
+    None when the product takes a rare path."""
+    p = mac(ZERO, a, b)
+    if p == ZERO or p == NAR or p[0] == "slow":
+        return None
+    sig, scale, neg = p
+    return (sig, scale, not neg)
+
+
+def main():
+    rng = random.Random(0xC0FFEE)
+    checked = 0
+    slow = 0
+    for trial in range(400_000):
+        L = 8 if trial % 3 else 4
+        a = rand_u32_planes(rng)
+        bs = [rand_u32_planes(rng) for _ in range(L)]
+        accs = [rand_acc_planes(rng) for _ in range(L)]
+        if trial % 5 == 0:
+            # Cancellation-heavy bundle: some lanes hold -round(a*b).
+            for j in range(0, L, 2):
+                c = neg_of_prod(a, bs[j])
+                if c is not None:
+                    accs[j] = c
+        got = mac_lanes(accs, a, bs)
+        want = [mac(x, a, b) for x, b in zip(accs, bs)]
+        if got != want:
+            print(f"DIVERGENCE at trial {trial}:")
+            print(f"  a    = {a:#x}")
+            for j in range(L):
+                print(f"  lane {j}: acc={accs[j]} b={bs[j]:#x}")
+                print(f"    lanes  -> {got[j]}")
+                print(f"    scalar -> {want[j]}")
+            return 1
+        checked += L
+        slow += sum(1 for w in want if w not in (ZERO, NAR) and w[0] == "slow")
+    print(
+        f"ok: {checked} lanes bit-identical (scalar vs lane kernel), "
+        f"{slow} rare-path replays agreed by bisimulation"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

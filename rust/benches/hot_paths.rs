@@ -390,12 +390,14 @@ fn bench_gemm(b: &mut Bench) {
 /// one add + one mul per mac, the operation counting of
 /// `posit::counting` — so the numbers sit in the paper's Gflops framing).
 ///
-/// Always opens with the cheap **bit-identity gate**: packed vs naive on
-/// the smoke shapes, all four transpose combinations. A divergence aborts
-/// the bench with a nonzero exit — this is the CI guard that every push
-/// keeps the packed kernel bit-identical. Quick mode then times small
-/// sizes only; full mode climbs to n = 1024 (naive posit32 is capped at
-/// n = 256: it is decode-bound O(n³) and would dominate the run).
+/// Always opens with the cheap **bit-identity gate**: packed vs naive —
+/// and the lane-parallel (SIMD) microkernel body vs naive, whatever the
+/// build's `simd` feature state — on the smoke shapes, all four transpose
+/// combinations. A divergence aborts the bench with a nonzero exit — this
+/// is the CI guard that every push keeps both kernels bit-identical.
+/// Quick mode then times small sizes only; full mode climbs to n = 1024
+/// (naive posit32 is capped at n = 256: it is decode-bound O(n³) and
+/// would dominate the run).
 fn bench_gemm_kernels(b: &mut Bench) {
     let mut rng = Pcg64::seed(0xB117);
     for &(m, n, k) in &[(33usize, 29usize, 17usize), (64, 64, 64), (40, 3, 51)] {
@@ -408,6 +410,7 @@ fn bench_gemm_kernels(b: &mut Bench) {
                 let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
                 let mut c1 = c0.clone();
                 let mut c2 = c0.clone();
+                let mut c3 = c0.clone();
                 blas::gemm_naive(
                     ta, tb, m, n, k, Posit32::ONE, &a.data, ar, &bb.data, br,
                     Posit32::ONE, &mut c1.data, m,
@@ -420,10 +423,18 @@ fn bench_gemm_kernels(b: &mut Bench) {
                     c1.data, c2.data,
                     "BIT-IDENTITY VIOLATION: gemm_packed != gemm_naive at {m}x{n}x{k} {ta:?}{tb:?}"
                 );
+                blas::gemm_packed_lanes(
+                    ta, tb, m, n, k, Posit32::ONE, &a.data, ar, &bb.data, br,
+                    Posit32::ONE, &mut c3.data, m,
+                );
+                assert_eq!(
+                    c1.data, c3.data,
+                    "BIT-IDENTITY VIOLATION: packed-simd != gemm_naive at {m}x{n}x{k} {ta:?}{tb:?}"
+                );
             }
         }
     }
-    println!("[gemm bit-identity gate passed: packed == naive on all smoke shapes]");
+    println!("[gemm bit-identity gate passed: packed == packed-simd == naive on all smoke shapes]");
 
     let sizes: &[usize] = if quick() { &[64, 128] } else { &[128, 256, 512, 1024] };
     for &n in sizes {
@@ -463,6 +474,15 @@ fn bench_gemm_kernels(b: &mut Bench) {
             )
         });
         b.add_gemm("packed", "posit32", n, st.min);
+        // The lane-parallel microkernel body, forced on regardless of the
+        // `simd` feature — one bench run yields both kernel columns.
+        let st = bench_stats(reps, || {
+            blas::gemm_packed_lanes(
+                Trans::No, Trans::No, n, n, n, Posit32::ONE, &a.data, n, &bm.data,
+                n, Posit32::ZERO, &mut c.data, n,
+            )
+        });
+        b.add_gemm("packed-simd", "posit32", n, st.min);
 
         let af: Matrix<f32> = a.cast();
         let bf: Matrix<f32> = bm.cast();

@@ -225,9 +225,12 @@ pub fn gemm_blocked_ref<T: Scalar>(
 
 /// Microkernel register-tile dimensions: MR x NR accumulators held live
 /// across the whole ascending-k loop, giving the out-of-order core
-/// MR*NR independent posit dependency chains to overlap.
+/// MR*NR independent posit dependency chains to overlap. NR is the lane
+/// width of the SIMD microkernel ([`microtile_lanes`]): one op(A)
+/// element broadcast against NR packed op(B) columns per
+/// `Scalar::uacc_mac_lanes` bundle.
 const MR: usize = 4;
-const NR: usize = 4;
+const NR: usize = 8;
 /// Row-panel height: op(A) is packed (and decoded) once per `MC x k`
 /// panel; within one column panel the row panels are disjoint, so every
 /// A element is decoded exactly once per column panel.
@@ -262,8 +265,52 @@ const PACKED_PANEL_ELEMS: usize = 1 << 21;
 /// Partial edge tiles are padded with [`Scalar::unpacked_pad`]; padded
 /// lanes are computed and discarded, never written back.
 #[allow(clippy::too_many_arguments)]
-#[allow(clippy::needless_range_loop)]
 pub fn gemm_packed<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    gemm_packed_impl::<T, false>(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+}
+
+/// [`gemm_packed`] forced through the lane-parallel (SIMD) microkernel
+/// body regardless of the `simd` cargo feature — bit-identical to
+/// [`gemm_packed`] and [`gemm_naive`] by the microkernel contract. This
+/// is the benchmark's A/B hook: one `hot_paths` run measures the
+/// scalar-select and lane kernels side by side (`BENCH_gemm.json`
+/// kernels `packed` vs `packed-simd`) and gates both against naive.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_lanes<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    gemm_packed_impl::<T, true>(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+}
+
+#[allow(clippy::too_many_arguments)]
+#[allow(clippy::needless_range_loop)]
+fn gemm_packed_impl<T: Scalar, const FORCE_LANES: bool>(
     ta: Trans,
     tb: Trans,
     m: usize,
@@ -336,7 +383,11 @@ pub fn gemm_packed<T: Scalar>(
                 let bs = &bp[js * k * NR..(js + 1) * k * NR];
                 for is in 0..islabs {
                     let asl = &ap[is * k * MR..(is + 1) * k * MR];
-                    let acc = microtile::<T>(k, asl, bs);
+                    let acc = if FORCE_LANES {
+                        microtile_lanes::<T>(k, asl, bs)
+                    } else {
+                        microtile::<T>(k, asl, bs)
+                    };
                     let r0 = i0 + is * MR;
                     let rows = MR.min(m - r0);
                     for jj in 0..jb {
@@ -357,9 +408,31 @@ pub fn gemm_packed<T: Scalar>(
 /// the prepacked pipeline ([`gemm_prepacked`]) consume slabs through this
 /// one function, so their per-element operation sequences are identical by
 /// construction.
+///
+/// The `simd` cargo feature selects the lane-parallel body
+/// ([`microtile_lanes`]); the default build keeps the scalar-select body
+/// ([`microtile_select`]). Both are always compiled, produce bit-identical
+/// tiles (each output element is the same ascending-k `uacc_mac` chain),
+/// and are cross-checked by the bit-identity gates either way.
+#[inline]
+fn microtile<T: Scalar>(k: usize, asl: &[T::Unpacked], bsl: &[T::Unpacked]) -> [T::UAcc; MR * NR] {
+    if cfg!(feature = "simd") {
+        microtile_lanes::<T>(k, asl, bsl)
+    } else {
+        microtile_select::<T>(k, asl, bsl)
+    }
+}
+
+/// Scalar-select microtile body: MR*NR independent `uacc_mac` chains, one
+/// call per accumulator per k step — the mandatory fallback the `simd`
+/// feature's lane kernel is pinned against.
 #[inline]
 #[allow(clippy::needless_range_loop)]
-fn microtile<T: Scalar>(k: usize, asl: &[T::Unpacked], bsl: &[T::Unpacked]) -> [T::UAcc; MR * NR] {
+fn microtile_select<T: Scalar>(
+    k: usize,
+    asl: &[T::Unpacked],
+    bsl: &[T::Unpacked],
+) -> [T::UAcc; MR * NR] {
     let mut acc = [T::uacc_zero(); MR * NR];
     for l in 0..k {
         let av = &asl[l * MR..l * MR + MR];
@@ -369,6 +442,40 @@ fn microtile<T: Scalar>(k: usize, asl: &[T::Unpacked], bsl: &[T::Unpacked]) -> [
             for ii in 0..MR {
                 acc[jj * MR + ii] = T::uacc_mac(acc[jj * MR + ii], av[ii], bvj);
             }
+        }
+    }
+    acc
+}
+
+/// Lane-parallel (SIMD) microtile body: per k step, each of the MR op(A)
+/// elements is broadcast against the NR-wide op(B) lane bundle in one
+/// [`Scalar::uacc_mac_lanes`] call, so the per-lane rounding selects run
+/// lane-parallel over the row's NR accumulators. Each output element
+/// still receives exactly the ascending-k `uacc_mac` chain of
+/// [`microtile_select`] (lane j of row ii is `acc(ii,jj)`), so the two
+/// bodies are bit-identical; only the loop nest over the independent
+/// chains differs.
+#[inline]
+#[allow(clippy::needless_range_loop)]
+fn microtile_lanes<T: Scalar>(
+    k: usize,
+    asl: &[T::Unpacked],
+    bsl: &[T::Unpacked],
+) -> [T::UAcc; MR * NR] {
+    let mut rows = [[T::uacc_zero(); NR]; MR];
+    for l in 0..k {
+        let av = &asl[l * MR..l * MR + MR];
+        let bv: &[T::Unpacked; NR] = (&bsl[l * NR..l * NR + NR]).try_into().unwrap();
+        for ii in 0..MR {
+            T::uacc_mac_lanes(&mut rows[ii], av[ii], bv);
+        }
+    }
+    // Transpose the row-lane layout into the column-major accumulator
+    // order the writeback loops consume.
+    let mut acc = [T::uacc_zero(); MR * NR];
+    for jj in 0..NR {
+        for ii in 0..MR {
+            acc[jj * MR + ii] = rows[ii][jj];
         }
     }
     acc
@@ -1119,5 +1226,75 @@ mod tests {
             Posit32::ZERO, &mut c, 1,
         );
         assert_eq!(c[0], Posit32::ONE);
+    }
+
+    #[test]
+    fn microtile_lanes_matches_select_on_wide_range_posit32_slabs() {
+        // Both microkernel bodies on the same packed slabs, accumulator
+        // tiles compared exactly — zeros, NaR and extreme scales included
+        // so both the lane hot path and the bundle fallback engage.
+        let mut rng = Pcg64::seed(0x717E5);
+        let val = |rng: &mut Pcg64| -> Posit32 {
+            match rng.next_u32() % 16 {
+                0 => Posit32::ZERO,
+                1 => Posit32::NAR,
+                2..=8 => Posit32::from_f64(rng.normal()),
+                9..=12 => {
+                    let e = (rng.next_u32() % 220) as i32 - 110;
+                    Posit32::from_f64(rng.normal() * 2f64.powi(e))
+                }
+                _ => Posit32(rng.next_u32()),
+            }
+        };
+        for k in [1usize, 2, 7, 33, 96] {
+            for _ in 0..40 {
+                let asl: Vec<_> = (0..k * MR).map(|_| val(&mut rng).unpack()).collect();
+                let bsl: Vec<_> = (0..k * NR).map(|_| val(&mut rng).unpack()).collect();
+                let t1 = microtile_select::<Posit32>(k, &asl, &bsl);
+                let t2 = microtile_lanes::<Posit32>(k, &asl, &bsl);
+                for (i, (a, b)) in t1.iter().zip(&t2).enumerate() {
+                    // Accumulator planes compared exactly, not just the
+                    // re-encoded posits.
+                    assert_eq!(a, b, "k={k} acc {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn microtile_lanes_p8_exhaustive_pair_sweep() {
+        // Every ordered Posit(8,2) operand pair through the lane
+        // microkernel: row 0 of the a-slab walks all 256 patterns over
+        // k = 256, and 32 bundles of NR b-columns shift the b pattern so
+        // (a, b) = (l, (32*t + jj + l) mod 256) covers all 256x256 pairs.
+        // Cross-checked against the scalar-select body and a plain
+        // per-element uacc_mac fold (the naive chain semantics).
+        use crate::posit::formats::P8;
+        let k = 256usize;
+        for t in 0..32usize {
+            let asl: Vec<_> = (0..k)
+                .flat_map(|l| {
+                    (0..MR).map(move |ii| P8(((l + 31 * ii) & 255) as u32).unpack())
+                })
+                .collect();
+            let bsl: Vec<_> = (0..k)
+                .flat_map(|l| {
+                    (0..NR).map(move |jj| P8(((32 * t + jj + l) & 255) as u32).unpack())
+                })
+                .collect();
+            let t1 = microtile_select::<P8>(k, &asl, &bsl);
+            let t2 = microtile_lanes::<P8>(k, &asl, &bsl);
+            for jj in 0..NR {
+                for ii in 0..MR {
+                    let mut want = P8::uacc_zero();
+                    for l in 0..k {
+                        want = P8::uacc_mac(want, asl[l * MR + ii], bsl[l * NR + jj]);
+                    }
+                    let w = P8::uacc_finish(want);
+                    assert_eq!(P8::uacc_finish(t1[jj * MR + ii]), w, "select t={t} ({ii},{jj})");
+                    assert_eq!(P8::uacc_finish(t2[jj * MR + ii]), w, "lanes t={t} ({ii},{jj})");
+                }
+            }
+        }
     }
 }

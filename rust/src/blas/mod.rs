@@ -20,9 +20,9 @@ pub mod syrk;
 pub mod trsm;
 
 pub use gemm::{
-    default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_parallel,
-    gemm_parallel_scoped, gemm_prepacked, gemm_prepacked_parallel, gemm_prepacked_scoped,
-    PackPlan, PackedA, PackedB, Trans,
+    default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_packed_lanes,
+    gemm_parallel, gemm_parallel_scoped, gemm_prepacked, gemm_prepacked_parallel,
+    gemm_prepacked_scoped, PackPlan, PackedA, PackedB, Trans,
 };
 pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
 pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};
@@ -81,6 +81,22 @@ pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
     /// One fused step `acc = round(acc + round(a*b))` on the unpacked
     /// planes — bit-identical to `acc.add(a.mul(b))`.
     fn uacc_mac(acc: Self::UAcc, a: Self::Unpacked, b: Self::Unpacked) -> Self::UAcc;
+    /// `L` lane-parallel fused mac steps sharing one `a` operand:
+    /// `acc[j] = round(acc[j] + round(a * b[j]))` per lane, **bit-
+    /// identical** to `L` calls of [`Scalar::uacc_mac`] — the contract the
+    /// lane-parallel (SIMD) microkernel relies on. The default loops the
+    /// scalar mac (correct for every format); `Posit32` overrides it with
+    /// the branch-free lane kernel (`posit::unpacked::mac_lanes`).
+    #[inline]
+    fn uacc_mac_lanes<const L: usize>(
+        acc: &mut [Self::UAcc; L],
+        a: Self::Unpacked,
+        b: &[Self::Unpacked; L],
+    ) {
+        for j in 0..L {
+            acc[j] = Self::uacc_mac(acc[j], a, b[j]);
+        }
+    }
     /// Re-encode the accumulator once per output element (exact: the
     /// accumulator is kept on representable values).
     fn uacc_finish(acc: Self::UAcc) -> Self;
@@ -305,6 +321,14 @@ impl Scalar for Posit32 {
         b: posit::unpacked::U32,
     ) -> posit::unpacked::Acc32 {
         posit::unpacked::mac(acc, a, b)
+    }
+    #[inline]
+    fn uacc_mac_lanes<const L: usize>(
+        acc: &mut [posit::unpacked::Acc32; L],
+        a: posit::unpacked::U32,
+        b: &[posit::unpacked::U32; L],
+    ) {
+        posit::unpacked::mac_lanes(acc, a, b)
     }
     #[inline]
     fn uacc_finish(acc: posit::unpacked::Acc32) -> Posit32 {

@@ -19,7 +19,12 @@
 //!   once into unpacked planes at pack time (transposes included) and a
 //!   register-blocked microkernel accumulates with branch-free per-mac
 //!   rounding ([`posit::unpacked`]) — bit-identical to the naive
-//!   reference, per the repo-wide rounding contract (README). The whole
+//!   reference, per the repo-wide rounding contract (README). With the
+//!   `simd` cargo feature the microkernel runs its lane-parallel body
+//!   ([`posit::unpacked::mac_lanes`]): 8 output columns per mac as
+//!   fixed-size lane arrays of arithmetic selects, rare paths replayed
+//!   through the scalar mac per bundle — still bit-identical, with the
+//!   scalar-select body always compiled as the fallback. The whole
 //!   blocked solve is decode-once too: `trsm`, the level-2 kernels and
 //!   the `getf2`/`potf2` panel sweeps run in the unpacked domain, and
 //!   the factorization drivers reuse the decoded panel/TRSM planes as

@@ -238,6 +238,15 @@ fn round63(scale: i32, sig: u64) -> (i32, u64) {
         let u = unpack32(pack32(false, scale, sig));
         return (u.scale, (u.frac as u64) << 32);
     }
+    round63_in_range(scale, sig)
+}
+
+/// The in-range half of [`round63`], shared with the lane kernel
+/// ([`mac_lanes`]) so the two paths are bit-identical by construction:
+/// the RNE round-up decision and the carry renormalization as pure
+/// arithmetic selects. Caller guarantees `scale ∈ [-104, 104]`.
+#[inline(always)]
+fn round63_in_range(scale: i32, sig: u64) -> (i32, u64) {
     let fs = frac_bits_for_scale(scale); // 1..=27 in this range
     let cut = 63 - fs;
     let kept = sig >> cut;
@@ -249,6 +258,19 @@ fn round63(scale: i32, sig: u64) -> (i32, u64) {
     let m = kept + (round & (sticky | (kept & 1)));
     let ovf = (m >> (fs + 1)) as u32;
     (scale + ovf as i32, (m >> ovf) << cut)
+}
+
+/// Speculative per-lane rounding for [`mac_lanes`]: always takes the
+/// arithmetic path (clamping keeps every shift well-defined) and reports
+/// whether the scale was outside the in-range window. When the flag is
+/// set the lane's value is garbage and the bundle falls back to the
+/// scalar [`mac`]; when clear the clamp was the identity and the result
+/// is exactly [`round63`]'s.
+#[inline(always)]
+fn round63_lane(scale: i32, sig: u64) -> (i32, u64, bool) {
+    let oor = !(-104..=104).contains(&scale);
+    let (rs, rsig) = round63_in_range(scale.clamp(-104, 104), sig);
+    (rs, rsig, oor)
 }
 
 /// `round(acc + round(a*b))` — one posit rounding per operation, bit-
@@ -334,6 +356,128 @@ pub fn mac(acc: Acc32, a: U32, b: U32) -> Acc32 {
         neg: hn,
         zero: false,
         nar: false,
+    }
+}
+
+/// `L` lane-parallel fused mac steps sharing one `a` operand:
+/// `acc[j] = round(acc[j] + round(a * b[j]))` for every lane — **bit-
+/// identical** to `L` calls of the scalar [`mac`] (pinned by the lane
+/// property tests below and the GEMM bit-identity suites).
+///
+/// This is the SIMD shape of the paper's wide PE datapath: one row
+/// element of op(A) broadcast against `L` packed op(B) columns, with the
+/// whole per-lane computation — operand ordering, conditional negation,
+/// sticky collection, RNE round-up — kept as straight-line arithmetic
+/// selects over fixed-size lanes, which the compiler maps onto vector
+/// registers (AVX2/NEON) without any per-lane branching. The rare paths
+/// (special values, NaR accumulators, near-saturation roundings) are
+/// detected as one aggregate mask per bundle; any hit discards the
+/// speculative lanes and replays the bundle through the scalar [`mac`],
+/// so the fallback is mandatory-correct rather than re-implemented.
+///
+/// Lanes whose accumulator is zero ride the same arithmetic (ZERO's
+/// planes are a valid normalized dummy, so every shift stays defined) and
+/// select the exact product afterwards, mirroring the scalar early
+/// return. An out-of-range *sum* rounding only forces the fallback when
+/// that lane's sum is actually used (not first-term, not exact
+/// cancellation) — exactly the cases where scalar `round63` would have
+/// taken its slow path.
+#[allow(clippy::needless_range_loop)] // indexed lockstep over parallel lane arrays
+pub fn mac_lanes<const L: usize>(acc: &mut [Acc32; L], a: U32, b: &[U32; L]) {
+    // Bundle guard: any special operand or NaR accumulator -> scalar.
+    let mut flags = a.0;
+    for j in 0..L {
+        flags |= b[j].0;
+    }
+    let mut any_nar = false;
+    for j in 0..L {
+        any_nar |= acc[j].nar;
+    }
+    if flags >> 41 != 0 || any_nar {
+        for j in 0..L {
+            acc[j] = mac(acc[j], a, b[j]);
+        }
+        return;
+    }
+    let af = a.0 as u32 as u64;
+    let asc = ((a.0 >> 32) & 0xFF) as i32 - SCALE_BIAS;
+    // Exact product + first rounding, per lane (mac's product half).
+    let mut psig = [0u64; L];
+    let mut psc = [0i32; L];
+    let mut pneg = [false; L];
+    let mut prod_oor = false;
+    for j in 0..L {
+        let bj = b[j].0;
+        let bf = bj as u32 as u64;
+        let bsc = ((bj >> 32) & 0xFF) as i32 - SCALE_BIAS;
+        pneg[j] = ((a.0 ^ bj) >> 40) & 1 != 0;
+        let prod = af * bf;
+        let carry = (prod >> 63) as u32;
+        let (s, g, o) = round63_lane(asc + bsc + carry as i32, prod << (1 - carry));
+        psc[j] = s;
+        psig[j] = g;
+        prod_oor |= o;
+    }
+    // Aligned add + second rounding, per lane (mac's sum half, selects
+    // verbatim; speculative for zero accumulators).
+    let mut rsig = [0u64; L];
+    let mut rscale = [0i32; L];
+    let mut hneg = [false; L];
+    let mut cancel = [false; L];
+    let mut sum_oor = false;
+    for j in 0..L {
+        let aj = acc[j];
+        let akey = (((aj.scale + 256) as u64) << 28) | (aj.sig >> 36);
+        let pkey = (((psc[j] + 256) as u64) << 28) | (psig[j] >> 36);
+        let swap = pkey > akey;
+        let sm = (swap as u64).wrapping_neg();
+        let hs = (psig[j] & sm) | (aj.sig & !sm);
+        let ls = (aj.sig & sm) | (psig[j] & !sm);
+        let smi = (swap as i32).wrapping_neg();
+        let hsc = (psc[j] & smi) | (aj.scale & !smi);
+        let lsc = (aj.scale & smi) | (psc[j] & !smi);
+        let hn = (pneg[j] & swap) | (aj.neg & !swap);
+        let ln = (aj.neg & swap) | (pneg[j] & !swap);
+        hneg[j] = hn;
+        let d = (hsc - lsc) as u32;
+        let hi62 = hs >> 1;
+        let lo_full = ls >> 1;
+        let lo62 = lo_full.unbounded_shr(d);
+        let smask = 1u64.unbounded_shl(d).wrapping_sub(1);
+        let sticky = ((lo_full & smask) != 0) as u64;
+        let nmask = ((hn ^ ln) as u64).wrapping_neg();
+        let lo_term = ((lo62 + sticky) ^ nmask).wrapping_sub(nmask);
+        let sum = hi62.wrapping_add(lo_term);
+        cancel[j] = sum == 0;
+        let sum2 = sum | ((cancel[j] as u64) << 63);
+        let lz = sum2.leading_zeros();
+        let (s, g, o) = round63_lane(hsc + 1 - lz as i32, (sum2 << lz) | sticky);
+        rscale[j] = s;
+        rsig[j] = g;
+        sum_oor |= o & !aj.zero & !cancel[j];
+    }
+    if prod_oor || sum_oor {
+        for j in 0..L {
+            acc[j] = mac(acc[j], a, b[j]);
+        }
+        return;
+    }
+    // Writeback selects: a zero accumulator takes the exact product
+    // (first term of the dot product), exact cancellation takes ZERO,
+    // everything else the rounded sum.
+    for j in 0..L {
+        let z = acc[j].zero;
+        acc[j] = if cancel[j] && !z {
+            Acc32::ZERO
+        } else {
+            Acc32 {
+                sig: if z { psig[j] } else { rsig[j] },
+                scale: if z { psc[j] } else { rscale[j] },
+                neg: if z { pneg[j] } else { hneg[j] },
+                zero: false,
+                nar: false,
+            }
+        };
     }
 }
 
@@ -586,6 +730,104 @@ mod tests {
                 got = mac(got, U32::decode(*x), U32::decode(*y));
             }
             assert_eq!(round_encode(got), want, "trial {trial} k {k}");
+        }
+    }
+
+    /// One lane bundle vs `L` scalar macs, bit-for-bit (accumulator
+    /// planes compared exactly, not just the re-encoded posits).
+    fn assert_lanes_match<const L: usize>(accs: [Posit32; L], a: Posit32, bs: [Posit32; L]) {
+        let au = U32::decode(a);
+        let bu = bs.map(U32::decode);
+        let mut lanes = accs.map(Acc32::from_posit);
+        mac_lanes(&mut lanes, au, &bu);
+        for j in 0..L {
+            let want = mac(Acc32::from_posit(accs[j]), au, bu[j]);
+            assert_eq!(
+                lanes[j], want,
+                "lane {j}: acc={:?} a={a:?} b={:?}",
+                accs[j], bs[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mac_lanes_matches_scalar_mac_on_structured_bundles() {
+        // Every structured value (zero, NaR, ±maxpos/minpos, subnormal-
+        // regime extremes) as the shared `a`, with lane operands and
+        // accumulators sliding over the same corpus so special and real
+        // lanes mix within one bundle — the whole-bundle fallback and the
+        // hot path both get exercised.
+        let vals = structured_values();
+        let n = vals.len();
+        for (ai, &a) in vals.iter().enumerate() {
+            for s in 0..n {
+                let accs: [Posit32; 8] = core::array::from_fn(|j| vals[(s + j) % n]);
+                let bs: [Posit32; 8] = core::array::from_fn(|j| vals[(s + 3 * j + ai) % n]);
+                assert_lanes_match(accs, a, bs);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_lanes_matches_scalar_mac_on_random_bundles() {
+        let mut rng = Pcg64::seed(0x1A9E5);
+        for i in 0..30_000u64 {
+            let a = interesting(&mut rng, i);
+            let accs: [Posit32; 8] = core::array::from_fn(|j| interesting(&mut rng, i + j as u64));
+            let bs: [Posit32; 8] =
+                core::array::from_fn(|j| interesting(&mut rng, i + 3 + j as u64));
+            assert_lanes_match(accs, a, bs);
+            // Narrower bundles take the same code path with L = 4.
+            let accs4: [Posit32; 4] = core::array::from_fn(|j| accs[j]);
+            let bs4: [Posit32; 4] = core::array::from_fn(|j| bs[j]);
+            assert_lanes_match(accs4, a, bs4);
+        }
+    }
+
+    #[test]
+    fn mac_lanes_matches_scalar_mac_under_cancellation() {
+        // Lane j holds acc = -round(a*b_j) or a bit neighbour: exact and
+        // near-total cancellation inside otherwise-hot bundles, including
+        // the cancel-with-zero-accumulator interplay.
+        let mut rng = Pcg64::seed(0x1CA9CE);
+        for i in 0..8_000u64 {
+            let a = interesting(&mut rng, i);
+            let bs: [Posit32; 8] = core::array::from_fn(|j| interesting(&mut rng, i + j as u64));
+            let accs: [Posit32; 8] = core::array::from_fn(|j| {
+                let p = Posit32(posit::mul(a.0, bs[j].0)).negate();
+                match j % 4 {
+                    0 => p,
+                    1 => Posit32(p.0.wrapping_add(1)),
+                    2 => Posit32(p.0.wrapping_sub(1)),
+                    _ => Posit32::ZERO,
+                }
+            });
+            assert_lanes_match(accs, a, bs);
+        }
+    }
+
+    #[test]
+    fn mac_lanes_chained_dots_match_scalar_chains() {
+        // Whole accumulation chains through the lane kernel — the exact
+        // shape the vectorized microtile runs (ascending k, one broadcast
+        // `a` per step) — against per-lane scalar chains.
+        let mut rng = Pcg64::seed(0x1D07);
+        for trial in 0..300u64 {
+            let k = 1 + (rng.next_u32() % 48) as usize;
+            let mut lanes = [Acc32::ZERO; 8];
+            let mut want = [Posit32::ZERO; 8];
+            for l in 0..k {
+                let a = interesting(&mut rng, trial + l as u64);
+                let bs: [Posit32; 8] =
+                    core::array::from_fn(|j| interesting(&mut rng, trial + (l * 8 + j) as u64));
+                mac_lanes(&mut lanes, U32::decode(a), &bs.map(U32::decode));
+                for j in 0..8 {
+                    want[j] = mac_ref(want[j], a, bs[j]);
+                }
+            }
+            for j in 0..8 {
+                assert_eq!(round_encode(lanes[j]), want[j], "trial {trial} lane {j}");
+            }
         }
     }
 

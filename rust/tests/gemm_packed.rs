@@ -13,7 +13,7 @@
 //! as the 256×256 scalar-op sweeps in `posit8_exhaustive.rs`, but through
 //! the whole GEMM stack (pack, microkernel, unpacked mac, re-encode).
 
-use posit_accel::blas::{gemm, gemm_naive, gemm_packed, Scalar, Trans};
+use posit_accel::blas::{gemm, gemm_naive, gemm_packed, gemm_packed_lanes, Scalar, Trans};
 use posit_accel::posit::formats::{P16, P8};
 use posit_accel::posit::Posit32;
 use posit_accel::rng::Pcg64;
@@ -102,6 +102,26 @@ fn p8_exhaustive_pattern_sweep_packed_vs_naive() {
                 assert_eq!(c2[i + j * ldc], NAR8, "padding clobbered at ({i},{j})");
             }
         }
+        // The same exhaustive pattern/pair closure through the
+        // lane-parallel (SIMD) microkernel body, whatever the build's
+        // `simd` feature state.
+        let mut c3 = c0.clone();
+        gemm_packed_lanes(
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            al,
+            &a,
+            lda,
+            &b,
+            ldb,
+            be,
+            &mut c3,
+            ldc,
+        );
+        assert_eq!(bits_of(&c1), bits_of(&c3), "lanes alpha {alpha} beta {beta}");
     }
 }
 
@@ -166,9 +186,12 @@ fn posit32_wide_range_tiles_packed_vs_naive_all_transposes() {
                 let be = Posit32::ONE;
                 let mut c1 = c0.clone();
                 let mut c2 = c0.clone();
+                let mut c3 = c0.clone();
                 gemm_naive(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c1, ldc);
                 gemm_packed(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c2, ldc);
+                gemm_packed_lanes(ta, tb, m, n, k, al, &a, lda, &b, ldb, be, &mut c3, ldc);
                 assert_eq!(bits_of(&c1), bits_of(&c2), "{m}x{n}x{k} {ta:?}{tb:?}");
+                assert_eq!(bits_of(&c1), bits_of(&c3), "lanes {m}x{n}x{k} {ta:?}{tb:?}");
             }
         }
     }
