@@ -10,7 +10,9 @@
 //! * blocked LU/Cholesky end to end — including the decode-once
 //!   factorization pipeline vs the scalar path (`BENCH_factor.json`, with
 //!   its own bit-identity gate);
-//! * service throughput per numeric format and worker count.
+//! * service throughput per numeric format and worker count;
+//! * the serving daemon under a seeded open-loop load (latency
+//!   percentiles + jobs/s, `BENCH_serve_daemon.json`).
 //!
 //! The service section also writes machine-readable
 //! `results/BENCH_service.json` (one row per backend × format × worker
@@ -808,6 +810,61 @@ fn bench_service_formats(b: &mut Bench) {
     }
 }
 
+/// The serving-daemon load harness: an in-process daemon under a seeded
+/// open-loop mixed-format stream from 4 concurrent submitters, reported
+/// as p50/p99 latency and sustained jobs/s, with the full artifact
+/// (percentiles, per-priority/per-format rollups, queue-depth trace)
+/// written to `results/BENCH_serve_daemon.json`.
+fn bench_serve_daemon(b: &mut Bench) {
+    use posit_accel::serve::{drive, plan, Daemon, DaemonConfig};
+
+    let (jobs_count, base_n, rate) = if quick() { (12, 48, 64.0) } else { (48, 96, 24.0) };
+    const SUBMITTERS: usize = 4;
+    let load = plan(jobs_count, base_n, 0xDAE404, rate, SUBMITTERS);
+    let engine = EngineBuilder::new(32)
+        .shared("native", Arc::new(NativeBackend::new(1)))
+        .build();
+    let config = DaemonConfig {
+        queue_capacity: jobs_count.max(16),
+        min_workers: 1,
+        max_workers: 4,
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::start(engine, config);
+    let report = drive(&daemon, &load, 1000);
+    let summary = daemon.drain();
+    assert_eq!(report.dropped, 0, "open-loop burst must not drop jobs");
+    assert_eq!(summary.admitted, jobs_count);
+    assert_eq!(summary.completed, jobs_count, "clean drain");
+
+    let lat = daemon.latency_summary();
+    b.add(
+        &format!("serve-daemon {jobs_count}-job open loop x{SUBMITTERS} submitters p50"),
+        lat.p50_s * 1e3,
+        "ms",
+    );
+    b.add(
+        &format!("serve-daemon {jobs_count}-job open loop x{SUBMITTERS} submitters p99"),
+        lat.p99_s * 1e3,
+        "ms",
+    );
+    b.add(
+        &format!("serve-daemon {jobs_count}-job open loop x{SUBMITTERS} submitters"),
+        summary.completed as f64 / summary.wall_s,
+        "jobs/s",
+    );
+    std::fs::create_dir_all("results").ok();
+    match daemon.write_bench(
+        std::path::Path::new("results/BENCH_serve_daemon.json"),
+        quick(),
+        SUBMITTERS,
+        rate,
+    ) {
+        Ok(()) => println!("[saved results/BENCH_serve_daemon.json]"),
+        Err(e) => println!("[failed to save BENCH_serve_daemon.json: {e}]"),
+    }
+}
+
 fn main() {
     println!("hot_paths microbenchmarks (min of several reps)\n");
     if quick() {
@@ -821,5 +878,6 @@ fn main() {
     bench_decompositions(&mut b);
     bench_service(&mut b);
     bench_service_formats(&mut b);
+    bench_serve_daemon(&mut b);
     b.save();
 }

@@ -12,6 +12,9 @@
 //!                                     (manifests mix posit32/f32/f64 jobs and
 //!                                     factor/refine modes per line)
 //! posit-accel serve [--rounds 3]      same, sustained rounds, JSON per round
+//! posit-accel serve-daemon            long-lived streaming daemon (Unix socket)
+//! posit-accel serve-load              open-loop load client for the daemon
+//! posit-accel serve-ctl ping|stats|shutdown   one-shot daemon control
 //! ```
 
 use std::collections::HashMap;
@@ -84,6 +87,12 @@ USAGE:
   posit-accel batch  [--manifest FILE] [--jobs 32] [--n 192] [--workers <cores>]
                      [--backend native|fpga|gpu|pjrt] [--max-batch 32] [--json FILE]
   posit-accel serve  (batch options) [--rounds 3]
+  posit-accel serve-daemon [--socket /tmp/posit-serve.sock] [--backends native,fpga,gpu,pjrt]
+                     [--capacity 64] [--min-workers 1] [--max-workers <cores>]
+                     [--retry-after-ms 10] [--max-batch 32] [--bench-out FILE]
+  posit-accel serve-load [--socket ...] [--jobs 24] [--n 48] [--seed 1] [--rate 32]
+                     [--submitters 4] [--max-retries 1000] [--shutdown]
+  posit-accel serve-ctl <ping|stats|shutdown> [--socket ...]
 
 Tables/figures print a paper-vs-model/measured comparison and save CSV
 under results/. PJRT backends need `make artifacts` first.
@@ -115,7 +124,19 @@ A worked mixed-format manifest:
 file); `serve` repeats the manifest --rounds times and emits one aggregate
 JSON line per round (--json then appends those lines to FILE as a JSONL
 log). Backends: native (host, all formats), fpga/gpu (bit-exact numerics +
-modelled time, all formats), pjrt (AOT Pallas artifacts, posit32 only).";
+modelled time, all formats), pjrt (AOT Pallas artifacts, posit32 only).
+
+serve-daemon is the persistent tier: it streams newline-delimited JSON
+submissions (the manifest vocabulary as flat JSON fields plus
+`priority=high|normal|low`) over a Unix socket into bounded per-priority
+admission queues — a full queue rejects with a deterministic
+`retry_after_ms` hint — and runs jobs on per-format worker shards that
+scale with queue depth. SIGTERM or an `op=shutdown` request drains
+gracefully (every admitted job finishes exactly once) and, with
+--bench-out, writes the latency/throughput/queue-trace JSON
+(BENCH_serve_daemon.json). serve-load offers a seeded open-loop job
+stream (fixed-rate arrivals across --submitters connections, honoring
+backpressure hints); serve-ctl sends one control request.";
 
 #[cfg(test)]
 mod tests {

@@ -572,6 +572,17 @@ impl OffloadStats {
     pub fn gflops(&self, ops: f64) -> f64 {
         ops / self.total_s / 1e9
     }
+
+    /// Fold another job's stats into this rollup (every phase field sums;
+    /// the serving tier aggregates per-job stats into per-format rollups
+    /// with this).
+    pub fn accumulate(&mut self, other: &OffloadStats) {
+        self.panel_s += other.panel_s;
+        self.update_s += other.update_s;
+        self.simulated_s += other.simulated_s;
+        self.total_s += other.total_s;
+        self.update_flops += other.update_flops;
+    }
 }
 
 #[cfg(test)]

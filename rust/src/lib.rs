@@ -49,6 +49,16 @@
 //!   (`precision=posit32|f32|f64`, `mode=factor|refine`), so one run
 //!   carries the paper's format comparison; results are bit-identical to
 //!   the sequential drivers at any worker count.
+//! * [`serve`] — the persistent serving tier above the service: a
+//!   long-lived daemon (`posit-accel serve-daemon`) that streams job
+//!   submissions over a Unix socket, admits them through bounded
+//!   per-priority queues with deterministic reject-with-retry-after
+//!   backpressure, dispatches to per-format worker shards that scale
+//!   against queue depth, and drains gracefully on SIGTERM/`shutdown`;
+//!   plus a seeded open-loop load harness recording p50/p95/p99 latency,
+//!   jobs/s and queue-depth traces (`BENCH_serve_daemon.json`). The
+//!   daemon adds no numeric behavior — drained runs are bit-identical to
+//!   the sequential drivers.
 //!
 //! [`coordinator::GemmBackend<T>`]: coordinator::GemmBackend
 //! * [`sim`] — calibrated models of the paper's hardware: the Agilex
@@ -66,6 +76,7 @@ pub mod posit;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod service;
 pub mod sim;
 pub mod util;

@@ -42,6 +42,9 @@ fn main() {
         Some("solve") => cmd_solve(&args),
         Some("batch") => cmd_batch(&args, false),
         Some("serve") => cmd_batch(&args, true),
+        Some("serve-daemon") => cmd_serve_daemon(&args),
+        Some("serve-load") => cmd_serve_load(&args),
+        Some("serve-ctl") => cmd_serve_ctl(&args),
         Some("opbench") => {
             experiments::table2_3::run_table2(quick || !args.flag("full"))
         }
@@ -170,7 +173,14 @@ fn cmd_solve(args: &Args) {
 /// start only when some job actually routes to them, so a native-only
 /// manifest spawns no idle dispatcher threads.
 fn service_engine(jobs: &[service::JobSpec], max_batch: usize) -> service::Engine {
-    let want = |name: &str| jobs.iter().any(|j| j.backend == name);
+    engine_with_backends(|name| jobs.iter().any(|j| j.backend == name), max_batch)
+}
+
+/// The `service_engine` construction with an arbitrary "is this backend
+/// wanted" predicate — the daemon registers backends up front from a CSV
+/// list (it cannot see future submissions), the manifest runner from the
+/// job set.
+fn engine_with_backends(want: impl Fn(&str) -> bool, max_batch: usize) -> service::Engine {
     let threads = blas::default_threads();
     let mut builder = service::EngineBuilder::new(max_batch)
         .shared("native", Arc::new(NativeBackend::new(threads)));
@@ -329,4 +339,206 @@ fn cmd_batch(args: &Args, serve: bool) {
             None => println!("{json}"),
         }
     }
+}
+
+const DEFAULT_SOCKET: &str = "/tmp/posit-serve.sock";
+
+/// Run the persistent serving daemon on a Unix socket until SIGTERM or a
+/// client `shutdown`, then drain gracefully and (with `--bench-out`)
+/// flush `BENCH_serve_daemon.json`.
+#[cfg(unix)]
+fn cmd_serve_daemon(args: &Args) {
+    use posit_accel::serve::{serve_unix, Daemon, DaemonConfig};
+    use std::path::{Path, PathBuf};
+
+    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let backends: Vec<String> = args
+        .str_or("backends", "native")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for name in &backends {
+        if !["native", "fpga", "gpu", "pjrt"].contains(&name.as_str()) {
+            die(&format!("unknown backend '{name}' in --backends"));
+        }
+    }
+    let max_batch = args.usize_or("max-batch", 32);
+    let engine = engine_with_backends(|name| backends.iter().any(|b| b == name), max_batch);
+    let config = DaemonConfig {
+        queue_capacity: args.usize_or("capacity", 64),
+        min_workers: args.usize_or("min-workers", 1),
+        max_workers: args.usize_or("max-workers", blas::default_threads()).max(1),
+        retry_after_ms: args.usize_or("retry-after-ms", 10) as u64,
+        idle_exit_ms: args.usize_or("idle-exit-ms", 50) as u64,
+        trace_interval_ms: args.usize_or("trace-ms", 20) as u64,
+        ..DaemonConfig::default()
+    };
+    let bench_out: Option<PathBuf> = args.get("bench-out").map(PathBuf::from);
+    let daemon = Daemon::start(engine, config);
+    println!("serve-daemon listening on {socket} (backends: {})", backends.join(","));
+    let summary = serve_unix(daemon, Path::new(&socket), bench_out.as_deref())
+        .unwrap_or_else(|e| die(&format!("serve-daemon: {e:#}")));
+    println!(
+        "serve-daemon drained: {} admitted, {} completed, {} rejected in {:.3}s",
+        summary.admitted, summary.completed, summary.rejected, summary.wall_s
+    );
+}
+
+/// The open-loop load client: `--submitters` concurrent connections
+/// offer a deterministic fixed-rate mixed-format job stream, honoring
+/// every rejection's `retry_after_ms` backpressure hint, then collect all
+/// results and (with `--shutdown`) drain the daemon.
+#[cfg(unix)]
+fn cmd_serve_load(args: &Args) {
+    use posit_accel::serve::{plan, protocol};
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let jobs = args.usize_or("jobs", 24);
+    let n = args.usize_or("n", 48);
+    let seed = args.usize_or("seed", 1) as u64;
+    let rate = args.f64_or("rate", 32.0);
+    let submitters = args.usize_or("submitters", 4).max(1);
+    let max_retries = args.usize_or("max-retries", 1000);
+    let lp = plan(jobs, n, seed, rate, submitters);
+
+    let (mut accepted, mut rejections, mut dropped) = (0usize, 0usize, 0usize);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for s in 0..submitters {
+            let lp = &lp;
+            let socket = &socket;
+            handles.push(scope.spawn(move || {
+                let stream = UnixStream::connect(socket)
+                    .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+                let mut writer =
+                    stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                let (mut acc, mut rej, mut dropped) = (0usize, 0usize, 0usize);
+                for i in (s..lp.jobs.len()).step_by(submitters) {
+                    let due = t0 + lp.send_at[i];
+                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    let (spec, priority) = &lp.jobs[i];
+                    let request = protocol::submit_line(spec, *priority);
+                    let mut tries = 0usize;
+                    loop {
+                        writeln!(writer, "{request}")
+                            .unwrap_or_else(|e| die(&format!("submit: {e}")));
+                        line.clear();
+                        reader
+                            .read_line(&mut line)
+                            .unwrap_or_else(|e| die(&format!("reply: {e}")));
+                        let fields = protocol::parse_flat_object(line.trim())
+                            .unwrap_or_else(|e| die(&format!("bad reply: {e:#}")));
+                        match protocol::get_str(&fields, "op") {
+                            Some("accepted") => {
+                                acc += 1;
+                                break;
+                            }
+                            Some("rejected") => {
+                                rej += 1;
+                                tries += 1;
+                                let hint = protocol::get_num(&fields, "retry_after_ms")
+                                    .unwrap_or(0.0) as u64;
+                                if hint == 0 || tries > max_retries {
+                                    dropped += 1;
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_millis(hint));
+                            }
+                            other => die(&format!("unexpected reply op {other:?}")),
+                        }
+                    }
+                }
+                (acc, rej, dropped)
+            }));
+        }
+        for h in handles {
+            let (a, r, d) = h.join().unwrap();
+            accepted += a;
+            rejections += r;
+            dropped += d;
+        }
+    });
+
+    // Control connection: settle (collect with wait), then optionally drain.
+    let stream = UnixStream::connect(&socket)
+        .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+    let mut writer = stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(writer, "{{\"op\": \"collect\", \"wait\": true}}")
+        .unwrap_or_else(|e| die(&format!("collect: {e}")));
+    reader.read_line(&mut line).unwrap_or_else(|e| die(&format!("collect reply: {e}")));
+    let completed = extract_usize(&line, "count").unwrap_or(0);
+    println!(
+        "serve-load: {accepted} accepted, {rejections} backpressure rejections, {dropped} dropped, {completed} completed in {:.3}s",
+        t0.elapsed().as_secs_f64()
+    );
+    if args.flag("shutdown") {
+        line.clear();
+        writeln!(
+            writer,
+            "{{\"op\": \"shutdown\", \"submitters\": {submitters}, \"rate_jobs_per_s\": {rate}}}"
+        )
+        .unwrap_or_else(|e| die(&format!("shutdown: {e}")));
+        reader.read_line(&mut line).unwrap_or_else(|e| die(&format!("shutdown reply: {e}")));
+        print!("{line}");
+    }
+}
+
+/// One-shot control client: `serve-ctl ping|stats|shutdown`.
+#[cfg(unix)]
+fn cmd_serve_ctl(args: &Args) {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let request = match args.positional.get(1).map(|s| s.as_str()) {
+        Some("ping") => "{\"op\": \"ping\"}".to_string(),
+        Some("stats") => "{\"op\": \"stats\"}".to_string(),
+        Some("shutdown") => "{\"op\": \"shutdown\"}".to_string(),
+        other => die(&format!("unknown serve-ctl op {other:?} (want ping|stats|shutdown)")),
+    };
+    let stream = UnixStream::connect(&socket)
+        .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+    let mut writer = stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{request}").unwrap_or_else(|e| die(&format!("send: {e}")));
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap_or_else(|e| die(&format!("reply: {e}")));
+    print!("{line}");
+}
+
+/// Pull an integer field out of a (possibly nested) reply line without a
+/// full JSON parser: finds `"key": <digits>`.
+#[cfg(unix)]
+fn extract_usize(json: &str, key: &str) -> Option<usize> {
+    let pat = format!("\"{key}\": ");
+    let start = json.find(&pat)? + pat.len();
+    let rest = &json[start..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(not(unix))]
+fn cmd_serve_daemon(_args: &Args) {
+    die("serve-daemon needs Unix-domain sockets (unix platforms only)")
+}
+
+#[cfg(not(unix))]
+fn cmd_serve_load(_args: &Args) {
+    die("serve-load needs Unix-domain sockets (unix platforms only)")
+}
+
+#[cfg(not(unix))]
+fn cmd_serve_ctl(_args: &Args) {
+    die("serve-ctl needs Unix-domain sockets (unix platforms only)")
 }

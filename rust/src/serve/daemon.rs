@@ -1,0 +1,839 @@
+//! The long-lived serving daemon: bounded per-priority admission queues
+//! with explicit backpressure, sharded per-format worker pools over the
+//! batched [`Engine`], queue-depth-driven worker scaling, and graceful
+//! drain.
+//!
+//! ## Architecture
+//!
+//! One [`Daemon`] owns one [`Engine`] (the PR-1/2 dispatch-queue engine:
+//! per-format pools of shared-backend batch queues) and three **shards**,
+//! one per [`Precision`]. A shard is a bounded admission queue split into
+//! three priority lanes (`high`/`normal`/`low`) plus a pool of worker
+//! threads that pop lanes in priority order and run each job through
+//! [`Engine::run_one`] — i.e. through a [`crate::service::QueueBackend`]
+//! proxy, so every worker's trailing updates keep multiplexing onto the
+//! shared per-backend dispatch queues and their tile folding / pack-plan
+//! reuse, now under sustained streaming traffic instead of one-shot
+//! manifests.
+//!
+//! ## Backpressure
+//!
+//! Admission is bounded: when a shard already holds
+//! [`DaemonConfig::queue_capacity`] queued jobs, [`Daemon::submit`]
+//! rejects with a `retry_after_ms` hint that is a *pure function* of
+//! `(retry_after_ms config, depth, capacity)` — deterministic, testable,
+//! and honest under load (the hint grows with depth). Rejections during a
+//! drain carry hint 0: don't retry, the daemon is going away.
+//!
+//! ## Worker scaling
+//!
+//! Each shard holds between `min_workers` and `max_workers` threads.
+//! Submissions spawn workers while the queue is deeper than the worker
+//! count; a worker that sits idle for `idle_exit_ms` with an empty queue
+//! exits if the shard is above `min_workers`. A tracer thread samples
+//! queue depths into the bench's queue-depth trace and performs the same
+//! opportunistic scale-up check.
+//!
+//! ## Determinism
+//!
+//! The daemon inherits the service's headline contract: scheduling (lane
+//! order, worker count, scaling, interleaving) decides only *when* a job
+//! runs, never its operands — every job's factors, pivots and error
+//! numbers are bit-identical to the sequential drivers on the same spec
+//! (`rust/tests/serve_daemon.rs` gates this like PR 1/3/4 did for the
+//! batch engine). Drain is exactly-once: every admitted job completes and
+//! contributes exactly one result and one stats row; nothing is lost or
+//! double-counted.
+
+use super::protocol::{esc, jnum, Priority};
+use crate::coordinator::OffloadStats;
+use crate::service::{Engine, JobResult, JobSpec, Precision, QueueReport};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Daemon tuning knobs. `Default` is sized for tests and the quick bench;
+/// the CLI exposes the load-bearing ones.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Max queued (admitted, not yet running) jobs per format shard,
+    /// across its three priority lanes. Beyond this, submissions reject.
+    pub queue_capacity: usize,
+    /// Workers a shard keeps alive even when idle.
+    pub min_workers: usize,
+    /// Workers a shard may scale up to under load.
+    pub max_workers: usize,
+    /// Base backpressure hint: a rejection at depth `d` with capacity `c`
+    /// carries `retry_after_ms + retry_after_ms * d / c` milliseconds.
+    pub retry_after_ms: u64,
+    /// Idle time after which a worker above `min_workers` exits.
+    pub idle_exit_ms: u64,
+    /// Tracer sampling interval for the queue-depth trace.
+    pub trace_interval_ms: u64,
+    /// Retain factor bits + pivots per job (determinism tests).
+    pub keep_factors: bool,
+    /// Start with dispatch gated: jobs are admitted but not run until
+    /// [`Daemon::release`] (backpressure tests fill queues this way;
+    /// [`Daemon::drain`] releases the gate itself).
+    pub hold_workers: bool,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            queue_capacity: 64,
+            min_workers: 1,
+            max_workers: 4,
+            retry_after_ms: 10,
+            idle_exit_ms: 50,
+            trace_interval_ms: 10,
+            keep_factors: false,
+            hold_workers: false,
+        }
+    }
+}
+
+/// Successful admission: the job is queued in `shard`'s lane at depth
+/// `queue_depth`.
+#[derive(Clone, Debug)]
+pub struct Admission {
+    pub id: usize,
+    pub shard: &'static str,
+    pub queue_depth: usize,
+}
+
+/// Rejected admission (backpressure or drain). `retry_after_ms == 0`
+/// means "don't retry" (draining); otherwise it is the deterministic
+/// backoff hint.
+#[derive(Clone, Debug)]
+pub struct Rejection {
+    pub id: usize,
+    pub reason: String,
+    pub retry_after_ms: u64,
+}
+
+/// Outcome of a graceful drain.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainSummary {
+    pub admitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Wall seconds from daemon start to drain completion.
+    pub wall_s: f64,
+}
+
+/// One completed job's latency accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySample {
+    pub id: usize,
+    pub precision: Precision,
+    pub priority: Priority,
+    /// Admission to completion (queue wait + execution).
+    pub latency_s: f64,
+    /// Execution alone.
+    pub wall_s: f64,
+}
+
+/// Latency percentiles over every completed job (nearest-rank).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+}
+
+/// One tracer sample of the shard queues.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSample {
+    pub t_s: f64,
+    /// Queue depth per shard, [`Precision::ALL`] order.
+    pub depth: [usize; 3],
+    /// Live workers per shard, [`Precision::ALL`] order.
+    pub workers: [usize; 3],
+}
+
+struct AdmittedJob {
+    spec: JobSpec,
+    priority: Priority,
+    admitted_at: Instant,
+}
+
+struct ShardState {
+    lanes: [VecDeque<AdmittedJob>; 3],
+    depth: usize,
+    workers: usize,
+    peak_workers: usize,
+    held: bool,
+    draining: bool,
+    stopped: bool,
+}
+
+struct Shard {
+    precision: Precision,
+    state: Mutex<ShardState>,
+    cond: Condvar,
+}
+
+impl Shard {
+    fn new(precision: Precision, held: bool) -> Shard {
+        Shard {
+            precision,
+            state: Mutex::new(ShardState {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                depth: 0,
+                workers: 0,
+                peak_workers: 0,
+                held,
+                draining: false,
+                stopped: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+}
+
+struct Tally {
+    results: Vec<JobResult>,
+    latencies: Vec<LatencySample>,
+    /// Per-shard rollup of every completed job's [`OffloadStats`]
+    /// ([`Precision::ALL`] order) — the coordinator's per-job phase
+    /// timings aggregated at the serving tier.
+    rollup: [OffloadStats; 3],
+}
+
+struct DaemonCore {
+    engine: Engine,
+    config: DaemonConfig,
+    shards: [Shard; 3],
+    tally: Mutex<Tally>,
+    /// Signalled (with `tally` held) on every completion; [`Daemon::drain`]
+    /// and [`Daemon::wait_idle`] wait on it.
+    done_cond: Condvar,
+    admitted: AtomicUsize,
+    completed: AtomicUsize,
+    rejected: AtomicUsize,
+    stop_tracer: AtomicBool,
+    started_at: Instant,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    trace: Mutex<Vec<TraceSample>>,
+    drained: Mutex<Option<DrainSummary>>,
+}
+
+fn shard_index(p: Precision) -> usize {
+    match p {
+        Precision::Posit32 => 0,
+        Precision::F32 => 1,
+        Precision::F64 => 2,
+    }
+}
+
+impl DaemonCore {
+    fn shard(&self, p: Precision) -> &Shard {
+        &self.shards[shard_index(p)]
+    }
+}
+
+/// Handle to a running daemon; `Clone` shares the same daemon (socket
+/// handler threads each hold one).
+#[derive(Clone)]
+pub struct Daemon {
+    core: Arc<DaemonCore>,
+}
+
+impl Daemon {
+    /// Start the daemon over `engine`: spawn `min_workers` per shard plus
+    /// the tracer thread, and begin accepting submissions.
+    pub fn start(engine: Engine, config: DaemonConfig) -> Daemon {
+        let held = config.hold_workers;
+        let core = Arc::new(DaemonCore {
+            engine,
+            config,
+            shards: [
+                Shard::new(Precision::Posit32, held),
+                Shard::new(Precision::F32, held),
+                Shard::new(Precision::F64, held),
+            ],
+            tally: Mutex::new(Tally {
+                results: Vec::new(),
+                latencies: Vec::new(),
+                rollup: [OffloadStats::default(); 3],
+            }),
+            done_cond: Condvar::new(),
+            admitted: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            stop_tracer: AtomicBool::new(false),
+            started_at: Instant::now(),
+            handles: Mutex::new(Vec::new()),
+            trace: Mutex::new(Vec::new()),
+            drained: Mutex::new(None),
+        });
+        for p in Precision::ALL {
+            for _ in 0..core.config.min_workers {
+                spawn_worker(&core, p);
+            }
+        }
+        spawn_tracer(&core);
+        Daemon { core }
+    }
+
+    /// Admit one job into its format shard's priority lane, or reject
+    /// with the deterministic backpressure hint.
+    pub fn submit(&self, spec: JobSpec, priority: Priority) -> Result<Admission, Rejection> {
+        let core = &self.core;
+        let precision = spec.precision;
+        let id = spec.id;
+        let shard = core.shard(precision);
+        let depth = {
+            let mut st = shard.state.lock().unwrap();
+            if st.draining || st.stopped {
+                drop(st);
+                core.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err(Rejection {
+                    id,
+                    reason: "draining".to_string(),
+                    retry_after_ms: 0,
+                });
+            }
+            if st.depth >= core.config.queue_capacity {
+                let hint =
+                    retry_hint(core.config.retry_after_ms, st.depth, core.config.queue_capacity);
+                drop(st);
+                core.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err(Rejection {
+                    id,
+                    reason: "queue full".to_string(),
+                    retry_after_ms: hint,
+                });
+            }
+            // Count the admission while still holding the shard lock, so
+            // `admitted` can never lag a completion (drain's exactly-once
+            // accounting depends on admitted >= completed at all times).
+            core.admitted.fetch_add(1, Ordering::SeqCst);
+            st.lanes[priority.index()].push_back(AdmittedJob {
+                spec,
+                priority,
+                admitted_at: Instant::now(),
+            });
+            st.depth += 1;
+            st.depth
+        };
+        shard.cond.notify_one();
+        scale_up(core, precision);
+        Ok(Admission {
+            id,
+            shard: precision.name(),
+            queue_depth: depth,
+        })
+    }
+
+    /// Open the dispatch gate (see [`DaemonConfig::hold_workers`]) and run
+    /// the scale-up check on the backlog.
+    pub fn release(&self) {
+        for shard in &self.core.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.held = false;
+            shard.cond.notify_all();
+        }
+        for p in Precision::ALL {
+            scale_up(&self.core, p);
+        }
+    }
+
+    /// Block until every job admitted so far has completed.
+    pub fn wait_idle(&self) {
+        let core = &self.core;
+        let mut tally = core.tally.lock().unwrap();
+        while core.completed.load(Ordering::SeqCst) < core.admitted.load(Ordering::SeqCst) {
+            tally = core.done_cond.wait(tally).unwrap();
+        }
+    }
+
+    /// Graceful drain: stop admitting (new submissions reject with hint
+    /// 0), release any hold gate, finish every admitted job, then stop and
+    /// join all workers and the tracer. Idempotent: later calls return the
+    /// first drain's summary.
+    pub fn drain(&self) -> DrainSummary {
+        let core = &self.core;
+        let mut done = core.drained.lock().unwrap();
+        if let Some(summary) = *done {
+            return summary;
+        }
+        for shard in &core.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.draining = true;
+            st.held = false;
+            shard.cond.notify_all();
+        }
+        {
+            let mut tally = core.tally.lock().unwrap();
+            while core.completed.load(Ordering::SeqCst) < core.admitted.load(Ordering::SeqCst) {
+                tally = core.done_cond.wait(tally).unwrap();
+            }
+        }
+        for shard in &core.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.stopped = true;
+            shard.cond.notify_all();
+        }
+        core.stop_tracer.store(true, Ordering::SeqCst);
+        let handles: Vec<JoinHandle<()>> = core.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let summary = DrainSummary {
+            admitted: core.admitted.load(Ordering::SeqCst),
+            completed: core.completed.load(Ordering::SeqCst),
+            rejected: core.rejected.load(Ordering::SeqCst),
+            wall_s: core.started_at.elapsed().as_secs_f64(),
+        };
+        *done = Some(summary);
+        summary
+    }
+
+    /// Every completed job so far, ordered by id.
+    pub fn completed_results(&self) -> Vec<JobResult> {
+        let mut out = self.core.tally.lock().unwrap().results.clone();
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Every completed job's latency sample (completion order).
+    pub fn latency_samples(&self) -> Vec<LatencySample> {
+        self.core.tally.lock().unwrap().latencies.clone()
+    }
+
+    pub fn queue_depth(&self, p: Precision) -> usize {
+        self.core.shard(p).state.lock().unwrap().depth
+    }
+
+    pub fn worker_count(&self, p: Precision) -> usize {
+        self.core.shard(p).state.lock().unwrap().workers
+    }
+
+    pub fn peak_workers(&self, p: Precision) -> usize {
+        self.core.shard(p).state.lock().unwrap().peak_workers
+    }
+
+    pub fn admitted_count(&self) -> usize {
+        self.core.admitted.load(Ordering::SeqCst)
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.core.completed.load(Ordering::SeqCst)
+    }
+
+    pub fn rejected_count(&self) -> usize {
+        self.core.rejected.load(Ordering::SeqCst)
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.core.drained.lock().unwrap().is_some()
+            || self.core.shards.iter().any(|s| s.state.lock().unwrap().draining)
+    }
+
+    /// Latency percentiles over every completed job.
+    pub fn latency_summary(&self) -> LatencySummary {
+        let tally = self.core.tally.lock().unwrap();
+        summarize(tally.latencies.iter().map(|s| s.latency_s).collect())
+    }
+
+    /// Live rollup as one JSON line (the `op=stats` reply).
+    pub fn stats_json(&self) -> String {
+        let lat = self.latency_summary();
+        let mut depth = [0usize; 3];
+        let mut workers = [0usize; 3];
+        for (i, shard) in self.core.shards.iter().enumerate() {
+            let st = shard.state.lock().unwrap();
+            depth[i] = st.depth;
+            workers[i] = st.workers;
+        }
+        format!(
+            "{{\"op\": \"stats\", \"ok\": true, \"admitted\": {}, \"completed\": {}, \"rejected\": {}, \"wall_s\": {}, \"queue_depth\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"workers\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"latency_s\": {}, \"formats\": [{}]}}",
+            self.admitted_count(),
+            self.completed_count(),
+            self.rejected_count(),
+            jnum(self.core.started_at.elapsed().as_secs_f64()),
+            depth[0],
+            depth[1],
+            depth[2],
+            workers[0],
+            workers[1],
+            workers[2],
+            latency_json(&lat),
+            self.format_rows().join(", "),
+        )
+    }
+
+    /// The load-harness artifact (`BENCH_serve_daemon.json`): percentiles,
+    /// throughput, per-priority and per-format rollups, the queue-depth
+    /// trace, and the engine's dispatch-queue counters.
+    pub fn bench_json(&self, quick: bool, submitters: usize, rate_jobs_per_s: f64) -> String {
+        let lat = self.latency_summary();
+        let wall_s = match *self.core.drained.lock().unwrap() {
+            Some(s) => s.wall_s,
+            None => self.core.started_at.elapsed().as_secs_f64(),
+        };
+        let completed = self.completed_count();
+        let jobs_per_s = if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 };
+
+        let samples = self.latency_samples();
+        let priority_rows: Vec<String> = Priority::ALL
+            .iter()
+            .filter_map(|&p| {
+                let lats: Vec<f64> = samples
+                    .iter()
+                    .filter(|s| s.priority == p)
+                    .map(|s| s.latency_s)
+                    .collect();
+                if lats.is_empty() {
+                    return None;
+                }
+                let s = summarize(lats);
+                Some(format!(
+                    "  {{\"priority\": \"{}\", \"count\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}}}",
+                    p.name(),
+                    s.count,
+                    jnum(s.p50_s),
+                    jnum(s.p95_s),
+                    jnum(s.p99_s),
+                ))
+            })
+            .collect();
+
+        let trace = self.core.trace.lock().unwrap();
+        let trace_rows: Vec<String> = trace
+            .iter()
+            .map(|t| {
+                format!(
+                    "  {{\"t_s\": {}, \"posit32\": {}, \"f32\": {}, \"f64\": {}, \"workers\": [{}, {}, {}]}}",
+                    jnum(t.t_s),
+                    t.depth[0],
+                    t.depth[1],
+                    t.depth[2],
+                    t.workers[0],
+                    t.workers[1],
+                    t.workers[2],
+                )
+            })
+            .collect();
+        drop(trace);
+
+        let queue_rows: Vec<String> = self
+            .core
+            .engine
+            .queue_reports()
+            .iter()
+            .map(|q: &QueueReport| {
+                format!(
+                    "  {{\"backend\": \"{}\", \"format\": \"{}\", \"tiles\": {}, \"batches\": {}, \"max_batch\": {}, \"mean_batch\": {}}}",
+                    esc(&q.backend),
+                    q.format,
+                    q.tiles,
+                    q.batches,
+                    q.max_batch,
+                    jnum(q.mean_batch()),
+                )
+            })
+            .collect();
+
+        format!(
+            "{{\n\"quick\": {},\n\"submitters\": {},\n\"rate_jobs_per_s\": {},\n\"admitted\": {},\n\"completed\": {},\n\"rejected\": {},\n\"wall_s\": {},\n\"jobs_per_s\": {},\n\"latency_s\": {},\n\"per_priority\": [\n{}\n],\n\"per_format\": [\n{}\n],\n\"queue_depth_trace\": [\n{}\n],\n\"queues\": [\n{}\n]\n}}\n",
+            quick,
+            submitters,
+            jnum(rate_jobs_per_s),
+            self.admitted_count(),
+            completed,
+            self.rejected_count(),
+            jnum(wall_s),
+            jnum(jobs_per_s),
+            latency_json(&lat),
+            priority_rows.join(",\n"),
+            self.format_rows().iter().map(|r| format!("  {r}")).collect::<Vec<_>>().join(",\n"),
+            trace_rows.join(",\n"),
+            queue_rows.join(",\n"),
+        )
+    }
+
+    /// Write [`Daemon::bench_json`] to `path`, creating parent dirs.
+    pub fn write_bench(
+        &self,
+        path: &std::path::Path,
+        quick: bool,
+        submitters: usize,
+        rate_jobs_per_s: f64,
+    ) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.bench_json(quick, submitters, rate_jobs_per_s))
+    }
+
+    /// Per-format rollup rows shared by `stats_json` / `bench_json`:
+    /// job counts, accuracy, the accumulated coordinator phase stats, and
+    /// the shard's worker peak.
+    fn format_rows(&self) -> Vec<String> {
+        let tally = self.core.tally.lock().unwrap();
+        Precision::ALL
+            .iter()
+            .map(|&p| {
+                let rows: Vec<&JobResult> =
+                    tally.results.iter().filter(|r| r.precision == p).collect();
+                let ok = rows.iter().filter(|r| r.error.is_none()).count();
+                let digits: Vec<f64> = rows
+                    .iter()
+                    .filter_map(|r| r.digits)
+                    .filter(|d| d.is_finite())
+                    .collect();
+                let mean_digits = if digits.is_empty() {
+                    f64::NAN
+                } else {
+                    digits.iter().sum::<f64>() / digits.len() as f64
+                };
+                let roll = &tally.rollup[shard_index(p)];
+                let peak = self.core.shard(p).state.lock().unwrap().peak_workers;
+                format!(
+                    "{{\"precision\": \"{}\", \"jobs\": {}, \"ok\": {}, \"mean_digits\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"peak_workers\": {}}}",
+                    p.name(),
+                    rows.len(),
+                    ok,
+                    jnum(mean_digits),
+                    jnum(roll.panel_s),
+                    jnum(roll.update_s),
+                    jnum(roll.simulated_s),
+                    jnum(roll.update_flops),
+                    peak,
+                )
+            })
+            .collect()
+    }
+}
+
+/// The deterministic backpressure hint: base + base·depth/capacity.
+fn retry_hint(base_ms: u64, depth: usize, capacity: usize) -> u64 {
+    base_ms + base_ms * depth as u64 / capacity.max(1) as u64
+}
+
+/// Nearest-rank percentile over a sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn summarize(mut lats: Vec<f64>) -> LatencySummary {
+    lats.sort_by(f64::total_cmp);
+    let count = lats.len();
+    let mean_s = if count > 0 { lats.iter().sum::<f64>() / count as f64 } else { f64::NAN };
+    LatencySummary {
+        count,
+        p50_s: percentile(&lats, 0.50),
+        p95_s: percentile(&lats, 0.95),
+        p99_s: percentile(&lats, 0.99),
+        mean_s,
+        max_s: lats.last().copied().unwrap_or(f64::NAN),
+    }
+}
+
+fn latency_json(s: &LatencySummary) -> String {
+    format!(
+        "{{\"count\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}, \"mean\": {}, \"max\": {}}}",
+        s.count,
+        jnum(s.p50_s),
+        jnum(s.p95_s),
+        jnum(s.p99_s),
+        jnum(s.mean_s),
+        jnum(s.max_s),
+    )
+}
+
+/// Spawn one worker for `precision`'s shard unless it is stopped or at
+/// `max_workers`. Returns whether a worker was spawned.
+fn spawn_worker(core: &Arc<DaemonCore>, precision: Precision) -> bool {
+    {
+        let mut st = core.shard(precision).state.lock().unwrap();
+        if st.stopped || st.workers >= core.config.max_workers {
+            return false;
+        }
+        st.workers += 1;
+        st.peak_workers = st.peak_workers.max(st.workers);
+    }
+    let core2 = Arc::clone(core);
+    let handle = std::thread::spawn(move || worker_loop(&core2, precision));
+    core.handles.lock().unwrap().push(handle);
+    true
+}
+
+/// Scale `precision`'s shard up toward its queue depth (one worker per
+/// queued job, capped at `max_workers`). No-op while held or stopped.
+fn scale_up(core: &Arc<DaemonCore>, precision: Precision) {
+    loop {
+        let (depth, workers) = {
+            let st = core.shard(precision).state.lock().unwrap();
+            if st.held || st.stopped {
+                return;
+            }
+            (st.depth, st.workers)
+        };
+        if workers >= core.config.max_workers || workers >= depth || !spawn_worker(core, precision)
+        {
+            return;
+        }
+    }
+}
+
+fn pop_job(st: &mut ShardState) -> Option<AdmittedJob> {
+    for lane in &mut st.lanes {
+        if let Some(job) = lane.pop_front() {
+            st.depth -= 1;
+            return Some(job);
+        }
+    }
+    None
+}
+
+fn worker_loop(core: &Arc<DaemonCore>, precision: Precision) {
+    let shard = core.shard(precision);
+    let idle = Duration::from_millis(core.config.idle_exit_ms.max(1));
+    'outer: loop {
+        let job = {
+            let mut st = shard.state.lock().unwrap();
+            loop {
+                if st.stopped {
+                    st.workers -= 1;
+                    break 'outer;
+                }
+                if st.draining {
+                    // Drain overrides the hold gate: admitted work must
+                    // finish even if release() was never called.
+                    st.held = false;
+                }
+                if !st.held {
+                    if let Some(job) = pop_job(&mut st) {
+                        break job;
+                    }
+                    if st.draining {
+                        st.workers -= 1;
+                        shard.cond.notify_all();
+                        break 'outer;
+                    }
+                }
+                let (guard, timeout) = shard.cond.wait_timeout(st, idle).unwrap();
+                st = guard;
+                if timeout.timed_out()
+                    && !st.held
+                    && !st.draining
+                    && st.depth == 0
+                    && st.workers > core.config.min_workers
+                {
+                    // Sustained idleness above the floor: scale down.
+                    st.workers -= 1;
+                    break 'outer;
+                }
+            }
+        };
+        run_and_record(core, precision, job);
+    }
+}
+
+fn run_and_record(core: &DaemonCore, precision: Precision, job: AdmittedJob) {
+    let t_run = Instant::now();
+    let result = core.engine.run_one(&job.spec, core.config.keep_factors);
+    let wall_s = t_run.elapsed().as_secs_f64();
+    let latency_s = job.admitted_at.elapsed().as_secs_f64();
+    let mut tally = core.tally.lock().unwrap();
+    tally.rollup[shard_index(precision)].accumulate(&result.stats);
+    tally.latencies.push(LatencySample {
+        id: result.id,
+        precision,
+        priority: job.priority,
+        latency_s,
+        wall_s,
+    });
+    tally.results.push(result);
+    // Count the completion while holding `tally`: drain/wait_idle check
+    // the counters under this lock, so the wakeup can't be lost.
+    core.completed.fetch_add(1, Ordering::SeqCst);
+    drop(tally);
+    core.done_cond.notify_all();
+}
+
+fn spawn_tracer(core: &Arc<DaemonCore>) {
+    /// Trace-length cap: at the default 10ms interval this is ~80s of
+    /// samples, far beyond any bench run; keeps long-lived daemons from
+    /// growing the trace unboundedly.
+    const TRACE_CAP: usize = 8192;
+    let core2 = Arc::clone(core);
+    let handle = std::thread::spawn(move || {
+        let interval = Duration::from_millis(core2.config.trace_interval_ms.max(1));
+        while !core2.stop_tracer.load(Ordering::SeqCst) {
+            std::thread::sleep(interval);
+            let mut depth = [0usize; 3];
+            let mut workers = [0usize; 3];
+            for (i, shard) in core2.shards.iter().enumerate() {
+                let st = shard.state.lock().unwrap();
+                depth[i] = st.depth;
+                workers[i] = st.workers;
+            }
+            {
+                let mut trace = core2.trace.lock().unwrap();
+                if trace.len() < TRACE_CAP {
+                    trace.push(TraceSample {
+                        t_s: core2.started_at.elapsed().as_secs_f64(),
+                        depth,
+                        workers,
+                    });
+                }
+            }
+            // The tracer doubles as the fallback scale-up path (covers
+            // backlogs left by release() racing submissions).
+            for p in Precision::ALL {
+                scale_up(&core2, p);
+            }
+        }
+    });
+    core.handles.lock().unwrap().push(handle);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_hint_is_deterministic_and_grows_with_depth() {
+        assert_eq!(retry_hint(10, 8, 8), 20);
+        assert_eq!(retry_hint(10, 8, 8), 20, "pure function of its inputs");
+        assert_eq!(retry_hint(10, 16, 8), 30);
+        assert!(retry_hint(10, 16, 8) > retry_hint(10, 8, 8));
+        assert_eq!(retry_hint(10, 0, 0), 10, "capacity 0 does not divide by zero");
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = summarize(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.p50_s, 2.0);
+        assert_eq!(s.p95_s, 4.0);
+        assert_eq!(s.p99_s, 4.0);
+        assert_eq!(s.max_s, 4.0);
+        assert_eq!(s.mean_s, 2.5);
+        let empty = summarize(vec![]);
+        assert_eq!(empty.count, 0);
+        assert!(empty.p50_s.is_nan());
+    }
+
+    #[test]
+    fn single_sample_percentiles() {
+        let s = summarize(vec![0.25]);
+        assert_eq!((s.p50_s, s.p95_s, s.p99_s), (0.25, 0.25, 0.25));
+    }
+}

@@ -1,0 +1,172 @@
+//! Synthetic open-loop load generation for the serving daemon.
+//!
+//! Open-loop means arrivals are *scheduled*, not closed over responses:
+//! job `i` is submitted at `t0 + i/rate` regardless of how fast the
+//! daemon is draining, so queueing delay shows up in the latency
+//! percentiles instead of silently throttling the offered load (the
+//! classic coordinated-omission trap in closed-loop harnesses).
+//!
+//! The plan is fully deterministic: the job mix comes from
+//! [`crate::service::mixed_format_manifest`] (the PR 2 schema, cycling
+//! `posit32|f32|f64` and `factor|refine`) and priorities are drawn from
+//! the repo's own [`Pcg64`] stream, so the same `(count, base_n, seed,
+//! rate, submitters)` tuple always offers the identical workload — which
+//! is what lets `rust/tests/serve_daemon.rs` compare a drained daemon
+//! bit-for-bit against the sequential drivers.
+
+use super::daemon::Daemon;
+use super::protocol::Priority;
+use crate::rng::Pcg64;
+use crate::service::{mixed_format_manifest, JobSpec};
+use std::time::{Duration, Instant};
+
+/// A deterministic open-loop arrival schedule.
+#[derive(Clone, Debug)]
+pub struct LoadPlan {
+    /// Jobs with their drawn priorities, in arrival order.
+    pub jobs: Vec<(JobSpec, Priority)>,
+    /// Offset of each arrival from the harness start (`i / rate`).
+    pub send_at: Vec<Duration>,
+    /// Concurrent submitter threads/connections (job `i` belongs to
+    /// submitter `i % submitters`).
+    pub submitters: usize,
+    /// Offered arrival rate.
+    pub rate_jobs_per_s: f64,
+}
+
+/// Build the deterministic plan: `count` mixed-format jobs around
+/// `base_n`, priorities drawn from `Pcg64::seed(seed)` (1/8 high, 5/8
+/// normal, 2/8 low), fixed-rate arrivals split over `submitters`.
+pub fn plan(
+    count: usize,
+    base_n: usize,
+    seed: u64,
+    rate_jobs_per_s: f64,
+    submitters: usize,
+) -> LoadPlan {
+    let mut rng = Pcg64::seed(seed);
+    let jobs: Vec<(JobSpec, Priority)> = mixed_format_manifest(count, base_n)
+        .into_iter()
+        .map(|spec| {
+            let priority = match rng.below(8) {
+                0 => Priority::High,
+                1..=5 => Priority::Normal,
+                _ => Priority::Low,
+            };
+            (spec, priority)
+        })
+        .collect();
+    let rate = if rate_jobs_per_s > 0.0 { rate_jobs_per_s } else { f64::INFINITY };
+    let send_at = (0..count)
+        .map(|i| Duration::from_secs_f64(i as f64 / rate))
+        .collect();
+    LoadPlan {
+        jobs,
+        send_at,
+        submitters: submitters.max(1),
+        rate_jobs_per_s,
+    }
+}
+
+/// What the harness observed while offering a [`LoadPlan`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Jobs eventually admitted.
+    pub accepted: usize,
+    /// Backpressure rejections encountered (each was retried).
+    pub rejections: usize,
+    /// Jobs given up on: rejected with hint 0 (drain) or past
+    /// `max_retries`.
+    pub dropped: usize,
+}
+
+/// Offer `plan` to an in-process `daemon` from `plan.submitters`
+/// concurrent threads, honoring the open-loop schedule and every
+/// rejection's `retry_after_ms` hint. Submitter `s` owns jobs
+/// `i % submitters == s`, preserving per-submitter arrival order.
+pub fn drive(daemon: &Daemon, plan: &LoadPlan, max_retries: usize) -> LoadReport {
+    use std::sync::Mutex;
+    let total = Mutex::new(LoadReport::default());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..plan.submitters {
+            let total = &total;
+            let daemon = daemon.clone();
+            scope.spawn(move || {
+                let mut local = LoadReport::default();
+                for i in (s..plan.jobs.len()).step_by(plan.submitters) {
+                    let due = t0 + plan.send_at[i];
+                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    let (spec, priority) = &plan.jobs[i];
+                    let mut tries = 0usize;
+                    loop {
+                        match daemon.submit(spec.clone(), *priority) {
+                            Ok(_) => {
+                                local.accepted += 1;
+                                break;
+                            }
+                            Err(rej) => {
+                                local.rejections += 1;
+                                tries += 1;
+                                if rej.retry_after_ms == 0 || tries > max_retries {
+                                    local.dropped += 1;
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_millis(rej.retry_after_ms));
+                            }
+                        }
+                    }
+                }
+                let mut t = total.lock().unwrap();
+                t.accepted += local.accepted;
+                t.rejections += local.rejections;
+                t.dropped += local.dropped;
+            });
+        }
+    });
+    *total.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic() {
+        let a = plan(16, 48, 7, 32.0, 4);
+        let b = plan(16, 48, 7, 32.0, 4);
+        assert_eq!(a.jobs.len(), 16);
+        assert_eq!(a.send_at.len(), 16);
+        assert_eq!(a.submitters, 4);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.0.id, y.0.id);
+            assert_eq!(x.0.seed, y.0.seed);
+            assert_eq!(x.1, y.1, "priority stream must be reproducible");
+        }
+        assert_eq!(a.send_at, b.send_at);
+        // Open-loop spacing: i/rate.
+        assert_eq!(a.send_at[0], Duration::ZERO);
+        assert_eq!(a.send_at[8], Duration::from_secs_f64(8.0 / 32.0));
+    }
+
+    #[test]
+    fn plan_mixes_formats_and_priorities() {
+        let p = plan(30, 48, 42, 64.0, 4);
+        let mut formats = std::collections::BTreeSet::new();
+        let mut prios = std::collections::BTreeSet::new();
+        for (spec, prio) in &p.jobs {
+            formats.insert(spec.precision.name());
+            prios.insert(prio.name());
+        }
+        assert_eq!(formats.len(), 3, "posit32, f32 and f64 all present");
+        assert!(prios.len() >= 2, "priority draw uses multiple lanes");
+    }
+
+    #[test]
+    fn zero_rate_means_burst() {
+        let p = plan(4, 32, 1, 0.0, 2);
+        assert!(p.send_at.iter().all(|d| *d == Duration::ZERO));
+    }
+}

@@ -1,0 +1,38 @@
+//! The persistent serving tier: a long-lived daemon that streams job
+//! submissions over a local socket into bounded per-priority admission
+//! queues, dispatches to sharded per-format worker pools over the batched
+//! [`crate::service::Engine`], and drains gracefully on SIGTERM or an
+//! `op=shutdown` request.
+//!
+//! Layers (each its own module):
+//!
+//! * [`protocol`] — newline-delimited flat-JSON requests/replies reusing
+//!   the manifest job schema, plus `priority`.
+//! * [`daemon`] — admission (bounded queues, deterministic
+//!   reject-with-retry-after backpressure), per-format shards with
+//!   queue-depth-driven worker scaling, exactly-once graceful drain, and
+//!   the latency-percentile/queue-trace bench writer.
+//! * [`loadgen`] — the deterministic open-loop load harness (fixed-rate
+//!   arrivals, seeded priorities, ≥4 concurrent submitters).
+//! * [`socket`] (unix) — the Unix-domain-socket transport and SIGTERM
+//!   handling behind the `serve-daemon` CLI subcommand.
+//!
+//! The serving tier adds *no* numeric behavior: every job still runs
+//! through [`crate::service::Engine::run_one`], so a drained daemon run
+//! over a fixed job set is bit-identical to the sequential drivers
+//! (gated in `rust/tests/serve_daemon.rs`).
+
+pub mod daemon;
+pub mod loadgen;
+pub mod protocol;
+#[cfg(unix)]
+pub mod socket;
+
+pub use daemon::{
+    Admission, Daemon, DaemonConfig, DrainSummary, LatencySample, LatencySummary, Rejection,
+    TraceSample,
+};
+pub use loadgen::{drive, plan, LoadPlan, LoadReport};
+pub use protocol::{parse_request, Priority, Request};
+#[cfg(unix)]
+pub use socket::serve_unix;

@@ -1,0 +1,560 @@
+//! The serving daemon's wire protocol: newline-delimited JSON.
+//!
+//! One request per line, one JSON-object reply per request, over a local
+//! Unix-domain socket. Submissions reuse the manifest job schema
+//! (`alg`/`n`/`nb`/`seed`/`sigma`/`class`/`precision`/`mode`/`backend`,
+//! exactly the `key=value` vocabulary of [`crate::service::parse_manifest`])
+//! as flat JSON fields, plus `priority` for the admission lane:
+//!
+//! ```text
+//! {"op": "submit", "id": 7, "alg": "lu", "n": 256, "precision": "f32", "priority": "high"}
+//! {"op": "collect", "wait": true}
+//! {"op": "stats"}
+//! {"op": "ping"}
+//! {"op": "shutdown", "submitters": 4, "rate_jobs_per_s": 16}
+//! ```
+//!
+//! Replies carry an `"op"` discriminator (`accepted`, `rejected`,
+//! `results`, `stats`, `pong`, `drained`, `error`) and `"ok"`. A rejected
+//! submission includes a deterministic `retry_after_ms` hint — the
+//! backpressure contract (see [`super::daemon`]).
+//!
+//! The parser is a deliberately small hand-rolled reader for *flat* JSON
+//! objects (string/number/bool/null values, no nesting) — exactly the
+//! request grammar above — because no JSON crate is reachable offline,
+//! mirroring the hand-rolled emission in `service::engine`. Job `seed`s
+//! travel as JSON numbers, so values above 2^53 would lose precision;
+//! manifest-derived seeds are far below that.
+
+use super::daemon::DrainSummary;
+use crate::service::{Alg, JobSpec, MatrixClass, Mode, Precision};
+use anyhow::{anyhow, bail, Result};
+
+/// Admission lane of a submitted job: workers always serve `high` before
+/// `normal` before `low` within a format shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Lane index (0 = served first).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => bail!("unknown priority '{other}' (want high|normal|low)"),
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Admit one job into its format shard's priority lane.
+    Submit { spec: JobSpec, priority: Priority },
+    /// Return every completed job so far; `wait` first blocks until all
+    /// admitted jobs have completed (the harness's settle barrier).
+    Collect { wait: bool },
+    /// Live rollup: counters, queue depths, worker counts, latency.
+    Stats,
+    Ping,
+    /// Graceful drain: stop admitting, finish every admitted job, flush
+    /// stats, reply with the drain summary. The load client reports its
+    /// own shape (`submitters`, `rate_jobs_per_s`, 0 = unknown) so the
+    /// daemon can record it in `BENCH_serve_daemon.json`.
+    Shutdown { submitters: usize, rate_jobs_per_s: f64 },
+}
+
+/// A value in a flat request object.
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        match self.bump() {
+            Some(b) if b == want => Ok(()),
+            other => bail!(
+                "expected '{}' at byte {}, got {:?}",
+                want as char,
+                self.pos.saturating_sub(1),
+                other.map(|b| b as char)
+            ),
+        }
+    }
+
+    /// Parse a `"..."` string (opening quote not yet consumed).
+    fn parse_string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            match self.bump() {
+                None => bail!("unterminated string"),
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    let esc = self.bump().ok_or_else(|| anyhow!("unterminated escape"))?;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'u' => {
+                            let mut code: u32 = 0;
+                            for _ in 0..4 {
+                                let h = self.bump().ok_or_else(|| anyhow!("short \\u escape"))?;
+                                let d = (h as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad hex digit in \\u escape"))?;
+                                code = code * 16 + d;
+                            }
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| anyhow!("\\u{code:04x} is not a scalar value"))?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                // Multi-byte UTF-8 sequences are copied through intact
+                // byte-by-byte (escapes are ASCII, so boundaries hold).
+                Some(b) => out.push(b),
+            }
+        }
+        String::from_utf8(out).map_err(|_| anyhow!("invalid UTF-8 in string"))
+    }
+
+    fn parse_value(&mut self) -> Result<JsonValue> {
+        match self.peek() {
+            Some(b'"') => Ok(JsonValue::Str(self.parse_string()?)),
+            Some(b'{') | Some(b'[') => bail!("nested values are not part of the request grammar"),
+            Some(b't') => self.expect_word("true").map(|()| JsonValue::Bool(true)),
+            Some(b'f') => self.expect_word("false").map(|()| JsonValue::Bool(false)),
+            Some(b'n') => self.expect_word("null").map(|()| JsonValue::Null),
+            Some(_) => {
+                let start = self.pos;
+                let numeric =
+                    |b: u8| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E');
+                while self.peek().is_some_and(numeric) {
+                    self.pos += 1;
+                }
+                let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+                text.parse::<f64>()
+                    .map(JsonValue::Num)
+                    .map_err(|_| anyhow!("bad number '{text}' at byte {start}"))
+            }
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn expect_word(&mut self, word: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            bail!("expected '{word}' at byte {}", self.pos)
+        }
+    }
+}
+
+/// Parse one flat JSON object line into its `(key, value)` fields.
+pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonValue)>> {
+    let mut c = Cursor { bytes: line.as_bytes(), pos: 0 };
+    c.skip_ws();
+    c.expect(b'{')?;
+    let mut fields = Vec::new();
+    c.skip_ws();
+    if c.peek() == Some(b'}') {
+        c.bump();
+    } else {
+        loop {
+            c.skip_ws();
+            let key = c.parse_string()?;
+            c.skip_ws();
+            c.expect(b':')?;
+            c.skip_ws();
+            let value = c.parse_value()?;
+            fields.push((key, value));
+            c.skip_ws();
+            match c.bump() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => bail!("expected ',' or '}}', got {:?}", other.map(|b| b as char)),
+            }
+        }
+    }
+    c.skip_ws();
+    if c.pos != c.bytes.len() {
+        bail!("trailing bytes after object");
+    }
+    Ok(fields)
+}
+
+/// String field accessor.
+pub fn get_str<'a>(fields: &'a [(String, JsonValue)], key: &str) -> Option<&'a str> {
+    fields.iter().find_map(|(k, v)| match v {
+        JsonValue::Str(s) if k == key => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+/// Number field accessor.
+pub fn get_num(fields: &[(String, JsonValue)], key: &str) -> Option<f64> {
+    fields.iter().find_map(|(k, v)| match v {
+        JsonValue::Num(n) if k == key => Some(*n),
+        _ => None,
+    })
+}
+
+/// Bool field accessor.
+pub fn get_bool(fields: &[(String, JsonValue)], key: &str) -> Option<bool> {
+    fields.iter().find_map(|(k, v)| match v {
+        JsonValue::Bool(b) if k == key => Some(*b),
+        _ => None,
+    })
+}
+
+fn get_usize(fields: &[(String, JsonValue)], key: &str) -> Result<Option<usize>> {
+    match get_num(fields, key) {
+        None => Ok(None),
+        Some(v) if v >= 0.0 && v.fract() == 0.0 && v <= 2f64.powi(53) => Ok(Some(v as usize)),
+        Some(v) => bail!("field '{key}' must be a non-negative integer, got {v}"),
+    }
+}
+
+/// Parse one request line. `fallback_id` is assigned to an id-less submit
+/// (explicit ids are the deterministic path: the default seed derives
+/// from the id, exactly like the manifest grammar).
+pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
+    let fields = parse_flat_object(line)?;
+    match get_str(&fields, "op").unwrap_or("submit") {
+        "submit" => {
+            let alg = Alg::parse(
+                get_str(&fields, "alg").ok_or_else(|| anyhow!("submit needs an 'alg' field"))?,
+            )?;
+            let n = get_usize(&fields, "n")?.ok_or_else(|| anyhow!("submit needs an 'n' field"))?;
+            if n == 0 {
+                bail!("n must be positive");
+            }
+            let id = get_usize(&fields, "id")?.unwrap_or(fallback_id);
+            let mut spec = JobSpec::new(id, alg, n);
+            if let Some(nb) = get_usize(&fields, "nb")? {
+                if nb == 0 {
+                    bail!("nb must be positive");
+                }
+                spec.nb = nb;
+            }
+            if let Some(seed) = get_usize(&fields, "seed")? {
+                spec.seed = seed as u64;
+            }
+            if let Some(sigma) = get_num(&fields, "sigma") {
+                spec.sigma = sigma;
+            }
+            if let Some(class) = get_str(&fields, "class") {
+                spec.class = MatrixClass::parse(class)?;
+            }
+            if let Some(precision) = get_str(&fields, "precision") {
+                spec.precision = Precision::parse(precision)?;
+            }
+            if let Some(mode) = get_str(&fields, "mode") {
+                spec.mode = Mode::parse(mode)?;
+            }
+            if let Some(backend) = get_str(&fields, "backend") {
+                spec.backend = backend.to_string();
+            }
+            let priority = match get_str(&fields, "priority") {
+                Some(p) => Priority::parse(p)?,
+                None => Priority::Normal,
+            };
+            Ok(Request::Submit { spec, priority })
+        }
+        "collect" => Ok(Request::Collect {
+            wait: get_bool(&fields, "wait").unwrap_or(true),
+        }),
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown {
+            submitters: get_usize(&fields, "submitters")?.unwrap_or(0),
+            rate_jobs_per_s: get_num(&fields, "rate_jobs_per_s").unwrap_or(0.0),
+        }),
+        other => bail!("unknown op '{other}'"),
+    }
+}
+
+/// Serialize one job submission (the client side of `op=submit`).
+pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
+    format!(
+        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"backend\": \"{}\", \"priority\": \"{}\"}}",
+        spec.id,
+        spec.alg.name(),
+        spec.n,
+        spec.nb,
+        spec.seed,
+        jnum(spec.sigma),
+        spec.class.name(),
+        spec.precision.name(),
+        spec.mode.name(),
+        esc(&spec.backend),
+        priority.name(),
+    )
+}
+
+/// Reply to an admitted submission.
+pub fn accepted_line(id: usize, shard: &str, queue_depth: usize) -> String {
+    format!(
+        "{{\"op\": \"accepted\", \"ok\": true, \"id\": {id}, \"shard\": \"{shard}\", \"queue_depth\": {queue_depth}}}"
+    )
+}
+
+/// Reply to a rejected submission: the backpressure signal. The retry
+/// hint is a pure function of queue state (deterministic; see
+/// [`super::daemon::DaemonConfig::retry_after_ms`]); 0 means "don't retry"
+/// (the daemon is draining).
+pub fn rejected_line(id: usize, reason: &str, retry_after_ms: u64) -> String {
+    format!(
+        "{{\"op\": \"rejected\", \"ok\": false, \"id\": {id}, \"reason\": \"{}\", \"retry_after_ms\": {retry_after_ms}}}",
+        esc(reason),
+    )
+}
+
+/// Reply to `op=collect`: every completed job as its service JSON row.
+pub fn results_line(results: &[crate::service::JobResult]) -> String {
+    let rows: Vec<String> = results.iter().map(|r| r.to_json()).collect();
+    format!(
+        "{{\"op\": \"results\", \"ok\": true, \"count\": {}, \"jobs\": [{}]}}",
+        results.len(),
+        rows.join(", "),
+    )
+}
+
+/// Reply to `op=shutdown` once the drain has completed.
+pub fn drained_line(summary: &DrainSummary) -> String {
+    format!(
+        "{{\"op\": \"drained\", \"ok\": true, \"admitted\": {}, \"completed\": {}, \"rejected\": {}, \"wall_s\": {}}}",
+        summary.admitted,
+        summary.completed,
+        summary.rejected,
+        jnum(summary.wall_s),
+    )
+}
+
+pub fn pong_line() -> String {
+    "{\"op\": \"pong\", \"ok\": true}".to_string()
+}
+
+/// Reply to an unparseable or unservable request.
+pub fn error_line(msg: &str) -> String {
+    format!("{{\"op\": \"error\", \"ok\": false, \"error\": \"{}\"}}", esc(msg))
+}
+
+/// JSON number: finite f64s via Rust's shortest decimal `Display`,
+/// non-finite as null (the repo-wide convention; `service::engine` and the
+/// bench writers do the same).
+pub(crate) fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+pub(crate) fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_submit_line() {
+        let line = "{\"op\": \"submit\", \"id\": 9, \"alg\": \"cholesky\", \"n\": 128, \"nb\": 32, \"seed\": 77, \"sigma\": 0.5, \"class\": \"spd\", \"precision\": \"f32\", \"mode\": \"refine\", \"backend\": \"fpga\", \"priority\": \"high\"}";
+        match parse_request(line, 0).unwrap() {
+            Request::Submit { spec, priority } => {
+                assert_eq!(spec.id, 9);
+                assert_eq!(spec.alg, Alg::Cholesky);
+                assert_eq!((spec.n, spec.nb, spec.seed), (128, 32, 77));
+                assert_eq!(spec.sigma, 0.5);
+                assert_eq!(spec.class, MatrixClass::Spd);
+                assert_eq!(spec.precision, Precision::F32);
+                assert_eq!(spec.mode, Mode::Refine);
+                assert_eq!(spec.backend, "fpga");
+                assert_eq!(priority, Priority::High);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_defaults_match_manifest_defaults() {
+        let line = "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 64}";
+        match parse_request(line, 41).unwrap() {
+            Request::Submit { spec, priority } => {
+                let want = JobSpec::new(41, Alg::Lu, 64);
+                assert_eq!(spec.id, 41, "fallback id");
+                assert_eq!(spec.seed, want.seed, "seed derives from the id");
+                assert_eq!(spec.nb, want.nb);
+                assert_eq!(spec.precision, Precision::Posit32);
+                assert_eq!(spec.mode, Mode::Factorize);
+                assert_eq!(priority, Priority::Normal);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_line_roundtrips() {
+        let mut spec = JobSpec::new(3, Alg::Lu, 96);
+        spec.precision = Precision::F64;
+        spec.mode = Mode::Refine;
+        spec.sigma = 0.01;
+        let line = submit_line(&spec, Priority::Low);
+        match parse_request(&line, 0).unwrap() {
+            Request::Submit { spec: back, priority } => {
+                assert_eq!(back.id, spec.id);
+                assert_eq!(back.seed, spec.seed);
+                assert_eq!(back.n, spec.n);
+                assert_eq!(back.sigma, spec.sigma);
+                assert_eq!(back.precision, spec.precision);
+                assert_eq!(back.mode, spec.mode);
+                assert_eq!(priority, Priority::Low);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_control_ops() {
+        assert!(matches!(parse_request("{\"op\": \"ping\"}", 0).unwrap(), Request::Ping));
+        assert!(matches!(parse_request("{\"op\": \"stats\"}", 0).unwrap(), Request::Stats));
+        assert!(matches!(
+            parse_request("{\"op\": \"collect\", \"wait\": false}", 0).unwrap(),
+            Request::Collect { wait: false }
+        ));
+        match parse_request(
+            "{\"op\": \"shutdown\", \"submitters\": 4, \"rate_jobs_per_s\": 16.5}",
+            0,
+        )
+        .unwrap()
+        {
+            Request::Shutdown { submitters, rate_jobs_per_s } => {
+                assert_eq!(submitters, 4);
+                assert_eq!(rate_jobs_per_s, 16.5);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("", 0).is_err());
+        assert!(parse_request("{", 0).is_err());
+        assert!(parse_request("{\"op\": \"warp\"}", 0).is_err());
+        assert!(parse_request("{\"op\": \"submit\", \"n\": 8}", 0).is_err(), "missing alg");
+        assert!(parse_request("{\"op\": \"submit\", \"alg\": \"lu\"}", 0).is_err(), "missing n");
+        assert!(parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 0}", 0).is_err());
+        assert!(
+            parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"nested\": {}}", 0)
+                .is_err(),
+            "nesting is outside the grammar"
+        );
+        assert!(
+            parse_request(
+                "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"priority\": \"turbo\"}",
+                0
+            )
+            .is_err()
+        );
+        assert!(parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 2.5}", 0).is_err());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let fields =
+            parse_flat_object("{\"s\": \"a\\\"b\\\\c\\n\\u0041\", \"t\": true, \"z\": null}")
+                .unwrap();
+        assert_eq!(get_str(&fields, "s"), Some("a\"b\\c\nA"));
+        assert_eq!(get_bool(&fields, "t"), Some(true));
+        assert!(matches!(fields[2].1, JsonValue::Null));
+    }
+
+    #[test]
+    fn reply_lines_are_flat_parseable_objects() {
+        for line in [
+            accepted_line(3, "posit32", 5),
+            rejected_line(4, "queue full", 20),
+            pong_line(),
+            error_line("bad \"thing\""),
+        ] {
+            let fields = parse_flat_object(&line).unwrap();
+            assert!(get_str(&fields, "op").is_some(), "{line}");
+        }
+        let rej = parse_flat_object(&rejected_line(4, "queue full", 20)).unwrap();
+        assert_eq!(get_num(&rej, "retry_after_ms"), Some(20.0));
+        assert_eq!(get_bool(&rej, "ok"), Some(false));
+    }
+}

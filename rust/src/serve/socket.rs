@@ -1,0 +1,217 @@
+//! Unix-domain-socket transport for the serving daemon.
+//!
+//! [`serve_unix`] binds a socket path, accepts connections in a
+//! non-blocking loop, and hands each connection to a handler thread that
+//! speaks the newline-delimited protocol of [`super::protocol`]. A
+//! connection is *persistent*: a submitter holds one open and streams
+//! many `submit` lines, reading one reply per line (accepted or rejected
+//! — backpressure travels in-band).
+//!
+//! Shutdown paths, all converging on the same graceful drain
+//! ([`super::daemon::Daemon::drain`], idempotent):
+//!
+//! * an `op=shutdown` request (the client's `--shutdown` flag),
+//! * SIGTERM (installed via a raw `signal(2)` FFI shim — the repo has no
+//!   libc crate; the handler only stores into a static `AtomicBool`,
+//!   which is async-signal-safe).
+//!
+//! After the drain the daemon writes `BENCH_serve_daemon.json` (if a
+//! bench path was given) and removes the socket file.
+
+use super::daemon::{Daemon, DrainSummary};
+use super::protocol::{
+    self, accepted_line, drained_line, error_line, pong_line, rejected_line, results_line,
+    Request,
+};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_signum: i32) {
+    // Only async-signal-safe work here: one atomic store.
+    SIGTERM_SEEN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM (15) to a flag the accept loop polls. Uses the libc
+/// `signal(2)` symbol directly; the handler address travels as the
+/// integer `sighandler_t`, exactly as the C API defines it.
+fn install_sigterm_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    #[allow(clippy::fn_to_numeric_cast)]
+    unsafe {
+        signal(SIGTERM, on_sigterm as usize);
+    }
+}
+
+/// True once SIGTERM has been delivered (test hook: the accept loop's
+/// exit condition).
+pub fn sigterm_seen() -> bool {
+    SIGTERM_SEEN.load(Ordering::SeqCst)
+}
+
+/// Bench metadata reported by the shutting-down client, recorded into
+/// `BENCH_serve_daemon.json`.
+#[derive(Clone, Copy, Default)]
+struct BenchMeta {
+    submitters: usize,
+    rate_jobs_per_s: f64,
+}
+
+struct Server {
+    daemon: Daemon,
+    /// Fallback ids for id-less submissions, far above any manifest id.
+    next_id: AtomicUsize,
+    stop: AtomicBool,
+    meta: Mutex<BenchMeta>,
+}
+
+/// Run the daemon on `socket_path` until SIGTERM or an `op=shutdown`
+/// request, then drain gracefully, write the bench artifact (when
+/// `bench_out` is given), remove the socket file, and return the drain
+/// summary.
+pub fn serve_unix(
+    daemon: Daemon,
+    socket_path: &Path,
+    bench_out: Option<&Path>,
+) -> Result<DrainSummary> {
+    install_sigterm_handler();
+    // A stale socket file from a crashed predecessor blocks bind().
+    if socket_path.exists() {
+        std::fs::remove_file(socket_path)
+            .with_context(|| format!("removing stale socket {}", socket_path.display()))?;
+    }
+    let listener = UnixListener::bind(socket_path)
+        .with_context(|| format!("binding {}", socket_path.display()))?;
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+
+    let server = Arc::new(Server {
+        daemon,
+        next_id: AtomicUsize::new(1_000_000),
+        stop: AtomicBool::new(false),
+        meta: Mutex::new(BenchMeta::default()),
+    });
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    while !server.stop.load(Ordering::SeqCst) && !sigterm_seen() {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let server = Arc::clone(&server);
+                handlers.push(std::thread::spawn(move || handle_connection(&server, stream)));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting a connection"),
+        }
+    }
+
+    // Drain is idempotent: if an op=shutdown handler already drained, this
+    // returns its summary; under SIGTERM it performs the drain now.
+    let summary = server.daemon.drain();
+    server.stop.store(true, Ordering::SeqCst);
+    for h in handlers {
+        let _ = h.join();
+    }
+    if let Some(path) = bench_out {
+        let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1");
+        let meta = *server.meta.lock().unwrap();
+        server
+            .daemon
+            .write_bench(path, quick, meta.submitters, meta.rate_jobs_per_s)
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    let _ = std::fs::remove_file(socket_path);
+    Ok(summary)
+}
+
+/// Serve one persistent connection: one reply line per request line.
+/// Read timeouts keep the handler responsive to shutdown without
+/// dropping half-received lines (the buffer persists across timeouts).
+fn handle_connection(server: &Server, stream: UnixStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if server.stop.load(Ordering::SeqCst) && line.is_empty() {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF: client hung up.
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    // Timeout mid-line: keep the partial buffer and retry.
+                    continue;
+                }
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let reply = handle_request(server, trimmed);
+                    if writer.write_all(reply.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                    {
+                        return;
+                    }
+                    let _ = writer.flush();
+                }
+                line.clear();
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one request line to the daemon and build its reply line. An
+/// `op=shutdown` request drains, then raises the server's stop flag — the
+/// accept loop and every idle handler notice and wind down after the
+/// drained reply goes out.
+fn handle_request(server: &Server, line: &str) -> String {
+    let fallback_id = server.next_id.fetch_add(1, Ordering::SeqCst);
+    let request = match protocol::parse_request(line, fallback_id) {
+        Ok(r) => r,
+        Err(e) => return error_line(&format!("{e:#}")),
+    };
+    match request {
+        Request::Submit { spec, priority } => match server.daemon.submit(spec, priority) {
+            Ok(adm) => accepted_line(adm.id, adm.shard, adm.queue_depth),
+            Err(rej) => rejected_line(rej.id, &rej.reason, rej.retry_after_ms),
+        },
+        Request::Collect { wait } => {
+            if wait {
+                server.daemon.wait_idle();
+            }
+            results_line(&server.daemon.completed_results())
+        }
+        Request::Stats => server.daemon.stats_json(),
+        Request::Ping => pong_line(),
+        Request::Shutdown { submitters, rate_jobs_per_s } => {
+            {
+                let mut meta = server.meta.lock().unwrap();
+                if submitters > 0 {
+                    meta.submitters = submitters;
+                }
+                if rate_jobs_per_s > 0.0 {
+                    meta.rate_jobs_per_s = rate_jobs_per_s;
+                }
+            }
+            let summary = server.daemon.drain();
+            server.stop.store(true, Ordering::SeqCst);
+            drained_line(&summary)
+        }
+    }
+}

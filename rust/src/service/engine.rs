@@ -260,12 +260,29 @@ impl Engine {
         out
     }
 
-    fn run_one(&self, spec: &JobSpec, keep_factors: bool) -> JobResult {
+    /// Run one job synchronously on the calling thread, routed to its
+    /// format pool's dispatch queues. This is the unit of work for both
+    /// the manifest runner ([`Engine::run`]) and the serving daemon's
+    /// shard workers ([`crate::serve::Daemon`]): any caller-side
+    /// scheduling around it decides only *when* a job runs, never its
+    /// operands, so results stay bit-identical to the sequential drivers.
+    pub fn run_one(&self, spec: &JobSpec, keep_factors: bool) -> JobResult {
         match spec.precision {
             Precision::Posit32 => self.posit32.run_job(spec, keep_factors),
             Precision::F32 => self.f32pool.run_job(spec, keep_factors),
             Precision::F64 => self.f64pool.run_job(spec, keep_factors),
         }
+    }
+
+    /// Snapshot every dispatch queue's lifetime counters, all format
+    /// pools, primaries first (the same rows [`Engine::run`] embeds in
+    /// its [`ServiceReport`], for callers that manage jobs themselves).
+    pub fn queue_reports(&self) -> Vec<QueueReport> {
+        self.posit32
+            .reports()
+            .chain(self.f32pool.reports())
+            .chain(self.f64pool.reports())
+            .collect()
     }
 
     /// Run every job of `jobs` on `workers` worker threads and report.
@@ -294,12 +311,7 @@ impl Engine {
             results,
             workers,
             wall_s,
-            queues: self
-                .posit32
-                .reports()
-                .chain(self.f32pool.reports())
-                .chain(self.f64pool.reports())
-                .collect(),
+            queues: self.queue_reports(),
         }
     }
 }

@@ -1,0 +1,360 @@
+//! Serving-daemon contracts: deterministic backpressure, exactly-once
+//! graceful drain, queue-depth worker scaling, bit-identical results vs
+//! the sequential drivers, and the socket transport end to end.
+
+use posit_accel::coordinator::NativeBackend;
+use posit_accel::serve::{plan, Daemon, DaemonConfig, Priority};
+use posit_accel::service::{
+    mixed_format_manifest, run_job_sequential_any, EngineBuilder, JobResult, JobSpec, Precision,
+};
+use std::sync::Arc;
+
+fn native_engine(max_batch: usize) -> posit_accel::service::Engine {
+    EngineBuilder::new(max_batch)
+        .shared("native", Arc::new(NativeBackend::new(1)))
+        .build()
+}
+
+/// Small config tuned so tests exercise scaling and drain quickly.
+fn test_config() -> DaemonConfig {
+    DaemonConfig {
+        queue_capacity: 64,
+        min_workers: 1,
+        max_workers: 4,
+        retry_after_ms: 7,
+        idle_exit_ms: 20,
+        trace_interval_ms: 5,
+        keep_factors: false,
+        hold_workers: false,
+    }
+}
+
+/// A full admission queue must reject deterministically — same depth,
+/// same hint, every time — and the held jobs must all complete exactly
+/// once after release + drain.
+#[test]
+fn backpressure_rejects_deterministically_when_queue_full() {
+    let config = DaemonConfig {
+        queue_capacity: 2,
+        hold_workers: true, // admit but don't run: the queue stays full
+        keep_factors: false,
+        ..test_config()
+    };
+    let daemon = Daemon::start(native_engine(8), config);
+    let jobs = mixed_format_manifest(8, 32);
+    // All 8 jobs are posit32/f32/f64-mixed; pick two of one format so they
+    // land in the same shard and fill its queue.
+    let posit_jobs: Vec<JobSpec> = jobs
+        .iter()
+        .filter(|j| j.precision == Precision::Posit32)
+        .cloned()
+        .collect();
+    assert!(posit_jobs.len() >= 3, "need three same-shard jobs");
+
+    assert!(daemon.submit(posit_jobs[0].clone(), Priority::Normal).is_ok());
+    assert!(daemon.submit(posit_jobs[1].clone(), Priority::High).is_ok());
+    assert_eq!(daemon.queue_depth(Precision::Posit32), 2);
+
+    // Third submission hits the bound. The hint is a pure function of
+    // (base=7, depth=2, capacity=2): 7 + 7*2/2 = 14 — and repeatable.
+    for _ in 0..3 {
+        let rej = daemon
+            .submit(posit_jobs[2].clone(), Priority::Normal)
+            .expect_err("queue is full, submission must reject");
+        assert_eq!(rej.reason, "queue full");
+        assert_eq!(rej.retry_after_ms, 14, "deterministic retry hint");
+    }
+    assert_eq!(daemon.rejected_count(), 3);
+    assert_eq!(daemon.admitted_count(), 2, "rejected jobs are not admitted");
+
+    // Release the hold; drain must finish exactly the two admitted jobs.
+    daemon.release();
+    let summary = daemon.drain();
+    assert_eq!(summary.admitted, 2);
+    assert_eq!(summary.completed, 2, "every admitted job completes");
+    assert_eq!(summary.rejected, 3);
+    let results = daemon.completed_results();
+    assert_eq!(results.len(), 2, "no loss, no duplicates");
+    let mut ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![posit_jobs[0].id, posit_jobs[1].id]);
+    assert_eq!(daemon.latency_samples().len(), 2, "one stats row per job");
+
+    // Post-drain submissions reject with the "don't retry" hint.
+    let rej = daemon
+        .submit(posit_jobs[2].clone(), Priority::Normal)
+        .expect_err("drained daemon admits nothing");
+    assert_eq!(rej.reason, "draining");
+    assert_eq!(rej.retry_after_ms, 0);
+}
+
+/// Drain racing a live submitter: every job admitted before the drain cut
+/// completes exactly once (no loss, no duplicate stats rows), every job
+/// rejected by the cut is dropped, and the two sets partition the stream.
+#[test]
+fn drain_mid_stream_completes_admitted_jobs_exactly_once() {
+    let daemon = Daemon::start(native_engine(8), test_config());
+    let jobs = mixed_format_manifest(24, 32);
+    let submitter = {
+        let daemon = daemon.clone();
+        let jobs = jobs.clone();
+        std::thread::spawn(move || {
+            let mut admitted: Vec<usize> = Vec::new();
+            let mut rejected: Vec<usize> = Vec::new();
+            for spec in jobs {
+                let id = spec.id;
+                match daemon.submit(spec, Priority::Normal) {
+                    Ok(_) => admitted.push(id),
+                    Err(rej) => {
+                        assert_eq!(rej.reason, "draining");
+                        rejected.push(id);
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            (admitted, rejected)
+        })
+    };
+    // Let some jobs through, then cut the stream mid-flight.
+    std::thread::sleep(std::time::Duration::from_millis(8));
+    let summary = daemon.drain();
+    let (admitted, rejected) = submitter.join().unwrap();
+    assert_eq!(admitted.len() + rejected.len(), jobs.len());
+    assert!(!admitted.is_empty(), "some jobs were admitted before the cut");
+    assert_eq!(summary.admitted, admitted.len());
+    assert_eq!(summary.completed, admitted.len(), "drain finishes every admitted job");
+
+    let results = daemon.completed_results();
+    let mut result_ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+    result_ids.sort_unstable();
+    let mut expect = admitted.clone();
+    expect.sort_unstable();
+    assert_eq!(result_ids, expect, "exactly the admitted set, once each");
+    // Stats rows mirror results 1:1 (no duplicate accounting).
+    let mut sample_ids: Vec<usize> =
+        daemon.latency_samples().iter().map(|s| s.id).collect();
+    sample_ids.sort_unstable();
+    assert_eq!(sample_ids, expect);
+}
+
+/// The headline contract carried to the serving tier: a drained daemon
+/// run over a fixed mixed-format job set — 4 concurrent submitters,
+/// priorities drawn from the seeded plan — is bit-identical to the
+/// sequential drivers on the same specs.
+#[test]
+fn drained_daemon_bit_identical_to_sequential_drivers() {
+    let load = plan(10, 40, 11, 0.0, 4); // burst arrivals, 4 submitters
+    let baseline: Vec<JobResult> = load
+        .jobs
+        .iter()
+        .map(|(spec, _)| run_job_sequential_any(spec, &NativeBackend::new(1), true))
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "baseline job {}: {:?}", r.id, r.error);
+    }
+
+    let config = DaemonConfig { keep_factors: true, ..test_config() };
+    let daemon = Daemon::start(native_engine(8), config);
+    std::thread::scope(|scope| {
+        for s in 0..load.submitters {
+            let daemon = daemon.clone();
+            let load = &load;
+            scope.spawn(move || {
+                for i in (s..load.jobs.len()).step_by(load.submitters) {
+                    let (spec, priority) = &load.jobs[i];
+                    daemon.submit(spec.clone(), *priority).expect("capacity covers the burst");
+                }
+            });
+        }
+    });
+    let summary = daemon.drain();
+    assert_eq!(summary.admitted, load.jobs.len());
+    assert_eq!(summary.completed, load.jobs.len());
+
+    let results = daemon.completed_results(); // sorted by id
+    assert_eq!(results.len(), baseline.len());
+    for (seq, got) in baseline.iter().zip(&results) {
+        assert_eq!(seq.id, got.id);
+        assert!(got.error.is_none(), "daemon job {}", got.id);
+        assert_eq!(
+            seq.factors, got.factors,
+            "daemon factors differ from sequential drivers: job {} ({})",
+            seq.id,
+            seq.precision.name()
+        );
+        assert_eq!(seq.ipiv, got.ipiv, "pivots differ: job {}", seq.id);
+        assert_eq!(seq.fingerprint, got.fingerprint, "job {}", seq.id);
+        assert_eq!(
+            seq.backward_error.map(f64::to_bits),
+            got.backward_error.map(f64::to_bits),
+            "accuracy bits differ: job {}",
+            seq.id
+        );
+        assert_eq!(seq.refine_iters, got.refine_iters, "job {}", seq.id);
+    }
+
+    // The bench artifact built from this run is well-formed and carries
+    // the acceptance metrics.
+    let json = daemon.bench_json(true, load.submitters, load.rate_jobs_per_s);
+    for key in [
+        "\"p50\"",
+        "\"p95\"",
+        "\"p99\"",
+        "\"jobs_per_s\"",
+        "\"queue_depth_trace\"",
+        "\"per_format\"",
+        "\"per_priority\"",
+    ] {
+        assert!(json.contains(key), "bench json missing {key}:\n{json}");
+    }
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "balanced braces"
+    );
+    // Per-job coordinator stats rolled up into the per-format rows: the
+    // native-backend update phase ran for every shard, so at least one
+    // rollup has positive update time and flops.
+    assert!(json.contains("\"update_flops\""));
+}
+
+/// Worker pools scale against queue depth: a held shard keeps zero
+/// workers (min 0), releasing a backlog spawns up to the cap, and the
+/// drain leaves an accurate peak count.
+#[test]
+fn worker_pools_scale_with_queue_depth() {
+    let config = DaemonConfig {
+        min_workers: 0,
+        max_workers: 2,
+        hold_workers: true,
+        ..test_config()
+    };
+    let daemon = Daemon::start(native_engine(8), config);
+    let jobs: Vec<JobSpec> = mixed_format_manifest(15, 32)
+        .into_iter()
+        .filter(|j| j.precision == Precision::Posit32)
+        .collect();
+    assert!(jobs.len() >= 5);
+    for spec in &jobs {
+        daemon.submit(spec.clone(), Priority::Normal).unwrap();
+    }
+    assert_eq!(daemon.worker_count(Precision::Posit32), 0, "held shard stays at min");
+    assert_eq!(daemon.queue_depth(Precision::Posit32), jobs.len());
+
+    daemon.release();
+    let summary = daemon.drain();
+    assert_eq!(summary.completed, jobs.len());
+    let peak = daemon.peak_workers(Precision::Posit32);
+    assert!(
+        (1..=2).contains(&peak),
+        "scale-up bounded by max_workers: peak {peak}"
+    );
+    assert_eq!(daemon.peak_workers(Precision::F64), 0, "idle shard never scaled");
+    assert_eq!(daemon.worker_count(Precision::Posit32), 0, "drain joins all workers");
+}
+
+/// End-to-end over the Unix socket: 4 concurrent submitter connections
+/// stream the open-loop plan with retry-on-backpressure, a control
+/// connection collects and shuts down, and the daemon writes a
+/// well-formed bench artifact.
+#[cfg(unix)]
+#[test]
+fn socket_daemon_end_to_end() {
+    use posit_accel::serve::protocol::{
+        get_bool, get_num, get_str, parse_flat_object, submit_line,
+    };
+    use posit_accel::serve::serve_unix;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let socket = dir.join(format!("posit-serve-test-{pid}.sock"));
+    let bench = dir.join(format!("posit-serve-test-{pid}.json"));
+    let _ = std::fs::remove_file(&socket);
+    let _ = std::fs::remove_file(&bench);
+
+    let daemon = Daemon::start(native_engine(8), test_config());
+    let server = {
+        let socket = socket.clone();
+        let bench = bench.clone();
+        std::thread::spawn(move || serve_unix(daemon, &socket, Some(&bench)))
+    };
+    // Wait for the daemon to bind.
+    for _ in 0..200 {
+        if socket.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(socket.exists(), "daemon never bound its socket");
+
+    let load = plan(12, 32, 3, 200.0, 4);
+    std::thread::scope(|scope| {
+        for s in 0..load.submitters {
+            let load = &load;
+            let socket = &socket;
+            scope.spawn(move || {
+                let stream = UnixStream::connect(socket).expect("connect");
+                let mut writer = stream.try_clone().expect("clone");
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                for i in (s..load.jobs.len()).step_by(load.submitters) {
+                    let (spec, priority) = &load.jobs[i];
+                    loop {
+                        writeln!(writer, "{}", submit_line(spec, *priority)).expect("send");
+                        line.clear();
+                        reader.read_line(&mut line).expect("reply");
+                        let fields = parse_flat_object(line.trim()).expect("flat reply");
+                        match get_str(&fields, "op") {
+                            Some("accepted") => break,
+                            Some("rejected") => {
+                                let hint =
+                                    get_num(&fields, "retry_after_ms").unwrap_or(0.0) as u64;
+                                assert!(hint > 0, "live daemon must offer a retry");
+                                std::thread::sleep(std::time::Duration::from_millis(hint));
+                            }
+                            other => panic!("unexpected reply {other:?}: {line}"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Control connection: ping, settle, then drain.
+    let stream = UnixStream::connect(&socket).expect("connect control");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(writer, "{{\"op\": \"ping\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\""), "{line}");
+
+    line.clear();
+    writeln!(writer, "{{\"op\": \"collect\", \"wait\": true}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains(&format!("\"count\": {}", load.jobs.len())), "{line}");
+
+    line.clear();
+    writeln!(writer, "{{\"op\": \"shutdown\", \"submitters\": 4, \"rate_jobs_per_s\": 200}}")
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    let fields = parse_flat_object(line.trim()).expect("drained reply is flat");
+    assert_eq!(get_str(&fields, "op"), Some("drained"), "{line}");
+    assert_eq!(get_bool(&fields, "ok"), Some(true));
+    assert_eq!(get_num(&fields, "admitted"), Some(load.jobs.len() as f64));
+    assert_eq!(get_num(&fields, "completed"), Some(load.jobs.len() as f64));
+
+    let summary = server.join().unwrap().expect("serve_unix");
+    assert_eq!(summary.completed, load.jobs.len());
+    assert!(!socket.exists(), "socket file removed after drain");
+
+    let json = std::fs::read_to_string(&bench).expect("bench artifact written");
+    for key in ["\"p50\"", "\"p95\"", "\"p99\"", "\"jobs_per_s\"", "\"queue_depth_trace\""] {
+        assert!(json.contains(key), "bench json missing {key}");
+    }
+    assert!(json.contains("\"submitters\": 4"), "shutdown metadata recorded");
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    let _ = std::fs::remove_file(&bench);
+}
