@@ -1,0 +1,349 @@
+#!/usr/bin/env python3
+"""Exhaustive oracle validation of the quire (exact accumulator) sweep.
+
+``rust/src/posit/quire.rs`` claims the 512-bit fixed-point accumulator
+(`GQuire`, and `Quire` for Posit(32,2) — both share the limb arithmetic
+and the extraction/rounding window) accumulates posit products exactly
+and rounds once, correctly (RNE with posit saturation), at extraction.
+
+This harness transcribes the Rust algorithm bit for bit —
+
+* the generic decode (regime/exponent/fraction -> Q1.63 significand),
+* product placement at quire offset ``s + 114`` with the negative-offset
+  exactness shift,
+* the limb accumulation, both as the mathematically equal big-int mod
+  2^512 *and* as a literal little-endian ``[u64; 8]`` limb transcription
+  with ripple carry/borrow (cross-checked against each other on every
+  operation, so a carry bug across the limb boundary cannot hide),
+* the 64-bit extraction window + sticky sweep of ``limbs_round``,
+* the generic encoder's RNE + saturation,
+
+— and checks it against an *independent* exact big-rational oracle
+(``Fraction`` sums rounded once by PyPosit, the repo's third-opinion
+posit implementation) on:
+
+* ALL 256 x 256 Posit(8,2) ``add_product`` pairs,
+* ALL 256 x 256 ``sub_product`` pairs,
+* chained 3-term dots (every pattern appears in every position against
+  a magnitude ladder, plus a large random sweep),
+* NaR / zero operands and saturating extractions, explicitly.
+
+Run: ``python3 python/tools/check_quire.py`` — exits nonzero on any
+divergence. The in-crate twin is ``rust/tests/quire_exhaustive.rs``,
+which pins the same contract against the real implementation with an
+i128 fixed-point oracle.
+"""
+
+import random
+import sys
+from fractions import Fraction
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from compile.kernels.ref import PyPosit  # noqa: E402
+
+M64 = (1 << 64) - 1
+M512 = (1 << 512) - 1
+
+
+# --------------------------------------------------------------------------
+# Transcription of rust/src/posit/quire.rs (generic GQuire path)
+# --------------------------------------------------------------------------
+
+def decode_q63(p, bits):
+    """PositSpec::decode transcription: None for 0/NaR, else
+    (neg, scale, sig) with sig Q1.63 (hidden bit at 63)."""
+    bits &= p.mask
+    if bits == 0 or bits == p.nar:
+        return None
+    neg = bool(bits >> (p.nbits - 1))
+    absb = (-bits) & p.mask if neg else bits
+    i = p.nbits - 2
+    r0 = (absb >> i) & 1
+    run = 1
+    i -= 1
+    while i >= 0 and (absb >> i) & 1 == r0:
+        run += 1
+        i -= 1
+    k = run - 1 if r0 == 1 else -run
+    i -= 1  # terminator (may step past the LSB)
+    e = 0
+    for _ in range(p.es):
+        e <<= 1
+        if i >= 0:
+            e |= (absb >> i) & 1
+            i -= 1
+    nf = max(i + 1, 0)
+    frac_field = absb & ((1 << nf) - 1) if nf else 0
+    sig = (1 << 63) | (frac_field << (63 - nf))
+    return (neg, (k << p.es) + e, sig)
+
+
+def encode_rust(p, neg, scale, sig):
+    """PositSpec::encode transcription: Q1.63 sig, sticky OR-ed into bit 0,
+    RNE, posit saturation (never to zero)."""
+    assert sig >> 63 == 1
+    if scale > p.max_scale:
+        mag = p.mask >> 1  # maxpos
+    elif scale < -p.max_scale:
+        mag = 1  # minpos
+    else:
+        k = scale >> p.es
+        e = scale & ((1 << p.es) - 1)
+        rbit, rlen = (1, k + 1) if k >= 0 else (0, -k)
+        stream = 0
+        for _ in range(rlen):
+            stream = (stream << 1) | rbit
+        stream = (stream << 1) | (1 - rbit)
+        stream = (stream << p.es) | e
+        stream = (stream << 63) | (sig & ((1 << 63) - 1))
+        slen = rlen + 1 + p.es + 63
+        keep = p.nbits - 1
+        shift = slen - keep
+        kept = stream >> shift
+        rnd = (stream >> (shift - 1)) & 1
+        sticky = stream & ((1 << (shift - 1)) - 1) != 0
+        up = rnd and (sticky or kept & 1 == 1)
+        mag = kept + up
+        if mag >= 1 << (p.nbits - 1):
+            mag = p.mask >> 1
+        elif mag == 0:
+            mag = 1
+    return (-mag) & p.mask if neg else mag
+
+
+class LimbQuire:
+    """Literal transcription of the [u64; 8] limb arithmetic."""
+
+    def __init__(self):
+        self.limbs = [0] * 8
+
+    def add_at(self, i, v):
+        s = self.limbs[i] + v
+        self.limbs[i] = s & M64
+        carry = s >> 64
+        while carry:
+            i += 1
+            if i == 8:
+                return  # two's-complement wrap (sign crossing)
+            s = self.limbs[i] + 1
+            self.limbs[i] = s & M64
+            carry = s >> 64
+
+    def sub_at(self, i, v):
+        s = self.limbs[i] - v
+        self.limbs[i] = s & M64
+        borrow = s < 0
+        while borrow:
+            i += 1
+            if i == 8:
+                return
+            s = self.limbs[i] - 1
+            self.limbs[i] = s & M64
+            borrow = s < 0
+
+    def add_shifted(self, v, off, negate):
+        limb, sh = off // 64, off % 64
+        lo = (v << sh) & M64
+        mid = v >> (64 - sh) if sh else 0
+        assert limb + 1 < 8 or mid == 0, "quire overflow"
+        if negate:
+            self.sub_at(limb, lo)
+            if mid:
+                self.sub_at(limb + 1, mid)
+        else:
+            self.add_at(limb, lo)
+            if mid:
+                self.add_at(limb + 1, mid)
+
+    def value(self):
+        v = 0
+        for i, l in enumerate(self.limbs):
+            v |= l << (64 * i)
+        return v
+
+
+class GQuireT:
+    """Transcription of GQuire: decode -> Q2.126 product -> offset s+114."""
+
+    def __init__(self, p):
+        self.p = p
+        self.acc = 0  # big-int view, two's complement mod 2^512
+        self.limbs = LimbQuire()  # literal limb view, cross-checked
+        self.nar = False
+
+    def fused(self, a, b, negate):
+        p = self.p
+        if self.nar or (a & p.mask) == p.nar or (b & p.mask) == p.nar:
+            self.nar = True
+            return
+        da, db = decode_q63(p, a), decode_q63(p, b)
+        if da is None or db is None:
+            return
+        neg = (da[0] ^ db[0]) ^ negate
+        prod = da[2] * db[2]  # Q2.126, exact
+        s = da[1] + db[1]
+        off = s + 114
+        if off < 0:
+            sh = -off
+            assert prod & ((1 << sh) - 1) == 0, "quire product underflow"
+            prod >>= sh
+            off = 0
+        # Big-int view: the limb carry chain mod 2^512 is big-int addition.
+        if neg:
+            self.acc = (self.acc - (prod << off)) & M512
+        else:
+            self.acc = (self.acc + (prod << off)) & M512
+        # Literal limb view: split Q2.126 into two u64 adds like the Rust.
+        lo, hi = prod & M64, (prod >> 64) & M64
+        self.limbs.add_shifted(lo, off, neg)
+        if hi:
+            self.limbs.add_shifted(hi, off + 64, neg)
+        assert self.limbs.value() == self.acc, "limb/bigint divergence"
+
+    def add_product(self, a, b):
+        self.fused(a, b, False)
+
+    def sub_product(self, a, b):
+        self.fused(a, b, True)
+
+    def to_bits(self):
+        p = self.p
+        if self.nar:
+            return p.nar
+        # limbs_round transcription.
+        acc = self.acc
+        negative = bool(acc >> 511)
+        mag = ((-acc) & M512) if negative else acc
+        if mag == 0:
+            return 0
+        msb = mag.bit_length() - 1
+        scale = msb - 240
+        if msb >= 63:
+            sig = mag >> (msb - 63)
+            sticky = mag & ((1 << (msb - 63)) - 1) != 0
+        else:
+            sig = mag << (63 - msb)
+            sticky = False
+        return encode_rust(p, negative, scale, sig | sticky)
+
+
+# --------------------------------------------------------------------------
+# Independent exact-rational oracle
+# --------------------------------------------------------------------------
+
+def exact_value(p, bits):
+    """Posit bit pattern -> exact Fraction (None for NaR)."""
+    bits &= p.mask
+    if bits == p.nar:
+        return None
+    if bits == 0:
+        return Fraction(0)
+    d = decode_q63(p, bits)
+    v = Fraction(d[2], 1 << 63) * Fraction(2) ** d[1]
+    return -v if d[0] else v
+
+
+def oracle_dot(p, terms):
+    """terms: list of (a, b, sign). Exact Fraction sum, rounded once."""
+    total = Fraction(0)
+    for a, b, sign in terms:
+        va, vb = exact_value(p, a), exact_value(p, b)
+        if va is None or vb is None:
+            return p.nar
+        total += sign * va * vb
+    return p.from_value(total)
+
+
+def quire_dot(p, terms):
+    q = GQuireT(p)
+    for a, b, sign in terms:
+        if sign >= 0:
+            q.add_product(a, b)
+        else:
+            q.sub_product(a, b)
+    return q.to_bits()
+
+
+def check(p, terms, what):
+    got = quire_dot(p, terms)
+    want = oracle_dot(p, terms)
+    if got != want:
+        print(f"FAIL {what}: terms={[(hex(a), hex(b), s) for a, b, s in terms]} "
+              f"quire={got:#x} oracle={want:#x}")
+        return False
+    return True
+
+
+def main():
+    p = PyPosit(8, 2)
+    bad = 0
+
+    # --- exhaustive single products, both signs --------------------------
+    for a in range(256):
+        for b in range(256):
+            bad += not check(p, [(a, b, +1)], "add_product")
+            bad += not check(p, [(a, b, -1)], "sub_product")
+        if a % 64 == 63:
+            print(f"  pairs: {(a + 1) * 256 * 2} checks, {bad} failures")
+
+    # --- chained 3-term dots ---------------------------------------------
+    # Magnitude ladder spanning minpos..maxpos and both signs: every
+    # pattern appears in every position against ladder pairs.
+    ladder = [0x01, 0x03, 0x10, 0x38, 0x40, 0x48, 0x70, 0x7F,
+              0x81, 0x90, 0xB8, 0xC0, 0xC8, 0xF0, 0xFD, 0xFF, 0x00, 0x80]
+    rng = random.Random(0xC0FFEE)
+    for a in range(256):
+        for _ in range(6):
+            l1, l2, l3, l4 = (rng.choice(ladder) for _ in range(4))
+            s1, s2, s3 = (rng.choice([+1, -1]) for _ in range(3))
+            bad += not check(p, [(a, l1, s1), (l2, l3, s2), (l4, a, s3)],
+                             "3-term ladder")
+    print(f"  ladder dots done, {bad} failures")
+
+    # --- random 3-term dots over the full pattern space ------------------
+    for _ in range(60000):
+        terms = [(rng.randrange(256), rng.randrange(256),
+                  rng.choice([+1, -1])) for _ in range(3)]
+        bad += not check(p, terms, "3-term random")
+    print(f"  random dots done, {bad} failures")
+
+    # --- explicit NaR / zero / saturation cases --------------------------
+    maxpos, minpos, nar = 0x7F, 0x01, 0x80
+    cases = [
+        ([(nar, 0x00, +1)], "NaR * 0"),
+        ([(0x40, 0x40, +1), (nar, 0x23, -1)], "NaR mid-dot"),
+        ([(0x00, maxpos, +1), (maxpos, 0x00, -1)], "zero products"),
+        ([(maxpos, maxpos, +1)], "saturation high"),
+        ([(maxpos, maxpos, +1), (maxpos, maxpos, +1)], "saturation x2"),
+        ([(minpos, minpos, +1)], "underflow to minpos"),
+        ([(minpos, minpos, -1)], "underflow to -minpos"),
+        ([(0x40, 0x40, +1), (minpos, minpos, -1)], "borrow across limbs"),
+        ([(maxpos, maxpos, +1), (maxpos, maxpos, -1)], "sign crossing"),
+    ]
+    for terms, what in cases:
+        bad += not check(p, terms, what)
+
+    # --- Posit(32,2) spot sweep (same shared limb/extract code) ----------
+    p32 = PyPosit(32, 2)
+    patterns = [0, 0x8000_0000, 1, 0x7FFF_FFFF, 0x4000_0000, 0xC000_0000,
+                0x7FFF_FFFE, 0x0000_0002, 0xFFFF_FFFF, 0x8000_0001]
+    for _ in range(4000):
+        terms = []
+        for _ in range(rng.randrange(1, 4)):
+            pick = lambda: (rng.choice(patterns) if rng.random() < 0.3
+                            else rng.getrandbits(32))
+            terms.append((pick(), pick(), rng.choice([+1, -1])))
+        bad += not check(p32, terms, "posit32 random")
+    print(f"  posit32 spot sweep done, {bad} failures")
+
+    if bad:
+        print(f"FAILED: {bad} mismatches")
+        return 1
+    print("OK: quire transcription matches the exact-rational oracle "
+          "on the exhaustive Posit(8,2) sweep + posit32 spot sweep")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,9 @@
 //!   factorization pipeline vs the scalar path (`BENCH_factor.json`, with
 //!   its own bit-identity gate);
 //! * service throughput per numeric format and worker count;
+//! * the `accum=quire` fused-dot path vs round-per-mac — with its own
+//!   accuracy gate (quire digits must not fall below rounded digits on
+//!   smoke shapes) and the fused-kernel slowdown column;
 //! * the serving daemon under a seeded open-loop load (latency
 //!   percentiles + jobs/s, `BENCH_serve_daemon.json`).
 //!
@@ -28,8 +31,8 @@ use posit_accel::posit::{self, Posit32};
 use posit_accel::rng::Pcg64;
 use posit_accel::runtime::Runtime;
 use posit_accel::service::{
-    mixed_format_manifest, mixed_manifest, Engine, EngineBuilder, JobSpec, Precision,
-    ServiceReport,
+    mixed_accum_manifest, mixed_format_manifest, mixed_manifest, Engine, EngineBuilder,
+    JobSpec, Precision, ServiceReport,
 };
 use posit_accel::sim::systolic::SystolicConfig;
 use posit_accel::util::bench_stats;
@@ -810,6 +813,113 @@ fn bench_service_formats(b: &mut Bench) {
     }
 }
 
+/// Accumulation-mode section: the `accum=quire` fused-dot path vs the
+/// default round-per-mac path, through the same service front end.
+///
+/// Always opens with the **quire accuracy gate**: on smoke shapes, every
+/// job of a mixed manifest run twice — identical spec, `accum=rounded`
+/// vs `accum=quire` — must achieve no fewer decimal digits in quire mode
+/// (half a digit of slack for pivot-path divergence between the
+/// right-looking rounded and Crout quire factorizations, the same bound
+/// the engine and experiment suites pin). A violation aborts the bench
+/// with a nonzero exit — the CI guard that the deferred-rounding kernels
+/// keep their accuracy claim on every push. Then times the fused
+/// [`blas::gemm_update_quire`] kernel against the packed rounded kernel
+/// (the throughput price of exactness, a `BENCH_gemm.json` row) and
+/// records mixed-accum service throughput per worker count.
+fn bench_service_accum(b: &mut Bench) {
+    use posit_accel::blas::Accum;
+
+    // ---- quire accuracy gate (smoke shapes) ---------------------------
+    {
+        let specs = mixed_manifest(6, 40);
+        let engine = EngineBuilder::new(32)
+            .shared("native", Arc::new(NativeBackend::new(1)))
+            .build();
+        let as_accum = |mode: Accum| -> Vec<JobSpec> {
+            specs
+                .iter()
+                .cloned()
+                .map(|mut j| {
+                    j.accum = mode;
+                    j
+                })
+                .collect()
+        };
+        let rr = engine.run(&as_accum(Accum::Rounded), 2, false);
+        let rq = engine.run(&as_accum(Accum::Quire), 2, false);
+        assert_eq!(rr.ok_count(), specs.len(), "accum gate: rounded jobs failed");
+        assert_eq!(rq.ok_count(), specs.len(), "accum gate: quire jobs failed");
+        for jr in &rr.results {
+            let jq = rq
+                .results
+                .iter()
+                .find(|j| j.id == jr.id)
+                .expect("quire run lost a job id");
+            let dr = jr.digits.unwrap_or(f64::NAN);
+            let dq = jq.digits.unwrap_or(f64::NAN);
+            assert!(
+                dq + 0.5 >= dr,
+                "QUIRE ACCURACY VIOLATION: job {} {:?} n={} — accum=quire {dq:.2} \
+                 digits < accum=rounded {dr:.2} digits",
+                jr.id, jr.alg, jr.n
+            );
+        }
+        println!(
+            "[quire accuracy gate passed: accum=quire >= accum=rounded digits on all smoke specs]"
+        );
+    }
+
+    // ---- fused-kernel throughput (the price of exactness) -------------
+    let sizes: &[usize] = if quick() { &[48, 96] } else { &[96, 192] };
+    for &n in sizes {
+        let reps = if n <= 96 { 5 } else { 3 };
+        let mut rng = Pcg64::seed(0xACCB + n as u64);
+        let a = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let bm = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut c = Matrix::<Posit32>::zeros(n, n);
+        let st = bench_stats(reps, || {
+            blas::gemm_update_quire(n, n, n, &a.data, n, &bm.data, n, &mut c.data, n)
+        });
+        b.add_gemm("quire-fused", "posit32", n, st.min);
+        // Same C -= A*B update through the rounded packed kernel, for the
+        // side-by-side slowdown column.
+        let st = bench_stats(reps, || {
+            blas::gemm_packed(
+                Trans::No, Trans::No, n, n, n, Posit32::ONE.negate(), &a.data, n,
+                &bm.data, n, Posit32::ONE, &mut c.data, n,
+            )
+        });
+        b.add_gemm("packed-update", "posit32", n, st.min);
+    }
+
+    // ---- mixed-accum service throughput -------------------------------
+    let (jobs_count, base_n) = if quick() { (8, 48) } else { (16, 96) };
+    let worker_counts: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 8] };
+    let jobs = mixed_accum_manifest(jobs_count, base_n);
+    for &workers in worker_counts {
+        let engine = EngineBuilder::new(32)
+            .shared("native", Arc::new(NativeBackend::new(1)))
+            .build();
+        engine.run(&jobs[..4.min(jobs.len())], workers, false);
+        let report = engine.run(&jobs, workers, false);
+        assert_eq!(report.ok_count(), jobs.len(), "accum-mix x{workers}");
+        b.add(
+            &format!("service native accum-mix manifest x{workers} workers"),
+            report.jobs_per_s(),
+            "jobs/s",
+        );
+        for (mode, n_jobs, _ok, mean) in report.accum_summary() {
+            b.add(
+                &format!("service accum={} mean digits ({n_jobs} jobs) x{workers}", mode.name()),
+                mean,
+                "digits",
+            );
+        }
+        b.add_service("native", "accum-mix", workers, &report);
+    }
+}
+
 /// The serving-daemon load harness: an in-process daemon under a seeded
 /// open-loop mixed-format stream from 4 concurrent submitters, reported
 /// as p50/p99 latency and sustained jobs/s, with the full artifact
@@ -878,6 +988,7 @@ fn main() {
     bench_decompositions(&mut b);
     bench_service(&mut b);
     bench_service_formats(&mut b);
+    bench_service_accum(&mut b);
     bench_serve_daemon(&mut b);
     b.save();
 }

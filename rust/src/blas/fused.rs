@@ -1,0 +1,422 @@
+//! Fused-dot (quire-exact) kernels — the execution path of
+//! `accum=quire` jobs.
+//!
+//! Every routine here computes each output element as ONE fused dot
+//! product: all partial products accumulate exactly in the format's
+//! [`Scalar::QuireAcc`] state (the 512-bit quire for posits, a
+//! widened/compensated accumulator for IEEE formats) and a single
+//! rounding happens at [`Scalar::quire_finish`]. Divides and square
+//! roots that follow a fused dot (triangular solves, panel pivots) are
+//! one additional rounding each — the posit standard's fused-solve
+//! semantics, and the accumulation mode the paper's FPGA could not
+//! measure (its PE chain rounds after every mac).
+//!
+//! Numerics contract: for a given output element the result depends only
+//! on the element's own input row/column and the (ascending-k) term
+//! order — never on how columns are split across threads — so the
+//! parallel entry points are bit-identical to the sequential ones
+//! (pinned by `tests/service_determinism.rs`). The arithmetic itself is
+//! pinned bit-for-bit against an exact big-rational oracle by the
+//! exhaustive Posit(8,2) sweep (`tests/quire_exhaustive.rs`,
+//! `python/tools/check_quire.py`).
+
+use super::trsm::{Diag, Side, Uplo};
+use super::{pool, Scalar, Trans};
+
+/// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)`, one rounding per
+/// output element: `c_ij = finish(c_ij - Σ_l a_il · b_lj)` with the sum
+/// accumulated exactly (quire) / compensated (IEEE).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_update_quire<T: Scalar>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        gemm_update_quire_col(m, k, a, lda, &b[j * ldb..j * ldb + k], &mut c[j * ldc..], 1);
+    }
+}
+
+/// One output column of [`gemm_update_quire`]: `c -= A · b` with `b` a
+/// contiguous k-vector and `c` strided by `incc`.
+fn gemm_update_quire_col<T: Scalar>(
+    m: usize,
+    k: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    c: &mut [T],
+    incc: usize,
+) {
+    for i in 0..m {
+        let mut q = T::quire_zero();
+        T::quire_add(&mut q, c[i * incc]);
+        for l in 0..k {
+            T::quire_mac_sub(&mut q, a[i + l * lda], b[l]);
+        }
+        c[i * incc] = T::quire_finish(q);
+    }
+}
+
+/// Pool-parallel [`gemm_update_quire`]: output columns split across the
+/// global worker pool. Columns are independent, so the split cannot
+/// change results — bit-identical to the sequential kernel for every
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_update_quire_parallel<T: Scalar>(
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if threads <= 1 || n <= 1 {
+        return gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc);
+    }
+    let chunk = n.div_ceil(threads.min(n));
+    pool::global().scope(|s| {
+        let mut rest = c;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jb = chunk.min(n - j0);
+            // The final chunk's buffer may be shorter than jb*ldc (the
+            // last column only needs m elements).
+            let take = (jb * ldc).min(rest.len());
+            let (mine, tail) = rest.split_at_mut(take);
+            rest = tail;
+            s.spawn(move || {
+                gemm_update_quire(m, k, jb, a, lda, &b[j0 * ldb..], ldb, mine, ldc);
+            });
+            j0 += jb;
+        }
+    });
+}
+
+/// Fused `y <- op(A) · x`: each `y_i` is one exact dot product rounded
+/// once. `A` is m×n column-major; `y` has `m` (NoTrans) or `n` (Trans)
+/// elements.
+pub fn gemv_quire<T: Scalar>(trans: Trans, m: usize, n: usize, a: &[T], lda: usize, x: &[T], y: &mut [T]) {
+    match trans {
+        Trans::No => {
+            for i in 0..m {
+                let mut q = T::quire_zero();
+                for j in 0..n {
+                    T::quire_mac(&mut q, a[i + j * lda], x[j]);
+                }
+                y[i] = T::quire_finish(q);
+            }
+        }
+        Trans::Yes => {
+            for j in 0..n {
+                let mut q = T::quire_zero();
+                for i in 0..m {
+                    T::quire_mac(&mut q, a[i + j * lda], x[i]);
+                }
+                y[j] = T::quire_finish(q);
+            }
+        }
+    }
+}
+
+/// Fused triangular solve (alpha = 1): `op(A) * X = B` (Left) or
+/// `X * op(A) = B` (Right), B overwritten by X. Each solution element is
+/// one exact dot product rounded once, plus one divide rounding for
+/// `Diag::NonUnit`. Covers the variants the quire factorization/solve
+/// drivers use; the remaining combinations panic (no silent fallback to
+/// rounded accumulation).
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_quire<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    match (side, uplo, trans) {
+        // Forward substitution: L * X = B.
+        (Side::Left, Uplo::Lower, Trans::No) => {
+            for j in 0..n {
+                let col = &mut b[j * ldb..];
+                for i in 0..m {
+                    let mut q = T::quire_zero();
+                    T::quire_add(&mut q, col[i]);
+                    for l in 0..i {
+                        T::quire_mac_sub(&mut q, a[i + l * lda], col[l]);
+                    }
+                    let s = T::quire_finish(q);
+                    col[i] = if diag == Diag::Unit { s } else { s.div(a[i + i * lda]) };
+                }
+            }
+        }
+        // Backward substitution: U * X = B.
+        (Side::Left, Uplo::Upper, Trans::No) => {
+            for j in 0..n {
+                let col = &mut b[j * ldb..];
+                for i in (0..m).rev() {
+                    let mut q = T::quire_zero();
+                    T::quire_add(&mut q, col[i]);
+                    for l in i + 1..m {
+                        T::quire_mac_sub(&mut q, a[i + l * lda], col[l]);
+                    }
+                    let s = T::quire_finish(q);
+                    col[i] = if diag == Diag::Unit { s } else { s.div(a[i + i * lda]) };
+                }
+            }
+        }
+        // Lᵀ * X = B (an upper system read from the lower triangle).
+        (Side::Left, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                let col = &mut b[j * ldb..];
+                for i in (0..m).rev() {
+                    let mut q = T::quire_zero();
+                    T::quire_add(&mut q, col[i]);
+                    for l in i + 1..m {
+                        T::quire_mac_sub(&mut q, a[l + i * lda], col[l]);
+                    }
+                    let s = T::quire_finish(q);
+                    col[i] = if diag == Diag::Unit { s } else { s.div(a[i + i * lda]) };
+                }
+            }
+        }
+        // X * Lᵀ = B — the Cholesky panel update A21 <- A21 · L11⁻ᵀ.
+        // B_ij = Σ_{l<=j} X_il · A_jl, so columns resolve ascending.
+        (Side::Right, Uplo::Lower, Trans::Yes) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut q = T::quire_zero();
+                    T::quire_add(&mut q, b[i + j * ldb]);
+                    for l in 0..j {
+                        T::quire_mac_sub(&mut q, b[i + l * ldb], a[j + l * lda]);
+                    }
+                    let s = T::quire_finish(q);
+                    b[i + j * ldb] = if diag == Diag::Unit { s } else { s.div(a[j + j * lda]) };
+                }
+            }
+        }
+        other => unimplemented!("trsm_quire: variant {other:?} not used by the quire drivers"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm_naive, trsm, Matrix};
+    use crate::posit::quire::Quire;
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn gemm_update_quire_is_one_rounding_per_element() {
+        // Against the definitional reference: a scalar quire per element.
+        let (m, k, n) = (13, 17, 11);
+        let mut rng = Pcg64::seed(21);
+        let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+        let mut c = c0.clone();
+        gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut c.data, m);
+        for j in 0..n {
+            for i in 0..m {
+                let mut q = Quire::new();
+                q.add_posit(c0.data[i + j * m].0);
+                for l in 0..k {
+                    q.sub_product(a.data[i + l * m].0, b.data[l + j * k].0);
+                }
+                assert_eq!(c.data[i + j * m].0, q.to_posit_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_quire_gemm_bit_matches_sequential() {
+        let (m, k, n) = (19, 23, 31);
+        let mut rng = Pcg64::seed(22);
+        let a = Matrix::<Posit32>::random_normal(m, k, 10.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 0.1, &mut rng);
+        let c0 = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+        let mut want = c0.clone();
+        gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut want.data, m);
+        for threads in [2, 4, 8] {
+            let mut c = c0.clone();
+            gemm_update_quire_parallel(threads, m, k, n, &a.data, m, &b.data, k, &mut c.data, m);
+            assert_eq!(c.data, want.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn quire_gemm_at_least_as_accurate_as_rounded() {
+        // On an ill-conditioned accumulation the fused path must not be
+        // farther from the f64 result than the per-mac-rounded path.
+        let (m, k, n) = (8, 400, 8);
+        let mut rng = Pcg64::seed(23);
+        let af = Matrix::<f64>::random_normal(m, k, 30.0, &mut rng);
+        let bf = Matrix::<f64>::random_normal(k, n, 30.0, &mut rng);
+        let a: Matrix<Posit32> = af.cast();
+        let b: Matrix<Posit32> = bf.cast();
+        // Reference in f64 off the posit-valued operands.
+        let a64: Matrix<f64> = Matrix {
+            rows: m, cols: k,
+            data: a.data.iter().map(|p| p.to_f64()).collect(),
+        };
+        let b64: Matrix<f64> = Matrix {
+            rows: k, cols: n,
+            data: b.data.iter().map(|p| p.to_f64()).collect(),
+        };
+        let mut c64 = vec![0.0f64; m * n];
+        gemm_naive(
+            Trans::No, Trans::No, m, n, k, -1.0, &a64.data, m, &b64.data, k, 1.0, &mut c64, m,
+        );
+        let mut cq = Matrix::<Posit32>::zeros(m, n);
+        gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut cq.data, m);
+        let mut cr = Matrix::<Posit32>::zeros(m, n);
+        gemm_naive(
+            Trans::No, Trans::No, m, n, k, Posit32::ONE.neg(), &a.data, m, &b.data, k,
+            Posit32::ONE, &mut cr.data, m,
+        );
+        let err = |c: &Matrix<Posit32>| -> f64 {
+            c.data.iter().zip(&c64).map(|(p, &w)| (p.to_f64() - w).abs()).sum()
+        };
+        assert!(
+            err(&cq) <= err(&cr),
+            "quire err {} > rounded err {}",
+            err(&cq),
+            err(&cr)
+        );
+    }
+
+    #[test]
+    fn trsm_quire_solves_each_variant() {
+        // Fused solves must actually solve: op(A)·X (or X·op(A)) recombined
+        // through the quire reproduces B to within format accuracy — and
+        // on a unit-lower system with exactly representable data the
+        // solution is exact.
+        let n = 12;
+        let mut rng = Pcg64::seed(24);
+        let mut l = Matrix::<Posit32>::zeros(n, n);
+        for j in 0..n {
+            for i in j..n {
+                let v = if i == j {
+                    2.0 + rng.normal().abs()
+                } else {
+                    rng.normal() * 0.5
+                };
+                l.data[i + j * n] = Posit32::from_f64(v);
+            }
+        }
+        let b0 = Matrix::<Posit32>::random_normal(n, 3, 1.0, &mut rng);
+        for (side, uplo, trans, diag) in [
+            (Side::Left, Uplo::Lower, Trans::No, Diag::Unit),
+            (Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit),
+            (Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit),
+            (Side::Left, Uplo::Lower, Trans::Yes, Diag::NonUnit),
+            (Side::Right, Uplo::Lower, Trans::Yes, Diag::NonUnit),
+        ] {
+            let (m, nc) = if side == Side::Left { (n, 3) } else { (3, n) };
+            let b = if side == Side::Left {
+                b0.clone()
+            } else {
+                // 3×n RHS for the Right variant.
+                Matrix::<Posit32>::random_normal(3, n, 1.0, &mut rng)
+            };
+            let a = if uplo == Uplo::Upper {
+                // Mirror L into an upper factor.
+                let mut u = Matrix::<Posit32>::zeros(n, n);
+                for j in 0..n {
+                    for i in j..n {
+                        u.data[j + i * n] = l.data[i + j * n];
+                    }
+                }
+                u
+            } else {
+                l.clone()
+            };
+            let mut x = b.clone();
+            trsm_quire(side, uplo, trans, diag, m, nc, &a.data, n, &mut x.data, m);
+            // Compare against the rounded TRSM solution in f64: both solve
+            // the same system, so they must agree to format accuracy.
+            let mut xr = b.clone();
+            trsm(side, uplo, trans, diag, m, nc, Posit32::ONE, &a.data, n, &mut xr.data, m);
+            for i in 0..m * nc {
+                let (q, r) = (x.data[i].to_f64(), xr.data[i].to_f64());
+                assert!(
+                    (q - r).abs() <= 1e-4 * (1.0 + r.abs()),
+                    "{side:?}/{uplo:?}/{trans:?}/{diag:?} elem {i}: quire {q} vs rounded {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_quire_matches_elementwise_dot() {
+        let (m, n) = (9, 14);
+        let mut rng = Pcg64::seed(25);
+        let a = Matrix::<Posit32>::random_normal(m, n, 1.0, &mut rng);
+        let x: Vec<Posit32> = (0..n).map(|_| Posit32::from_f64(rng.normal())).collect();
+        let mut y = vec![Posit32::ZERO; m];
+        gemv_quire(Trans::No, m, n, &a.data, m, &x, &mut y);
+        for i in 0..m {
+            let row: Vec<u32> = (0..n).map(|j| a.data[i + j * m].0).collect();
+            let xv: Vec<u32> = x.iter().map(|p| p.0).collect();
+            assert_eq!(y[i].0, Quire::dot(&row, &xv), "row {i}");
+        }
+        let xt: Vec<Posit32> = (0..m).map(|_| Posit32::from_f64(rng.normal())).collect();
+        let mut yt = vec![Posit32::ZERO; n];
+        gemv_quire(Trans::Yes, m, n, &a.data, m, &xt, &mut yt);
+        for j in 0..n {
+            let col: Vec<u32> = (0..m).map(|i| a.data[i + j * m].0).collect();
+            let xv: Vec<u32> = xt.iter().map(|p| p.0).collect();
+            assert_eq!(yt[j].0, Quire::dot(&col, &xv), "col {j}");
+        }
+    }
+
+    #[test]
+    fn f32_and_f64_analogs_run_the_same_kernels() {
+        // The IEEE analogs must behave like (at least) naive accumulation
+        // on benign data and stay available through the same entry points.
+        let (m, k, n) = (6, 50, 5);
+        let mut rng = Pcg64::seed(26);
+        let a = Matrix::<f32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f32>::random_normal(k, n, 1.0, &mut rng);
+        let c0 = Matrix::<f32>::random_normal(m, n, 1.0, &mut rng);
+        let mut cq = c0.clone();
+        gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut cq.data, m);
+        for j in 0..n {
+            for i in 0..m {
+                let mut acc = c0.data[i + j * m] as f64;
+                for l in 0..k {
+                    acc -= a.data[i + l * m] as f64 * b.data[l + j * k] as f64;
+                }
+                assert_eq!(cq.data[i + j * m], acc as f32, "({i},{j})");
+            }
+        }
+        let a = Matrix::<f64>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<f64>::random_normal(k, n, 1.0, &mut rng);
+        let mut c = Matrix::<f64>::zeros(m, n);
+        gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut c.data, m);
+        for j in 0..n {
+            for i in 0..m {
+                let mut want = 0.0f64;
+                for l in 0..k {
+                    want -= a.data[i + l * m] * b.data[l + j * k];
+                }
+                assert!((c.data[i + j * m] - want).abs() <= 1e-12 * (1.0 + want.abs()));
+            }
+        }
+    }
+}

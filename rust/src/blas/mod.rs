@@ -11,6 +11,7 @@
 //! product in ascending-k order — bit-identical to the Pallas kernel and
 //! the FPGA PE chain.
 
+pub mod fused;
 pub mod gemm;
 pub mod level1;
 pub mod level2;
@@ -19,6 +20,7 @@ pub mod pool;
 pub mod syrk;
 pub mod trsm;
 
+pub use fused::{gemm_update_quire, gemm_update_quire_parallel, gemv_quire, trsm_quire};
 pub use gemm::{
     default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_packed_lanes,
     gemm_parallel, gemm_parallel_scoped, gemm_prepacked, gemm_prepacked_parallel,
@@ -30,7 +32,74 @@ pub use matrix::Matrix;
 pub use syrk::syrk_lower;
 pub use trsm::{trsm, trsm_ref, trsm_unpacked, Diag, Side, Uplo};
 
+use crate::posit::quire::{GQuire, Quire};
 use crate::posit::{self, Posit32};
+
+/// Per-job accumulation mode: how dot products inside GEMM / panel
+/// sweeps round.
+///
+/// `Rounded` is the paper's semantics — one rounding per mac, matching
+/// the FPGA PE chain. `Quire` is the posit standard's exact accumulator:
+/// every partial product lands exactly in a wide fixed-point register
+/// and the sum is rounded **once** per output element (posit standard
+/// §quire; the fused-dot mode the paper's hardware could not measure).
+/// For IEEE formats `Quire` selects the closest software analog
+/// (binary64 accumulation for `f32`, Kahan compensation for `f64`) so
+/// mixed-format manifests stay meaningful.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Accum {
+    /// Round after every multiply-accumulate (default; paper semantics).
+    #[default]
+    Rounded,
+    /// Exact fused-dot accumulation, one rounding per output element.
+    Quire,
+}
+
+impl Accum {
+    pub fn name(self) -> &'static str {
+        match self {
+            Accum::Rounded => "rounded",
+            Accum::Quire => "quire",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Accum, String> {
+        match s {
+            "rounded" => Ok(Accum::Rounded),
+            "quire" => Ok(Accum::Quire),
+            other => Err(format!(
+                "unknown accum '{other}' (expected rounded|quire)"
+            )),
+        }
+    }
+}
+
+/// Kahan (compensated) accumulator — the `f64` analog of a quire: the
+/// compensation term recovers most of the per-add rounding error, so the
+/// fused-dot path is strictly more accurate than naive accumulation
+/// without needing a 4096-bit register.
+#[derive(Clone, Copy, Debug)]
+pub struct Kahan {
+    s: f64,
+    c: f64,
+}
+
+impl Kahan {
+    pub const ZERO: Kahan = Kahan { s: 0.0, c: 0.0 };
+
+    #[inline]
+    pub fn add(&mut self, v: f64) {
+        let y = v - self.c;
+        let t = self.s + y;
+        self.c = (t - self.s) - y;
+        self.s = t;
+    }
+
+    #[inline]
+    pub fn finish(self) -> f64 {
+        self.s
+    }
+}
 
 /// An arithmetic format usable by the BLAS/LAPACK routines.
 ///
@@ -140,6 +209,29 @@ pub trait Scalar: Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static {
     /// (`potf2`'s positive-definite check; NaN/NaR report false exactly
     /// like `to_f64() <= 0.0` would).
     fn uacc_le_zero(acc: Self::UAcc) -> bool;
+
+    // --- Quire-exact accumulation ([`Accum::Quire`] jobs) --------------
+    // Fused-dot kernels (`blas::fused`) accumulate whole inner products
+    // in this state and round ONCE per output element. For posits the
+    // state is the standard's quire (512-bit exact fixed point): every
+    // `quire_mac` is exact and `quire_finish` is the single rounding.
+    // IEEE formats get the closest software analog (see [`Accum`]).
+
+    /// Exact (or compensated) dot-product accumulator state.
+    type QuireAcc: Copy + Send + Sync;
+
+    /// Empty accumulator (exact zero).
+    fn quire_zero() -> Self::QuireAcc;
+    /// `acc += a * b` — exact for posits (quire), widened/compensated
+    /// for IEEE formats.
+    fn quire_mac(acc: &mut Self::QuireAcc, a: Self, b: Self);
+    /// `acc -= a * b` — same guarantees as [`Scalar::quire_mac`].
+    fn quire_mac_sub(acc: &mut Self::QuireAcc, a: Self, b: Self);
+    /// `acc += v` (exact for posits: `v * 1`).
+    fn quire_add(acc: &mut Self::QuireAcc, v: Self);
+    /// Round the accumulated sum back to the storage format — the one
+    /// rounding per output element in quire mode.
+    fn quire_finish(acc: Self::QuireAcc) -> Self;
 
     fn zero() -> Self;
     fn one() -> Self;
@@ -380,6 +472,28 @@ impl Scalar for Posit32 {
         acc.le_zero()
     }
 
+    type QuireAcc = Quire;
+    #[inline]
+    fn quire_zero() -> Quire {
+        Quire::new()
+    }
+    #[inline]
+    fn quire_mac(acc: &mut Quire, a: Self, b: Self) {
+        acc.add_product(a.0, b.0);
+    }
+    #[inline]
+    fn quire_mac_sub(acc: &mut Quire, a: Self, b: Self) {
+        acc.sub_product(a.0, b.0);
+    }
+    #[inline]
+    fn quire_add(acc: &mut Quire, v: Self) {
+        acc.add_posit(v.0);
+    }
+    #[inline]
+    fn quire_finish(acc: Quire) -> Posit32 {
+        Posit32(acc.to_posit_bits())
+    }
+
     #[inline]
     fn zero() -> Self {
         Posit32::ZERO
@@ -524,6 +638,29 @@ impl Scalar for f32 {
     fn uacc_le_zero(acc: f32) -> bool {
         acc <= 0.0
     }
+    // Quire analog: accumulate in binary64, where every f32 product is
+    // exact; one narrowing rounding at finish.
+    type QuireAcc = f64;
+    #[inline]
+    fn quire_zero() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn quire_mac(acc: &mut f64, a: f32, b: f32) {
+        *acc += a as f64 * b as f64;
+    }
+    #[inline]
+    fn quire_mac_sub(acc: &mut f64, a: f32, b: f32) {
+        *acc -= a as f64 * b as f64;
+    }
+    #[inline]
+    fn quire_add(acc: &mut f64, v: f32) {
+        *acc += v as f64;
+    }
+    #[inline]
+    fn quire_finish(acc: f64) -> f32 {
+        acc as f32
+    }
     #[inline]
     fn zero() -> Self {
         0.0
@@ -665,6 +802,28 @@ impl Scalar for f64 {
     #[inline]
     fn uacc_le_zero(acc: f64) -> bool {
         acc <= 0.0
+    }
+    // Quire analog: Kahan-compensated binary64 accumulation.
+    type QuireAcc = Kahan;
+    #[inline]
+    fn quire_zero() -> Kahan {
+        Kahan::ZERO
+    }
+    #[inline]
+    fn quire_mac(acc: &mut Kahan, a: f64, b: f64) {
+        acc.add(a * b);
+    }
+    #[inline]
+    fn quire_mac_sub(acc: &mut Kahan, a: f64, b: f64) {
+        acc.add(-(a * b));
+    }
+    #[inline]
+    fn quire_add(acc: &mut Kahan, v: f64) {
+        acc.add(v);
+    }
+    #[inline]
+    fn quire_finish(acc: Kahan) -> f64 {
+        acc.finish()
     }
     #[inline]
     fn zero() -> Self {

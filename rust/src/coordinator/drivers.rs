@@ -27,9 +27,13 @@
 
 use super::{GemmBackend, OffloadStats};
 use crate::blas::{
-    gemm, trsm_unpacked, Diag, Matrix, PackPlan, PackedA, PackedB, Scalar, Side, Trans, Uplo,
+    gemm, trsm_quire, trsm_unpacked, Accum, Diag, Matrix, PackPlan, PackedA, PackedB, Scalar,
+    Side, Trans, Uplo,
 };
-use crate::lapack::{backward_error, getf2_unpacked, getrs, laswp, potf2, potrs, LapackError};
+use crate::lapack::{
+    backward_error, getf2_quire, getf2_unpacked, getrs, getrs_quire, laswp, potf2, potf2_quire,
+    potrs, potrs_quire, LapackError,
+};
 use std::time::Instant;
 
 /// Blocked LU with partial pivoting, trailing update on `backend`.
@@ -246,6 +250,182 @@ pub fn potrf_offload<T: Scalar>(
     Ok(stats)
 }
 
+/// Blocked quire-exact LU with partial pivoting: the `accum=quire`
+/// counterpart of [`getrf_offload`]. The panel and the panel-sized TRSM
+/// run as fused dots on the host ([`getf2_quire`] / [`trsm_quire`]); the
+/// trailing update offloads through [`GemmBackend::gemm_update_quire`],
+/// so under the service quire jobs multiplex onto the same dispatch
+/// queues as rounded jobs. No pack plan is built — fused kernels consume
+/// scalar operands directly (decoding is fused into the accumulate).
+/// The factors deliberately differ from the rounded path's: every stored
+/// entry carries one accumulation rounding instead of one per mac.
+pub fn getrf_offload_quire<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+    nb: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let kmin = m.min(n);
+    let mut info: Option<LapackError> = None;
+    let mut j = 0;
+    while j < kmin {
+        let jb = nb.min(kmin - j);
+        let pm = m - j;
+        let t0 = Instant::now();
+        {
+            let panel = &mut a[j + j * lda..];
+            let mut piv = vec![0usize; jb];
+            if let Err(e) = getf2_quire(pm, jb, panel, lda, &mut piv) {
+                info.get_or_insert(match e {
+                    LapackError::SingularU(i) => LapackError::SingularU(i + j),
+                    other => other,
+                });
+            }
+            for (t, &p) in ipiv[j..j + jb].iter_mut().zip(&piv) {
+                *t = p + j;
+            }
+        }
+        laswp(j, a, lda, j, j + jb, ipiv);
+        if j + jb < n {
+            laswp(n - j - jb, &mut a[(j + jb) * lda..], lda, j, j + jb, ipiv);
+            // U12 = L11^{-1} A12, every entry one fused dot + at most one
+            // divide rounding.
+            let (a11_part, a12_part) = a.split_at_mut((j + jb) * lda);
+            let a11 = &a11_part[j + j * lda..];
+            let a12 = &mut a12_part[j..];
+            trsm_quire(
+                Side::Left,
+                Uplo::Lower,
+                Trans::No,
+                Diag::Unit,
+                jb,
+                n - j - jb,
+                a11,
+                lda,
+                a12,
+                lda,
+            );
+        }
+        stats.panel_s += t0.elapsed().as_secs_f64();
+
+        if j + jb < n && j + jb < m {
+            // Trailing update A22 -= L21 U12, fused — THE OFFLOADED CALL.
+            let t1 = Instant::now();
+            let ncols = n - j - jb;
+            let nrows = m - j - jb;
+            // Stage U12 contiguously: L21 and A22 come from disjoint
+            // column ranges of `a` (split below), but U12 shares A22's
+            // columns, so it needs an owned copy — the same host-side
+            // staging the paper performs before shipping operands.
+            let mut u12 = vec![T::zero(); jb * ncols];
+            for c in 0..ncols {
+                let base = j + (j + jb + c) * lda;
+                u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let (left, right) = a.split_at_mut((j + jb) * lda);
+            let l21 = &left[(j + jb) + j * lda..];
+            let a22 = &mut right[j + jb..];
+            backend
+                .gemm_update_quire(nrows, jb, ncols, l21, lda, &u12, jb, a22, lda)
+                .map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+            stats.simulated_s += backend.simulated_cost(nrows, jb, ncols);
+        }
+        j += jb;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    match info {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// Blocked quire-exact lower Cholesky: the `accum=quire` counterpart of
+/// [`potrf_offload`]. Panel via [`potf2_quire`], panel solve via the
+/// fused `X · L11⁻ᵀ` TRSM, trailing `A22 -= A21 · A21ᵀ` through
+/// [`GemmBackend::gemm_update_quire`] (transpose staged on the host,
+/// like the rounded driver).
+pub fn potrf_offload_quire<T: Scalar>(
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    nb: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        let t0 = Instant::now();
+        {
+            let diag = &mut a[j + j * lda..];
+            potf2_quire(jb, diag, lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(i + j),
+                LapackError::BadValue(i) => LapackError::BadValue(i + j),
+                other => other,
+            })?;
+        }
+        if j + jb < n {
+            let m2 = n - j - jb;
+            // A21 <- A21 L11^{-T}, fused (L11 staged contiguously so the
+            // TRSM reads a clean jb×jb factor).
+            let mut l11 = vec![T::zero(); jb * jb];
+            for c in 0..jb {
+                let base = j + (j + c) * lda;
+                l11[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+            }
+            let a21 = &mut a[(j + jb) + j * lda..];
+            trsm_quire(
+                Side::Right,
+                Uplo::Lower,
+                Trans::Yes,
+                Diag::NonUnit,
+                m2,
+                jb,
+                &l11,
+                jb,
+                a21,
+                lda,
+            );
+            stats.panel_s += t0.elapsed().as_secs_f64();
+
+            // Trailing A22 -= A21 A21ᵀ as a fused GEMM; the transpose is
+            // resolved by host staging (paper §3.1).
+            let t1 = Instant::now();
+            let mut a21_copy = vec![T::zero(); m2 * jb];
+            let mut a21_t = vec![T::zero(); jb * m2];
+            for c in 0..jb {
+                let base = (j + jb) + (j + c) * lda;
+                a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+            }
+            for c in 0..jb {
+                for r in 0..m2 {
+                    a21_t[c + r * jb] = a21_copy[r + c * m2];
+                }
+            }
+            let a22 = &mut a[(j + jb) + (j + jb) * lda..];
+            backend
+                .gemm_update_quire(m2, jb, m2, &a21_copy, m2, &a21_t, jb, a22, lda)
+                .map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            stats.simulated_s += backend.simulated_cost(m2, jb, m2);
+        } else {
+            stats.panel_s += t0.elapsed().as_secs_f64();
+        }
+        j += jb;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
 /// Which blocked factorization [`refine_offload`] runs in the working
 /// format (the service maps its manifest `Alg` onto this).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -287,6 +467,23 @@ pub fn refine_offload<T: Scalar>(
     max_iter: usize,
     backend: &dyn GemmBackend<T>,
 ) -> Result<RefineOutcome, LapackError> {
+    refine_offload_accum(alg, Accum::Rounded, a64, b64, nb, max_iter, backend)
+}
+
+/// [`refine_offload`] with an explicit accumulation mode: `accum=quire`
+/// factorizes through the quire drivers and runs every substitution sweep
+/// as fused dots ([`getrs_quire`] / [`potrs_quire`]); the binary64
+/// residual loop is identical in both modes, so the comparison isolates
+/// the working-format accumulation.
+pub fn refine_offload_accum<T: Scalar>(
+    alg: Factorization,
+    accum: Accum,
+    a64: &Matrix<f64>,
+    b64: &[f64],
+    nb: usize,
+    max_iter: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<RefineOutcome, LapackError> {
     let n = a64.rows;
     assert_eq!(a64.cols, n);
     assert_eq!(b64.len(), n);
@@ -294,15 +491,25 @@ pub fn refine_offload<T: Scalar>(
     // One rounding per entry into the working format (exact via f64).
     let mut af: Matrix<T> = a64.cast();
     let mut ipiv = vec![0usize; n];
-    let mut stats = match alg {
-        Factorization::Lu => {
+    let mut stats = match (alg, accum) {
+        (Factorization::Lu, Accum::Rounded) => {
             getrf_offload(n, n, &mut af.data, n, &mut ipiv, nb, backend)?
         }
-        Factorization::Cholesky => potrf_offload(n, &mut af.data, n, nb, backend)?,
+        (Factorization::Lu, Accum::Quire) => {
+            getrf_offload_quire(n, n, &mut af.data, n, &mut ipiv, nb, backend)?
+        }
+        (Factorization::Cholesky, Accum::Rounded) => {
+            potrf_offload(n, &mut af.data, n, nb, backend)?
+        }
+        (Factorization::Cholesky, Accum::Quire) => {
+            potrf_offload_quire(n, &mut af.data, n, nb, backend)?
+        }
     };
-    let solve = |rhs: &mut [T]| match alg {
-        Factorization::Lu => getrs(n, 1, &af.data, n, &ipiv, rhs, n),
-        Factorization::Cholesky => potrs(n, 1, &af.data, n, rhs, n),
+    let solve = |rhs: &mut [T]| match (alg, accum) {
+        (Factorization::Lu, Accum::Rounded) => getrs(n, 1, &af.data, n, &ipiv, rhs, n),
+        (Factorization::Lu, Accum::Quire) => getrs_quire(n, 1, &af.data, n, &ipiv, rhs, n),
+        (Factorization::Cholesky, Accum::Rounded) => potrs(n, 1, &af.data, n, rhs, n),
+        (Factorization::Cholesky, Accum::Quire) => potrs_quire(n, 1, &af.data, n, rhs, n),
     };
 
     // Initial solve in T, then carry x in f64.
@@ -445,6 +652,124 @@ mod tests {
         let mut ipiv = vec![0; n];
         let err = getrf_offload(n, n, &mut a.data, n, &mut ipiv, 4, &be).unwrap_err();
         assert!(matches!(err, LapackError::SingularU(_)));
+    }
+
+    #[test]
+    fn quire_offload_lu_is_deterministic_and_anchored_to_panel() {
+        // One-panel run (nb >= n) must equal the unblocked quire panel
+        // bit-for-bit (the offload driver adds nothing but the blocking).
+        // Blocked runs round once per block-level trailing update, so
+        // different nb legitimately give different bits — but at a FIXED
+        // nb the result must be bit-identical for every backend thread
+        // count (column-independent fused kernels cannot depend on the
+        // split), and it must still solve.
+        let n = 48;
+        let mut rng = Pcg64::seed(60);
+        let a0 = Matrix::<Posit32>::random_normal(n, n, 1.0, &mut rng);
+        let mut aref = a0.clone();
+        let mut pref = vec![0usize; n];
+        crate::lapack::getf2_quire(n, n, &mut aref.data, n, &mut pref).unwrap();
+        let be1 = NativeBackend::new(1);
+        let mut a1 = a0.clone();
+        let mut p1 = vec![0usize; n];
+        let stats =
+            getrf_offload_quire(n, n, &mut a1.data, n, &mut p1, n, &be1).unwrap();
+        assert_eq!(p1, pref);
+        assert_eq!(a1.data, aref.data, "one-panel quire offload != getf2_quire");
+        assert!(stats.total_s > 0.0);
+        let mut want: Option<(Vec<Posit32>, Vec<usize>)> = None;
+        for threads in [1, 2, 4] {
+            let be = NativeBackend::new(threads);
+            let mut a2 = a0.clone();
+            let mut p2 = vec![0usize; n];
+            getrf_offload_quire(n, n, &mut a2.data, n, &mut p2, 16, &be).unwrap();
+            match &want {
+                None => want = Some((a2.data, p2)),
+                Some((wa, wp)) => {
+                    assert_eq!(&p2, wp, "threads={threads}");
+                    assert_eq!(&a2.data, wa, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quire_offload_cholesky_is_blocked_invariant() {
+        let n = 40;
+        let mut rng = Pcg64::seed(61);
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut af = Matrix::<f64>::zeros(n, n);
+        crate::blas::gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 0.0,
+            &mut af.data, n,
+        );
+        for i in 0..n {
+            af[(i, i)] += 0.5 * n as f64;
+        }
+        let ap: Matrix<Posit32> = af.cast();
+        // One-panel run equals the unblocked quire Cholesky bit-for-bit.
+        let mut aref = ap.clone();
+        crate::lapack::potf2_quire(n, &mut aref.data, n).unwrap();
+        let mut a1 = ap.clone();
+        potrf_offload_quire(n, &mut a1.data, n, n, &NativeBackend::new(1)).unwrap();
+        for j in 0..n {
+            for i in j..n {
+                assert_eq!(aref[(i, j)], a1[(i, j)], "one-panel L({i},{j})");
+            }
+        }
+        // Fixed nb: bit-identical across backend thread counts.
+        let mut want: Option<Matrix<Posit32>> = None;
+        for threads in [1, 4] {
+            let mut a2 = ap.clone();
+            potrf_offload_quire(n, &mut a2.data, n, 12, &NativeBackend::new(threads)).unwrap();
+            match &want {
+                None => want = Some(a2),
+                Some(w) => {
+                    for j in 0..n {
+                        for i in j..n {
+                            assert_eq!(w[(i, j)], a2[(i, j)], "L({i},{j}) threads={threads}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quire_offload_lu_reports_singular() {
+        let n = 8;
+        let mut a = Matrix::<Posit32>::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                a[(i, j)] = Posit32::from_f64(((i + 1) * (j + 1)) as f64);
+            }
+        }
+        let be = NativeBackend::new(1);
+        let mut ipiv = vec![0; n];
+        let err = getrf_offload_quire(n, n, &mut a.data, n, &mut ipiv, 4, &be).unwrap_err();
+        assert!(matches!(err, LapackError::SingularU(_)));
+    }
+
+    #[test]
+    fn refine_offload_quire_reaches_f64_accuracy() {
+        let n = 48;
+        let mut rng = Pcg64::seed(92);
+        let a64 = matgen::normal_f64(n, 1.0, &mut rng);
+        let (_xsol, b64) = matgen::rhs_for(&a64);
+        let be = NativeBackend::new(2);
+        let rq = refine_offload_accum::<Posit32>(
+            Factorization::Lu, Accum::Quire, &a64, &b64, 16, 8, &be,
+        )
+        .unwrap();
+        assert!(rq.iters >= 1);
+        assert!(
+            rq.backward_error < 1e-12,
+            "quire-factorize + f64-refine: {:.2e}",
+            rq.backward_error
+        );
+        // Rounded wrapper still routes to the rounded path.
+        let rr = refine_offload::<Posit32>(Factorization::Lu, &a64, &b64, 16, 8, &be).unwrap();
+        assert!(rr.backward_error < 1e-12);
     }
 
     #[test]

@@ -33,8 +33,8 @@
 pub mod drivers;
 
 use crate::blas::{
-    gemm_parallel, gemm_parallel_scoped, gemm_prepacked_parallel, gemm_prepacked_scoped, pool,
-    PackPlan, Scalar, Trans,
+    gemm_parallel, gemm_parallel_scoped, gemm_prepacked_parallel, gemm_prepacked_scoped,
+    gemm_update_quire, gemm_update_quire_parallel, pool, Accum, PackPlan, Scalar, Trans,
 };
 use crate::posit::Posit32;
 use crate::runtime::{ArtifactKind, Runtime};
@@ -64,6 +64,11 @@ pub struct GemmJob<'a, T: Scalar = Posit32> {
     /// accelerator backends that need raw bit patterns ignore it and use
     /// the scalar views — either way the numerics are identical.
     pub plan: Option<&'a PackPlan<T>>,
+    /// Accumulation mode for this tile: `Rounded` runs the packed
+    /// per-mac-rounding kernels, `Quire` the fused-dot path
+    /// ([`GemmBackend::gemm_update_quire`]). Quire tiles never carry a
+    /// pack plan (the fused kernel reads the scalar operands directly).
+    pub accum: Accum,
 }
 
 /// An accelerator that can apply the trailing-matrix update
@@ -134,6 +139,30 @@ pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
         true
     }
 
+    /// Quire-exact trailing update (`accum=quire` jobs): `C -= A · B`
+    /// with each output element accumulated exactly and rounded once
+    /// ([`crate::blas::gemm_update_quire`]). The default runs the
+    /// sequential fused kernel on the host — correct for every backend,
+    /// since the fused semantics are defined by the format, not the
+    /// device; [`NativeBackend`] overrides it with the pool-parallel
+    /// column split (bit-identical by column independence).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_update_quire(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc);
+        Ok(())
+    }
+
     /// Apply a batch of updates in one submission. Tiles are independent
     /// (each has its own `C`), so every implementation — including ones
     /// that execute the batch concurrently — produces results bit-identical
@@ -145,6 +174,10 @@ pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
         for j in jobs.iter_mut() {
             let (m, k, n) = (j.m, j.k, j.n);
             let (lda, ldb, ldc) = (j.lda, j.ldb, j.ldc);
+            if j.accum == Accum::Quire {
+                self.gemm_update_quire(m, k, n, j.a, lda, j.b, ldb, j.c, ldc)?;
+                continue;
+            }
             match j.plan {
                 Some(plan) => {
                     self.gemm_update_prepacked(m, k, n, j.a, lda, j.b, ldb, plan, j.c, ldc)?
@@ -254,6 +287,24 @@ impl<T: Scalar> GemmBackend<T> for NativeBackend {
         false
     }
 
+    /// Pool-parallel fused-dot update (columns split across the global
+    /// pool; bit-identical to the sequential fused kernel).
+    fn gemm_update_quire(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        gemm_update_quire_parallel(self.threads, m, k, n, a, lda, b, ldb, c, ldc);
+        Ok(())
+    }
+
     /// Batched override: one pool wave over the whole batch. Each tile is
     /// spawned into the scope via the shared column-split engines
     /// ([`gemm_parallel_scoped`], or [`gemm_prepacked_scoped`] for tiles
@@ -274,6 +325,27 @@ impl<T: Scalar> GemmBackend<T> for NativeBackend {
                 // Take the C view whole so chunk tasks can outlive this
                 // loop iteration (the trait allows consuming the views).
                 let c: &mut [T] = std::mem::take(&mut job.c);
+                if job.accum == Accum::Quire {
+                    // Fused-dot tile: split output columns into the same
+                    // scope (column independence keeps it bit-identical
+                    // to the sequential fused kernel).
+                    let (m, k, n) = (job.m, job.k, job.n);
+                    let (a, lda, b, ldb, ldc) = (job.a, job.lda, job.b, job.ldb, job.ldc);
+                    let chunk = n.div_ceil(chunks_per_job).max(1);
+                    let mut rest = c;
+                    let mut j0 = 0usize;
+                    while j0 < n {
+                        let jb = chunk.min(n - j0);
+                        let take = (jb * ldc).min(rest.len());
+                        let (mine, tail) = rest.split_at_mut(take);
+                        rest = tail;
+                        s.spawn(move || {
+                            gemm_update_quire(m, k, jb, a, lda, &b[j0 * ldb..], ldb, mine, ldc);
+                        });
+                        j0 += jb;
+                    }
+                    continue;
+                }
                 match job.plan {
                     Some(plan) => gemm_prepacked_scoped(
                         s,
@@ -530,6 +602,28 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
         self.inner.wants_scalar_tiles()
     }
 
+    /// Charge the model, then forward the fused-dot update to the inner
+    /// backend (same shape-based cost: the model prices the tile's data
+    /// movement and mac count, which the accumulation mode doesn't
+    /// change).
+    fn gemm_update_quire(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let secs = (self.model)(m, k, n);
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.inner.gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc)
+    }
+
     /// Charge the whole batch, then forward it to the inner backend in one
     /// submission (so a batched native inner still overlaps the tiles).
     fn gemm_update_many(&self, jobs: &mut [GemmJob<'_, T>]) -> Result<()> {
@@ -669,6 +763,7 @@ mod tests {
                     c: &mut c.data,
                     ldc: m + pad,
                     plan: None,
+                    accum: Accum::Rounded,
                 })
                 .collect();
             be.gemm_update_many(&mut jobs).unwrap();
@@ -726,6 +821,7 @@ mod tests {
                 c: &mut c2.data,
                 ldc: m,
                 plan: Some(&plan),
+                accum: Accum::Rounded,
             }];
             be.gemm_update_many(&mut jobs).unwrap();
             drop(jobs);

@@ -6,12 +6,18 @@
 //!   survives shorter formats;
 //! * **quire iterative refinement** — accuracy recovered by exact-residual
 //!   refinement (`lapack::gesv_refine`), inside and outside the golden
-//!   zone — the deployment answer to Fig 7's σ ≥ 1e2 losses.
+//!   zone — the deployment answer to Fig 7's σ ≥ 1e2 losses;
+//! * **quire accumulation** — the `accum=quire` mode end to end: LU with
+//!   every inner product fused in the quire vs the conventional
+//!   round-per-mac factorization, digits side by side with binary32 (the
+//!   accumulation-mode column the paper's hardware could not measure).
 
 use super::matgen;
 use crate::blas::Matrix;
 use crate::blas::Scalar;
-use crate::lapack::{backward_error, gesv_refine, getrf, getrs};
+use crate::lapack::{
+    backward_error, gesv_refine, getf2_quire, getrf, getrs, getrs_quire,
+};
 use crate::posit::formats::{P16, P24, P32G};
 use crate::posit::Posit32;
 use crate::rng::Pcg64;
@@ -24,6 +30,19 @@ fn solve_err<T: Scalar>(a64: &Matrix<f64>, b64: &[f64], nb: usize) -> Option<f64
     let mut ipiv = vec![0usize; n];
     getrf(n, n, &mut lu.data, n, &mut ipiv, nb, 1).ok()?;
     getrs(n, 1, &lu.data, n, &ipiv, &mut b, n);
+    let e = backward_error(a64, b64, &b);
+    e.is_finite().then_some(e)
+}
+
+/// Like [`solve_err`] but with every inner product quire-exact: fused-dot
+/// LU ([`getf2_quire`]) and fused substitution sweeps ([`getrs_quire`]).
+fn solve_err_quire<T: Scalar>(a64: &Matrix<f64>, b64: &[f64]) -> Option<f64> {
+    let n = a64.rows;
+    let (a, mut b) = matgen::cast_problem::<T>(a64, b64);
+    let mut lu = a;
+    let mut ipiv = vec![0usize; n];
+    getf2_quire(n, n, &mut lu.data, n, &mut ipiv).ok()?;
+    getrs_quire(n, 1, &lu.data, n, &ipiv, &mut b, n);
     let e = backward_error(a64, b64, &b);
     e.is_finite().then_some(e)
 }
@@ -81,6 +100,37 @@ pub fn run_refinement(quick: bool) {
     t.emit("ext_quire_refinement");
 }
 
+/// Accumulation-mode study: rounded vs quire LU digits, with binary32 as
+/// the baseline column (the service's `accum=` knob, measured offline).
+pub fn run_accum(quick: bool) {
+    let n = if quick { 64 } else { 128 };
+    let mut t = Table::new(
+        &format!("Extension: quire-exact accumulation, LU at N={n} (MEASURED; accum=rounded vs accum=quire)"),
+        &["sigma", "posit32 rounded", "posit32 quire", "quire gain digits", "binary32 err"],
+    );
+    for (i, sigma) in [1e-2, 1.0, 1e2].into_iter().enumerate() {
+        let mut rng = Pcg64::seed(0xACC + i as u64);
+        let a64 = matgen::normal_f64(n, sigma, &mut rng);
+        let (_x, b64) = matgen::rhs_for(&a64);
+        let rounded = solve_err::<Posit32>(&a64, &b64, 32);
+        let quire = solve_err_quire::<Posit32>(&a64, &b64);
+        let ef = solve_err::<f32>(&a64, &b64, 32).unwrap();
+        let f = |e: Option<f64>| e.map_or("fail".into(), |e| format!("{e:.2e}"));
+        let gain = match (rounded, quire) {
+            (Some(r), Some(q)) => format!("{:+.2}", (r / q).log10()),
+            _ => "-".into(),
+        };
+        t.row(&[
+            format!("{sigma:.0e}"),
+            f(rounded),
+            f(quire),
+            gain,
+            format!("{ef:.2e}"),
+        ]);
+    }
+    t.emit("ext_quire_accum");
+}
+
 /// Golden-zone scaling study (the paper's §5.1 remedy, quantified).
 pub fn run_scaling(quick: bool) {
     let n = if quick { 64 } else { 128 };
@@ -116,6 +166,7 @@ pub fn run_scaling(quick: bool) {
 pub fn run(quick: bool) {
     run_formats(quick);
     run_refinement(quick);
+    run_accum(quick);
     run_scaling(quick);
 }
 
@@ -139,5 +190,25 @@ mod tests {
         // golden zone + tapering makes up much of it).
         assert!(e24 < ef * 30.0);
         assert!(e32 < ef);
+    }
+
+    #[test]
+    fn quire_accumulation_never_loses_digits() {
+        // The deferred-rounding solve must be at least as accurate as the
+        // round-per-mac solve on the same problem (small slack for
+        // pivot-path differences between the right-looking rounded and
+        // Crout quire factorizations).
+        for (i, sigma) in [1e-2, 1.0, 1e2].into_iter().enumerate() {
+            let n = 40;
+            let mut rng = Pcg64::seed(0xACC0 + i as u64);
+            let a64 = matgen::normal_f64(n, sigma, &mut rng);
+            let (_x, b64) = matgen::rhs_for(&a64);
+            let rounded = solve_err::<Posit32>(&a64, &b64, 16).unwrap();
+            let quire = solve_err_quire::<Posit32>(&a64, &b64).unwrap();
+            assert!(
+                quire <= rounded * 2.0,
+                "sigma={sigma}: quire {quire:.3e} vs rounded {rounded:.3e}"
+            );
+        }
     }
 }

@@ -12,6 +12,7 @@
 mod error;
 mod getrf;
 mod potrf;
+mod quire;
 mod refine;
 mod scale;
 mod solve;
@@ -21,6 +22,7 @@ pub use refine::{gesv_refine, RefineResult};
 pub use scale::{equilibrate_pow2, gesv_scaled, Equilibration};
 pub use getrf::{getf2, getf2_ref, getf2_unpacked, getrf, getrf_ref, laswp};
 pub use potrf::{potf2, potf2_ref, potrf, potrf_ref};
+pub use quire::{getf2_quire, getrs_quire, potf2_quire, potrs_quire};
 pub use solve::{getrs, potrs};
 
 /// Failure modes of the factorizations (LAPACK `info` codes, typed).

@@ -1,0 +1,276 @@
+//! Quire-exact panel factorizations and solves — the LAPACK layer of
+//! `accum=quire` jobs.
+//!
+//! The rounded panels (`getf2`/`potf2`) round after every
+//! multiply-accumulate; the routines here restructure the same
+//! eliminations into left-looking (Crout) sweeps where each stored entry
+//! is ONE fused dot product — all partial products accumulate exactly in
+//! the format's quire ([`Scalar::QuireAcc`]) and round once, followed by
+//! at most one divide or square-root rounding. The factors therefore
+//! differ (deliberately) from the rounded path: this is the accumulation
+//! mode the paper's hardware could not measure. Oracle-exactness is
+//! pinned at the dot-product primitive by the exhaustive Posit(8,2)
+//! sweep (`tests/quire_exhaustive.rs`); job-level determinism across
+//! worker counts by `tests/service_determinism.rs`.
+
+use super::getrf::laswp;
+use super::LapackError;
+use crate::blas::{trsm_quire, Diag, Scalar, Side, Trans, Uplo};
+
+/// Quire-exact unblocked LU with partial pivoting on an m×n panel:
+/// Crout/left-looking, so every `L\U` entry is one fused dot product
+/// (plus one divide rounding below the diagonal). Pivots are chosen on
+/// the fused-dot column values — the quire analog of `getf2`'s search.
+/// Same contract as [`super::getf2`]: `ipiv` records panel-relative
+/// swaps, a zero pivot is recorded and skipped, and the first singular
+/// column is reported.
+pub fn getf2_quire<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+) -> Result<(), LapackError> {
+    debug_assert!(lda >= m.max(1), "getf2_quire: lda {lda} < m {m}");
+    debug_assert!(
+        m == 0 || n == 0 || a.len() >= lda * (n - 1) + m,
+        "getf2_quire: buffer len {} too small for {m}x{n} at lda {lda}",
+        a.len()
+    );
+    debug_assert!(ipiv.len() >= n.min(m), "getf2_quire: ipiv len {}", ipiv.len());
+    let mut first_singular: Option<usize> = None;
+    for j in 0..n {
+        // Column j, fused: rows above the diagonal become U entries
+        // (dot against their own L row), rows at/below become the
+        // pre-division pivot candidates (dot against the full L row so
+        // far). Each is exactly one quire_finish rounding.
+        for i in 0..m {
+            let lim = i.min(j);
+            if lim == 0 {
+                continue; // nothing to subtract yet
+            }
+            let mut q = T::quire_zero();
+            T::quire_add(&mut q, a[i + j * lda]);
+            for l in 0..lim {
+                T::quire_mac_sub(&mut q, a[i + l * lda], a[l + j * lda]);
+            }
+            a[i + j * lda] = T::quire_finish(q);
+        }
+        if j >= m {
+            continue;
+        }
+        // Pivot search on the fused column values (exact comparison).
+        let mut p = j;
+        for i in j + 1..m {
+            if a[i + j * lda].abs_gt(a[p + j * lda]) {
+                p = i;
+            }
+        }
+        ipiv[j] = p;
+        if a[p + j * lda].is_zero() {
+            first_singular.get_or_insert(j + 1);
+            continue;
+        }
+        if p != j {
+            crate::blas::swap_rows(a, lda, n, j, p);
+        }
+        // Divide the column below the pivot: one rounding each.
+        let piv = a[j + j * lda];
+        for i in j + 1..m {
+            a[i + j * lda] = a[i + j * lda].div(piv);
+        }
+    }
+    match first_singular {
+        Some(i) => Err(LapackError::SingularU(i)),
+        None => Ok(()),
+    }
+}
+
+/// Quire-exact unblocked lower Cholesky: left-looking, each `L` entry is
+/// one fused dot product plus one sqrt (diagonal) or divide (below)
+/// rounding. Same error contract as [`super::potf2`] (`BadValue` /
+/// `NotPositiveDefinite` with 1-based index); the upper triangle is
+/// never touched.
+pub fn potf2_quire<T: Scalar>(n: usize, a: &mut [T], lda: usize) -> Result<(), LapackError> {
+    debug_assert!(lda >= n.max(1), "potf2_quire: lda {lda} < n {n}");
+    debug_assert!(
+        n == 0 || a.len() >= lda * (n - 1) + n,
+        "potf2_quire: buffer len {} too small for {n}x{n} at lda {lda}",
+        a.len()
+    );
+    for j in 0..n {
+        // d = a(j,j) - Σ_{l<j} l(j,l)², fused: one rounding before sqrt.
+        let mut q = T::quire_zero();
+        T::quire_add(&mut q, a[j + j * lda]);
+        for l in 0..j {
+            let v = a[j + l * lda];
+            T::quire_mac_sub(&mut q, v, v);
+        }
+        let d = T::quire_finish(q);
+        if d.is_bad() {
+            return Err(LapackError::BadValue(j + 1));
+        }
+        if d.to_f64() <= 0.0 {
+            return Err(LapackError::NotPositiveDefinite(j + 1));
+        }
+        let ljj = d.sqrt();
+        a[j + j * lda] = ljj;
+        // l(i,j) = fused(a(i,j) - Σ_{l<j} l(i,l) l(j,l)) / l(j,j).
+        for i in j + 1..n {
+            let mut q = T::quire_zero();
+            T::quire_add(&mut q, a[i + j * lda]);
+            for l in 0..j {
+                T::quire_mac_sub(&mut q, a[i + l * lda], a[j + l * lda]);
+            }
+            a[i + j * lda] = T::quire_finish(q).div(ljj);
+        }
+    }
+    Ok(())
+}
+
+/// Quire-exact `getrs` (no-transpose): both substitution sweeps run as
+/// fused dots via [`trsm_quire`]. Solves `A X = B` from a factorization
+/// produced by [`getf2_quire`] (or any L\U + ipiv in the same layout).
+pub fn getrs_quire<T: Scalar>(
+    n: usize,
+    nrhs: usize,
+    lu: &[T],
+    lda: usize,
+    ipiv: &[usize],
+    b: &mut [T],
+    ldb: usize,
+) {
+    laswp(nrhs, b, ldb, 0, n, ipiv);
+    trsm_quire(Side::Left, Uplo::Lower, Trans::No, Diag::Unit, n, nrhs, lu, lda, b, ldb);
+    trsm_quire(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, nrhs, lu, lda, b, ldb);
+}
+
+/// Quire-exact `potrs`: `X = L^{-T} L^{-1} B` with fused substitutions.
+pub fn potrs_quire<T: Scalar>(
+    n: usize,
+    nrhs: usize,
+    l: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    trsm_quire(Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, n, nrhs, l, lda, b, ldb);
+    trsm_quire(Side::Left, Uplo::Lower, Trans::Yes, Diag::NonUnit, n, nrhs, l, lda, b, ldb);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{backward_error, getf2, potf2};
+    use super::*;
+    use crate::blas::{gemm, Matrix};
+    use crate::posit::Posit32;
+    use crate::rng::Pcg64;
+
+    fn spd(n: usize, seed: u64) -> Matrix<f64> {
+        let mut rng = Pcg64::seed(seed);
+        let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let mut a = Matrix::<f64>::zeros(n, n);
+        gemm(
+            Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 0.0, &mut a.data, n,
+        );
+        for i in 0..n {
+            a[(i, i)] += n as f64 * 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn quire_lu_solves_no_worse_than_rounded() {
+        let n = 40;
+        let mut rng = Pcg64::seed(400);
+        let a64 = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+        let xsol = vec![1.0 / (n as f64).sqrt(); n];
+        let mut b64 = vec![0.0f64; n];
+        gemm(
+            Trans::No, Trans::No, n, 1, n, 1.0, &a64.data, n, &xsol, n, 0.0, &mut b64, n,
+        );
+        let a: Matrix<Posit32> = a64.cast();
+        let bp: Vec<Posit32> = b64.iter().map(|&v| Posit32::from_f64(v)).collect();
+
+        let mut luq = a.clone();
+        let mut pq = vec![0usize; n];
+        getf2_quire(n, n, &mut luq.data, n, &mut pq).unwrap();
+        let mut xq = bp.clone();
+        getrs_quire(n, 1, &luq.data, n, &pq, &mut xq, n);
+
+        let mut lur = a.clone();
+        let mut pr = vec![0usize; n];
+        getf2(n, n, &mut lur.data, n, &mut pr).unwrap();
+        let mut xr = bp.clone();
+        crate::lapack::getrs(n, 1, &lur.data, n, &pr, &mut xr, n);
+
+        let eq = backward_error(&a64, &b64, &xq);
+        let er = backward_error(&a64, &b64, &xr);
+        assert!(eq.is_finite() && eq > 0.0);
+        assert!(eq <= er * 1.5, "quire berr {eq:.3e} vs rounded {er:.3e}");
+    }
+
+    #[test]
+    fn quire_cholesky_solves_no_worse_than_rounded() {
+        let n = 32;
+        let a64 = spd(n, 401);
+        let xsol = vec![1.0 / (n as f64).sqrt(); n];
+        let mut b64 = vec![0.0f64; n];
+        gemm(
+            Trans::No, Trans::No, n, 1, n, 1.0, &a64.data, n, &xsol, n, 0.0, &mut b64, n,
+        );
+        let a: Matrix<Posit32> = a64.cast();
+        let bp: Vec<Posit32> = b64.iter().map(|&v| Posit32::from_f64(v)).collect();
+
+        let mut lq = a.clone();
+        potf2_quire(n, &mut lq.data, n).unwrap();
+        let mut xq = bp.clone();
+        potrs_quire(n, 1, &lq.data, n, &mut xq, n);
+
+        let mut lr = a.clone();
+        potf2(n, &mut lr.data, n).unwrap();
+        let mut xr = bp.clone();
+        crate::lapack::potrs(n, 1, &lr.data, n, &mut xr, n);
+
+        let eq = backward_error(&a64, &b64, &xq);
+        let er = backward_error(&a64, &b64, &xr);
+        assert!(eq.is_finite() && eq > 0.0);
+        assert!(eq <= er * 1.5, "quire berr {eq:.3e} vs rounded {er:.3e}");
+    }
+
+    #[test]
+    fn quire_cholesky_factor_reconstructs() {
+        // L·Lᵀ must reproduce A to format accuracy (validity, not just
+        // relative comparison).
+        let n = 20;
+        let a64 = spd(n, 402);
+        let a: Matrix<Posit32> = a64.cast();
+        let mut l = a.clone();
+        potf2_quire(n, &mut l.data, n).unwrap();
+        let mut lf = Matrix::<f64>::zeros(n, n);
+        for j in 0..n {
+            for i in j..n {
+                lf[(i, j)] = l[(i, j)].to_f64();
+            }
+        }
+        let mut llt = Matrix::<f64>::zeros(n, n);
+        gemm(
+            Trans::No, Trans::Yes, n, n, n, 1.0, &lf.data, n, &lf.data, n, 0.0, &mut llt.data, n,
+        );
+        let scale = a64.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!(llt.max_abs_diff(&a64) < 1e-5 * scale, "LLᵀ far from A");
+    }
+
+    #[test]
+    fn quire_lu_rejects_singular() {
+        let n = 4;
+        let mut a = Matrix::<f64>::from_fn(n, n, |i, j| ((i + 1) * (j + 1)) as f64);
+        let mut ipiv = vec![0usize; n];
+        let err = getf2_quire(n, n, &mut a.data, n, &mut ipiv).unwrap_err();
+        assert!(matches!(err, LapackError::SingularU(_)));
+        let mut bad = Matrix::<f64>::identity(3);
+        bad[(2, 2)] = -1.0;
+        let err = potf2_quire(3, &mut bad.data, 3).unwrap_err();
+        assert_eq!(err, LapackError::NotPositiveDefinite(3));
+    }
+}

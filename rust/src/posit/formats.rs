@@ -11,6 +11,7 @@
 //! dedicated branchless implementation.
 
 use super::generic::{Decoded, NoTrace, PositSpec};
+use super::quire::GQuire;
 use crate::blas::Scalar;
 
 /// A posit value of `NBITS` total bits and `ES` exponent bits.
@@ -323,6 +324,30 @@ impl<const NBITS: u32, const ES: u32> Scalar for P<NBITS, ES> {
     fn uacc_le_zero(acc: GUnpacked<NBITS, ES>) -> bool {
         acc.flags == GUnpacked::<NBITS, ES>::ZERO_F
             || (acc.flags == GUnpacked::<NBITS, ES>::REAL && acc.neg)
+    }
+
+    // The posit standard's quire, shared with Posit32 (every format the
+    // crate instantiates fits the 512-bit frame; see `posit::quire`).
+    type QuireAcc = GQuire<NBITS, ES>;
+    #[inline]
+    fn quire_zero() -> GQuire<NBITS, ES> {
+        GQuire::new()
+    }
+    #[inline]
+    fn quire_mac(acc: &mut GQuire<NBITS, ES>, a: Self, b: Self) {
+        acc.add_product(a.0, b.0);
+    }
+    #[inline]
+    fn quire_mac_sub(acc: &mut GQuire<NBITS, ES>, a: Self, b: Self) {
+        acc.sub_product(a.0, b.0);
+    }
+    #[inline]
+    fn quire_add(acc: &mut GQuire<NBITS, ES>, v: Self) {
+        acc.add_product(v.0, Self::one().0);
+    }
+    #[inline]
+    fn quire_finish(acc: GQuire<NBITS, ES>) -> Self {
+        P(acc.to_bits())
     }
 
     #[inline]

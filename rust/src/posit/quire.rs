@@ -10,14 +10,151 @@
 //! representable (lowest possible product bit = minpos² = 2^-240, highest
 //! = maxpos² = 2^240), and 31 carry bits of headroom allow ≥ 2^31
 //! accumulations without overflow — enough for any N used here.
+//!
+//! [`GQuire`] reuses the same 512-bit frame for any `P<NBITS, ES>` format
+//! with `max_scale <= 120` (every format this crate instantiates): the
+//! posit taper guarantees each product's lowest set bit has weight
+//! ≥ 2^(-2·max_scale) ≥ 2^-240, so products stay exact in the shared
+//! layout and narrower formats simply use fewer of its bits. The
+//! Posit(8,2) instantiation is small enough to sweep **exhaustively**
+//! against a big-rational oracle (`rust/tests/quire_exhaustive.rs`,
+//! `python/tools/check_quire.py`), which pins the shared limb arithmetic
+//! for the 32-bit quire too.
 
+use super::generic::{NoTrace, PositSpec};
 use super::{pack32, unpack32, NAR_BITS, ZERO_BITS};
 
-/// 512-bit two's-complement fixed-point accumulator.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Little-endian 512-bit limb vector; bit 0 of `[0]` has weight 2^-240.
+type Limbs = [u64; 8];
+
+/// Add (or subtract) `v << off` into the 512-bit two's-complement value.
+#[inline]
+fn limbs_add_shifted(limbs: &mut Limbs, v: u64, off: u32, negate: bool) {
+    let limb = (off / 64) as usize;
+    let sh = off % 64;
+    // Up to two limbs are touched by a shifted u64.
+    let lo = v.unbounded_shl(sh);
+    let mid = if sh == 0 { 0 } else { v >> (64 - sh) };
+    debug_assert!(limb + 1 < 8 || mid == 0, "quire overflow");
+    if negate {
+        limbs_sub_at(limbs, limb, lo);
+        if mid != 0 {
+            limbs_sub_at(limbs, limb + 1, mid);
+        }
+    } else {
+        limbs_add_at(limbs, limb, lo);
+        if mid != 0 {
+            limbs_add_at(limbs, limb + 1, mid);
+        }
+    }
+}
+
+#[inline]
+fn limbs_add_at(limbs: &mut Limbs, mut i: usize, v: u64) {
+    let (s, mut carry) = limbs[i].overflowing_add(v);
+    limbs[i] = s;
+    while carry {
+        i += 1;
+        if i == 8 {
+            // Two's complement wrap: only legal when crossing between
+            // negative and non-negative totals; headroom (31 carry
+            // bits) makes true overflow unreachable in our workloads.
+            return;
+        }
+        let (s, c) = limbs[i].overflowing_add(1);
+        limbs[i] = s;
+        carry = c;
+    }
+}
+
+#[inline]
+fn limbs_sub_at(limbs: &mut Limbs, mut i: usize, v: u64) {
+    let (s, mut borrow) = limbs[i].overflowing_sub(v);
+    limbs[i] = s;
+    while borrow {
+        i += 1;
+        if i == 8 {
+            return;
+        }
+        let (s, b) = limbs[i].overflowing_sub(1);
+        limbs[i] = s;
+        borrow = b;
+    }
+}
+
+/// Round the 512-bit two's-complement value to a normalized
+/// `(negative, scale, Q1.63 sig with sticky OR-ed into bit 0)` triple, the
+/// convention both [`pack32`] and [`PositSpec::encode`] consume. `None`
+/// means exactly zero. The 64-bit window always contains the round
+/// position of every format with ≤ 62 fraction bits, so feeding the triple
+/// to either encoder yields correctly rounded (RNE) results.
+fn limbs_round(limbs: &Limbs) -> Option<(bool, i32, u64)> {
+    let negative = limbs[7] >> 63 != 0;
+    // Magnitude of the two's-complement value.
+    let mag = if negative {
+        let mut m = [0u64; 8];
+        let mut carry = 1u128;
+        for i in 0..8 {
+            let t = (!limbs[i]) as u128 + carry;
+            m[i] = t as u64;
+            carry = t >> 64;
+        }
+        m
+    } else {
+        *limbs
+    };
+    // Find the most significant set bit.
+    let mut msb: i32 = -1;
+    for i in (0..8).rev() {
+        if mag[i] != 0 {
+            msb = (i as i32) * 64 + (63 - mag[i].leading_zeros() as i32);
+            break;
+        }
+    }
+    if msb < 0 {
+        return None;
+    }
+    let scale = msb - 240;
+    // Extract 64 bits starting at the msb (Q1.63), sticky from below.
+    let mut sig: u64 = 0;
+    let mut sticky = false;
+    for bit in 0..64 {
+        let pos = msb - bit;
+        if pos < 0 {
+            break;
+        }
+        let (l, s) = ((pos / 64) as usize, (pos % 64) as u32);
+        sig |= ((mag[l] >> s) & 1) << (63 - bit);
+    }
+    let tail_top = msb - 64;
+    if tail_top >= 0 {
+        'outer: for i in 0..8usize {
+            if (i as i32) * 64 > tail_top {
+                break;
+            }
+            let limb = mag[i];
+            let hi_in_limb = (tail_top - (i as i32) * 64).min(63);
+            if hi_in_limb >= 0 {
+                let mask = if hi_in_limb == 63 {
+                    u64::MAX
+                } else {
+                    (1u64 << (hi_in_limb + 1)) - 1
+                };
+                if limb & mask != 0 {
+                    sticky = true;
+                    break 'outer;
+                }
+            }
+        }
+    }
+    Some((negative, scale, sig | sticky as u64))
+}
+
+/// 512-bit two's-complement fixed-point accumulator for Posit(32,2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Quire {
     /// Little-endian limbs; bit 0 of `limbs[0]` has weight 2^-240.
-    limbs: [u64; 8],
+    limbs: Limbs,
     /// NaR is absorbing for the whole accumulation.
     nar: bool,
 }
@@ -59,6 +196,11 @@ impl Quire {
         self.add_product(p, super::ONE_BITS)
     }
 
+    /// `q -= p` exactly.
+    pub fn sub_posit(&mut self, p: u32) {
+        self.sub_product(p, super::ONE_BITS)
+    }
+
     fn fused(&mut self, a: u32, b: u32, negate: bool) {
         if self.nar || a == NAR_BITS || b == NAR_BITS {
             self.nar = true;
@@ -76,65 +218,13 @@ impl Quire {
         // Bit 0 of `prod` lands at quire bit (s - 62 + 240).
         let off = s + 178;
         if off >= 0 {
-            self.add_shifted(prod, off as u32, neg);
+            limbs_add_shifted(&mut self.limbs, prod, off as u32, neg);
         } else {
             // The analysis above guarantees the dropped low bits are zero
             // (fraction width shrinks exactly as fast as the scale drops).
             let sh = (-off) as u32;
             debug_assert!(prod & ((1u64 << sh) - 1) == 0, "quire product underflow");
-            self.add_shifted(prod >> sh, 0, neg);
-        }
-    }
-
-    /// Add (or subtract) `v << off` into the accumulator.
-    fn add_shifted(&mut self, v: u64, off: u32, negate: bool) {
-        let limb = (off / 64) as usize;
-        let sh = off % 64;
-        // Up to three limbs are touched by a shifted u64.
-        let lo = v.unbounded_shl(sh);
-        let mid = if sh == 0 { 0 } else { v >> (64 - sh) };
-        debug_assert!(limb + 1 < 8 || mid == 0, "quire overflow");
-        if negate {
-            self.sub_at(limb, lo);
-            if mid != 0 {
-                self.sub_at(limb + 1, mid);
-            }
-        } else {
-            self.add_at(limb, lo);
-            if mid != 0 {
-                self.add_at(limb + 1, mid);
-            }
-        }
-    }
-
-    fn add_at(&mut self, mut i: usize, v: u64) {
-        let (s, mut carry) = self.limbs[i].overflowing_add(v);
-        self.limbs[i] = s;
-        while carry {
-            i += 1;
-            if i == 8 {
-                // Two's complement wrap: only legal when crossing between
-                // negative and non-negative totals; headroom (31 carry
-                // bits) makes true overflow unreachable in our workloads.
-                return;
-            }
-            let (s, c) = self.limbs[i].overflowing_add(1);
-            self.limbs[i] = s;
-            carry = c;
-        }
-    }
-
-    fn sub_at(&mut self, mut i: usize, v: u64) {
-        let (s, mut borrow) = self.limbs[i].overflowing_sub(v);
-        self.limbs[i] = s;
-        while borrow {
-            i += 1;
-            if i == 8 {
-                return;
-            }
-            let (s, b) = self.limbs[i].overflowing_sub(1);
-            self.limbs[i] = s;
-            borrow = b;
+            limbs_add_shifted(&mut self.limbs, prod >> sh, 0, neg);
         }
     }
 
@@ -144,65 +234,10 @@ impl Quire {
         if self.nar {
             return NAR_BITS;
         }
-        let negative = self.limbs[7] >> 63 != 0;
-        // Magnitude of the two's-complement value.
-        let mag = if negative {
-            let mut m = [0u64; 8];
-            let mut carry = 1u128;
-            for i in 0..8 {
-                let t = (!self.limbs[i]) as u128 + carry;
-                m[i] = t as u64;
-                carry = t >> 64;
-            }
-            m
-        } else {
-            self.limbs
-        };
-        // Find the most significant set bit.
-        let mut msb: i32 = -1;
-        for i in (0..8).rev() {
-            if mag[i] != 0 {
-                msb = (i as i32) * 64 + (63 - mag[i].leading_zeros() as i32);
-                break;
-            }
+        match limbs_round(&self.limbs) {
+            None => ZERO_BITS,
+            Some((negative, scale, sig)) => pack32(negative, scale, sig),
         }
-        if msb < 0 {
-            return ZERO_BITS;
-        }
-        let scale = msb - 240;
-        // Extract 64 bits starting at the msb (Q1.63), sticky from below.
-        let mut sig: u64 = 0;
-        let mut sticky = false;
-        for bit in 0..64 {
-            let pos = msb - bit;
-            if pos < 0 {
-                break;
-            }
-            let (l, s) = ((pos / 64) as usize, (pos % 64) as u32);
-            sig |= ((mag[l] >> s) & 1) << (63 - bit);
-        }
-        let tail_top = msb - 64;
-        if tail_top >= 0 {
-            'outer: for i in 0..8usize {
-                if (i as i32) * 64 > tail_top {
-                    break;
-                }
-                let limb = mag[i];
-                let hi_in_limb = (tail_top - (i as i32) * 64).min(63);
-                if hi_in_limb >= 0 {
-                    let mask = if hi_in_limb == 63 {
-                        u64::MAX
-                    } else {
-                        (1u64 << (hi_in_limb + 1)) - 1
-                    };
-                    if limb & mask != 0 {
-                        sticky = true;
-                        break 'outer;
-                    }
-                }
-            }
-        }
-        pack32(negative, scale, sig | sticky as u64)
     }
 
     /// Exact fused dot product of two posit vectors: one rounding total.
@@ -216,9 +251,118 @@ impl Quire {
     }
 }
 
+/// The same 512-bit quire for any generic posit format `P<NBITS, ES>` with
+/// `max_scale() <= 120` — i.e. every format the crate instantiates (the
+/// layout hosts products down to 2^-240 = minpos² of Posit(32,2); narrower
+/// formats have strictly smaller dynamic range). Products are formed from
+/// the generic decoder's exact Q1.63 significands, so like [`Quire`] the
+/// accumulation is bit-exact and a single rounding happens at
+/// [`GQuire::to_bits`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GQuire<const NBITS: u32, const ES: u32> {
+    limbs: Limbs,
+    nar: bool,
+}
+
+impl<const NBITS: u32, const ES: u32> Default for GQuire<NBITS, ES> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<const NBITS: u32, const ES: u32> GQuire<NBITS, ES> {
+    const SPEC: PositSpec = PositSpec {
+        nbits: NBITS,
+        es: ES,
+    };
+
+    pub const fn new() -> Self {
+        debug_assert!(((NBITS - 2) << ES) <= 120, "format exceeds quire range");
+        GQuire {
+            limbs: [0; 8],
+            nar: false,
+        }
+    }
+
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// `q += a * b` exactly (format-width posit bit patterns).
+    pub fn add_product(&mut self, a: u32, b: u32) {
+        self.fused(a, b, false)
+    }
+
+    /// `q -= a * b` exactly.
+    pub fn sub_product(&mut self, a: u32, b: u32) {
+        self.fused(a, b, true)
+    }
+
+    fn fused(&mut self, a: u32, b: u32, negate: bool) {
+        let spec = Self::SPEC;
+        if self.nar || a & spec.mask() == spec.nar() || b & spec.mask() == spec.nar() {
+            self.nar = true;
+            return;
+        }
+        let (da, db) = match (spec.decode(a, &mut NoTrace), spec.decode(b, &mut NoTrace)) {
+            (Some(da), Some(db)) => (da, db),
+            _ => return, // exact zero operand: the product adds nothing
+        };
+        let neg = (da.neg ^ db.neg) ^ negate;
+        // Q1.63 * Q1.63 = Q2.126 exact product; value = prod * 2^(s - 126).
+        let prod = (da.sig as u128) * (db.sig as u128);
+        let s = da.scale + db.scale;
+        // Bit 0 of `prod` lands at quire bit (s - 126 + 240).
+        let off = s + 114;
+        let (lo, hi, base) = if off >= 0 {
+            (prod as u64, (prod >> 64) as u64, off as u32)
+        } else {
+            // Posit taper: the product's lowest set bit has weight
+            // >= 2^-240, so the dropped bits are all zero.
+            let sh = (-off) as u32;
+            debug_assert!(sh < 128 && prod & ((1u128 << sh) - 1) == 0);
+            let shifted = prod >> sh;
+            (shifted as u64, (shifted >> 64) as u64, 0)
+        };
+        limbs_add_shifted(&mut self.limbs, lo, base, neg);
+        if hi != 0 {
+            limbs_add_shifted(&mut self.limbs, hi, base + 64, neg);
+        }
+    }
+
+    /// Round the accumulated value to the nearest `P<NBITS, ES>` pattern —
+    /// the fused dot product's single rounding, with the format's
+    /// saturation (never to zero, clamped to ±maxpos) applied by the
+    /// generic encoder.
+    pub fn to_bits(&self) -> u32 {
+        let spec = Self::SPEC;
+        if self.nar {
+            return spec.nar();
+        }
+        match limbs_round(&self.limbs) {
+            None => 0,
+            Some((negative, scale, sig)) => spec.encode(negative, scale, sig, &mut NoTrace),
+        }
+    }
+
+    /// Exact fused dot product of two bit-pattern vectors.
+    pub fn dot(a: &[u32], b: &[u32]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut q = Self::new();
+        for (&x, &y) in a.iter().zip(b) {
+            q.add_product(x, y);
+        }
+        q.to_bits()
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::{add, mul, Posit32, ONE_BITS};
+    use super::super::{add, mul, Posit32, MAXPOS_BITS, MINPOS_BITS, ONE_BITS};
     use super::*;
     use crate::rng::Pcg64;
 
@@ -240,7 +384,6 @@ mod tests {
 
     #[test]
     fn extreme_products_exact() {
-        use crate::posit::{MAXPOS_BITS, MINPOS_BITS};
         let mut q = Quire::new();
         q.add_product(MINPOS_BITS, MINPOS_BITS); // 2^-240: quire bit 0
         assert!(!q.is_zero());
@@ -289,5 +432,104 @@ mod tests {
         q.add_product(NAR_BITS, ONE_BITS);
         q.add_posit(p(5.0));
         assert_eq!(q.to_posit_bits(), NAR_BITS);
+    }
+
+    // ------ edge cases pinned by the exhaustive oracle sweep -------------
+
+    #[test]
+    fn nar_propagates_through_dot_regardless_of_position() {
+        // NaR anywhere in either vector must poison the whole dot, even
+        // when paired with a zero (NaR * 0 is NaR, not 0) and even as the
+        // final element.
+        for pos in [0usize, 1, 3] {
+            let mut a = vec![p(1.5), p(-2.0), p(0.25), p(8.0)];
+            let b = vec![ZERO_BITS, p(3.0), p(-0.5), ZERO_BITS];
+            a[pos] = NAR_BITS;
+            assert_eq!(Quire::dot(&a, &b), NAR_BITS, "NaR at {pos}");
+            assert_eq!(Quire::dot(&b, &a), NAR_BITS, "NaR at {pos}, swapped");
+        }
+    }
+
+    #[test]
+    fn zero_products_leave_state_untouched() {
+        // 0 * x and x * 0 contribute nothing — including x = maxpos, where
+        // a decode of the zero operand must short-circuit before any shift
+        // arithmetic; and a sum that cancels to exactly zero extracts
+        // ZERO_BITS (posits have a single unsigned zero; no -0).
+        let mut q = Quire::new();
+        q.add_product(ZERO_BITS, MAXPOS_BITS);
+        q.add_product(MAXPOS_BITS, ZERO_BITS);
+        q.sub_product(ZERO_BITS, ZERO_BITS);
+        assert!(q.is_zero());
+        assert_eq!(q.to_posit_bits(), ZERO_BITS);
+        q.add_product(p(3.0), p(7.0));
+        q.sub_product(p(-3.0), p(-7.0));
+        assert!(q.is_zero(), "exact cancellation must restore all-zero limbs");
+        assert_eq!(q.to_posit_bits(), ZERO_BITS);
+    }
+
+    #[test]
+    fn borrow_ripples_across_limb_boundaries() {
+        // 1.0 sits at quire bit 240 (limb 3); subtracting minpos² (bit 0,
+        // limb 0) must borrow through three all-zero limbs, leaving
+        // 0.111...1 (240 ones). Rounding that is the RNE boundary case:
+        // sig = all-ones + sticky rounds back up to exactly 1.0.
+        let mut q = Quire::new();
+        q.add_posit(ONE_BITS);
+        q.sub_product(MINPOS_BITS, MINPOS_BITS);
+        assert!(!q.is_zero());
+        assert_eq!(q.to_posit_bits(), ONE_BITS);
+        // Restoring the bit must ripple the carry back up to bit 240.
+        q.add_product(MINPOS_BITS, MINPOS_BITS);
+        let mut one = Quire::new();
+        one.add_posit(ONE_BITS);
+        assert_eq!(q, one, "carry must ripple back across the limb boundary");
+    }
+
+    #[test]
+    fn carry_crosses_sign_without_corruption() {
+        // Running sum dips negative then recovers: two's-complement wrap
+        // at the top limb must be lossless in both directions.
+        let mut q = Quire::new();
+        q.sub_product(MAXPOS_BITS, MAXPOS_BITS); // -2^240
+        q.add_product(MAXPOS_BITS, MAXPOS_BITS); // back to 0
+        assert!(q.is_zero());
+        q.sub_posit(p(2.0));
+        q.add_posit(p(5.0));
+        assert_eq!(q.to_posit_bits(), p(3.0));
+    }
+
+    #[test]
+    fn gquire_matches_posit32_quire_for_p32() {
+        // The generic quire instantiated at (32,2) must agree with the
+        // specialized one on random mixed-scale dots.
+        let mut rng = Pcg64::seed(77);
+        for trial in 0..200 {
+            let n = 1 + (trial % 7);
+            let v = |rng: &mut Pcg64| {
+                let e = (rng.below(61) as i32) - 30;
+                p(rng.normal() * 2f64.powi(e))
+            };
+            let a: Vec<u32> = (0..n).map(|_| v(&mut rng)).collect();
+            let b: Vec<u32> = (0..n).map(|_| v(&mut rng)).collect();
+            assert_eq!(
+                GQuire::<32, 2>::dot(&a, &b),
+                Quire::dot(&a, &b),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn gquire_p8_extremes_saturate_and_absorb() {
+        let spec = PositSpec::P8;
+        let mut q = GQuire::<8, 2>::new();
+        q.add_product(spec.maxpos(), spec.maxpos()); // 2^48 > maxpos
+        assert_eq!(q.to_bits(), spec.maxpos(), "saturation on extract");
+        let mut q = GQuire::<8, 2>::new();
+        q.add_product(spec.minpos(), spec.minpos()); // 2^-48 < minpos
+        assert_eq!(q.to_bits(), spec.minpos(), "never rounds to zero");
+        q.add_product(spec.nar(), 0);
+        assert_eq!(q.to_bits(), spec.nar(), "NaR * zero is NaR");
     }
 }

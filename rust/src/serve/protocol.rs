@@ -2,9 +2,10 @@
 //!
 //! One request per line, one JSON-object reply per request, over a local
 //! Unix-domain socket. Submissions reuse the manifest job schema
-//! (`alg`/`n`/`nb`/`seed`/`sigma`/`class`/`precision`/`mode`/`backend`,
-//! exactly the `key=value` vocabulary of [`crate::service::parse_manifest`])
-//! as flat JSON fields, plus `priority` for the admission lane:
+//! (`alg`/`n`/`nb`/`seed`/`sigma`/`class`/`precision`/`mode`/`accum`/
+//! `backend`, exactly the `key=value` vocabulary of
+//! [`crate::service::parse_manifest`]) as flat JSON fields, plus
+//! `priority` for the admission lane:
 //!
 //! ```text
 //! {"op": "submit", "id": 7, "alg": "lu", "n": 256, "precision": "f32", "priority": "high"}
@@ -25,8 +26,15 @@
 //! mirroring the hand-rolled emission in `service::engine`. Job `seed`s
 //! travel as JSON numbers, so values above 2^53 would lose precision;
 //! manifest-derived seeds are far below that.
+//!
+//! Malformed input never panics and never defaults: truncated lines,
+//! unknown enum values (`accum=exact`, `priority=turbo`, …), duplicate
+//! keys, and oversized lines or string fields (see [`MAX_LINE_BYTES`] /
+//! [`MAX_STRING_BYTES`]) all produce a deterministic `op=error` reply.
+//! Pinned by the corpus in `rust/tests/serve_daemon.rs`.
 
 use super::daemon::DrainSummary;
+use crate::blas::Accum;
 use crate::service::{Alg, JobSpec, MatrixClass, Mode, Precision};
 use anyhow::{anyhow, bail, Result};
 
@@ -95,6 +103,15 @@ pub enum JsonValue {
     Bool(bool),
     Null,
 }
+
+/// Hard ceiling on one request line. A well-formed request is a few
+/// hundred bytes, so anything bigger is a broken or hostile client;
+/// the reply is a deterministic `error`, not an allocation spiral.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Hard ceiling on one string field (key or value). The longest
+/// legitimate string in the grammar is a backend label.
+pub const MAX_STRING_BYTES: usize = 1024;
 
 struct Cursor<'a> {
     bytes: &'a [u8],
@@ -172,6 +189,9 @@ impl<'a> Cursor<'a> {
                 // byte-by-byte (escapes are ASCII, so boundaries hold).
                 Some(b) => out.push(b),
             }
+            if out.len() > MAX_STRING_BYTES {
+                bail!("string field exceeds {MAX_STRING_BYTES} bytes");
+            }
         }
         String::from_utf8(out).map_err(|_| anyhow!("invalid UTF-8 in string"))
     }
@@ -210,11 +230,18 @@ impl<'a> Cursor<'a> {
 }
 
 /// Parse one flat JSON object line into its `(key, value)` fields.
+/// Rejects (deterministically — the caller replies `op=error`): lines
+/// over [`MAX_LINE_BYTES`], strings over [`MAX_STRING_BYTES`], nested
+/// values, and duplicate keys (a duplicate is always a client bug;
+/// first-wins or last-wins would silently mask it).
 pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonValue)>> {
+    if line.len() > MAX_LINE_BYTES {
+        bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+    }
     let mut c = Cursor { bytes: line.as_bytes(), pos: 0 };
     c.skip_ws();
     c.expect(b'{')?;
-    let mut fields = Vec::new();
+    let mut fields: Vec<(String, JsonValue)> = Vec::new();
     c.skip_ws();
     if c.peek() == Some(b'}') {
         c.bump();
@@ -226,6 +253,9 @@ pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonValue)>> {
             c.expect(b':')?;
             c.skip_ws();
             let value = c.parse_value()?;
+            if fields.iter().any(|(k, _)| *k == key) {
+                bail!("duplicate key '{key}'");
+            }
             fields.push((key, value));
             c.skip_ws();
             match c.bump() {
@@ -311,6 +341,9 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
             if let Some(mode) = get_str(&fields, "mode") {
                 spec.mode = Mode::parse(mode)?;
             }
+            if let Some(accum) = get_str(&fields, "accum") {
+                spec.accum = Accum::parse(accum).map_err(|e| anyhow!(e))?;
+            }
             if let Some(backend) = get_str(&fields, "backend") {
                 spec.backend = backend.to_string();
             }
@@ -336,7 +369,7 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
 /// Serialize one job submission (the client side of `op=submit`).
 pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
     format!(
-        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"backend\": \"{}\", \"priority\": \"{}\"}}",
+        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"backend\": \"{}\", \"priority\": \"{}\"}}",
         spec.id,
         spec.alg.name(),
         spec.n,
@@ -346,6 +379,7 @@ pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
         spec.class.name(),
         spec.precision.name(),
         spec.mode.name(),
+        spec.accum.name(),
         esc(&spec.backend),
         priority.name(),
     )
@@ -471,6 +505,7 @@ mod tests {
         let mut spec = JobSpec::new(3, Alg::Lu, 96);
         spec.precision = Precision::F64;
         spec.mode = Mode::Refine;
+        spec.accum = Accum::Quire;
         spec.sigma = 0.01;
         let line = submit_line(&spec, Priority::Low);
         match parse_request(&line, 0).unwrap() {
@@ -481,10 +516,32 @@ mod tests {
                 assert_eq!(back.sigma, spec.sigma);
                 assert_eq!(back.precision, spec.precision);
                 assert_eq!(back.mode, spec.mode);
+                assert_eq!(back.accum, Accum::Quire);
                 assert_eq!(priority, Priority::Low);
             }
             other => panic!("wrong request: {other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_accum_field_and_defaults_to_rounded() {
+        let line = "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"accum\": \"quire\"}";
+        match parse_request(line, 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.accum, Accum::Quire),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32}", 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.accum, Accum::Rounded),
+            other => panic!("wrong request: {other:?}"),
+        }
+        assert!(
+            parse_request(
+                "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"accum\": \"exact\"}",
+                0
+            )
+            .is_err(),
+            "unknown accum values are rejected, not defaulted"
+        );
     }
 
     #[test]
@@ -530,6 +587,32 @@ mod tests {
             .is_err()
         );
         assert!(parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 2.5}", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_keys_and_oversized_input() {
+        assert!(
+            parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"alg\": \"cholesky\", \"n\": 8}", 0)
+                .is_err(),
+            "duplicate keys are a client bug, not a tiebreak"
+        );
+        assert!(parse_request("{\"op\": \"ping\", \"op\": \"shutdown\"}", 0).is_err());
+
+        let big_field = format!(
+            "{{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"backend\": \"{}\"}}",
+            "x".repeat(MAX_STRING_BYTES + 1)
+        );
+        assert!(parse_request(&big_field, 0).is_err(), "string field over the cap");
+
+        let big_line = format!("{{\"op\": \"ping\", \"pad\": {} }}", "9".repeat(MAX_LINE_BYTES));
+        assert!(parse_request(&big_line, 0).is_err(), "line over the cap");
+
+        // At/under the caps still parses: the ceilings are generous.
+        let ok_field = format!(
+            "{{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"backend\": \"{}\"}}",
+            "x".repeat(64)
+        );
+        assert!(parse_request(&ok_field, 0).is_ok());
     }
 
     #[test]

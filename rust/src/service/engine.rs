@@ -32,13 +32,14 @@
 
 use super::manifest::{Alg, JobSpec, MatrixClass, Mode, Precision};
 use super::queue::{BatchQueue, QueueBackend, QueueReport};
-use crate::blas::{Matrix, Scalar};
+use crate::blas::{Accum, Matrix, Scalar};
 use crate::coordinator::drivers::{
-    chol_ops, getrf_offload, lu_ops, potrf_offload, refine_offload, Factorization,
+    chol_ops, getrf_offload, getrf_offload_quire, lu_ops, potrf_offload, potrf_offload_quire,
+    refine_offload_accum, Factorization,
 };
 use crate::coordinator::{GemmBackend, OffloadStats};
 use crate::experiments::matgen;
-use crate::lapack::{backward_error, getrs, potrs};
+use crate::lapack::{backward_error, getrs, getrs_quire, potrs, potrs_quire};
 use crate::posit::Posit32;
 use crate::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -58,6 +59,8 @@ pub struct JobResult {
     /// Numeric format the job ran in.
     pub precision: Precision,
     pub mode: Mode,
+    /// Accumulation mode the job's inner products ran with.
+    pub accum: Accum,
     pub backend: String,
     /// `None` = success; `Some(msg)` = driver error (singularity, NaR,
     /// backend failure, unknown queue/pool). Failures are deterministic too.
@@ -373,12 +376,21 @@ fn run_job_on<T: Scalar>(
         Mode::Factorize => {
             let mut a: Matrix<T> = a64.cast();
             let mut ipiv = Vec::new();
-            let outcome = match spec.alg {
-                Alg::Lu => {
+            let outcome = match (spec.alg, spec.accum) {
+                (Alg::Lu, Accum::Rounded) => {
                     ipiv = vec![0usize; n];
                     getrf_offload(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
                 }
-                Alg::Cholesky => potrf_offload(n, &mut a.data, n, spec.nb, backend),
+                (Alg::Lu, Accum::Quire) => {
+                    ipiv = vec![0usize; n];
+                    getrf_offload_quire(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+                }
+                (Alg::Cholesky, Accum::Rounded) => {
+                    potrf_offload(n, &mut a.data, n, spec.nb, backend)
+                }
+                (Alg::Cholesky, Accum::Quire) => {
+                    potrf_offload_quire(n, &mut a.data, n, spec.nb, backend)
+                }
             };
             let (stats, error) = match outcome {
                 Ok(stats) => (stats, None),
@@ -390,9 +402,11 @@ fn run_job_on<T: Scalar>(
             let berr = if error.is_none() {
                 let (_xsol, b64) = matgen::rhs_for(&a64);
                 let mut x: Vec<T> = b64.iter().map(|&v| T::from_f64(v)).collect();
-                match spec.alg {
-                    Alg::Lu => getrs(n, 1, &a.data, n, &ipiv, &mut x, n),
-                    Alg::Cholesky => potrs(n, 1, &a.data, n, &mut x, n),
+                match (spec.alg, spec.accum) {
+                    (Alg::Lu, Accum::Rounded) => getrs(n, 1, &a.data, n, &ipiv, &mut x, n),
+                    (Alg::Lu, Accum::Quire) => getrs_quire(n, 1, &a.data, n, &ipiv, &mut x, n),
+                    (Alg::Cholesky, Accum::Rounded) => potrs(n, 1, &a.data, n, &mut x, n),
+                    (Alg::Cholesky, Accum::Quire) => potrs_quire(n, 1, &a.data, n, &mut x, n),
                 }
                 Some(backward_error(&a64, &b64, &x))
             } else {
@@ -404,6 +418,7 @@ fn run_job_on<T: Scalar>(
                 n,
                 precision: spec.precision,
                 mode: spec.mode,
+                accum: spec.accum,
                 backend: backend_label.to_string(),
                 error,
                 stats,
@@ -422,13 +437,16 @@ fn run_job_on<T: Scalar>(
                 Alg::Lu => Factorization::Lu,
                 Alg::Cholesky => Factorization::Cholesky,
             };
-            match refine_offload::<T>(alg, &a64, &b64, spec.nb, REFINE_MAX_ITER, backend) {
+            match refine_offload_accum::<T>(
+                alg, spec.accum, &a64, &b64, spec.nb, REFINE_MAX_ITER, backend,
+            ) {
                 Ok(out) => JobResult {
                     id: spec.id,
                     alg: spec.alg,
                     n,
                     precision: spec.precision,
                     mode: spec.mode,
+                    accum: spec.accum,
                     backend: backend_label.to_string(),
                     error: None,
                     stats: out.stats,
@@ -464,6 +482,7 @@ fn failed_result(spec: &JobSpec, error: String) -> JobResult {
         n: spec.n,
         precision: spec.precision,
         mode: spec.mode,
+        accum: spec.accum,
         backend: spec.backend.clone(),
         error: Some(error),
         stats: OffloadStats::default(),
@@ -569,6 +588,35 @@ impl ServiceReport {
             .collect()
     }
 
+    /// Per-accumulation-mode rollup: `(accum, jobs, ok, mean digits)` —
+    /// the quire-vs-rounded accuracy comparison, same finite-digits
+    /// filtering as [`ServiceReport::format_summary`]. Modes with no jobs
+    /// are omitted.
+    pub fn accum_summary(&self) -> Vec<(Accum, usize, usize, f64)> {
+        [Accum::Rounded, Accum::Quire]
+            .iter()
+            .filter_map(|&m| {
+                let rows: Vec<&JobResult> =
+                    self.results.iter().filter(|r| r.accum == m).collect();
+                if rows.is_empty() {
+                    return None;
+                }
+                let ok = rows.iter().filter(|r| r.error.is_none()).count();
+                let digits: Vec<f64> = rows
+                    .iter()
+                    .filter_map(|r| r.digits)
+                    .filter(|d| d.is_finite())
+                    .collect();
+                let mean = if digits.is_empty() {
+                    f64::NAN
+                } else {
+                    digits.iter().sum::<f64>() / digits.len() as f64
+                };
+                Some((m, rows.len(), ok, mean))
+            })
+            .collect()
+    }
+
     /// Full report as JSON: per-job rows plus aggregate and queue stats.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n  \"workers\": ");
@@ -619,8 +667,21 @@ impl ServiceReport {
                 )
             })
             .collect();
+        let accums: Vec<String> = self
+            .accum_summary()
+            .into_iter()
+            .map(|(m, jobs, ok, mean_digits)| {
+                format!(
+                    "{{\"accum\": \"{}\", \"jobs\": {}, \"ok\": {}, \"mean_digits\": {}}}",
+                    m.name(),
+                    jobs,
+                    ok,
+                    jnum(mean_digits),
+                )
+            })
+            .collect();
         format!(
-            "{{\"jobs\": {}, \"ok\": {}, \"failed\": {}, \"workers\": {}, \"wall_s\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"nominal_gflops\": {}, \"formats\": [{}]}}",
+            "{{\"jobs\": {}, \"ok\": {}, \"failed\": {}, \"workers\": {}, \"wall_s\": {}, \"jobs_per_s\": {}, \"update_gflops\": {}, \"nominal_gflops\": {}, \"formats\": [{}], \"accums\": [{}]}}",
             self.results.len(),
             self.ok_count(),
             self.failed_count(),
@@ -630,6 +691,7 @@ impl ServiceReport {
             jnum(self.agg_update_gflops()),
             jnum(self.agg_nominal_gflops()),
             formats.join(", "),
+            accums.join(", "),
         )
     }
 }
@@ -646,12 +708,13 @@ impl JobResult {
             None => "null".to_string(),
         };
         format!(
-            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
+            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
             self.id,
             self.alg.name(),
             self.n,
             self.precision.name(),
             self.mode.name(),
+            self.accum.name(),
             esc(&self.backend),
             self.error.is_none(),
             error,
@@ -704,7 +767,7 @@ fn esc(s: &str) -> String {
 
 #[cfg(test)]
 mod tests {
-    use super::super::manifest::{mixed_format_manifest, mixed_manifest};
+    use super::super::manifest::{mixed_accum_manifest, mixed_format_manifest, mixed_manifest};
     use super::*;
     use crate::coordinator::NativeBackend;
 
@@ -771,6 +834,32 @@ mod tests {
             let q = report.queues.iter().find(|q| q.format == fmt).unwrap();
             assert!(q.tiles > 0, "{fmt} queue saw no tiles");
         }
+    }
+
+    #[test]
+    fn mixed_accum_manifest_runs_and_quire_is_no_less_accurate() {
+        let jobs = mixed_accum_manifest(8, 40);
+        let report = engine().run(&jobs, 4, false);
+        assert_eq!(report.ok_count(), jobs.len(), "{:?}", report.results);
+        for (spec, r) in jobs.iter().zip(&report.results) {
+            assert_eq!(r.accum, spec.accum);
+            assert!(r.digits.is_some(), "job {}", r.id);
+        }
+        let summary = report.accum_summary();
+        assert_eq!(summary.len(), 2);
+        let digits_of = |m: Accum| summary.iter().find(|s| s.0 == m).map(|s| s.3).unwrap();
+        // Deferred rounding can only help; allow a hair of noise since the
+        // job mixes differ by more than the accumulation mode (sizes/algs
+        // interleave), but the rollup must not show quire losing accuracy.
+        assert!(
+            digits_of(Accum::Quire) + 0.5 >= digits_of(Accum::Rounded),
+            "quire {} vs rounded {}",
+            digits_of(Accum::Quire),
+            digits_of(Accum::Rounded)
+        );
+        let json = report.to_json();
+        assert!(json.contains("\"accum\": \"quire\""));
+        assert!(json.contains("\"accums\""));
     }
 
     #[test]

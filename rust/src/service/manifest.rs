@@ -27,11 +27,19 @@
 //!   job's precision and then iteratively refines residuals in binary64
 //!   ([`crate::coordinator::drivers::refine_offload`]), reporting the
 //!   achieved accuracy in decimal digits.
+//! * `accum` — `rounded` (default) or `quire`: accumulation mode of every
+//!   inner product the job performs. `quire` routes the factorization
+//!   through the fused-dot drivers (panel, TRSM, and trailing update all
+//!   defer rounding to one rounding per output element — the posit
+//!   standard's quire semantics, with a widened/compensated analog for
+//!   the IEEE formats); `rounded` is the conventional
+//!   round-after-every-mac path the paper's hardware implements.
 //!
 //! `#` starts a comment; blank lines are skipped. Matrix generation is a
 //! pure function of the spec, so the same manifest produces bit-identical
 //! inputs — the precondition for the service's determinism guarantee.
 
+use crate::blas::Accum;
 use crate::lapack::DEFAULT_NB;
 use anyhow::{anyhow, bail, Result};
 
@@ -170,6 +178,9 @@ pub struct JobSpec {
     pub precision: Precision,
     /// Factorize-only or mixed-precision refinement.
     pub mode: Mode,
+    /// Accumulation mode of the job's inner products: conventional
+    /// round-per-mac or quire-exact fused dots.
+    pub accum: Accum,
     /// Dispatch-queue name; empty selects the pool's primary backend.
     pub backend: String,
 }
@@ -190,6 +201,7 @@ impl JobSpec {
             },
             precision: Precision::Posit32,
             mode: Mode::Factorize,
+            accum: Accum::default(),
             backend: String::new(),
         }
     }
@@ -228,6 +240,10 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
                 }
                 "mode" => {
                     spec.mode = Mode::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
+                }
+                "accum" => {
+                    spec.accum =
+                        Accum::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
                 }
                 "backend" => spec.backend = val.to_string(),
                 other => bail!("line {lineno}: unknown key '{other}'"),
@@ -292,6 +308,30 @@ pub fn mixed_format_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
         .collect()
 }
 
+/// Deterministic mixed-accumulation workload: like [`mixed_manifest`]
+/// but alternating `accum=rounded` / `accum=quire` jobs (decoupled from
+/// the alg cycle so both algorithms run in both modes), with a couple of
+/// quire refinement jobs. The workload of the quire determinism tests —
+/// worker-count invariance must hold with both kernels folding into the
+/// same dispatch batches.
+pub fn mixed_accum_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
+    (0..count)
+        .map(|i| {
+            let alg = if i % 3 == 2 { Alg::Cholesky } else { Alg::Lu };
+            let n = base_n + (i % 4) * base_n / 4;
+            let mut spec = JobSpec::new(i, alg, n);
+            spec.nb = 32;
+            if i % 2 == 1 {
+                spec.accum = Accum::Quire;
+            }
+            if i % 7 == 5 {
+                spec.mode = Mode::Refine;
+            }
+            spec
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,7 +385,34 @@ cholesky n=384   # trailing comment
         assert!(parse_manifest("lu n=8 nb=abc").is_err());
         assert!(parse_manifest("lu n=8 precision=f16").is_err());
         assert!(parse_manifest("lu n=8 mode=turbo").is_err());
+        assert!(parse_manifest("lu n=8 accum=exact").is_err());
         assert!(parse_manifest("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn parses_accum_modes() {
+        let jobs = parse_manifest("lu n=64 accum=quire\ncholesky n=32\n").unwrap();
+        assert_eq!(jobs[0].accum, Accum::Quire);
+        assert_eq!(jobs[1].accum, Accum::Rounded, "default is rounded");
+        assert_eq!(Accum::parse("rounded").unwrap(), Accum::Rounded);
+        assert_eq!(Accum::parse("quire").unwrap(), Accum::Quire);
+        assert!(Accum::parse("fused").is_err());
+    }
+
+    #[test]
+    fn mixed_accum_manifest_covers_modes_and_algs() {
+        let jobs = mixed_accum_manifest(16, 48);
+        for accum in [Accum::Rounded, Accum::Quire] {
+            assert!(
+                jobs.iter().any(|j| j.accum == accum && j.alg == Alg::Lu),
+                "missing lu {accum:?}"
+            );
+            assert!(
+                jobs.iter().any(|j| j.accum == accum && j.alg == Alg::Cholesky),
+                "missing cholesky {accum:?}"
+            );
+        }
+        assert!(jobs.iter().any(|j| j.mode == Mode::Refine && j.accum == Accum::Quire));
     }
 
     #[test]

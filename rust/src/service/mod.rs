@@ -12,8 +12,11 @@
 //! * [`manifest`] — [`JobSpec`] and the plain-text job-manifest format
 //!   (`alg n=... nb=... seed=... precision=... mode=...` per line) with a
 //!   per-job [`Precision`] (`posit32`/`f32`/`f64`) and [`Mode`]
-//!   (`factor`/`refine`), plus deterministic [`mixed_manifest`] /
-//!   [`mixed_format_manifest`] generators for benches/tests.
+//!   (`factor`/`refine`) and [`crate::blas::Accum`] (`rounded`/`quire` —
+//!   per-job accumulation mode: conventional round-per-mac vs quire-exact
+//!   fused dots), plus deterministic [`mixed_manifest`] /
+//!   [`mixed_format_manifest`] / [`mixed_accum_manifest`] generators for
+//!   benches/tests.
 //! * [`queue`] — one [`BatchQueue<T>`] per shared backend *per format*: a
 //!   dispatcher that folds all pending trailing-update tiles — typically
 //!   from *different* jobs of the same format — into one contiguous
@@ -50,7 +53,7 @@ pub use engine::{
     ServiceReport, REFINE_MAX_ITER,
 };
 pub use manifest::{
-    mixed_format_manifest, mixed_manifest, parse_manifest, Alg, JobSpec, MatrixClass, Mode,
-    Precision,
+    mixed_accum_manifest, mixed_format_manifest, mixed_manifest, parse_manifest, Alg, JobSpec,
+    MatrixClass, Mode, Precision,
 };
 pub use queue::{BatchQueue, QueueBackend, QueueReport};

@@ -34,7 +34,7 @@
 //! would in isolation, keeping per-job outcomes deterministic; retried
 //! tiles count twice in the queue's tile counter.
 
-use crate::blas::{PackPlan, Scalar};
+use crate::blas::{Accum, PackPlan, Scalar};
 use crate::coordinator::{GemmBackend, GemmJob};
 use crate::posit::Posit32;
 use anyhow::{anyhow, Result};
@@ -58,6 +58,11 @@ struct TileRequest<T: Scalar> {
     /// the one unavoidable clone (borrow -> owned for the channel) is
     /// shared by the failure-isolation retry.
     plan: Option<Arc<PackPlan<T>>>,
+    /// Accumulation mode of the staged tile. Quire tiles ride the same
+    /// queue (and fold into the same submissions) as rounded tiles of the
+    /// format; the backend's `gemm_update_many` routes them to the fused
+    /// kernel per tile, so a mixed batch stays bit-deterministic.
+    accum: Accum,
     /// Execute in its own submission, never folded with other tiles. Used
     /// by the failure-isolation retry: a tile's reported outcome is always
     /// its outcome *in isolation*, so one bad tile cannot poison — or be
@@ -226,6 +231,7 @@ fn dispatch_loop<T: Scalar>(
                 c: &mut req.c,
                 ldc: req.m,
                 plan: req.plan.as_deref(),
+                accum: req.accum,
             })
             .collect();
         let result = backend.gemm_update_many(&mut views);
@@ -286,6 +292,7 @@ impl<T: Scalar> QueueBackend<T> {
         b: &[T],
         ldb: usize,
         plan: Option<&PackPlan<T>>,
+        accum: Accum,
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
@@ -331,6 +338,7 @@ impl<T: Scalar> QueueBackend<T> {
                 b: sb,
                 c: sc,
                 plan: plan_arc.clone(),
+                accum,
                 solo,
                 reply: reply_tx,
             })?;
@@ -372,7 +380,26 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        self.submit_tile(m, k, n, a, lda, b, ldb, None, c, ldc)
+        self.submit_tile(m, k, n, a, lda, b, ldb, None, Accum::Rounded, c, ldc)
+    }
+
+    /// Quire tiles stage and batch exactly like rounded tiles (the data
+    /// movement is identical — accumulation mode only changes the kernel);
+    /// the staged request's `accum` tag routes them to the fused kernel
+    /// inside the executing backend's `gemm_update_many`.
+    fn gemm_update_quire(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        self.submit_tile(m, k, n, a, lda, b, ldb, None, Accum::Quire, c, ldc)
     }
 
     /// Plan-carrying tiles keep their decode-once slabs across the queue:
@@ -392,7 +419,7 @@ impl<T: Scalar> GemmBackend<T> for QueueBackend<T> {
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        self.submit_tile(m, k, n, a, lda, b, ldb, Some(plan), c, ldc)
+        self.submit_tile(m, k, n, a, lda, b, ldb, Some(plan), Accum::Rounded, c, ldc)
     }
 
     fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
@@ -492,6 +519,44 @@ mod tests {
             assert_eq!(c1.data, c2.data, "iter {i}");
         }
         assert_eq!(proxy.tiles_dispatched(), 4);
+    }
+
+    #[test]
+    fn queued_quire_tiles_bit_match_fused_kernel() {
+        // Quire tiles through the staging + dispatcher fold (mixed into
+        // batches with rounded tiles) must equal the fused kernel run
+        // directly on the operands, bit for bit.
+        let queue = BatchQueue::<Posit32>::start("native", Arc::new(NativeBackend::new(2)), 8);
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let queue = Arc::clone(&queue);
+                s.spawn(move || {
+                    let proxy = QueueBackend::new(queue);
+                    for i in 0..4u64 {
+                        let (m, k, n) = (14 + t as usize, 9, 10 + i as usize % 3);
+                        let ldc = m + 2;
+                        let a = rand_mat(m, k, 5000 + 13 * t + i);
+                        let b = rand_mat(k, n, 5100 + 13 * t + i);
+                        let c0 = rand_mat(ldc, n, 5200 + 13 * t + i);
+                        let mut c1 = c0.clone();
+                        let mut c2 = c0.clone();
+                        crate::blas::gemm_update_quire(
+                            m, k, n, &a.data, m, &b.data, k, &mut c1.data, ldc,
+                        );
+                        proxy
+                            .gemm_update_quire(m, k, n, &a.data, m, &b.data, k, &mut c2.data, ldc)
+                            .unwrap();
+                        assert_eq!(c1.data, c2.data, "thread {t} iter {i}");
+                        // Interleave a rounded tile so batches genuinely mix modes.
+                        let mut c3 = c0.clone();
+                        proxy
+                            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c3.data, ldc)
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(queue.report().tiles, 24);
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Exhaustive oracle validation of the quire accumulator on Posit(8,2).
+//!
+//! Posit(8,2) is small enough to check *every* case: each non-special
+//! pattern is `±m · 2^(scale-3)` with `m ∈ [8,15]` and `scale ∈ [-24,24]`,
+//! i.e. an integer multiple of `2^-27`. Products of two such values are
+//! integer multiples of `2^-54`, and short sums of products fit an `i128`
+//! with room to spare — so an `i128` fixed-point accumulator at scale
+//! `2^-54` is an *exact* oracle for the quire. (An `f64` oracle would not
+//! be: 3-term sums reach ~2^57 > 2^53, past binary64's exact-integer
+//! range.) The oracle rounds through the same public
+//! [`PositSpec::encode`] the quire's own `to_bits` uses — normalize the
+//! `i128` to (sign, scale, Q1.63 significand with sticky), exactly the
+//! quire-rounding contract — so any mismatch pins a bug in the 512-bit
+//! *accumulation*, the thing this suite exists to prove.
+//!
+//! Pinned here, per the accum=quire tentpole:
+//! * all 256 × 256 `add_product` / `sub_product` pairs, bit-for-bit;
+//! * chained 3-term dots over a strided sweep plus the extreme patterns
+//!   (maxpos, minpos, ±1, NaR), bit-for-bit, including cancellation to
+//!   exact zero;
+//! * NaR absorption, zero products, saturation to ±maxpos, and the
+//!   never-round-to-zero rule;
+//! * `GQuire::<32,2>` vs the dedicated Posit(32,2) [`Quire`] on random
+//!   bit patterns (the two independent implementations must agree).
+
+use posit_accel::posit::generic::{NoTrace, PositSpec};
+use posit_accel::posit::quire::{GQuire, Quire};
+use posit_accel::rng::Pcg64;
+
+const SPEC: PositSpec = PositSpec { nbits: 8, es: 2 };
+type Q8 = GQuire<8, 2>;
+
+/// Exact fixed-point value of a P(8,2) pattern, in units of 2^-27.
+/// Zero -> Some(0); NaR -> None.
+fn fixed27(bits: u32) -> Option<i64> {
+    if bits & SPEC.mask() == SPEC.nar() {
+        return None;
+    }
+    match SPEC.decode(bits, &mut NoTrace) {
+        None => Some(0), // decode returns None for both 0 and NaR; NaR handled above
+        Some(d) => {
+            // P(8,2) significands carry at most 3 fraction bits: Q1.63
+            // sig = m << 60 with m in [8, 15].
+            assert_eq!(d.sig & ((1u64 << 60) - 1), 0, "bits {bits:#04x}");
+            let m = (d.sig >> 60) as i64;
+            assert!((8..=15).contains(&m));
+            assert!((-24..=24).contains(&d.scale), "bits {bits:#04x}");
+            // value = m * 2^(scale-3) = (m << (scale+24)) * 2^-27.
+            let v = m << (d.scale + 24);
+            Some(if d.neg { -v } else { v })
+        }
+    }
+}
+
+/// Round an exact sum (in units of 2^-54) to the nearest P(8,2) pattern,
+/// with posit semantics: RNE in the encoding, saturation at ±maxpos,
+/// nonzero never rounds to zero. Mirrors the quire-rounding contract:
+/// normalize to (neg, scale, Q1.63 sig + sticky) and defer to `encode`.
+fn oracle_round(sum: i128) -> u32 {
+    if sum == 0 {
+        return 0;
+    }
+    let neg = sum < 0;
+    let mag = sum.unsigned_abs();
+    let msb = 127 - mag.leading_zeros() as i32;
+    let scale = msb - 54;
+    let sig = if msb >= 63 {
+        let sh = (msb - 63) as u32;
+        let kept = (mag >> sh) as u64;
+        let sticky = mag & ((1u128 << sh) - 1) != 0;
+        kept | sticky as u64
+    } else {
+        (mag as u64) << (63 - msb)
+    };
+    SPEC.encode(neg, scale, sig, &mut NoTrace)
+}
+
+#[test]
+fn exhaustive_pairs_match_exact_oracle() {
+    let nar = SPEC.nar();
+    for a in 0..256u32 {
+        for b in 0..256u32 {
+            if a == nar || b == nar {
+                // NaR poisons the accumulation, for add and sub alike.
+                for subtract in [false, true] {
+                    let mut q = Q8::new();
+                    if subtract {
+                        q.sub_product(a, b);
+                    } else {
+                        q.add_product(a, b);
+                    }
+                    assert!(q.is_nar(), "NaR operand a={a:#04x} b={b:#04x}");
+                    assert_eq!(q.to_bits(), nar);
+                }
+                continue;
+            }
+            let prod = fixed27(a).unwrap() as i128 * fixed27(b).unwrap() as i128;
+
+            let mut q = Q8::new();
+            q.add_product(a, b);
+            assert_eq!(
+                q.to_bits(),
+                oracle_round(prod),
+                "add_product a={a:#04x} b={b:#04x}"
+            );
+            assert_eq!(q.is_zero(), prod == 0, "zero state a={a:#04x} b={b:#04x}");
+
+            let mut q = Q8::new();
+            q.sub_product(a, b);
+            assert_eq!(
+                q.to_bits(),
+                oracle_round(-prod),
+                "sub_product a={a:#04x} b={b:#04x}"
+            );
+        }
+    }
+}
+
+/// The strided sweep plus every special pattern — NaR, zero, ±maxpos,
+/// ±minpos, ±1 — so chains cover saturation and exact cancellation.
+fn sweep(step: usize) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..256).step_by(step).map(|x| x as u32).collect();
+    v.extend([0x00, 0x01, 0x7F, 0x80, 0x81, 0xFF, 0x40, 0xC0]);
+    v
+}
+
+#[test]
+fn chained_three_term_dots_match_exact_oracle() {
+    let nar = SPEC.nar();
+    for &a in &sweep(5) {
+        for &b in &sweep(7) {
+            for &c in &sweep(11) {
+                // Two chains per triple: all-add (a.b + b.c + c.a) and a
+                // mixed add/sub chain (a.b - b.c + c.a).
+                let mut qadd = Q8::new();
+                qadd.add_product(a, b);
+                qadd.add_product(b, c);
+                qadd.add_product(c, a);
+                let mut qmix = Q8::new();
+                qmix.add_product(a, b);
+                qmix.sub_product(b, c);
+                qmix.add_product(c, a);
+
+                if a == nar || b == nar || c == nar {
+                    assert_eq!(qadd.to_bits(), nar, "a={a:#04x} b={b:#04x} c={c:#04x}");
+                    assert_eq!(qmix.to_bits(), nar, "a={a:#04x} b={b:#04x} c={c:#04x}");
+                    continue;
+                }
+                let (va, vb, vc) = (
+                    fixed27(a).unwrap() as i128,
+                    fixed27(b).unwrap() as i128,
+                    fixed27(c).unwrap() as i128,
+                );
+                assert_eq!(
+                    qadd.to_bits(),
+                    oracle_round(va * vb + vb * vc + vc * va),
+                    "add chain a={a:#04x} b={b:#04x} c={c:#04x}"
+                );
+                assert_eq!(
+                    qmix.to_bits(),
+                    oracle_round(va * vb - vb * vc + vc * va),
+                    "mixed chain a={a:#04x} b={b:#04x} c={c:#04x}"
+                );
+                // The fused-dot helper is the same chain.
+                assert_eq!(
+                    Q8::dot(&[a, b, c], &[b, c, a]),
+                    qadd.to_bits(),
+                    "dot a={a:#04x} b={b:#04x} c={c:#04x}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quire_edge_semantics() {
+    let nar = SPEC.nar();
+    let maxpos = SPEC.maxpos(); // 0x7F = 2^24
+    let minpos = SPEC.minpos(); // 0x01 = 2^-24
+    let one = 0x40u32;
+
+    // Saturation: maxpos^2 is far past maxpos; stacking more keeps it there.
+    let mut q = Q8::new();
+    q.add_product(maxpos, maxpos);
+    assert_eq!(q.to_bits(), maxpos);
+    q.add_product(maxpos, maxpos);
+    assert_eq!(q.to_bits(), maxpos);
+    assert_eq!(oracle_round((fixed27(maxpos).unwrap() as i128).pow(2) * 2), maxpos);
+
+    // Never-round-to-zero: minpos^2 = 2^-48 is below minpos but nonzero.
+    let mut q = Q8::new();
+    q.add_product(minpos, minpos);
+    assert!(!q.is_zero());
+    assert_eq!(q.to_bits(), minpos);
+
+    // Exact cancellation does hit zero — the quire is exact.
+    let mut q = Q8::new();
+    q.add_product(0x35, 0x6B);
+    q.sub_product(0x35, 0x6B);
+    assert!(q.is_zero());
+    assert_eq!(q.to_bits(), 0);
+
+    // ...and cancellation of everything but one minpos^2 term still
+    // renders minpos, not zero.
+    let mut q = Q8::new();
+    q.add_product(minpos, minpos);
+    q.add_product(minpos, minpos);
+    q.sub_product(minpos, minpos);
+    assert_eq!(q.to_bits(), minpos);
+
+    // NaR is absorbing: once poisoned, even zero products keep it NaR.
+    let mut q = Q8::new();
+    q.add_product(nar, one);
+    q.add_product(0, 0);
+    q.sub_product(one, one);
+    assert!(q.is_nar());
+    assert_eq!(q.to_bits(), nar);
+
+    // Negative saturation mirrors positive.
+    let neg_maxpos = SPEC.negate(maxpos);
+    let mut q = Q8::new();
+    q.add_product(neg_maxpos, maxpos);
+    q.add_product(neg_maxpos, maxpos);
+    assert_eq!(q.to_bits(), neg_maxpos);
+}
+
+#[test]
+fn gquire32_matches_dedicated_posit32_quire() {
+    // Two independent implementations of the same contract: the generic
+    // GQuire<32,2> (decode/encode path) and the hand-rolled Posit(32,2)
+    // Quire (unpack32/pack32 path) must agree bit-for-bit on every
+    // accumulation, including wide-dynamic-range products and NaR.
+    let mut rng = Pcg64::seed(0x8E2);
+    let nar32 = 0x8000_0000u32;
+    for case in 0..200 {
+        let len = 1 + (rng.next_u64() % 24) as usize;
+        let mut a = Vec::with_capacity(len);
+        let mut b = Vec::with_capacity(len);
+        for _ in 0..len {
+            // Raw patterns: every u32 is a valid Posit(32,2) value.
+            a.push(rng.next_u32());
+            b.push(rng.next_u32());
+        }
+        if case % 17 == 0 {
+            a[len / 2] = nar32; // NaR must propagate identically
+        }
+        assert_eq!(
+            Quire::dot(&a, &b),
+            GQuire::<32, 2>::dot(&a, &b),
+            "case {case}"
+        );
+        // Stepwise agreement too (mixed add/sub, rounding at each step).
+        let mut q = Quire::new();
+        let mut g = GQuire::<32, 2>::new();
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            if i % 3 == 2 {
+                q.sub_product(x, y);
+                g.sub_product(x, y);
+            } else {
+                q.add_product(x, y);
+                g.add_product(x, y);
+            }
+            assert_eq!(q.to_posit_bits(), g.to_bits(), "case {case} step {i}");
+            assert_eq!(q.is_nar(), g.is_nar(), "case {case} step {i}");
+        }
+    }
+}

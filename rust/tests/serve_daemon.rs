@@ -253,6 +253,121 @@ fn worker_pools_scale_with_queue_depth() {
     assert_eq!(daemon.worker_count(Precision::Posit32), 0, "drain joins all workers");
 }
 
+/// Malformed-input corpus over the socket: every bad request line —
+/// truncated objects, unknown ops and enum values (`accum=exact`),
+/// duplicate keys, oversized lines and string fields, non-JSON noise —
+/// gets one deterministic `op=error` reply (same bytes on every replay),
+/// the connection stays up, and the daemon afterwards still serves pings
+/// and runs real jobs end to end, `accum=quire` included.
+#[cfg(unix)]
+#[test]
+fn malformed_corpus_gets_deterministic_errors_and_daemon_survives() {
+    use posit_accel::serve::protocol::{
+        get_bool, get_str, parse_flat_object, MAX_LINE_BYTES, MAX_STRING_BYTES,
+    };
+    use posit_accel::serve::serve_unix;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let socket = dir.join(format!("posit-serve-corpus-{pid}.sock"));
+    let _ = std::fs::remove_file(&socket);
+
+    let daemon = Daemon::start(native_engine(8), test_config());
+    let server = {
+        let socket = socket.clone();
+        std::thread::spawn(move || serve_unix(daemon, &socket, None))
+    };
+    for _ in 0..200 {
+        if socket.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(socket.exists(), "daemon never bound its socket");
+
+    let corpus: Vec<String> = vec![
+        "{".into(),                                         // truncated object
+        "{\"op\": \"submit\", \"alg\": \"lu\"".into(),      // truncated mid-line
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": ".into(), // truncated at value
+        "not json at all".into(),
+        "{\"op\": \"warp\"}".into(),                        // unknown op
+        "{\"op\": \"submit\"}".into(),                      // missing alg/n
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": -4}".into(),
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 16, \"accum\": \"exact\"}".into(),
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 16, \"precision\": \"f16\"}".into(),
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 16, \"accum\": \"quire\", \"accum\": \"rounded\"}".into(),
+        "{\"op\": \"ping\", \"op\": \"shutdown\"}".into(),  // duplicate op must not drain
+        "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"nested\": {\"x\": 1}}".into(),
+        format!(
+            "{{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 8, \"backend\": \"{}\"}}",
+            "x".repeat(MAX_STRING_BYTES + 1)
+        ),
+        format!("{{\"op\": \"ping\", \"pad\": {} }}", "9".repeat(MAX_LINE_BYTES)),
+    ];
+
+    let stream = UnixStream::connect(&socket).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut replies: Vec<Vec<String>> = Vec::new();
+    for _round in 0..2 {
+        let mut round_replies = Vec::new();
+        for bad in &corpus {
+            writeln!(writer, "{bad}").expect("send");
+            line.clear();
+            reader.read_line(&mut line).expect("reply");
+            let fields = parse_flat_object(line.trim()).expect("error reply is flat");
+            assert_eq!(get_str(&fields, "op"), Some("error"), "for {bad:.60}: {line}");
+            assert_eq!(get_bool(&fields, "ok"), Some(false));
+            round_replies.push(line.trim().to_string());
+        }
+        replies.push(round_replies);
+    }
+    assert_eq!(replies[0], replies[1], "error replies are deterministic");
+
+    // A connection that dies mid-line must not take the daemon with it.
+    {
+        let mut partial = UnixStream::connect(&socket).expect("connect partial");
+        partial.write_all(b"{\"op\": \"submit\", \"alg\":").expect("send partial");
+        // Drop without a newline: the handler sees EOF on a half line.
+    }
+
+    // The daemon is intact: ping answers, real jobs still run — including
+    // the quire accumulation path — and results carry the accum tag.
+    line.clear();
+    writeln!(writer, "{{\"op\": \"ping\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\""), "{line}");
+
+    for submit in [
+        "{\"op\": \"submit\", \"id\": 0, \"alg\": \"lu\", \"n\": 24, \"accum\": \"quire\"}",
+        "{\"op\": \"submit\", \"id\": 1, \"alg\": \"lu\", \"n\": 24, \"accum\": \"rounded\"}",
+    ] {
+        line.clear();
+        writeln!(writer, "{submit}").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let fields = parse_flat_object(line.trim()).expect("flat reply");
+        assert_eq!(get_str(&fields, "op"), Some("accepted"), "{line}");
+    }
+    line.clear();
+    writeln!(writer, "{{\"op\": \"collect\", \"wait\": true}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"count\": 2"), "{line}");
+    assert!(line.contains("\"accum\": \"quire\""), "quire job tagged: {line}");
+    assert!(line.contains("\"accum\": \"rounded\""), "rounded job tagged: {line}");
+    assert!(!line.contains("\"error\": \"singular"), "{line}");
+
+    line.clear();
+    writeln!(writer, "{{\"op\": \"shutdown\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"drained\""), "{line}");
+    let summary = server.join().unwrap().expect("serve_unix");
+    assert_eq!(summary.completed, 2);
+    assert_eq!(summary.admitted, 2, "no malformed line was ever admitted");
+}
+
 /// End-to-end over the Unix socket: 4 concurrent submitter connections
 /// stream the open-loop plan with retry-on-backpressure, a control
 /// connection collects and shuts down, and the daemon writes a

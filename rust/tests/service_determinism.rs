@@ -11,12 +11,21 @@
 //! API: one manifest carrying posit32 + f32 + f64 jobs (including
 //! `mode=refine` mixed-precision jobs) must be bit-identical to the
 //! sequential drivers *per format* at any worker count.
+//!
+//! The mixed-accum tests extend it across the per-job `accum` knob: a
+//! manifest mixing `accum=rounded` and `accum=quire` jobs must be
+//! bit-identical to the sequential drivers at any worker count, and the
+//! quire GEMM path itself must equal an element-by-element
+//! one-rounding-per-output reference built directly on the [`Quire`].
 
-use posit_accel::blas::{gemm_naive, Scalar, Trans};
+use posit_accel::blas::{gemm_naive, gemm_update_quire, Accum, Scalar, Trans};
 use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
+use posit_accel::posit::quire::Quire;
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
 use posit_accel::service::{
-    mixed_format_manifest, mixed_manifest, run_job_sequential, run_job_sequential_any, Engine,
-    EngineBuilder, JobResult, Mode, Precision,
+    mixed_accum_manifest, mixed_format_manifest, mixed_manifest, run_job_sequential,
+    run_job_sequential_any, Engine, EngineBuilder, JobResult, Mode, Precision,
 };
 use std::sync::Arc;
 
@@ -290,6 +299,125 @@ fn packed_engine_matches_pre_packing_naive_semantics() {
             seq.id
         );
     }
+}
+
+/// Per-job `accum` determinism: one manifest mixing `accum=rounded` and
+/// `accum=quire` jobs (factorize and refine, LU and Cholesky) must be
+/// bit-identical to the sequential drivers at any worker count. Quire
+/// jobs route through a different execution path — fused-dot panels and
+/// `gemm_update_quire` trailing updates — so this pins that the batched
+/// scheduler preserves *that* path's numerics too.
+#[test]
+fn mixed_accum_manifest_bit_identical_across_worker_counts() {
+    let jobs = mixed_accum_manifest(10, 40);
+    assert!(jobs.iter().any(|j| j.accum == Accum::Rounded));
+    assert!(jobs.iter().any(|j| j.accum == Accum::Quire));
+    assert!(
+        jobs.iter().any(|j| j.accum == Accum::Quire && j.mode == Mode::Refine),
+        "manifest must carry a quire refine job"
+    );
+
+    let backend = Arc::new(NativeBackend::new(2));
+    let baseline: Vec<JobResult> = jobs
+        .iter()
+        .map(|spec| run_job_sequential_any(spec, &*backend, true))
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "baseline job {}: {:?}", r.id, r.error);
+    }
+
+    for workers in [1usize, 4, 8] {
+        let engine = EngineBuilder::new(8).shared("native", Arc::clone(&backend)).build();
+        let report = engine.run(&jobs, workers, true);
+        assert_eq!(report.results.len(), jobs.len());
+        for (seq, got) in baseline.iter().zip(&report.results) {
+            assert_eq!(seq.id, got.id);
+            assert!(got.error.is_none(), "x{workers} job {}", got.id);
+            // The accumulation mode rides through the engine untouched.
+            assert_eq!(got.accum, jobs[got.id].accum, "x{workers} job {}", got.id);
+            assert_eq!(
+                seq.factors, got.factors,
+                "factors differ: x{workers} job {} ({})",
+                seq.id,
+                seq.accum.name()
+            );
+            assert_eq!(seq.ipiv, got.ipiv, "pivots differ: x{workers} job {}", seq.id);
+            assert_eq!(seq.fingerprint, got.fingerprint, "x{workers} job {}", seq.id);
+            assert_eq!(
+                seq.backward_error.map(f64::to_bits),
+                got.backward_error.map(f64::to_bits),
+                "x{workers} job {}",
+                seq.id
+            );
+            assert_eq!(seq.refine_iters, got.refine_iters, "x{workers} job {}", seq.id);
+        }
+    }
+}
+
+/// The quire GEMM update must equal a one-rounding-per-output-element
+/// reference built directly on the 512-bit [`Quire`], on wide-dynamic-
+/// range Posit(32,2) inputs — and a planted absorption element pins
+/// that deferred rounding genuinely diverges from round-per-mac.
+#[test]
+fn quire_gemm_matches_one_rounding_per_element_reference() {
+    let (m, k, n) = (7, 24, 5);
+    let (lda, ldb, ldc) = (m + 2, k, m + 1);
+    let mut rng = Pcg64::seed(0x9D07);
+    // Magnitudes spanning ~2^-40 .. 2^40: far outside the golden zone, so
+    // per-mac rounding loses small addends that the quire keeps.
+    let mut wide = |rng: &mut Pcg64| {
+        let v = rng.loguniform(1e-12, 1e12);
+        Posit32::from_f64(if rng.next_u64() & 1 == 0 { v } else { -v })
+    };
+    let mut a: Vec<Posit32> = (0..lda * k).map(|_| wide(&mut rng)).collect();
+    let mut b: Vec<Posit32> = (0..ldb * n).map(|_| wide(&mut rng)).collect();
+    let mut c0: Vec<Posit32> = (0..ldc * n).map(|_| wide(&mut rng)).collect();
+
+    // Plant element (0,0) as a stepwise-absorption case: the first term
+    // contributes exactly 1, each later term adds 2^-29 — below the
+    // half-ulp 2^-28 at 1.0, so per-mac rounding absorbs every one of
+    // them, while the quire's exact sum 1 + 23*2^-29 = 1 + 5.75*2^-27
+    // rounds once to 1 + 6*2^-27.
+    let tiny = Posit32::from_f64((2.0f64).powi(-29));
+    c0[0] = Posit32::ZERO;
+    a[0] = Posit32::ONE;
+    b[0] = Posit32::ONE.negate();
+    for l in 1..k {
+        a[l * lda] = tiny;
+        b[l] = Posit32::ONE.negate();
+    }
+
+    // Kernel under test.
+    let mut c_quire = c0.clone();
+    gemm_update_quire(m, k, n, &a, lda, &b, ldb, &mut c_quire, ldc);
+
+    // Round-per-mac comparison point: the production rounded backend
+    // (bit-identical to the ascending-k naive per-mac chain by the
+    // repo-wide rounding contract).
+    let mut c_rounded = c0.clone();
+    NativeBackend::new(1)
+        .gemm_update(m, k, n, &a, lda, &b, ldb, &mut c_rounded, ldc)
+        .unwrap();
+
+    for j in 0..n {
+        for i in 0..m {
+            // Independent one-rounding reference: load c, fuse the k
+            // products in the quire, round once.
+            let mut q = Quire::new();
+            q.add_posit(c0[i + j * ldc].0);
+            for l in 0..k {
+                q.sub_product(a[i + l * lda].0, b[l + j * ldb].0);
+            }
+            assert_eq!(c_quire[i + j * ldc].0, q.to_posit_bits(), "element ({i},{j})");
+        }
+    }
+
+    // The planted element: quire keeps the 23 tiny addends, the rounded
+    // chain absorbs them all.
+    let expect_quire = Posit32::from_f64(1.0 + 6.0 * (2.0f64).powi(-27));
+    assert_eq!(c_quire[0], expect_quire, "planted element, quire path");
+    assert_eq!(c_rounded[0], Posit32::ONE, "planted element, rounded path");
+    assert_ne!(c_quire, c_rounded);
 }
 
 #[test]
