@@ -11,10 +11,15 @@
 //! cross-checks that the accelerator path is bit-identical to native.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example lu_solve -- [N]
+//! make artifacts && cargo run --release --example lu_solve -- [N] [LOOKAHEAD]
 //! ```
+//!
+//! The optional second argument is the lookahead depth (default 1): the
+//! trailing update's tail is put in flight on the backend while the host
+//! factors the next panel. Overlap changes scheduling only, never bits —
+//! the example's bit-identity cross-check runs at the same depth.
 
-use posit_accel::coordinator::drivers::{getrf_offload, lu_ops};
+use posit_accel::coordinator::drivers::{getrf_offload_lookahead, lu_ops};
 use posit_accel::coordinator::{GemmBackend, NativeBackend, PjrtBackend};
 use posit_accel::experiments::matgen;
 use posit_accel::lapack::{backward_error, forward_error, getrs};
@@ -28,8 +33,12 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(384);
+    let lookahead: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     let nb = 64;
-    println!("== end-to-end posit LU solve, N={n}, nb={nb} ==\n");
+    println!("== end-to-end posit LU solve, N={n}, nb={nb}, lookahead={lookahead} ==\n");
 
     // Problem data in binary64 (the paper's protocol, §5.1).
     let mut rng = Pcg64::seed(2024);
@@ -54,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let (ap, mut bp) = matgen::cast_problem::<Posit32>(&a64, &b64);
     let mut lu = ap.clone();
     let mut ipiv = vec![0usize; n];
-    let stats = getrf_offload(n, n, &mut lu.data, n, &mut ipiv, nb, &be)?;
+    let stats = getrf_offload_lookahead(n, n, &mut lu.data, n, &mut ipiv, nb, lookahead, &be)?;
     getrs(n, 1, &lu.data, n, &ipiv, &mut bp, n);
 
     println!("\nfactorization (posit32 via AOT Pallas GEMM on PJRT):");
@@ -70,6 +79,11 @@ fn main() -> anyhow::Result<()> {
         share(stats.update_s)
     );
     println!("  total               {:>8.3} s", stats.total_s);
+    println!(
+        "  overlap             {:>8.3} s  ({:>5.1}% of the wall hidden behind host work)",
+        stats.overlap_s,
+        100.0 * stats.overlap_fraction()
+    );
     println!("  throughput          {:>8.1} Mflops", lu_ops(n) / stats.total_s / 1e6);
     println!("  tiles dispatched    {:>8}", be.tiles_dispatched());
 
@@ -78,23 +92,25 @@ fn main() -> anyhow::Result<()> {
     //    the pack-plan pipeline: zero decodes, zero re-packs).
     let mut lu2 = ap.clone();
     let mut ipiv2 = vec![0usize; n];
-    let native_stats = getrf_offload(
+    let native_stats = getrf_offload_lookahead(
         n,
         n,
         &mut lu2.data,
         n,
         &mut ipiv2,
         nb,
+        lookahead,
         &NativeBackend::new(blas::default_threads()),
     )?;
     assert_eq!(lu.data, lu2.data, "PJRT and native factors differ!");
     println!("\n  [ok] accelerator factors bit-identical to native rust");
     println!(
-        "  native split: panel {:.3} s ({:.1}%) / update {:.3} s ({:.1}%)",
+        "  native split: panel {:.3} s ({:.1}%) / update {:.3} s ({:.1}%) / overlap {:.1}%",
         native_stats.panel_s,
         100.0 * native_stats.panel_s / native_stats.total_s.max(1e-12),
         native_stats.update_s,
         100.0 * native_stats.update_s / native_stats.total_s.max(1e-12),
+        100.0 * native_stats.overlap_fraction(),
     );
 
     // 2. accuracy vs binary32 (Eq. 4-5).

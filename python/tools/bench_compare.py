@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Diff two hot_paths bench JSONs and flag regressions.
+
+Compares a baseline and a candidate snapshot of the machine-readable
+bench artifacts (``BENCH_factor.json``, ``BENCH_gemm.json``,
+``BENCH_service.json`` — anything with the repo's ``{"quick": ...,
+"rows": [...]}`` shape), matching rows on their identity fields (alg,
+kernel, format, n, lookahead, workers, ...) and comparing the metric
+fields. A change worse than the threshold (default 10%) on any gated
+metric is a **regression**: it is printed and the exit code is 1, so CI
+can wire this straight into a job step.
+
+Gated metrics: ``seconds`` (lower is better) and the throughput columns
+(``gflops``, ``gposit_ops_per_s``, ``jobs_per_s``, ``update_gflops`` —
+higher is better). Informational columns (``panel_s``, ``update_s``,
+``overlap_s``, ``mean_digits``, ...) are shown in the diff when they
+moved, but never gate.
+
+Rows present on only one side are listed (new rows are expected when a
+PR adds bench coverage, e.g. the lookahead rows; vanished rows usually
+mean a renamed kernel and deserve a look) but do not gate either.
+
+Usage::
+
+    python3 python/tools/bench_compare.py BASELINE.json CANDIDATE.json
+    python3 python/tools/bench_compare.py base.json new.json --threshold 0.05
+
+Stdlib only, like every tool in this directory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Metric -> direction. +1: higher is better (throughput), -1: lower is
+# better (wall time). Everything else in a row is identity or info.
+GATED = {
+    "seconds": -1,
+    "gflops": +1,
+    "gposit_ops_per_s": +1,
+    "jobs_per_s": +1,
+    "update_gflops": +1,
+}
+
+# Reported when changed, never gated (phase splits are schedule-dependent
+# and machine-dependent; digits are gated by the bench itself).
+INFO = ("panel_s", "update_s", "wait_s", "overlap_s", "simulated_s", "mean_digits")
+
+
+def load_rows(path: str) -> list[dict]:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        sys.exit(f"{path}: no 'rows' array — not a hot_paths bench JSON")
+    return rows
+
+
+def identity(row: dict) -> tuple:
+    """Everything that names the measurement, in sorted-key order."""
+    skip = set(GATED) | set(INFO)
+    return tuple(sorted((k, v) for k, v in row.items() if k not in skip))
+
+
+def fmt_id(key: tuple) -> str:
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def rel_change(base: float, new: float) -> float:
+    if base == 0:
+        return float("inf") if new != 0 else 0.0
+    return (new - base) / base
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="baseline bench JSON")
+    ap.add_argument("candidate", help="candidate bench JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="relative regression threshold on gated metrics (default 0.10)",
+    )
+    ap.add_argument(
+        "--show-all",
+        action="store_true",
+        help="print every matched row's deltas, not just regressions",
+    )
+    args = ap.parse_args()
+
+    base = {identity(r): r for r in load_rows(args.baseline)}
+    cand = {identity(r): r for r in load_rows(args.candidate)}
+
+    regressions: list[str] = []
+    improvements = 0
+    matched = 0
+
+    for key in sorted(base.keys() & cand.keys(), key=fmt_id):
+        b, c = base[key], cand[key]
+        matched += 1
+        lines: list[str] = []
+        worst = 0.0
+        for metric, direction in GATED.items():
+            bv, cv = b.get(metric), c.get(metric)
+            if not isinstance(bv, (int, float)) or not isinstance(cv, (int, float)):
+                continue
+            change = rel_change(bv, cv)
+            # Signed badness: positive means worse, whatever the direction.
+            badness = change * -direction
+            tag = ""
+            if badness > args.threshold:
+                tag = "  << REGRESSION"
+                worst = max(worst, badness)
+            elif badness < -args.threshold:
+                improvements += 1
+            lines.append(f"    {metric}: {bv:g} -> {cv:g} ({change:+.1%}){tag}")
+        for metric in INFO:
+            bv, cv = b.get(metric), c.get(metric)
+            if isinstance(bv, (int, float)) and isinstance(cv, (int, float)) and bv != cv:
+                lines.append(f"    {metric}: {bv:g} -> {cv:g} ({rel_change(bv, cv):+.1%})  [info]")
+        if worst > 0:
+            regressions.append(fmt_id(key))
+            print(f"REGRESSION  {fmt_id(key)}")
+            print("\n".join(lines))
+        elif args.show_all and lines:
+            print(f"ok          {fmt_id(key)}")
+            print("\n".join(lines))
+
+    for key in sorted(cand.keys() - base.keys(), key=fmt_id):
+        print(f"new row     {fmt_id(key)}")
+    for key in sorted(base.keys() - cand.keys(), key=fmt_id):
+        print(f"VANISHED    {fmt_id(key)}")
+
+    print(
+        f"\n{matched} rows matched, {len(cand.keys() - base.keys())} new, "
+        f"{len(base.keys() - cand.keys())} vanished, {improvements} metric(s) improved "
+        f"past {args.threshold:.0%}, {len(regressions)} row(s) regressed."
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,6 +82,11 @@ struct FactorRow {
     panel_s: f64,
     /// Trailing-update seconds (packed rows only; NaN -> null).
     update_s: f64,
+    /// Lookahead depth the row ran at (0 = sequential schedule).
+    lookahead: usize,
+    /// Seconds the in-flight update overlapped host work (NaN -> null;
+    /// always 0 on depth-0 rows).
+    overlap_s: f64,
 }
 
 struct Bench {
@@ -114,7 +119,38 @@ impl Bench {
             gflops * 1e3,
             "Mflops",
         );
-        self.factor.push(FactorRow { alg, format, n, kernel, seconds, gflops, panel_s, update_s });
+        self.factor.push(FactorRow {
+            alg, format, n, kernel, seconds, gflops, panel_s, update_s,
+            lookahead: 0, overlap_s: f64::NAN,
+        });
+    }
+    /// Record one lookahead-pipelined factorization point: like
+    /// [`Bench::add_factor`] but carrying the depth and the overlap split.
+    #[allow(clippy::too_many_arguments)]
+    fn add_factor_la(
+        &mut self,
+        alg: &'static str,
+        format: &'static str,
+        n: usize,
+        kernel: &'static str,
+        lookahead: usize,
+        seconds: f64,
+        ops: f64,
+        stats: &posit_accel::coordinator::OffloadStats,
+    ) {
+        let gflops = ops / seconds / 1e9;
+        self.add(
+            &format!("{alg} {kernel} {format} {n}"),
+            gflops * 1e3,
+            "Mflops",
+        );
+        self.factor.push(FactorRow {
+            alg, format, n, kernel, seconds, gflops,
+            panel_s: stats.panel_s,
+            update_s: stats.update_s,
+            lookahead,
+            overlap_s: stats.overlap_s,
+        });
     }
     /// Record one GEMM kernel point (also mirrored into the CSV rows).
     fn add_gemm(&mut self, kernel: &'static str, format: &'static str, n: usize, seconds: f64) {
@@ -217,15 +253,17 @@ impl Bench {
             .iter()
             .map(|r| {
                 format!(
-                    "  {{\"alg\": \"{}\", \"format\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \"seconds\": {}, \"gflops\": {}, \"panel_s\": {}, \"update_s\": {}}}",
+                    "  {{\"alg\": \"{}\", \"format\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \"lookahead\": {}, \"seconds\": {}, \"gflops\": {}, \"panel_s\": {}, \"update_s\": {}, \"overlap_s\": {}}}",
                     r.alg,
                     r.format,
                     r.n,
                     r.kernel,
+                    r.lookahead,
                     jnum(r.seconds),
                     jnum(r.gflops),
                     jnum(r.panel_s),
                     jnum(r.update_s),
+                    jnum(r.overlap_s),
                 )
             })
             .collect();
@@ -562,11 +600,22 @@ fn bench_decompositions(b: &mut Bench) {
 ///
 /// Always opens with the **bit-identity gate**: on smoke shapes the
 /// decode-once factorizations must reproduce the scalar path's factors
-/// and pivots exactly (posit32 and binary32, LU and Cholesky). A
-/// divergence aborts the bench with a nonzero exit — the CI guard that
-/// every push keeps the pipeline rewiring at zero output-bit change.
+/// and pivots exactly (posit32 and binary32, LU and Cholesky) — at every
+/// lookahead depth 0/1/2, not just the sequential schedule. A divergence
+/// aborts the bench with a nonzero exit — the CI guard that every push
+/// keeps the pipeline rewiring at zero output-bit change.
+///
+/// The ladder then adds `packed-la1` rows (depth-1 lookahead on the
+/// native backend) and the `accel-rt`/`accel-rt-la1` pair: a real-time
+/// [`TimedBackend`] whose modelled offload latency is slept out on the
+/// wall clock, so the depth-1 row's speedup over depth 0 *is* the
+/// overlap win (the `overlap_s` column says how much update time hid
+/// behind host panels).
 fn bench_factorization(b: &mut Bench) {
-    use posit_accel::coordinator::drivers::{chol_ops, getrf_offload, lu_ops, potrf_offload};
+    use posit_accel::coordinator::drivers::{
+        chol_ops, getrf_offload, getrf_offload_lookahead, lu_ops, potrf_offload,
+        potrf_offload_lookahead,
+    };
     use posit_accel::experiments::matgen;
     use posit_accel::lapack::{getrf_ref, potrf_ref};
 
@@ -614,7 +663,40 @@ fn bench_factorization(b: &mut Bench) {
                 );
             }
         }
-        println!("[factorization bit-identity gate passed: decode-once == scalar path]");
+        // Lookahead gate: every depth must reproduce the scalar path too
+        // (the pipeline reorders when updates run, never what they compute).
+        for depth in [0usize, 1, 2] {
+            let mut g = a0.clone();
+            let mut gp = vec![0usize; n];
+            getrf_offload_lookahead(n, n, &mut g.data, n, &mut gp, nb, depth, &be).unwrap();
+            assert_eq!(
+                (&wp, &w.data),
+                (&gp, &g.data),
+                "BIT-IDENTITY VIOLATION: lookahead-{depth} LU != scalar path (posit32)"
+            );
+            let mut gf = af.clone();
+            let mut gfp = vec![0usize; n];
+            getrf_offload_lookahead(n, n, &mut gf.data, n, &mut gfp, nb, depth, &be).unwrap();
+            assert_eq!(
+                (&wfp, &wf.data),
+                (&gfp, &gf.data),
+                "BIT-IDENTITY VIOLATION: lookahead-{depth} LU != scalar path (f32)"
+            );
+            let mut gc = sp.clone();
+            potrf_offload_lookahead(n, &mut gc.data, n, nb, depth, &be).unwrap();
+            for j in 0..n {
+                for i in j..n {
+                    assert_eq!(
+                        wc[(i, j)],
+                        gc[(i, j)],
+                        "BIT-IDENTITY VIOLATION: lookahead-{depth} Cholesky != scalar path at L({i},{j})"
+                    );
+                }
+            }
+        }
+        println!(
+            "[factorization bit-identity gate passed: decode-once == scalar path at depths 0/1/2]"
+        );
     }
 
     // ---- timing ladder ------------------------------------------------
@@ -652,6 +734,16 @@ fn bench_factorization(b: &mut Bench) {
             "getrf", "posit32", n, "packed", st.min, lu_ops(n),
             last_stats.panel_s, last_stats.update_s,
         );
+        // Depth-1 lookahead on the native backend: same bits, trailing
+        // tail in flight on a spawned worker while the host factors the
+        // next panel.
+        let st = bench_stats(reps, || {
+            let mut a = ap.clone();
+            let mut piv = vec![0usize; n];
+            last_stats =
+                getrf_offload_lookahead(n, n, &mut a.data, n, &mut piv, nb, 1, &be).unwrap();
+        });
+        b.add_factor_la("getrf", "posit32", n, "packed-la1", 1, st.min, lu_ops(n), &last_stats);
 
         // --- posit32 Cholesky.
         let st = bench_stats(reps, || {
@@ -667,6 +759,37 @@ fn bench_factorization(b: &mut Bench) {
             "potrf", "posit32", n, "packed", st.min, chol_ops(n),
             last_stats.panel_s, last_stats.update_s,
         );
+        let st = bench_stats(reps, || {
+            let mut a = sp.clone();
+            last_stats = potrf_offload_lookahead(n, &mut a.data, n, nb, 1, &be).unwrap();
+        });
+        b.add_factor_la("potrf", "posit32", n, "packed-la1", 1, st.min, chol_ops(n), &last_stats);
+
+        // --- timed accelerator, real-time mode: the wall clock actually
+        // waits out the modelled offload latency, so these two rows are
+        // the lookahead headline — depth 0 pays (host + sleep) serially,
+        // depth 1 hides the tail's sleep behind the next panel. The model
+        // pegs the accelerator near posit-software throughput: the regime
+        // where offload time is neither negligible nor dominant, i.e.
+        // where scheduling is what decides the wall clock.
+        let rt = TimedBackend::new("accel-rt", NativeBackend::new(threads), |m, k, nn| {
+            2.0 * (m * k * nn) as f64 / 1.5e8
+        })
+        .with_real_time();
+        let st = bench_stats(reps.min(2), || {
+            let mut a = ap.clone();
+            let mut piv = vec![0usize; n];
+            last_stats =
+                getrf_offload_lookahead(n, n, &mut a.data, n, &mut piv, nb, 0, &rt).unwrap();
+        });
+        b.add_factor_la("getrf", "posit32", n, "accel-rt", 0, st.min, lu_ops(n), &last_stats);
+        let st = bench_stats(reps.min(2), || {
+            let mut a = ap.clone();
+            let mut piv = vec![0usize; n];
+            last_stats =
+                getrf_offload_lookahead(n, n, &mut a.data, n, &mut piv, nb, 1, &rt).unwrap();
+        });
+        b.add_factor_la("getrf", "posit32", n, "accel-rt-la1", 1, st.min, lu_ops(n), &last_stats);
 
         // --- binary32 LU + Cholesky (decode-once is passthrough; these
         // rows isolate the restructuring + pack-plan effect alone).

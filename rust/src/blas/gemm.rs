@@ -515,19 +515,10 @@ impl<T: Scalar> PackedA<T> {
     pub fn from_fn(
         m: usize,
         k: usize,
-        mut f: impl FnMut(usize, usize) -> T::Unpacked,
+        f: impl FnMut(usize, usize) -> T::Unpacked,
     ) -> PackedA<T> {
-        let islabs = m.div_ceil(MR);
-        let mut data = Vec::with_capacity(islabs * k * MR);
-        for is in 0..islabs {
-            let r0 = is * MR;
-            let rb = MR.min(m - r0);
-            for l in 0..k {
-                for ii in 0..MR {
-                    data.push(if ii < rb { f(r0 + ii, l) } else { T::unpacked_pad() });
-                }
-            }
-        }
+        let mut data = Vec::with_capacity(packed_a_elems(m, k));
+        fill_packed_a::<T>(&mut data, m, k, f);
         PackedA { rows: m, cols: k, data }
     }
 
@@ -573,19 +564,10 @@ impl<T: Scalar> PackedB<T> {
     pub fn from_fn(
         k: usize,
         n: usize,
-        mut f: impl FnMut(usize, usize) -> T::Unpacked,
+        f: impl FnMut(usize, usize) -> T::Unpacked,
     ) -> PackedB<T> {
-        let jslabs = n.div_ceil(NR);
-        let mut data = Vec::with_capacity(jslabs * k * NR);
-        for js in 0..jslabs {
-            let j0 = js * NR;
-            let jb = NR.min(n - j0);
-            for l in 0..k {
-                for jj in 0..NR {
-                    data.push(if jj < jb { f(l, j0 + jj) } else { T::unpacked_pad() });
-                }
-            }
-        }
+        let mut data = Vec::with_capacity(packed_b_elems(k, n));
+        fill_packed_b::<T>(&mut data, k, n, f);
         PackedB { rows: k, cols: n, data }
     }
 
@@ -630,6 +612,152 @@ impl<T: Scalar> Clone for PackPlan<T> {
             a: self.a.clone(),
             b: self.b.clone(),
         }
+    }
+}
+
+/// Exact slab-buffer size (in elements) of a packed `m x k` op(A).
+fn packed_a_elems(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * MR * k
+}
+
+/// Exact slab-buffer size (in elements) of a packed `k x n` op(B).
+fn packed_b_elems(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * NR * k
+}
+
+/// The one op(A) slab-marshalling loop, shared by [`PackedA::from_fn`]
+/// and the arena checkout path so both produce byte-identical slabs.
+fn fill_packed_a<T: Scalar>(
+    data: &mut Vec<T::Unpacked>,
+    m: usize,
+    k: usize,
+    mut f: impl FnMut(usize, usize) -> T::Unpacked,
+) {
+    let islabs = m.div_ceil(MR);
+    for is in 0..islabs {
+        let r0 = is * MR;
+        let rb = MR.min(m - r0);
+        for l in 0..k {
+            for ii in 0..MR {
+                data.push(if ii < rb { f(r0 + ii, l) } else { T::unpacked_pad() });
+            }
+        }
+    }
+}
+
+/// The one op(B) slab-marshalling loop (see [`fill_packed_a`]).
+fn fill_packed_b<T: Scalar>(
+    data: &mut Vec<T::Unpacked>,
+    k: usize,
+    n: usize,
+    mut f: impl FnMut(usize, usize) -> T::Unpacked,
+) {
+    let jslabs = n.div_ceil(NR);
+    for js in 0..jslabs {
+        let j0 = js * NR;
+        let jb = NR.min(n - j0);
+        for l in 0..k {
+            for jj in 0..NR {
+                data.push(if jj < jb { f(l, j0 + jj) } else { T::unpacked_pad() });
+            }
+        }
+    }
+}
+
+/// Reusable backing store for [`PackPlan`] slab buffers.
+///
+/// The lookahead factorization pipeline builds two pack plans per blocked
+/// step (the "next panel" head and the in-flight tail) and retires them at
+/// the end of the step; without reuse that is four `Vec` allocations per
+/// step, every step. The arena keeps retired slab buffers on a free list
+/// and hands them back on the next checkout, so steady-state steps do
+/// **zero** heap allocation: step sizes shrink monotonically as the
+/// factorization proceeds, so after the first (largest) step every
+/// checkout is served from the free list. [`PlanArena::grows`] counts the
+/// checkouts that had to allocate — the regression guard the tests pin.
+///
+/// Buffers are recycled by *capacity*, not contents: a checkout clears the
+/// buffer and re-marshals through the same fill loops as
+/// [`PackedA::from_fn`] / [`PackedB::from_fn`], so arena-built plans are
+/// byte-identical to freshly allocated ones.
+pub struct PlanArena<T: Scalar> {
+    free: Vec<Vec<T::Unpacked>>,
+    checkouts: usize,
+    grows: usize,
+}
+
+impl<T: Scalar> PlanArena<T> {
+    pub fn new() -> PlanArena<T> {
+        PlanArena {
+            free: Vec::new(),
+            checkouts: 0,
+            grows: 0,
+        }
+    }
+
+    /// A cleared buffer with at least `cap` capacity: reused from the
+    /// free list when one fits, freshly allocated (counted by
+    /// [`PlanArena::grows`]) otherwise.
+    fn checkout(&mut self, cap: usize) -> Vec<T::Unpacked> {
+        self.checkouts += 1;
+        match self.free.iter().position(|b| b.capacity() >= cap) {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
+                buf.clear();
+                buf
+            }
+            None => {
+                self.grows += 1;
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// [`PackedA::from_fn`] drawing its slab buffer from the arena.
+    pub fn pack_a(
+        &mut self,
+        m: usize,
+        k: usize,
+        f: impl FnMut(usize, usize) -> T::Unpacked,
+    ) -> PackedA<T> {
+        let mut data = self.checkout(packed_a_elems(m, k));
+        fill_packed_a::<T>(&mut data, m, k, f);
+        PackedA { rows: m, cols: k, data }
+    }
+
+    /// [`PackedB::from_fn`] drawing its slab buffer from the arena.
+    pub fn pack_b(
+        &mut self,
+        k: usize,
+        n: usize,
+        f: impl FnMut(usize, usize) -> T::Unpacked,
+    ) -> PackedB<T> {
+        let mut data = self.checkout(packed_b_elems(k, n));
+        fill_packed_b::<T>(&mut data, k, n, f);
+        PackedB { rows: k, cols: n, data }
+    }
+
+    /// Return a retired plan's slab buffers to the free list.
+    pub fn recycle(&mut self, plan: PackPlan<T>) {
+        self.free.push(plan.a.data);
+        self.free.push(plan.b.data);
+    }
+
+    /// Total slab-buffer checkouts served.
+    pub fn checkouts(&self) -> usize {
+        self.checkouts
+    }
+
+    /// Checkouts that had to heap-allocate (free list had no fitting
+    /// buffer). Steady-state lookahead steps must not move this.
+    pub fn grows(&self) -> usize {
+        self.grows
+    }
+}
+
+impl<T: Scalar> Default for PlanArena<T> {
+    fn default() -> Self {
+        PlanArena::new()
     }
 }
 
@@ -1259,6 +1387,69 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn arena_plans_match_from_fn_bitwise() {
+        // A plan marshalled through the arena must carry exactly the
+        // slabs from_fn builds (same fill loops, recycled storage).
+        let (m, n, k) = (27, 22, 8);
+        let mut rng = Pcg64::seed(40);
+        let a = Matrix::<Posit32>::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::<Posit32>::random_normal(k, n, 1.0, &mut rng);
+        let au: Vec<_> = a.data.iter().map(|v| v.unpack()).collect();
+        let bu: Vec<_> = b.data.iter().map(|v| v.unpack()).collect();
+        let mut arena = PlanArena::<Posit32>::new();
+        // Two rounds: the second draws recycled buffers and must still
+        // match bit-for-bit.
+        for round in 0..2 {
+            let pa1 = PackedA::<Posit32>::from_fn(m, k, |i, l| au[i + l * m]);
+            let pb1 = PackedB::<Posit32>::from_fn(k, n, |l, j| bu[l + j * k]);
+            let pa2 = arena.pack_a(m, k, |i, l| au[i + l * m]);
+            let pb2 = arena.pack_b(k, n, |l, j| bu[l + j * k]);
+            assert_eq!(pa1.data, pa2.data, "round {round}");
+            assert_eq!(pb1.data, pb2.data, "round {round}");
+            arena.recycle(PackPlan::new(pa2, pb2));
+        }
+        assert_eq!(arena.checkouts(), 4);
+        assert_eq!(arena.grows(), 2, "round 2 must reuse round 1's buffers");
+    }
+
+    #[test]
+    fn arena_steady_state_lookahead_steps_do_not_allocate() {
+        // The allocation regression guard for the lookahead drivers: per
+        // blocked step they check out two plans (head + tail) and recycle
+        // both at the end of the step. Step sizes shrink as the
+        // factorization proceeds, so after the first (largest) step every
+        // checkout must be served from the free list — `grows` stays at
+        // its first-step value across all remaining steps.
+        let (m, nb) = (96usize, 16usize);
+        let mut arena = PlanArena::<Posit32>::new();
+        let pad = Posit32::ZERO.unpack();
+        let mut j = 0;
+        let mut grows_after_first = None;
+        while j + nb < m {
+            let nrows = m - j - nb;
+            let ncols = m - j - nb;
+            let jbn = nb.min(ncols);
+            let head = PackPlan::new(
+                arena.pack_a(nrows, nb, |_, _| pad),
+                arena.pack_b(nb, jbn, |_, _| pad),
+            );
+            let tail = PackPlan::new(
+                arena.pack_a(nrows, nb, |_, _| pad),
+                arena.pack_b(nb, ncols - jbn, |_, _| pad),
+            );
+            arena.recycle(head);
+            arena.recycle(tail);
+            if let Some(g) = grows_after_first {
+                assert_eq!(arena.grows(), g, "steady-state step at j={j} allocated");
+            } else {
+                grows_after_first = Some(arena.grows());
+            }
+            j += nb;
+        }
+        assert!(arena.checkouts() > arena.grows(), "free list never used");
     }
 
     #[test]

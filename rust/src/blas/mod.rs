@@ -24,7 +24,7 @@ pub use fused::{gemm_update_quire, gemm_update_quire_parallel, gemv_quire, trsm_
 pub use gemm::{
     default_threads, gemm, gemm_blocked_ref, gemm_naive, gemm_packed, gemm_packed_lanes,
     gemm_parallel, gemm_parallel_scoped, gemm_prepacked, gemm_prepacked_parallel,
-    gemm_prepacked_scoped, PackPlan, PackedA, PackedB, Trans,
+    gemm_prepacked_scoped, PackPlan, PackedA, PackedB, PlanArena, Trans,
 };
 pub use level1::{asum, axpy, dot, dot_quire, iamax, nrm2, scal, swap_rows};
 pub use level2::{gemv, ger, symv_lower, syr_lower, trsv};

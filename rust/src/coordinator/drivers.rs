@@ -19,6 +19,21 @@
 //! the staged scalar tiles and ignore the plan; numerics are identical
 //! either way (decode/pack are pure).
 //!
+//! §Perf (lookahead): [`getrf_offload_lookahead`] /
+//! [`potrf_offload_lookahead`] (and their quire counterparts) remove the
+//! per-step host/backend barrier of the plain drivers. Each trailing
+//! update is split by columns into the *next panel's* columns (updated
+//! synchronously, first) and the remainder, which is submitted
+//! asynchronously ([`GemmBackend::submit_update_prepacked`]) and left in
+//! flight while the host factors panel `j+1` from its freshly updated
+//! columns. Column partitioning never touches the per-element
+//! ascending-`k` accumulation chains (each C column depends only on its
+//! own B column), and decode/pack are pure — so every depth produces
+//! factors bit-identical to the sequential drivers; only the schedule
+//! changes. Depth 0 *is* the sequential driver; any depth ≥ 1 runs the
+//! pipeline, which keeps (at most) one update in flight — its single
+//! in-flight slot is already saturated at depth 1.
+//!
 //! [`refine_offload`] adds the mixed-precision job mode: factorize in the
 //! working format `T` (posit32 or binary32, through the backend), then
 //! iteratively refine residuals computed in binary64 — the classic
@@ -27,8 +42,8 @@
 
 use super::{GemmBackend, OffloadStats};
 use crate::blas::{
-    gemm, trsm_quire, trsm_unpacked, Accum, Diag, Matrix, PackPlan, PackedA, PackedB, Scalar,
-    Side, Trans, Uplo,
+    gemm, trsm_quire, trsm_unpacked, Accum, Diag, Matrix, PackPlan, PackedA, PackedB, PlanArena,
+    Scalar, Side, Trans, Uplo,
 };
 use crate::lapack::{
     backward_error, getf2_quire, getf2_unpacked, getrs, getrs_quire, laswp, potf2, potf2_quire,
@@ -421,6 +436,785 @@ pub fn potrf_offload_quire<T: Scalar>(
             stats.panel_s += t0.elapsed().as_secs_f64();
         }
         j += jb;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Lookahead-pipelined blocked LU: [`getrf_offload`] with the per-step
+/// host/backend barrier removed (ISSUE 9; classic depth-k lookahead).
+///
+/// Each trailing update is split by columns: the next panel's `jbn`
+/// columns are updated synchronously first, the remaining columns are
+/// submitted to the backend and stay in flight while the host factors
+/// panel `j+1` from the freshly updated head. Pivots are *published* one
+/// step late (panel `j+1`'s swaps are applied at the top of step `j+1`,
+/// exactly where the sequential driver applies them), so the operation
+/// order per matrix element is identical to [`getrf_offload`] and the
+/// factors are bit-identical at every depth. `lookahead == 0` runs the
+/// sequential driver; any depth ≥ 1 runs the pipeline (one in-flight
+/// update — the pipeline's single slot saturates at depth 1). Pack slabs
+/// come from a [`PlanArena`], so steady-state steps do zero heap
+/// allocation. Singular panels are deferred like the sequential driver
+/// (factorization completes, smallest global index wins); backend errors
+/// abort cleanly — the in-flight update is always waited out first, so no
+/// worker is left writing into freed memory and none hangs.
+#[allow(clippy::too_many_arguments)]
+pub fn getrf_offload_lookahead<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+    nb: usize,
+    lookahead: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    if lookahead == 0 {
+        return getrf_offload(m, n, a, lda, ipiv, nb, backend);
+    }
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let kmin = m.min(n);
+    if kmin == 0 {
+        stats.total_s = t_all.elapsed().as_secs_f64();
+        return Ok(stats);
+    }
+    let mut info: Option<LapackError> = None;
+    let mut arena = PlanArena::<T>::new();
+    // Prologue: factor panel 0 (its columns need no update).
+    let jb0 = nb.min(kmin);
+    let t0 = Instant::now();
+    let mut piv = vec![0usize; jb0];
+    let (mut panel_u, res) = getf2_unpacked(m, jb0, a, lda, &mut piv);
+    if let Err(e) = res {
+        info.get_or_insert(e); // j == 0: local indices are already global
+    }
+    stats.panel_s += t0.elapsed().as_secs_f64();
+    // Invariant at the top of each step: panel `j` is factored (decoded
+    // planes in `panel_u`, local pivots in `piv`), nothing is in flight.
+    let mut j = 0;
+    while j < kmin {
+        let jb = nb.min(kmin - j);
+        let pm = m - j;
+        let jn = j + jb;
+        // Width of the *next* panel — the head of this step's update.
+        let jbn = if jn < kmin { nb.min(kmin - jn) } else { 0 };
+        let t0 = Instant::now();
+        // Publish the carried panel's pivots, then swap — the same point
+        // in the operation order where the sequential driver swaps.
+        for (t, &p) in ipiv[j..jn].iter_mut().zip(&piv) {
+            *t = p + j;
+        }
+        laswp(j, a, lda, j, jn, ipiv);
+        let mut u12_u: Option<Vec<T::Unpacked>> = None;
+        if jn < n {
+            laswp(n - jn, &mut a[jn * lda..], lda, j, jn, ipiv);
+            let (a11_part, a12_part) = a.split_at_mut(jn * lda);
+            let a11 = &a11_part[j + j * lda..];
+            let a12 = &mut a12_part[j..];
+            u12_u = Some(trsm_unpacked(
+                Side::Left,
+                Uplo::Lower,
+                Trans::No,
+                Diag::Unit,
+                jb,
+                n - jn,
+                T::one(),
+                a11,
+                lda,
+                a12,
+                lda,
+            ));
+        }
+        stats.panel_s += t0.elapsed().as_secs_f64();
+
+        if jn < n && jn < m {
+            let t1 = Instant::now();
+            let ncols = n - jn;
+            let nrows = m - jn;
+            let u12_planes = u12_u.as_ref().expect("u12 computed when jn < n");
+            // jn < kmin here, so jbn >= 1 and the head is never empty.
+            let tail_cols = ncols - jbn;
+            if tail_cols == 0 {
+                // Final update step: the whole trailing matrix is next
+                // panel columns — nothing to overlap, run synchronously.
+                let plan = PackPlan::new(
+                    arena.pack_a(nrows, jb, |i, l| panel_u[(jb + i) + l * pm]),
+                    arena.pack_b(jb, ncols, |l, c| u12_planes[l + c * jb]),
+                );
+                let mut u12 = Vec::new();
+                if backend.wants_scalar_tiles() {
+                    u12 = vec![T::zero(); jb * ncols];
+                    for c in 0..ncols {
+                        let base = j + (jn + c) * lda;
+                        u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                    }
+                }
+                let (left, right) = a.split_at_mut(jn * lda);
+                let l21 = &left[jn + j * lda..];
+                let a22 = &mut right[jn..];
+                let res = backend
+                    .gemm_update_prepacked(nrows, jb, ncols, l21, lda, &u12, jb, &plan, a22, lda);
+                arena.recycle(plan);
+                res.map_err(|_| LapackError::BadValue(j + 1))?;
+                stats.update_s += t1.elapsed().as_secs_f64();
+                stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+                stats.simulated_s += backend.simulated_cost(nrows, jb, ncols);
+                let t2 = Instant::now();
+                let mut piv2 = vec![0usize; jbn];
+                let (pu2, res2) =
+                    getf2_unpacked(nrows, jbn, &mut a[jn + jn * lda..], lda, &mut piv2);
+                if let Err(e) = res2 {
+                    info.get_or_insert(match e {
+                        LapackError::SingularU(i) => LapackError::SingularU(i + jn),
+                        other => other,
+                    });
+                }
+                stats.panel_s += t2.elapsed().as_secs_f64();
+                panel_u = pu2;
+                piv = piv2;
+            } else {
+                // Head/tail column split of the trailing update. Both
+                // plans marshal from the same hot decoded planes as the
+                // sequential driver's single plan; slabs come from the
+                // arena (zero allocation at steady state).
+                let head_plan = PackPlan::new(
+                    arena.pack_a(nrows, jb, |i, l| panel_u[(jb + i) + l * pm]),
+                    arena.pack_b(jb, jbn, |l, c| u12_planes[l + c * jb]),
+                );
+                let tail_plan = PackPlan::new(
+                    arena.pack_a(nrows, jb, |i, l| panel_u[(jb + i) + l * pm]),
+                    arena.pack_b(jb, tail_cols, |l, c| u12_planes[l + (jbn + c) * jb]),
+                );
+                let mut u12_head = Vec::new();
+                let mut u12_tail = Vec::new();
+                let mut l21_tail = Vec::new();
+                if backend.wants_scalar_tiles() {
+                    u12_head = vec![T::zero(); jb * jbn];
+                    for c in 0..jbn {
+                        let base = j + (jn + c) * lda;
+                        u12_head[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                    }
+                    u12_tail = vec![T::zero(); jb * tail_cols];
+                    for c in 0..tail_cols {
+                        let base = j + (jn + jbn + c) * lda;
+                        u12_tail[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                    }
+                    // The submission owns its operands, so L21 gets an
+                    // owned contiguous copy for the tail.
+                    l21_tail = vec![T::zero(); nrows * jb];
+                    for c in 0..jb {
+                        let base = jn + (j + c) * lda;
+                        l21_tail[c * nrows..(c + 1) * nrows]
+                            .copy_from_slice(&a[base..base + nrows]);
+                    }
+                }
+                // Split C at the head/tail column boundary: the tail goes
+                // to the backend, the head stays with the host.
+                let (head_part, tail_part) = a.split_at_mut((jn + jbn) * lda);
+                let tail_c = &mut tail_part[jn..];
+                let handle = backend.submit_update_prepacked(
+                    nrows, jb, tail_cols, l21_tail, nrows, u12_tail, jb, tail_plan, tail_c, lda,
+                );
+                let t_inflight = Instant::now();
+                // Head update (synchronous): the next panel's columns.
+                let (hleft, hright) = head_part.split_at_mut(jn * lda);
+                let l21 = &hleft[jn + j * lda..];
+                let head_c = &mut hright[jn..];
+                let head_res = backend
+                    .gemm_update_prepacked(nrows, jb, jbn, l21, lda, &u12_head, jb, &head_plan, head_c, lda);
+                stats.update_s += t1.elapsed().as_secs_f64();
+                stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+                stats.simulated_s += backend.simulated_cost(nrows, jb, jbn)
+                    + backend.simulated_cost(nrows, jb, tail_cols);
+                // LOOKAHEAD: factor panel j+1 from its fully updated
+                // columns while the tail update is still in flight.
+                let t2 = Instant::now();
+                let mut piv2 = vec![0usize; jbn];
+                let (pu2, res2) = getf2_unpacked(nrows, jbn, head_c, lda, &mut piv2);
+                stats.panel_s += t2.elapsed().as_secs_f64();
+                if handle.is_async() {
+                    stats.overlap_s += t_inflight.elapsed().as_secs_f64();
+                }
+                let t3 = Instant::now();
+                let (tail_res, plan_back) = handle.wait();
+                stats.wait_s += t3.elapsed().as_secs_f64();
+                if let Some(p) = plan_back {
+                    arena.recycle(p);
+                }
+                arena.recycle(head_plan);
+                // Error precedence matches the sequential driver: a
+                // backend failure of *this* step's update aborts first;
+                // a singular panel at j+1 is deferred as usual.
+                if tail_res.is_err() || head_res.is_err() {
+                    return Err(LapackError::BadValue(j + 1));
+                }
+                if let Err(e) = res2 {
+                    info.get_or_insert(match e {
+                        LapackError::SingularU(i) => LapackError::SingularU(i + jn),
+                        other => other,
+                    });
+                }
+                panel_u = pu2;
+                piv = piv2;
+            }
+        }
+        j = jn;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    match info {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// Lookahead-pipelined blocked lower Cholesky: [`potrf_offload`] with the
+/// same head/tail column split and overlap scheme as
+/// [`getrf_offload_lookahead`]. While the tail of step `j`'s trailing
+/// update is in flight, the host runs step `j+1`'s `potf2` and panel TRSM
+/// — both live entirely inside the head columns, which are disjoint from
+/// the tail's C region, so the overlap is race-free and bit-identical to
+/// the sequential schedule. A non-positive-definite pivot discovered
+/// mid-pipeline waits out the in-flight tail, then aborts with exactly
+/// the sequential driver's error (same index, same matrix state).
+pub fn potrf_offload_lookahead<T: Scalar>(
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    nb: usize,
+    lookahead: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    if lookahead == 0 {
+        return potrf_offload(n, a, lda, nb, backend);
+    }
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    if n == 0 {
+        stats.total_s = t_all.elapsed().as_secs_f64();
+        return Ok(stats);
+    }
+    let mut arena = PlanArena::<T>::new();
+    // Prologue: potf2 + panel TRSM of step 0.
+    let jb0 = nb.min(n);
+    let t0 = Instant::now();
+    potf2(jb0, a, lda)?; // j == 0: indices are already global
+    let mut a21_u: Option<Vec<T::Unpacked>> = None;
+    if jb0 < n {
+        let m2 = n - jb0;
+        let mut l11 = vec![T::zero(); jb0 * jb0];
+        for c in 0..jb0 {
+            let base = c * lda;
+            l11[c * jb0..(c + 1) * jb0].copy_from_slice(&a[base..base + jb0]);
+        }
+        let a21 = &mut a[jb0..];
+        a21_u = Some(trsm_unpacked(
+            Side::Right,
+            Uplo::Lower,
+            Trans::Yes,
+            Diag::NonUnit,
+            m2,
+            jb0,
+            T::one(),
+            &l11,
+            jb0,
+            a21,
+            lda,
+        ));
+    }
+    stats.panel_s += t0.elapsed().as_secs_f64();
+    // Invariant at the top of each step: potf2 + TRSM for step `j` are
+    // done (decoded A21 planes in `a21_u`), nothing is in flight.
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        let jn = j + jb;
+        if jn >= n {
+            break; // final diagonal block already factored
+        }
+        let m2 = n - jn;
+        let jbn = nb.min(m2); // next panel width == head columns
+        let tail_cols = m2 - jbn;
+        let a21u = a21_u.take().expect("a21 planes carried when jn < n");
+        let t1 = Instant::now();
+        if tail_cols == 0 {
+            // Final update step: synchronous, then factor the last block.
+            let plan = PackPlan::new(
+                arena.pack_a(m2, jb, |i, l| a21u[i + l * m2]),
+                arena.pack_b(jb, m2, |l, c| a21u[c + l * m2]),
+            );
+            let mut a21_copy = Vec::new();
+            let mut a21_t = Vec::new();
+            if backend.wants_scalar_tiles() {
+                a21_copy = vec![T::zero(); m2 * jb];
+                a21_t = vec![T::zero(); jb * m2];
+                for c in 0..jb {
+                    let base = jn + (j + c) * lda;
+                    a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+                }
+                for c in 0..jb {
+                    for r in 0..m2 {
+                        a21_t[c + r * jb] = a21_copy[r + c * m2];
+                    }
+                }
+            }
+            let a22 = &mut a[jn + jn * lda..];
+            let res = backend
+                .gemm_update_prepacked(m2, jb, m2, &a21_copy, m2, &a21_t, jb, &plan, a22, lda);
+            arena.recycle(plan);
+            res.map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            stats.simulated_s += backend.simulated_cost(m2, jb, m2);
+            let t2 = Instant::now();
+            potf2(jbn, &mut a[jn + jn * lda..], lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(i + jn),
+                LapackError::BadValue(i) => LapackError::BadValue(i + jn),
+                other => other,
+            })?;
+            stats.panel_s += t2.elapsed().as_secs_f64();
+        } else {
+            let head_plan = PackPlan::new(
+                arena.pack_a(m2, jb, |i, l| a21u[i + l * m2]),
+                arena.pack_b(jb, jbn, |l, c| a21u[c + l * m2]),
+            );
+            let tail_plan = PackPlan::new(
+                arena.pack_a(m2, jb, |i, l| a21u[i + l * m2]),
+                arena.pack_b(jb, tail_cols, |l, c| a21u[(jbn + c) + l * m2]),
+            );
+            let mut a21_copy = Vec::new();
+            let mut a21_t_head = Vec::new();
+            let mut a21_copy_tail = Vec::new();
+            let mut a21_t_tail = Vec::new();
+            if backend.wants_scalar_tiles() {
+                a21_copy = vec![T::zero(); m2 * jb];
+                for c in 0..jb {
+                    let base = jn + (j + c) * lda;
+                    a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+                }
+                a21_t_head = vec![T::zero(); jb * jbn];
+                for r in 0..jbn {
+                    for l in 0..jb {
+                        a21_t_head[l + r * jb] = a21_copy[r + l * m2];
+                    }
+                }
+                a21_t_tail = vec![T::zero(); jb * tail_cols];
+                for r in 0..tail_cols {
+                    for l in 0..jb {
+                        a21_t_tail[l + r * jb] = a21_copy[(jbn + r) + l * m2];
+                    }
+                }
+                a21_copy_tail = a21_copy.clone();
+            }
+            let (head_part, tail_part) = a.split_at_mut((jn + jbn) * lda);
+            let tail_c = &mut tail_part[jn..];
+            let handle = backend.submit_update_prepacked(
+                m2,
+                jb,
+                tail_cols,
+                a21_copy_tail,
+                m2,
+                a21_t_tail,
+                jb,
+                tail_plan,
+                tail_c,
+                lda,
+            );
+            let t_inflight = Instant::now();
+            let head_c = &mut head_part[jn + jn * lda..];
+            let head_res = backend.gemm_update_prepacked(
+                m2, jb, jbn, &a21_copy, m2, &a21_t_head, jb, &head_plan, head_c, lda,
+            );
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            stats.simulated_s +=
+                backend.simulated_cost(m2, jb, jbn) + backend.simulated_cost(m2, jb, tail_cols);
+            // LOOKAHEAD: step j+1's potf2 + TRSM, entirely inside the
+            // head columns (disjoint from the in-flight tail C).
+            let t2 = Instant::now();
+            let mut potf2_res = Ok(());
+            let mut next_a21u: Option<Vec<T::Unpacked>> = None;
+            if head_res.is_ok() {
+                potf2_res = potf2(jbn, &mut head_part[jn + jn * lda..], lda);
+                if potf2_res.is_ok() {
+                    let next_m2 = n - jn - jbn; // == tail_cols > 0
+                    let mut l11 = vec![T::zero(); jbn * jbn];
+                    for c in 0..jbn {
+                        let base = jn + (jn + c) * lda;
+                        l11[c * jbn..(c + 1) * jbn]
+                            .copy_from_slice(&head_part[base..base + jbn]);
+                    }
+                    let a21 = &mut head_part[(jn + jbn) + jn * lda..];
+                    next_a21u = Some(trsm_unpacked(
+                        Side::Right,
+                        Uplo::Lower,
+                        Trans::Yes,
+                        Diag::NonUnit,
+                        next_m2,
+                        jbn,
+                        T::one(),
+                        &l11,
+                        jbn,
+                        a21,
+                        lda,
+                    ));
+                }
+            }
+            stats.panel_s += t2.elapsed().as_secs_f64();
+            if handle.is_async() {
+                stats.overlap_s += t_inflight.elapsed().as_secs_f64();
+            }
+            let t3 = Instant::now();
+            let (tail_res, plan_back) = handle.wait();
+            stats.wait_s += t3.elapsed().as_secs_f64();
+            if let Some(p) = plan_back {
+                arena.recycle(p);
+            }
+            arena.recycle(head_plan);
+            if tail_res.is_err() || head_res.is_err() {
+                return Err(LapackError::BadValue(j + 1));
+            }
+            potf2_res.map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(i + jn),
+                LapackError::BadValue(i) => LapackError::BadValue(i + jn),
+                other => other,
+            })?;
+            a21_u = next_a21u;
+        }
+        j = jn;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Lookahead-pipelined quire-exact LU: [`getrf_offload_quire`] with the
+/// same head/tail split and overlap scheme as
+/// [`getrf_offload_lookahead`]. Fused kernels consume scalar operands
+/// directly (no pack plans, no arena); the tail ships owned staged copies
+/// through [`GemmBackend::submit_update_quire`]. Column independence of
+/// the fused update keeps every depth bit-identical to the sequential
+/// quire driver.
+#[allow(clippy::too_many_arguments)]
+pub fn getrf_offload_quire_lookahead<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    ipiv: &mut [usize],
+    nb: usize,
+    lookahead: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    if lookahead == 0 {
+        return getrf_offload_quire(m, n, a, lda, ipiv, nb, backend);
+    }
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    let kmin = m.min(n);
+    if kmin == 0 {
+        stats.total_s = t_all.elapsed().as_secs_f64();
+        return Ok(stats);
+    }
+    let mut info: Option<LapackError> = None;
+    // Prologue: factor panel 0.
+    let jb0 = nb.min(kmin);
+    let t0 = Instant::now();
+    let mut piv = vec![0usize; jb0];
+    if let Err(e) = getf2_quire(m, jb0, a, lda, &mut piv) {
+        info.get_or_insert(e);
+    }
+    stats.panel_s += t0.elapsed().as_secs_f64();
+    let mut j = 0;
+    while j < kmin {
+        let jb = nb.min(kmin - j);
+        let jn = j + jb;
+        let jbn = if jn < kmin { nb.min(kmin - jn) } else { 0 };
+        let t0 = Instant::now();
+        for (t, &p) in ipiv[j..jn].iter_mut().zip(&piv) {
+            *t = p + j;
+        }
+        laswp(j, a, lda, j, jn, ipiv);
+        if jn < n {
+            laswp(n - jn, &mut a[jn * lda..], lda, j, jn, ipiv);
+            let (a11_part, a12_part) = a.split_at_mut(jn * lda);
+            let a11 = &a11_part[j + j * lda..];
+            let a12 = &mut a12_part[j..];
+            trsm_quire(
+                Side::Left,
+                Uplo::Lower,
+                Trans::No,
+                Diag::Unit,
+                jb,
+                n - jn,
+                a11,
+                lda,
+                a12,
+                lda,
+            );
+        }
+        stats.panel_s += t0.elapsed().as_secs_f64();
+
+        if jn < n && jn < m {
+            let t1 = Instant::now();
+            let ncols = n - jn;
+            let nrows = m - jn;
+            let tail_cols = ncols - jbn;
+            if tail_cols == 0 {
+                let mut u12 = vec![T::zero(); jb * ncols];
+                for c in 0..ncols {
+                    let base = j + (jn + c) * lda;
+                    u12[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                }
+                let (left, right) = a.split_at_mut(jn * lda);
+                let l21 = &left[jn + j * lda..];
+                let a22 = &mut right[jn..];
+                backend
+                    .gemm_update_quire(nrows, jb, ncols, l21, lda, &u12, jb, a22, lda)
+                    .map_err(|_| LapackError::BadValue(j + 1))?;
+                stats.update_s += t1.elapsed().as_secs_f64();
+                stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+                stats.simulated_s += backend.simulated_cost(nrows, jb, ncols);
+                let t2 = Instant::now();
+                let mut piv2 = vec![0usize; jbn];
+                if let Err(e) =
+                    getf2_quire(nrows, jbn, &mut a[jn + jn * lda..], lda, &mut piv2)
+                {
+                    info.get_or_insert(match e {
+                        LapackError::SingularU(i) => LapackError::SingularU(i + jn),
+                        other => other,
+                    });
+                }
+                stats.panel_s += t2.elapsed().as_secs_f64();
+                piv = piv2;
+            } else {
+                let mut u12_head = vec![T::zero(); jb * jbn];
+                for c in 0..jbn {
+                    let base = j + (jn + c) * lda;
+                    u12_head[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                }
+                let mut u12_tail = vec![T::zero(); jb * tail_cols];
+                for c in 0..tail_cols {
+                    let base = j + (jn + jbn + c) * lda;
+                    u12_tail[c * jb..(c + 1) * jb].copy_from_slice(&a[base..base + jb]);
+                }
+                let mut l21_tail = vec![T::zero(); nrows * jb];
+                for c in 0..jb {
+                    let base = jn + (j + c) * lda;
+                    l21_tail[c * nrows..(c + 1) * nrows]
+                        .copy_from_slice(&a[base..base + nrows]);
+                }
+                let (head_part, tail_part) = a.split_at_mut((jn + jbn) * lda);
+                let tail_c = &mut tail_part[jn..];
+                let handle = backend
+                    .submit_update_quire(nrows, jb, tail_cols, l21_tail, nrows, u12_tail, jb, tail_c, lda);
+                let t_inflight = Instant::now();
+                let (hleft, hright) = head_part.split_at_mut(jn * lda);
+                let l21 = &hleft[jn + j * lda..];
+                let head_c = &mut hright[jn..];
+                let head_res =
+                    backend.gemm_update_quire(nrows, jb, jbn, l21, lda, &u12_head, jb, head_c, lda);
+                stats.update_s += t1.elapsed().as_secs_f64();
+                stats.update_flops += 2.0 * nrows as f64 * jb as f64 * ncols as f64;
+                stats.simulated_s += backend.simulated_cost(nrows, jb, jbn)
+                    + backend.simulated_cost(nrows, jb, tail_cols);
+                let t2 = Instant::now();
+                let mut piv2 = vec![0usize; jbn];
+                let res2 = getf2_quire(nrows, jbn, head_c, lda, &mut piv2);
+                stats.panel_s += t2.elapsed().as_secs_f64();
+                if handle.is_async() {
+                    stats.overlap_s += t_inflight.elapsed().as_secs_f64();
+                }
+                let t3 = Instant::now();
+                let (tail_res, _) = handle.wait();
+                stats.wait_s += t3.elapsed().as_secs_f64();
+                if tail_res.is_err() || head_res.is_err() {
+                    return Err(LapackError::BadValue(j + 1));
+                }
+                if let Err(e) = res2 {
+                    info.get_or_insert(match e {
+                        LapackError::SingularU(i) => LapackError::SingularU(i + jn),
+                        other => other,
+                    });
+                }
+                piv = piv2;
+            }
+        }
+        j = jn;
+    }
+    stats.total_s = t_all.elapsed().as_secs_f64();
+    match info {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// Lookahead-pipelined quire-exact lower Cholesky: the `accum=quire`
+/// counterpart of [`potrf_offload_lookahead`] (fused kernels, scalar
+/// staging, no pack plans). Same overlap scheme and same clean-abort
+/// guarantee on a non-positive-definite pivot discovered mid-pipeline.
+pub fn potrf_offload_quire_lookahead<T: Scalar>(
+    n: usize,
+    a: &mut [T],
+    lda: usize,
+    nb: usize,
+    lookahead: usize,
+    backend: &dyn GemmBackend<T>,
+) -> Result<OffloadStats, LapackError> {
+    if lookahead == 0 {
+        return potrf_offload_quire(n, a, lda, nb, backend);
+    }
+    let t_all = Instant::now();
+    let mut stats = OffloadStats::default();
+    if n == 0 {
+        stats.total_s = t_all.elapsed().as_secs_f64();
+        return Ok(stats);
+    }
+    // Prologue: potf2 + fused panel TRSM of step 0.
+    let jb0 = nb.min(n);
+    let t0 = Instant::now();
+    potf2_quire(jb0, a, lda)?; // j == 0: indices already global
+    if jb0 < n {
+        let m2 = n - jb0;
+        let mut l11 = vec![T::zero(); jb0 * jb0];
+        for c in 0..jb0 {
+            let base = c * lda;
+            l11[c * jb0..(c + 1) * jb0].copy_from_slice(&a[base..base + jb0]);
+        }
+        let a21 = &mut a[jb0..];
+        trsm_quire(
+            Side::Right,
+            Uplo::Lower,
+            Trans::Yes,
+            Diag::NonUnit,
+            m2,
+            jb0,
+            &l11,
+            jb0,
+            a21,
+            lda,
+        );
+    }
+    stats.panel_s += t0.elapsed().as_secs_f64();
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        let jn = j + jb;
+        if jn >= n {
+            break;
+        }
+        let m2 = n - jn;
+        let jbn = nb.min(m2);
+        let tail_cols = m2 - jbn;
+        let t1 = Instant::now();
+        // Stage A21 and its transpose from the matrix (fused kernels read
+        // scalar operands; the TRSM of step j already ran last step).
+        let mut a21_copy = vec![T::zero(); m2 * jb];
+        for c in 0..jb {
+            let base = jn + (j + c) * lda;
+            a21_copy[c * m2..(c + 1) * m2].copy_from_slice(&a[base..base + m2]);
+        }
+        if tail_cols == 0 {
+            let mut a21_t = vec![T::zero(); jb * m2];
+            for c in 0..jb {
+                for r in 0..m2 {
+                    a21_t[c + r * jb] = a21_copy[r + c * m2];
+                }
+            }
+            let a22 = &mut a[jn + jn * lda..];
+            backend
+                .gemm_update_quire(m2, jb, m2, &a21_copy, m2, &a21_t, jb, a22, lda)
+                .map_err(|_| LapackError::BadValue(j + 1))?;
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            stats.simulated_s += backend.simulated_cost(m2, jb, m2);
+            let t2 = Instant::now();
+            potf2_quire(jbn, &mut a[jn + jn * lda..], lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(i + jn),
+                LapackError::BadValue(i) => LapackError::BadValue(i + jn),
+                other => other,
+            })?;
+            stats.panel_s += t2.elapsed().as_secs_f64();
+        } else {
+            let mut a21_t_head = vec![T::zero(); jb * jbn];
+            for r in 0..jbn {
+                for l in 0..jb {
+                    a21_t_head[l + r * jb] = a21_copy[r + l * m2];
+                }
+            }
+            let mut a21_t_tail = vec![T::zero(); jb * tail_cols];
+            for r in 0..tail_cols {
+                for l in 0..jb {
+                    a21_t_tail[l + r * jb] = a21_copy[(jbn + r) + l * m2];
+                }
+            }
+            let a21_copy_tail = a21_copy.clone();
+            let (head_part, tail_part) = a.split_at_mut((jn + jbn) * lda);
+            let tail_c = &mut tail_part[jn..];
+            let handle = backend.submit_update_quire(
+                m2,
+                jb,
+                tail_cols,
+                a21_copy_tail,
+                m2,
+                a21_t_tail,
+                jb,
+                tail_c,
+                lda,
+            );
+            let t_inflight = Instant::now();
+            let head_c = &mut head_part[jn + jn * lda..];
+            let head_res =
+                backend.gemm_update_quire(m2, jb, jbn, &a21_copy, m2, &a21_t_head, jb, head_c, lda);
+            stats.update_s += t1.elapsed().as_secs_f64();
+            stats.update_flops += 2.0 * m2 as f64 * jb as f64 * m2 as f64;
+            stats.simulated_s +=
+                backend.simulated_cost(m2, jb, jbn) + backend.simulated_cost(m2, jb, tail_cols);
+            // LOOKAHEAD: step j+1's potf2 + fused TRSM inside the head.
+            let t2 = Instant::now();
+            let mut potf2_res = Ok(());
+            if head_res.is_ok() {
+                potf2_res = potf2_quire(jbn, &mut head_part[jn + jn * lda..], lda);
+                if potf2_res.is_ok() {
+                    let next_m2 = n - jn - jbn; // == tail_cols > 0
+                    let mut l11 = vec![T::zero(); jbn * jbn];
+                    for c in 0..jbn {
+                        let base = jn + (jn + c) * lda;
+                        l11[c * jbn..(c + 1) * jbn]
+                            .copy_from_slice(&head_part[base..base + jbn]);
+                    }
+                    let a21 = &mut head_part[(jn + jbn) + jn * lda..];
+                    trsm_quire(
+                        Side::Right,
+                        Uplo::Lower,
+                        Trans::Yes,
+                        Diag::NonUnit,
+                        next_m2,
+                        jbn,
+                        &l11,
+                        jbn,
+                        a21,
+                        lda,
+                    );
+                }
+            }
+            stats.panel_s += t2.elapsed().as_secs_f64();
+            if handle.is_async() {
+                stats.overlap_s += t_inflight.elapsed().as_secs_f64();
+            }
+            let t3 = Instant::now();
+            let (tail_res, _) = handle.wait();
+            stats.wait_s += t3.elapsed().as_secs_f64();
+            if tail_res.is_err() || head_res.is_err() {
+                return Err(LapackError::BadValue(j + 1));
+            }
+            potf2_res.map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(i + jn),
+                LapackError::BadValue(i) => LapackError::BadValue(i + jn),
+                other => other,
+            })?;
+        }
+        j = jn;
     }
     stats.total_s = t_all.elapsed().as_secs_f64();
     Ok(stats)

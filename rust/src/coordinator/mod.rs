@@ -39,8 +39,11 @@ use crate::blas::{
 use crate::posit::Posit32;
 use crate::runtime::{ArtifactKind, Runtime};
 use anyhow::Result;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// One trailing-matrix update staged for a backend: borrowed views of
 /// `C (m×n, ldc) -= A (m×k, lda) · B (k×n, ldb)` in format `T`. The unit
@@ -69,6 +72,121 @@ pub struct GemmJob<'a, T: Scalar = Posit32> {
     /// ([`GemmBackend::gemm_update_quire`]). Quire tiles never carry a
     /// pack plan (the fused kernel reads the scalar operands directly).
     pub accum: Accum,
+}
+
+/// Raw-pointer wrapper that lets the native backend move a `&mut [T]`
+/// tile into its update thread. Soundness is provided by the
+/// [`InflightUpdate`] handle, not by this type: the handle carries the
+/// tile's borrow lifetime (`PhantomData<&'c mut [T]>`), so the region
+/// stays exclusively borrowed until the handle is waited or dropped, and
+/// both paths join the thread before releasing the borrow.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+type InflightOut<T> = (Result<()>, Option<PackPlan<T>>);
+
+enum InflightInner<T: Scalar> {
+    /// Already executed (synchronous default path, or degenerate shapes).
+    Done(Result<()>, Option<PackPlan<T>>),
+    /// Running on a backend-owned thread.
+    Thread(JoinHandle<InflightOut<T>>),
+    /// Result already taken by [`InflightUpdate::wait`].
+    Taken,
+}
+
+/// A trailing-matrix update that may still be executing on the backend.
+///
+/// Returned by [`GemmBackend::submit_update_prepacked`] /
+/// [`GemmBackend::submit_update_quire`]. The handle exclusively borrows
+/// the `C` region for its whole lifetime, and **always** joins any
+/// in-flight worker before that borrow ends: [`InflightUpdate::wait`]
+/// joins and returns the result (plus the retired [`PackPlan`] for arena
+/// recycling), and `Drop` joins too — so an early return (a singular
+/// panel, a failed pivot) mid-pipeline can never leave a worker writing
+/// into a region someone else now owns, and never leaks a hung thread.
+pub struct InflightUpdate<'c, T: Scalar> {
+    inner: InflightInner<T>,
+    /// Simulated-time deadline ([`TimedBackend`] real-time mode): `wait`
+    /// sleeps out the remainder so modeled accelerator seconds behave
+    /// like wall seconds — overlappable by host work, serialized when the
+    /// caller waits immediately.
+    deadline: Option<Instant>,
+    /// True when the submission executed synchronously on the calling
+    /// thread (the default degradation); drivers use this to credit
+    /// overlap time only to genuinely concurrent submissions.
+    inline: bool,
+    _c: PhantomData<&'c mut [T]>,
+}
+
+impl<'c, T: Scalar> InflightUpdate<'c, T> {
+    /// An already-completed submission (the synchronous default path).
+    pub fn ready(result: Result<()>, plan: Option<PackPlan<T>>) -> InflightUpdate<'c, T> {
+        InflightUpdate {
+            inner: InflightInner::Done(result, plan),
+            deadline: None,
+            inline: true,
+            _c: PhantomData,
+        }
+    }
+
+    /// A submission running on `handle`'s thread.
+    fn spawned(handle: JoinHandle<InflightOut<T>>) -> InflightUpdate<'c, T> {
+        InflightUpdate {
+            inner: InflightInner::Thread(handle),
+            deadline: None,
+            inline: false,
+            _c: PhantomData,
+        }
+    }
+
+    fn set_deadline(&mut self, deadline: Instant) {
+        self.deadline = Some(deadline);
+    }
+
+    /// Whether waiting later (rather than immediately) can save wall
+    /// time: the update runs on its own thread, or carries a modeled
+    /// real-time deadline that host work can overlap.
+    pub fn is_async(&self) -> bool {
+        !self.inline || self.deadline.is_some()
+    }
+
+    fn collect(&mut self) -> InflightOut<T> {
+        match std::mem::replace(&mut self.inner, InflightInner::Taken) {
+            InflightInner::Done(result, plan) => (result, plan),
+            InflightInner::Thread(handle) => match handle.join() {
+                Ok(out) => out,
+                Err(_) => (Err(anyhow::anyhow!("backend update thread panicked")), None),
+            },
+            InflightInner::Taken => (Ok(()), None),
+        }
+    }
+
+    /// Block until the update has fully executed; returns its result and
+    /// the retired pack plan (for slab-arena recycling). Honors the
+    /// modeled-time deadline, if any, after the real work finishes.
+    pub fn wait(mut self) -> InflightOut<T> {
+        let out = self.collect();
+        if let Some(deadline) = self.deadline.take() {
+            let now = Instant::now();
+            if now < deadline {
+                std::thread::sleep(deadline - now);
+            }
+        }
+        out
+    }
+}
+
+impl<'c, T: Scalar> Drop for InflightUpdate<'c, T> {
+    fn drop(&mut self) {
+        // Abort path: join any in-flight worker so the C borrow is never
+        // outlived (clean abort, no hung worker). The modeled deadline is
+        // deliberately NOT slept out here — aborts should be prompt.
+        if let InflightInner::Thread(handle) =
+            std::mem::replace(&mut self.inner, InflightInner::Taken)
+        {
+            let _ = handle.join();
+        }
+    }
 }
 
 /// An accelerator that can apply the trailing-matrix update
@@ -161,6 +279,57 @@ pub trait GemmBackend<T: Scalar = Posit32>: Send + Sync {
     ) -> Result<()> {
         gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc);
         Ok(())
+    }
+
+    /// Asynchronously submit a plan-carrying trailing update: `C -= A·B`
+    /// with the operands passed by value (owned scalar tiles + the pack
+    /// plan), returning an [`InflightUpdate`] handle. The default
+    /// degrades to the synchronous [`GemmBackend::gemm_update_prepacked`]
+    /// call and returns an already-completed handle, so backends that
+    /// never learned about submission — PJRT, the service's QueueBackend
+    /// — keep working unchanged (the lookahead pipeline then simply runs
+    /// at depth-0 serialization). Overriding backends execute the update
+    /// concurrently with the caller; numerics are identical either way
+    /// because *when* the update runs never changes *what* it computes.
+    ///
+    /// Backends whose [`GemmBackend::wants_scalar_tiles`] is `false`
+    /// receive empty `a`/`b` vectors and must run off the plan.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_update_prepacked<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: Vec<T>,
+        lda: usize,
+        b: Vec<T>,
+        ldb: usize,
+        plan: PackPlan<T>,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        let result = self.gemm_update_prepacked(m, k, n, &a, lda, &b, ldb, &plan, c, ldc);
+        InflightUpdate::ready(result, Some(plan))
+    }
+
+    /// Asynchronous counterpart of [`GemmBackend::gemm_update_quire`]
+    /// (always scalar operands, no plan); same default degradation and
+    /// same handle contract as [`GemmBackend::submit_update_prepacked`].
+    #[allow(clippy::too_many_arguments)]
+    fn submit_update_quire<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: Vec<T>,
+        lda: usize,
+        b: Vec<T>,
+        ldb: usize,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        let result = self.gemm_update_quire(m, k, n, &a, lda, &b, ldb, c, ldc);
+        InflightUpdate::ready(result, None)
     }
 
     /// Apply a batch of updates in one submission. Tiles are independent
@@ -303,6 +472,77 @@ impl<T: Scalar> GemmBackend<T> for NativeBackend {
     ) -> Result<()> {
         gemm_update_quire_parallel(self.threads, m, k, n, a, lda, b, ldb, c, ldc);
         Ok(())
+    }
+
+    /// True async submission: the packed update runs on a dedicated
+    /// thread (itself fanning out over the worker pool), so the caller
+    /// can factor the next panel while the trailing tail is in flight.
+    /// Runs entirely off the plan slabs (the scalar views are empty —
+    /// `wants_scalar_tiles` is false) through the exact same
+    /// `gemm_prepacked_parallel` entry as the synchronous path, so the
+    /// result is bit-identical; only the calling thread differs.
+    fn submit_update_prepacked<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        _a: Vec<T>,
+        _lda: usize,
+        _b: Vec<T>,
+        _ldb: usize,
+        plan: PackPlan<T>,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        if m == 0 || n == 0 {
+            return InflightUpdate::ready(Ok(()), Some(plan));
+        }
+        let ptr = SendPtr(c.as_mut_ptr());
+        let len = c.len();
+        let threads = self.threads;
+        let handle = std::thread::spawn(move || {
+            let ptr = ptr;
+            // SAFETY: the returned InflightUpdate borrows `c` for 'c and
+            // joins this thread before that borrow ends (wait or Drop), so
+            // this is the only live view of the region while we write it.
+            let c = unsafe { std::slice::from_raw_parts_mut(ptr.0, len) };
+            let minus1 = T::one().neg();
+            gemm_prepacked_parallel(threads, m, n, k, minus1, &plan.a, &plan.b, T::one(), c, ldc);
+            (Ok(()), Some(plan))
+        });
+        InflightUpdate::spawned(handle)
+    }
+
+    /// Async fused-dot submission: same thread-per-submission scheme as
+    /// the packed override, running the pool-parallel quire kernel over
+    /// the owned scalar operands (quire tiles carry no plan).
+    fn submit_update_quire<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: Vec<T>,
+        lda: usize,
+        b: Vec<T>,
+        ldb: usize,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        if m == 0 || n == 0 {
+            return InflightUpdate::ready(Ok(()), None);
+        }
+        let ptr = SendPtr(c.as_mut_ptr());
+        let len = c.len();
+        let threads = self.threads;
+        let handle = std::thread::spawn(move || {
+            let ptr = ptr;
+            // SAFETY: as in submit_update_prepacked — the handle keeps the
+            // C borrow alive and joins before releasing it.
+            let c = unsafe { std::slice::from_raw_parts_mut(ptr.0, len) };
+            gemm_update_quire_parallel(threads, m, k, n, &a, lda, &b, ldb, c, ldc);
+            (Ok(()), None)
+        });
+        InflightUpdate::spawned(handle)
     }
 
     /// Batched override: one pool wave over the whole batch. Each tile is
@@ -534,6 +774,12 @@ pub struct TimedBackend<B> {
     /// accelerator can be shared by all service workers.
     model: Box<dyn Fn(usize, usize, usize) -> f64 + Send + Sync>,
     nanos: AtomicU64,
+    /// Real-time mode ([`TimedBackend::with_real_time`]): modelled seconds
+    /// are also *slept out*, so wall-clock measurements see the modelled
+    /// accelerator latency. Synchronous calls sleep inline; asynchronous
+    /// submissions attach the model time as an [`InflightUpdate`] deadline
+    /// instead, which is what lets lookahead genuinely hide it.
+    sleep_real: bool,
 }
 
 impl<B> TimedBackend<B> {
@@ -547,6 +793,40 @@ impl<B> TimedBackend<B> {
             label: label.into(),
             model: Box::new(model),
             nanos: AtomicU64::new(0),
+            sleep_real: false,
+        }
+    }
+
+    /// Enable real-time mode: modelled seconds become wall seconds (slept
+    /// inline on synchronous calls, deadline-carried on submissions). Used
+    /// by the factorization benches to make the lookahead overlap win
+    /// observable on the clock, not just in the simulated-time column.
+    pub fn with_real_time(mut self) -> Self {
+        self.sleep_real = true;
+        self
+    }
+
+    /// Charge `(m, k, n)` to the accumulator; in real-time mode also sleep
+    /// it out inline (synchronous call sites).
+    fn charge_sync(&self, m: usize, k: usize, n: usize) {
+        let secs = (self.model)(m, k, n);
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        if self.sleep_real && secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+
+    /// Charge `(m, k, n)` without sleeping, returning the deadline the
+    /// caller should attach to its in-flight handle (real-time mode only).
+    fn charge_async(&self, m: usize, k: usize, n: usize) -> Option<Instant> {
+        let secs = (self.model)(m, k, n);
+        self.nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        if self.sleep_real && secs > 0.0 {
+            Some(Instant::now() + Duration::from_secs_f64(secs))
+        } else {
+            None
         }
     }
 }
@@ -567,9 +847,7 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        let secs = (self.model)(m, k, n);
-        self.nanos
-            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.charge_sync(m, k, n);
         self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
     }
     /// Charge the model, then forward the plan-carrying call to the inner
@@ -589,9 +867,7 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        let secs = (self.model)(m, k, n);
-        self.nanos
-            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.charge_sync(m, k, n);
         self.inner
             .gemm_update_prepacked(m, k, n, a, lda, b, ldb, plan, c, ldc)
     }
@@ -618,10 +894,59 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
         c: &mut [T],
         ldc: usize,
     ) -> Result<()> {
-        let secs = (self.model)(m, k, n);
-        self.nanos
-            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.charge_sync(m, k, n);
         self.inner.gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc)
+    }
+
+    /// Charge the model and hand the submission to the inner backend; in
+    /// real-time mode the modelled seconds ride on the handle as a
+    /// deadline (honored by `wait`) instead of an inline sleep, so host
+    /// panel work submitted before the wait genuinely overlaps them.
+    fn submit_update_prepacked<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: Vec<T>,
+        lda: usize,
+        b: Vec<T>,
+        ldb: usize,
+        plan: PackPlan<T>,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        let deadline = self.charge_async(m, k, n);
+        let mut handle = self
+            .inner
+            .submit_update_prepacked(m, k, n, a, lda, b, ldb, plan, c, ldc);
+        if let Some(deadline) = deadline {
+            handle.set_deadline(deadline);
+        }
+        handle
+    }
+
+    /// Deadline-carrying submission for the fused-dot path; same contract
+    /// as the prepacked submit override.
+    fn submit_update_quire<'c>(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: Vec<T>,
+        lda: usize,
+        b: Vec<T>,
+        ldb: usize,
+        c: &'c mut [T],
+        ldc: usize,
+    ) -> InflightUpdate<'c, T> {
+        let deadline = self.charge_async(m, k, n);
+        let mut handle = self
+            .inner
+            .submit_update_quire(m, k, n, a, lda, b, ldb, c, ldc);
+        if let Some(deadline) = deadline {
+            handle.set_deadline(deadline);
+        }
+        handle
     }
 
     /// Charge the whole batch, then forward it to the inner backend in one
@@ -630,6 +955,9 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
         let secs: f64 = jobs.iter().map(|j| (self.model)(j.m, j.k, j.n)).sum();
         self.nanos
             .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        if self.sleep_real && secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
         self.inner.gemm_update_many(jobs)
     }
     fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
@@ -659,12 +987,32 @@ pub struct OffloadStats {
     pub total_s: f64,
     /// Trailing-update flops (2·m·n·k summed over updates).
     pub update_flops: f64,
+    /// Wall seconds the host spent *blocked* in [`InflightUpdate::wait`]
+    /// — genuine backend wait, separated from `update_s` (which on the
+    /// lookahead path only counts synchronous head-update + submit time,
+    /// fixing the old conflation of submit/execute/wait).
+    pub wait_s: f64,
+    /// Wall seconds an asynchronous update was in flight *while* the host
+    /// was doing useful work (panel factorization of step j+1) — the
+    /// serialization the lookahead pipeline removed. Zero at depth 0.
+    pub overlap_s: f64,
 }
 
 impl OffloadStats {
     /// Gflops of the whole factorization given its nominal op count.
     pub fn gflops(&self, ops: f64) -> f64 {
         ops / self.total_s / 1e9
+    }
+
+    /// Fraction of the factorization's wall time during which host work
+    /// and an in-flight backend update ran concurrently (0 at depth 0; the
+    /// per-job number the engine JSON and daemon stats report).
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.total_s > 0.0 {
+            (self.overlap_s / self.total_s).min(1.0)
+        } else {
+            0.0
+        }
     }
 
     /// Fold another job's stats into this rollup (every phase field sums;
@@ -676,6 +1024,8 @@ impl OffloadStats {
         self.simulated_s += other.simulated_s;
         self.total_s += other.total_s;
         self.update_flops += other.update_flops;
+        self.wait_s += other.wait_s;
+        self.overlap_s += other.overlap_s;
     }
 }
 
@@ -849,6 +1199,164 @@ mod tests {
             .unwrap();
         let want = 2.0 * (2 * m * k * n) as f64 / 1e9;
         assert!((be.simulated_seconds() - want).abs() < 1e-9);
+    }
+
+    /// Minimal backend keeping every default — in particular the
+    /// synchronous submit degradation (the PJRT/QueueBackend situation).
+    struct PlainBackend;
+    impl GemmBackend<Posit32> for PlainBackend {
+        fn name(&self) -> &str {
+            "plain"
+        }
+        fn gemm_update(
+            &self,
+            m: usize,
+            k: usize,
+            n: usize,
+            a: &[Posit32],
+            lda: usize,
+            b: &[Posit32],
+            ldb: usize,
+            c: &mut [Posit32],
+            ldc: usize,
+        ) -> Result<()> {
+            GemmBackend::<Posit32>::gemm_update(
+                &NativeBackend::new(1),
+                m,
+                k,
+                n,
+                a,
+                lda,
+                b,
+                ldb,
+                c,
+                ldc,
+            )
+        }
+    }
+
+    #[test]
+    fn async_submit_bit_matches_sync_update() {
+        use crate::blas::{PackPlan, PackedA, PackedB};
+        let (m, k, n) = (41, 8, 33);
+        let a = rand_mat(m, k, 80);
+        let b = rand_mat(k, n, 81);
+        let c0 = rand_mat(m, n, 82);
+        let native = NativeBackend::new(3);
+        let mut want = c0.clone();
+        GemmBackend::<Posit32>::gemm_update(
+            &native, m, k, n, &a.data, m, &b.data, k, &mut want.data, m,
+        )
+        .unwrap();
+
+        // Native override: runs on its own thread, bit-identical, and the
+        // retired plan comes back for arena recycling.
+        let plan = PackPlan::new(
+            PackedA::<Posit32>::pack(Trans::No, m, k, &a.data, m),
+            PackedB::<Posit32>::pack(Trans::No, k, n, &b.data, k),
+        );
+        let mut c1 = c0.clone();
+        let h = GemmBackend::<Posit32>::submit_update_prepacked(
+            &native,
+            m,
+            k,
+            n,
+            Vec::new(),
+            m,
+            Vec::new(),
+            k,
+            plan,
+            &mut c1.data,
+            m,
+        );
+        assert!(h.is_async(), "native submit must be concurrent");
+        let (res, plan_back) = h.wait();
+        res.unwrap();
+        assert!(plan_back.is_some(), "plan must be returned for recycling");
+        assert_eq!(c1.data, want.data, "async native submit == sync update");
+
+        // Quire submission: matches the synchronous fused kernel bitwise.
+        let mut wantq = c0.clone();
+        GemmBackend::<Posit32>::gemm_update_quire(
+            &native, m, k, n, &a.data, m, &b.data, k, &mut wantq.data, m,
+        )
+        .unwrap();
+        let mut c2 = c0.clone();
+        let h = GemmBackend::<Posit32>::submit_update_quire(
+            &native,
+            m,
+            k,
+            n,
+            a.data.clone(),
+            m,
+            b.data.clone(),
+            k,
+            &mut c2.data,
+            m,
+        );
+        assert!(h.is_async());
+        let (res, _) = h.wait();
+        res.unwrap();
+        assert_eq!(c2.data, wantq.data, "async quire submit == sync quire");
+
+        // Default degradation: a backend with no submit override executes
+        // synchronously (inline handle) — same bits, plan still returned.
+        let plan = PackPlan::new(
+            PackedA::<Posit32>::pack(Trans::No, m, k, &a.data, m),
+            PackedB::<Posit32>::pack(Trans::No, k, n, &b.data, k),
+        );
+        let mut c3 = c0.clone();
+        let h = PlainBackend.submit_update_prepacked(
+            m,
+            k,
+            n,
+            a.data.clone(),
+            m,
+            b.data.clone(),
+            k,
+            plan,
+            &mut c3.data,
+            m,
+        );
+        assert!(!h.is_async(), "default submit degrades to synchronous");
+        let (res, plan_back) = h.wait();
+        res.unwrap();
+        assert!(plan_back.is_some());
+        assert_eq!(c3.data, want.data, "degraded submit == sync update");
+    }
+
+    #[test]
+    fn timed_real_time_submit_carries_deadline() {
+        // Real-time mode over an inner backend with no submit override:
+        // the handle is inline but deadline-carrying, so is_async() is
+        // true and wait() sleeps out the modelled seconds.
+        let secs = 0.05;
+        let be = TimedBackend::new("rt", PlainBackend, move |_, _, _| secs).with_real_time();
+        let (m, k, n) = (16, 4, 12);
+        let a = rand_mat(m, k, 83);
+        let b = rand_mat(k, n, 84);
+        let mut c = rand_mat(m, n, 85);
+        let t0 = Instant::now();
+        let h = GemmBackend::<Posit32>::submit_update_quire(
+            &be,
+            m,
+            k,
+            n,
+            a.data.clone(),
+            m,
+            b.data.clone(),
+            k,
+            &mut c.data,
+            m,
+        );
+        assert!(h.is_async(), "deadline-carrying handle counts as async");
+        let (res, _) = h.wait();
+        res.unwrap();
+        assert!(
+            t0.elapsed().as_secs_f64() >= 0.9 * secs,
+            "wait must sleep out the modelled deadline"
+        );
+        assert!((GemmBackend::<Posit32>::simulated_seconds(&be) - secs).abs() < 1e-9);
     }
 
     #[test]

@@ -600,13 +600,15 @@ impl Daemon {
                 let roll = &tally.rollup[shard_index(p)];
                 let peak = self.core.shard(p).state.lock().unwrap().peak_workers;
                 format!(
-                    "{{\"precision\": \"{}\", \"jobs\": {}, \"ok\": {}, \"mean_digits\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"peak_workers\": {}}}",
+                    "{{\"precision\": \"{}\", \"jobs\": {}, \"ok\": {}, \"mean_digits\": {}, \"panel_s\": {}, \"update_s\": {}, \"wait_s\": {}, \"overlap_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"peak_workers\": {}}}",
                     p.name(),
                     rows.len(),
                     ok,
                     jnum(mean_digits),
                     jnum(roll.panel_s),
                     jnum(roll.update_s),
+                    jnum(roll.wait_s),
+                    jnum(roll.overlap_s),
                     jnum(roll.simulated_s),
                     jnum(roll.update_flops),
                     peak,

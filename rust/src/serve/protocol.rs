@@ -3,7 +3,7 @@
 //! One request per line, one JSON-object reply per request, over a local
 //! Unix-domain socket. Submissions reuse the manifest job schema
 //! (`alg`/`n`/`nb`/`seed`/`sigma`/`class`/`precision`/`mode`/`accum`/
-//! `backend`, exactly the `key=value` vocabulary of
+//! `lookahead`/`backend`, exactly the `key=value` vocabulary of
 //! [`crate::service::parse_manifest`]) as flat JSON fields, plus
 //! `priority` for the admission lane:
 //!
@@ -344,6 +344,9 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
             if let Some(accum) = get_str(&fields, "accum") {
                 spec.accum = Accum::parse(accum).map_err(|e| anyhow!(e))?;
             }
+            if let Some(lookahead) = get_usize(&fields, "lookahead")? {
+                spec.lookahead = lookahead;
+            }
             if let Some(backend) = get_str(&fields, "backend") {
                 spec.backend = backend.to_string();
             }
@@ -369,7 +372,7 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
 /// Serialize one job submission (the client side of `op=submit`).
 pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
     format!(
-        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"backend\": \"{}\", \"priority\": \"{}\"}}",
+        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"priority\": \"{}\"}}",
         spec.id,
         spec.alg.name(),
         spec.n,
@@ -380,6 +383,7 @@ pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
         spec.precision.name(),
         spec.mode.name(),
         spec.accum.name(),
+        spec.lookahead,
         esc(&spec.backend),
         priority.name(),
     )
@@ -507,6 +511,7 @@ mod tests {
         spec.mode = Mode::Refine;
         spec.accum = Accum::Quire;
         spec.sigma = 0.01;
+        spec.lookahead = 2;
         let line = submit_line(&spec, Priority::Low);
         match parse_request(&line, 0).unwrap() {
             Request::Submit { spec: back, priority } => {
@@ -517,6 +522,7 @@ mod tests {
                 assert_eq!(back.precision, spec.precision);
                 assert_eq!(back.mode, spec.mode);
                 assert_eq!(back.accum, Accum::Quire);
+                assert_eq!(back.lookahead, 2);
                 assert_eq!(priority, Priority::Low);
             }
             other => panic!("wrong request: {other:?}"),
@@ -541,6 +547,27 @@ mod tests {
             )
             .is_err(),
             "unknown accum values are rejected, not defaulted"
+        );
+    }
+
+    #[test]
+    fn parses_lookahead_field_and_defaults_to_zero() {
+        let line = "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"lookahead\": 1}";
+        match parse_request(line, 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.lookahead, 1),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32}", 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.lookahead, 0),
+            other => panic!("wrong request: {other:?}"),
+        }
+        assert!(
+            parse_request(
+                "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"lookahead\": 1.5}",
+                0
+            )
+            .is_err(),
+            "fractional depths are rejected, not truncated"
         );
     }
 

@@ -4,9 +4,11 @@
 //! [`Engine::run`] shards a manifest across `workers` OS threads. Each
 //! worker claims jobs off a shared counter, materializes the job's
 //! *binary64* problem (a pure function of the [`JobSpec`]), rounds it once
-//! into the job's [`Precision`], and runs the ordinary sequential drivers
-//! (`getrf_offload` / `potrf_offload`, or [`refine_offload`] for
-//! `mode=refine` jobs) against a [`QueueBackend`] proxy — so all workers'
+//! into the job's [`Precision`], and runs the depth-configurable drivers
+//! (`getrf_offload_lookahead` / `potrf_offload_lookahead` at the job's
+//! `lookahead` — depth 0 is the sequential schedule — or
+//! [`refine_offload`] for `mode=refine` jobs) against a [`QueueBackend`]
+//! proxy — so all workers'
 //! trailing updates multiplex onto the shared per-backend dispatch queues
 //! of the job's *format pool*. One `batch` run can therefore carry
 //! posit32, binary32 and binary64 jobs at once: the format is per-job
@@ -34,8 +36,8 @@ use super::manifest::{Alg, JobSpec, MatrixClass, Mode, Precision};
 use super::queue::{BatchQueue, QueueBackend, QueueReport};
 use crate::blas::{Accum, Matrix, Scalar};
 use crate::coordinator::drivers::{
-    chol_ops, getrf_offload, getrf_offload_quire, lu_ops, potrf_offload, potrf_offload_quire,
-    refine_offload_accum, Factorization,
+    chol_ops, getrf_offload_lookahead, getrf_offload_quire_lookahead, lu_ops,
+    potrf_offload_lookahead, potrf_offload_quire_lookahead, refine_offload_accum, Factorization,
 };
 use crate::coordinator::{GemmBackend, OffloadStats};
 use crate::experiments::matgen;
@@ -61,6 +63,8 @@ pub struct JobResult {
     pub mode: Mode,
     /// Accumulation mode the job's inner products ran with.
     pub accum: Accum,
+    /// Lookahead pipeline depth the job ran at (0 = sequential schedule).
+    pub lookahead: usize,
     pub backend: String,
     /// `None` = success; `Some(msg)` = driver error (singularity, NaR,
     /// backend failure, unknown queue/pool). Failures are deterministic too.
@@ -376,20 +380,26 @@ fn run_job_on<T: Scalar>(
         Mode::Factorize => {
             let mut a: Matrix<T> = a64.cast();
             let mut ipiv = Vec::new();
+            // Depth 0 delegates to the sequential drivers inside the
+            // `_lookahead` entry points; depth ≥ 1 overlaps host panels
+            // with in-flight backend updates (bit-identical either way).
+            let la = spec.lookahead;
             let outcome = match (spec.alg, spec.accum) {
                 (Alg::Lu, Accum::Rounded) => {
                     ipiv = vec![0usize; n];
-                    getrf_offload(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+                    getrf_offload_lookahead(n, n, &mut a.data, n, &mut ipiv, spec.nb, la, backend)
                 }
                 (Alg::Lu, Accum::Quire) => {
                     ipiv = vec![0usize; n];
-                    getrf_offload_quire(n, n, &mut a.data, n, &mut ipiv, spec.nb, backend)
+                    getrf_offload_quire_lookahead(
+                        n, n, &mut a.data, n, &mut ipiv, spec.nb, la, backend,
+                    )
                 }
                 (Alg::Cholesky, Accum::Rounded) => {
-                    potrf_offload(n, &mut a.data, n, spec.nb, backend)
+                    potrf_offload_lookahead(n, &mut a.data, n, spec.nb, la, backend)
                 }
                 (Alg::Cholesky, Accum::Quire) => {
-                    potrf_offload_quire(n, &mut a.data, n, spec.nb, backend)
+                    potrf_offload_quire_lookahead(n, &mut a.data, n, spec.nb, la, backend)
                 }
             };
             let (stats, error) = match outcome {
@@ -419,6 +429,7 @@ fn run_job_on<T: Scalar>(
                 precision: spec.precision,
                 mode: spec.mode,
                 accum: spec.accum,
+                lookahead: spec.lookahead,
                 backend: backend_label.to_string(),
                 error,
                 stats,
@@ -447,6 +458,7 @@ fn run_job_on<T: Scalar>(
                     precision: spec.precision,
                     mode: spec.mode,
                     accum: spec.accum,
+                    lookahead: 0, // refine factorizes at depth 0
                     backend: backend_label.to_string(),
                     error: None,
                     stats: out.stats,
@@ -483,6 +495,7 @@ fn failed_result(spec: &JobSpec, error: String) -> JobResult {
         precision: spec.precision,
         mode: spec.mode,
         accum: spec.accum,
+        lookahead: spec.lookahead,
         backend: spec.backend.clone(),
         error: Some(error),
         stats: OffloadStats::default(),
@@ -708,19 +721,23 @@ impl JobResult {
             None => "null".to_string(),
         };
         format!(
-            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
+            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"wait_s\": {}, \"overlap_s\": {}, \"overlap_frac\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
             self.id,
             self.alg.name(),
             self.n,
             self.precision.name(),
             self.mode.name(),
             self.accum.name(),
+            self.lookahead,
             esc(&self.backend),
             self.error.is_none(),
             error,
             jnum(self.wall_s),
             jnum(self.stats.panel_s),
             jnum(self.stats.update_s),
+            jnum(self.stats.wait_s),
+            jnum(self.stats.overlap_s),
+            jnum(self.stats.overlap_fraction()),
             jnum(self.stats.simulated_s),
             jnum(self.stats.update_flops),
             jopt(self.backward_error),

@@ -34,6 +34,13 @@
 //!   standard's quire semantics, with a widened/compensated analog for
 //!   the IEEE formats); `rounded` is the conventional
 //!   round-after-every-mac path the paper's hardware implements.
+//! * `lookahead` — factorization pipeline depth (default 0). `0` runs the
+//!   strictly sequential per-step schedule; any depth ≥ 1 runs the
+//!   lookahead pipeline ([`crate::coordinator::drivers`]): the host
+//!   factors panel `j+1` while the backend's trailing-update tail for
+//!   step `j` is still in flight. Bit-identical at every depth — only the
+//!   schedule (and the overlap fraction in the stats) changes. Applies to
+//!   factorize-mode jobs; `mode=refine` factorizes at depth 0.
 //!
 //! `#` starts a comment; blank lines are skipped. Matrix generation is a
 //! pure function of the spec, so the same manifest produces bit-identical
@@ -181,6 +188,10 @@ pub struct JobSpec {
     /// Accumulation mode of the job's inner products: conventional
     /// round-per-mac or quire-exact fused dots.
     pub accum: Accum,
+    /// Lookahead pipeline depth: 0 = sequential per-step schedule,
+    /// ≥ 1 = overlap host panels with in-flight backend updates
+    /// (bit-identical either way).
+    pub lookahead: usize,
     /// Dispatch-queue name; empty selects the pool's primary backend.
     pub backend: String,
 }
@@ -202,6 +213,7 @@ impl JobSpec {
             precision: Precision::Posit32,
             mode: Mode::Factorize,
             accum: Accum::default(),
+            lookahead: 0,
             backend: String::new(),
         }
     }
@@ -245,6 +257,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
                     spec.accum =
                         Accum::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
                 }
+                "lookahead" => spec.lookahead = val.parse().map_err(|_| bad())?,
                 "backend" => spec.backend = val.to_string(),
                 other => bail!("line {lineno}: unknown key '{other}'"),
             }
@@ -278,6 +291,9 @@ pub fn mixed_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
             if i % 5 == 4 {
                 spec.sigma = 0.01;
             }
+            // Exercise the lookahead pipeline on part of the workload —
+            // bit-identical to depth 0, so determinism baselines hold.
+            spec.lookahead = i % 2;
             spec
         })
         .collect()
@@ -327,6 +343,9 @@ pub fn mixed_accum_manifest(count: usize, base_n: usize) -> Vec<JobSpec> {
             if i % 7 == 5 {
                 spec.mode = Mode::Refine;
             }
+            // Both accumulation modes also run through the lookahead
+            // pipeline on part of the workload (bit-identical by design).
+            spec.lookahead = (i / 2) % 2;
             spec
         })
         .collect()
@@ -387,6 +406,14 @@ cholesky n=384   # trailing comment
         assert!(parse_manifest("lu n=8 mode=turbo").is_err());
         assert!(parse_manifest("lu n=8 accum=exact").is_err());
         assert!(parse_manifest("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn parses_lookahead_depth() {
+        let jobs = parse_manifest("lu n=64 lookahead=2\ncholesky n=32\n").unwrap();
+        assert_eq!(jobs[0].lookahead, 2);
+        assert_eq!(jobs[1].lookahead, 0, "default depth is 0");
+        assert!(parse_manifest("lu n=8 lookahead=deep").is_err());
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Bit-identity and abort-safety of the lookahead-pipelined drivers.
+//!
+//! The lookahead contract (README performance section, DESIGN §7):
+//! `getrf_offload_lookahead` / `potrf_offload_lookahead` reorder *when*
+//! trailing updates run — next-panel columns first on the host, the
+//! remainder in flight on the backend — never *what* is computed. So at
+//! every depth, for every backend and format and accum mode, factors,
+//! pivots and error codes must be **bit-identical** to the sequential
+//! blocked references (`getrf_ref` / `potrf_ref` for rounded accumulation,
+//! the depth-0 quire offload drivers for quire accumulation).
+//!
+//! The failure tests pin the abort path with an update genuinely in
+//! flight (a real-time `TimedBackend`, so the submitted tail has a live
+//! deadline when the pipeline hits the bad pivot): the error must be the
+//! same variant and index as the sequential driver's, and the call must
+//! return — no hung worker, no poisoned state.
+
+use posit_accel::blas::{gemm, Matrix, Scalar, Trans};
+use posit_accel::coordinator::drivers::{
+    getrf_offload, getrf_offload_lookahead, getrf_offload_quire, getrf_offload_quire_lookahead,
+    potrf_offload, potrf_offload_lookahead, potrf_offload_quire, potrf_offload_quire_lookahead,
+};
+use posit_accel::coordinator::{GemmBackend, NativeBackend, TimedBackend};
+use posit_accel::lapack::{getrf_ref, potrf_ref};
+use posit_accel::posit::Posit32;
+use posit_accel::rng::Pcg64;
+
+fn bits_of<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.bits()).collect()
+}
+
+/// A general f64 test matrix, castable into every working format.
+fn general_f64(n: usize, seed: u64) -> Matrix<f64> {
+    let mut rng = Pcg64::seed(seed);
+    Matrix::<f64>::random_normal(n, n, 1.0, &mut rng)
+}
+
+/// A well-conditioned SPD f64 test matrix (Gram + diagonal shift).
+fn spd_f64(n: usize, seed: u64) -> Matrix<f64> {
+    let mut rng = Pcg64::seed(seed);
+    let x = Matrix::<f64>::random_normal(n, n, 1.0, &mut rng);
+    let mut s = Matrix::<f64>::zeros(n, n);
+    gemm(Trans::Yes, Trans::No, n, n, n, 1.0, &x.data, n, &x.data, n, 0.0, &mut s.data, n);
+    for i in 0..n {
+        s[(i, i)] += 0.5 * n as f64;
+    }
+    s
+}
+
+/// LU at depths 0/1/2 vs the blocked scalar reference, one format.
+fn check_lu_depths<T: Scalar>(a64: &Matrix<f64>, n: usize, nb: usize) {
+    let a0: Matrix<T> = a64.cast();
+    let mut want = a0.clone();
+    let mut want_piv = vec![0usize; n];
+    getrf_ref(n, n, &mut want.data, n, &mut want_piv, nb, 2).unwrap();
+    let native = NativeBackend::new(2);
+    let timed = TimedBackend::new("model", NativeBackend::new(2), |m, k, nn| {
+        (2 * m * k * nn) as f64 / 1e9
+    });
+    for be in [&native as &dyn GemmBackend<T>, &timed] {
+        for depth in [0usize, 1, 2] {
+            let mut got = a0.clone();
+            let mut piv = vec![0usize; n];
+            let stats =
+                getrf_offload_lookahead(n, n, &mut got.data, n, &mut piv, nb, depth, be).unwrap();
+            assert_eq!(want_piv, piv, "{} depth={depth} pivots", be.name());
+            assert_eq!(
+                bits_of(&want.data),
+                bits_of(&got.data),
+                "{} depth={depth} factors",
+                be.name()
+            );
+            assert!(stats.update_flops > 0.0, "{} depth={depth}", be.name());
+            if depth == 0 {
+                assert_eq!(stats.overlap_s, 0.0, "depth 0 never overlaps");
+            }
+        }
+    }
+}
+
+/// Cholesky at depths 0/1/2 vs the blocked scalar reference, one format.
+fn check_chol_depths<T: Scalar>(s64: &Matrix<f64>, n: usize, nb: usize) {
+    let a0: Matrix<T> = s64.cast();
+    let mut want = a0.clone();
+    potrf_ref(n, &mut want.data, n, nb).unwrap();
+    let native = NativeBackend::new(2);
+    let timed = TimedBackend::new("model", NativeBackend::new(2), |m, k, nn| {
+        (2 * m * k * nn) as f64 / 1e9
+    });
+    for be in [&native as &dyn GemmBackend<T>, &timed] {
+        for depth in [0usize, 1, 2] {
+            let mut got = a0.clone();
+            potrf_offload_lookahead(n, &mut got.data, n, nb, depth, be).unwrap();
+            for j in 0..n {
+                for i in j..n {
+                    assert_eq!(
+                        want[(i, j)].bits(),
+                        got[(i, j)].bits(),
+                        "{} depth={depth} L({i},{j})",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// LU lookahead is bit-identical to `getrf_ref` at every depth, for every
+/// backend, at posit32, f32 and f64, with nb dividing n and not.
+#[test]
+fn lu_lookahead_depths_bit_match_reference_all_formats() {
+    for (n, nb, seed) in [(64usize, 16usize, 700u64), (90, 24, 701)] {
+        let a64 = general_f64(n, seed);
+        check_lu_depths::<Posit32>(&a64, n, nb);
+        check_lu_depths::<f32>(&a64, n, nb);
+        check_lu_depths::<f64>(&a64, n, nb);
+    }
+}
+
+/// Cholesky lookahead is bit-identical to `potrf_ref` at every depth, for
+/// every backend, at posit32, f32 and f64.
+#[test]
+fn cholesky_lookahead_depths_bit_match_reference_all_formats() {
+    for (n, nb, seed) in [(64usize, 16usize, 710u64), (90, 24, 711)] {
+        let s64 = spd_f64(n, seed);
+        check_chol_depths::<Posit32>(&s64, n, nb);
+        check_chol_depths::<f32>(&s64, n, nb);
+        check_chol_depths::<f64>(&s64, n, nb);
+    }
+}
+
+/// Quire-accumulation LU: depths 1/2 are bit-identical to the sequential
+/// quire driver (which depth 0 delegates to), pivots included.
+#[test]
+fn lu_quire_lookahead_depths_match_sequential() {
+    let (n, nb) = (72usize, 20usize);
+    let a64 = general_f64(n, 720);
+    fn check<T: Scalar>(a64: &Matrix<f64>, n: usize, nb: usize) {
+        let a0: Matrix<T> = a64.cast();
+        let mut want = a0.clone();
+        let mut want_piv = vec![0usize; n];
+        getrf_offload_quire(n, n, &mut want.data, n, &mut want_piv, nb, &NativeBackend::new(2))
+            .unwrap();
+        let native = NativeBackend::new(2);
+        let timed = TimedBackend::new("model", NativeBackend::new(2), |m, k, nn| {
+            (2 * m * k * nn) as f64 / 1e9
+        });
+        for be in [&native as &dyn GemmBackend<T>, &timed] {
+            for depth in [0usize, 1, 2] {
+                let mut got = a0.clone();
+                let mut piv = vec![0usize; n];
+                getrf_offload_quire_lookahead(
+                    n, n, &mut got.data, n, &mut piv, nb, depth, be,
+                )
+                .unwrap();
+                assert_eq!(want_piv, piv, "{} depth={depth} pivots", be.name());
+                assert_eq!(
+                    bits_of(&want.data),
+                    bits_of(&got.data),
+                    "{} depth={depth} factors",
+                    be.name()
+                );
+            }
+        }
+    }
+    check::<Posit32>(&a64, n, nb);
+    check::<f32>(&a64, n, nb);
+    check::<f64>(&a64, n, nb);
+}
+
+/// Quire-accumulation Cholesky: depths 1/2 bit-identical to the
+/// sequential quire driver's lower triangle.
+#[test]
+fn cholesky_quire_lookahead_depths_match_sequential() {
+    let (n, nb) = (72usize, 20usize);
+    let s64 = spd_f64(n, 721);
+    fn check<T: Scalar>(s64: &Matrix<f64>, n: usize, nb: usize) {
+        let a0: Matrix<T> = s64.cast();
+        let mut want = a0.clone();
+        potrf_offload_quire(n, &mut want.data, n, nb, &NativeBackend::new(2)).unwrap();
+        let native = NativeBackend::new(2);
+        let timed = TimedBackend::new("model", NativeBackend::new(2), |m, k, nn| {
+            (2 * m * k * nn) as f64 / 1e9
+        });
+        for be in [&native as &dyn GemmBackend<T>, &timed] {
+            for depth in [0usize, 1, 2] {
+                let mut got = a0.clone();
+                potrf_offload_quire_lookahead(n, &mut got.data, n, nb, depth, be).unwrap();
+                for j in 0..n {
+                    for i in j..n {
+                        assert_eq!(
+                            want[(i, j)].bits(),
+                            got[(i, j)].bits(),
+                            "{} depth={depth} L({i},{j})",
+                            be.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    check::<Posit32>(&s64, n, nb);
+    check::<f32>(&s64, n, nb);
+}
+
+/// A singular panel hit mid-pipeline (updates in flight on a real-time
+/// timed backend) must defer exactly like the sequential driver: the
+/// factorization completes, the error is the same `SingularU` index, and
+/// the call returns promptly — no hung backend worker.
+#[test]
+fn lu_lookahead_singular_mid_pipeline_aborts_like_sequential() {
+    let n = 32usize;
+    let nb = 8usize;
+    // Rank-1 matrix: the second elimination column is exactly zero, so
+    // the singularity lands in the first panel with updates still queued
+    // behind it at depth >= 1.
+    let mut a = Matrix::<Posit32>::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            a[(i, j)] = Posit32::from_f64(((i + 1) * (j + 1)) as f64);
+        }
+    }
+    let mut want = a.clone();
+    let mut want_piv = vec![0usize; n];
+    let want_err = getrf_offload(n, n, &mut want.data, n, &mut want_piv, nb, &NativeBackend::new(1))
+        .unwrap_err();
+    let timed = TimedBackend::new("rt", NativeBackend::new(2), |_, _, _| 2e-3).with_real_time();
+    for depth in [1usize, 2] {
+        let mut got = a.clone();
+        let mut piv = vec![0usize; n];
+        let err =
+            getrf_offload_lookahead(n, n, &mut got.data, n, &mut piv, nb, depth, &timed)
+                .unwrap_err();
+        assert_eq!(want_err, err, "depth={depth}");
+        // Deferred singularity still finishes the factorization: the
+        // partial state matches the sequential driver's bit-for-bit.
+        assert_eq!(want_piv, piv, "depth={depth} pivots");
+        assert_eq!(bits_of(&want.data), bits_of(&got.data), "depth={depth} state");
+    }
+}
+
+/// A non-SPD pivot in a *later* block (so the pipeline has a trailing
+/// update in flight when the panel fails) must abort with the same
+/// `NotPositiveDefinite` index as the sequential driver, and return.
+#[test]
+fn cholesky_lookahead_non_spd_mid_pipeline_aborts_like_sequential() {
+    let n = 64usize;
+    let nb = 16usize;
+    let mut s = spd_f64(n, 730);
+    // Poison a diagonal entry inside the third block: blocks 0..2 factor
+    // cleanly, so at depth >= 1 the failing potf2 runs while the previous
+    // step's tail update is in flight.
+    s[(2 * nb + 3, 2 * nb + 3)] = -1.0;
+    let sp: Matrix<Posit32> = s.cast();
+    let mut want = sp.clone();
+    let want_err =
+        potrf_offload(n, &mut want.data, n, nb, &NativeBackend::new(1)).unwrap_err();
+    let timed = TimedBackend::new("rt", NativeBackend::new(2), |_, _, _| 2e-3).with_real_time();
+    for depth in [1usize, 2] {
+        let mut got = sp.clone();
+        let err = potrf_offload_lookahead(n, &mut got.data, n, nb, depth, &timed).unwrap_err();
+        assert_eq!(want_err, err, "depth={depth}");
+    }
+}
+
+/// On a real-time timed backend the pipeline actually overlaps: depth 1
+/// reports overlap_s > 0 (host panel work ran while an update was in
+/// flight) and a sane overlap fraction; depth 0 reports none.
+#[test]
+fn lookahead_overlap_is_observed_on_real_time_backend() {
+    let n = 96usize;
+    let nb = 24usize;
+    let a64 = general_f64(n, 740);
+    let a0: Matrix<Posit32> = a64.cast();
+    let timed =
+        TimedBackend::new("rt", NativeBackend::new(2), |_, _, _| 4e-3).with_real_time();
+
+    let mut seq = a0.clone();
+    let mut seq_piv = vec![0usize; n];
+    let s0 = getrf_offload_lookahead(n, n, &mut seq.data, n, &mut seq_piv, nb, 0, &timed).unwrap();
+    assert_eq!(s0.overlap_s, 0.0, "sequential schedule has nothing in flight");
+
+    let mut got = a0.clone();
+    let mut piv = vec![0usize; n];
+    let s1 = getrf_offload_lookahead(n, n, &mut got.data, n, &mut piv, nb, 1, &timed).unwrap();
+    assert_eq!(seq_piv, piv);
+    assert_eq!(bits_of(&seq.data), bits_of(&got.data));
+    assert!(s1.overlap_s > 0.0, "depth 1 on a real-time backend must overlap");
+    let f = s1.overlap_fraction();
+    assert!(f > 0.0 && f <= 1.0, "overlap fraction {f} out of range");
+    assert!(s1.wait_s >= 0.0);
+}
