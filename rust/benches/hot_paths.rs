@@ -1047,9 +1047,14 @@ fn bench_service_accum(b: &mut Bench) {
 /// open-loop mixed-format stream from 4 concurrent submitters, reported
 /// as p50/p99 latency and sustained jobs/s, with the full artifact
 /// (percentiles, per-priority/per-format rollups, queue-depth trace)
-/// written to `results/BENCH_serve_daemon.json`.
+/// written to `results/BENCH_serve_daemon.json`. A second, journaled run
+/// repeats the plan over a seeded `FaultyBackend` (fixed transient-error
+/// rate) — zero lost jobs, successes bit-identical to the clean run —
+/// and times a full journal recovery; its counters splice into the
+/// artifact as the `"faulty"` block.
 fn bench_serve_daemon(b: &mut Bench) {
-    use posit_accel::serve::{drive, plan, Daemon, DaemonConfig};
+    use posit_accel::coordinator::{FaultConfig, FaultyBackend};
+    use posit_accel::serve::{drive, plan, Daemon, DaemonConfig, FsyncPolicy, Store};
 
     let (jobs_count, base_n, rate) = if quick() { (12, 48, 64.0) } else { (48, 96, 24.0) };
     const SUBMITTERS: usize = 4;
@@ -1063,7 +1068,7 @@ fn bench_serve_daemon(b: &mut Bench) {
         max_workers: 4,
         ..DaemonConfig::default()
     };
-    let daemon = Daemon::start(engine, config);
+    let daemon = Daemon::start(engine, config.clone());
     let report = drive(&daemon, &load, 1000);
     let summary = daemon.drain();
     assert_eq!(report.dropped, 0, "open-loop burst must not drop jobs");
@@ -1087,14 +1092,86 @@ fn bench_serve_daemon(b: &mut Bench) {
         "jobs/s",
     );
     std::fs::create_dir_all("results").ok();
-    match daemon.write_bench(
-        std::path::Path::new("results/BENCH_serve_daemon.json"),
-        quick(),
-        SUBMITTERS,
-        rate,
-    ) {
+    let bench_path = std::path::Path::new("results/BENCH_serve_daemon.json");
+    match daemon.write_bench(bench_path, quick(), SUBMITTERS, rate) {
         Ok(()) => println!("[saved results/BENCH_serve_daemon.json]"),
         Err(e) => println!("[failed to save BENCH_serve_daemon.json: {e}]"),
+    }
+
+    // ---- fault-injected journaled run ---------------------------------
+    // Same plan over a FaultyBackend with a fixed transient-error rate:
+    // the engine's bounded retries absorb the faults (a retried job
+    // re-runs deterministically, so successes stay bit-identical to the
+    // clean run) and every admit/result lands in a write-ahead journal.
+    const TRANSIENT_RATE: f64 = 0.02;
+    let clean_results = daemon.completed_results();
+    let journal =
+        std::env::temp_dir().join(format!("posit-bench-faulty-{}.wal", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+    let fault_cfg =
+        FaultConfig { transient_rate: TRANSIENT_RATE, seed: 0xFA017, ..FaultConfig::default() };
+    let engine = EngineBuilder::new(32)
+        .shared("native", Arc::new(FaultyBackend::new(NativeBackend::new(1), fault_cfg)))
+        .build();
+    let store = Store::open(&journal, FsyncPolicy::Never, false).expect("fresh bench journal");
+    let (faulty, _) = Daemon::start_with_store(engine, config.clone(), store);
+    let report = drive(&faulty, &load, 1000);
+    let summary = faulty.drain();
+    assert_eq!(report.dropped, 0);
+    assert_eq!(summary.admitted, jobs_count);
+    assert_eq!(summary.completed, jobs_count, "zero lost jobs under injected faults");
+    let faulty_results = faulty.completed_results();
+    let faulty_ok = faulty_results.iter().filter(|r| r.error.is_none()).count();
+    for (clean, got) in clean_results.iter().zip(&faulty_results) {
+        assert_eq!(clean.id, got.id);
+        if got.error.is_none() {
+            assert_eq!(
+                clean.digits.map(f64::to_bits),
+                got.digits.map(f64::to_bits),
+                "job {} survived faults but is not bit-identical to the clean run",
+                got.id
+            );
+        }
+    }
+    let retries_total = faulty.retries_total();
+    let shed = faulty.shed_count();
+    b.add(
+        &format!("serve-daemon faulty run (transient rate {TRANSIENT_RATE}) retries"),
+        retries_total as f64,
+        "retries",
+    );
+
+    // Crash-recovery time: replay the complete journal into a fresh
+    // daemon (every result recovered, nothing re-run).
+    let t0 = std::time::Instant::now();
+    let store = Store::open(&journal, FsyncPolicy::Never, false).expect("replay bench journal");
+    let engine = EngineBuilder::new(32)
+        .shared("native", Arc::new(NativeBackend::new(1)))
+        .build();
+    let (recovered, rec_report) = Daemon::start_with_store(engine, config, store);
+    let recovery_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        rec_report.recovered_results, jobs_count,
+        "every journaled result survives the restart"
+    );
+    recovered.drain();
+    let _ = std::fs::remove_file(&journal);
+    b.add("serve-daemon journal recovery (replay + boot)", recovery_s * 1e3, "ms");
+
+    // Splice the faulty-run block into the saved artifact.
+    if let Ok(s) = std::fs::read_to_string(bench_path) {
+        if let Some(end) = s.rfind('}') {
+            let body = s[..end].trim_end().trim_end_matches(',');
+            let spliced = format!(
+                "{body},\n\"faulty\": {{\"transient_rate\": {TRANSIENT_RATE}, \"seed\": \"0xFA017\", \"admitted\": {}, \"completed\": {}, \"ok\": {}, \"retries_total\": {}, \"shed\": {}, \"recovery_s\": {:.6}, \"recovered_results\": {}}}\n}}\n",
+                summary.admitted, summary.completed, faulty_ok, retries_total, shed,
+                recovery_s, rec_report.recovered_results,
+            );
+            match std::fs::write(bench_path, spliced) {
+                Ok(()) => println!("[spliced faulty-run block into BENCH_serve_daemon.json]"),
+                Err(e) => println!("[failed to splice faulty block: {e}]"),
+            }
+        }
     }
 }
 

@@ -12,9 +12,10 @@
 //!                                     (manifests mix posit32/f32/f64 jobs and
 //!                                     factor/refine modes per line)
 //! posit-accel serve [--rounds 3]      same, sustained rounds, JSON per round
-//! posit-accel serve-daemon            long-lived streaming daemon (Unix socket)
+//! posit-accel serve-daemon            long-lived streaming daemon (Unix/TCP
+//!                                     socket, optional crash-safe --journal)
 //! posit-accel serve-load              open-loop load client for the daemon
-//! posit-accel serve-ctl ping|stats|shutdown   one-shot daemon control
+//! posit-accel serve-ctl ping|stats|collect|shutdown   one-shot daemon control
 //! ```
 
 use std::collections::HashMap;
@@ -87,12 +88,14 @@ USAGE:
   posit-accel batch  [--manifest FILE] [--jobs 32] [--n 192] [--workers <cores>]
                      [--backend native|fpga|gpu|pjrt] [--max-batch 32] [--json FILE]
   posit-accel serve  (batch options) [--rounds 3]
-  posit-accel serve-daemon [--socket /tmp/posit-serve.sock] [--backends native,fpga,gpu,pjrt]
-                     [--capacity 64] [--min-workers 1] [--max-workers <cores>]
-                     [--retry-after-ms 10] [--max-batch 32] [--bench-out FILE]
-  posit-accel serve-load [--socket ...] [--jobs 24] [--n 48] [--seed 1] [--rate 32]
+  posit-accel serve-daemon [--listen unix:///path|tcp://HOST:PORT] [--socket PATH]
+                     [--backends native,fpga,gpu,pjrt] [--capacity 64]
+                     [--min-workers 1] [--max-workers <cores>] [--retry-after-ms 10]
+                     [--max-batch 32] [--bench-out FILE] [--no-shed]
+                     [--journal FILE] [--fsync always|never] [--repair]
+  posit-accel serve-load [--listen ...] [--jobs 24] [--n 48] [--seed 1] [--rate 32]
                      [--submitters 4] [--max-retries 1000] [--shutdown]
-  posit-accel serve-ctl <ping|stats|shutdown> [--socket ...]
+  posit-accel serve-ctl <ping|stats|collect|shutdown> [--listen ...]
 
 Tables/figures print a paper-vs-model/measured comparison and save CSV
 under results/. PJRT backends need `make artifacts` first.
@@ -128,10 +131,18 @@ modelled time, all formats), pjrt (AOT Pallas artifacts, posit32 only).
 
 serve-daemon is the persistent tier: it streams newline-delimited JSON
 submissions (the manifest vocabulary as flat JSON fields plus
-`priority=high|normal|low`) over a Unix socket into bounded per-priority
-admission queues — a full queue rejects with a deterministic
-`retry_after_ms` hint — and runs jobs on per-format worker shards that
-scale with queue depth. SIGTERM or an `op=shutdown` request drains
+`priority=high|normal|low` and an optional `deadline_ms` wall-clock
+budget) over a Unix or TCP socket (--listen; bare --socket PATH still
+means Unix) into bounded per-priority admission queues — a full queue
+rejects with a deterministic `retry_after_ms` hint, unless a
+higher-priority arrival can shed a queued lower-priority job
+(--no-shed disables) — and runs jobs on per-format worker shards that
+scale with queue depth. With --journal FILE every admit is journaled
+before its ack and every result on completion (--fsync picks the
+durability/throughput tradeoff); restarting on the same journal serves
+finished results bit-identical and re-runs unfinished jobs exactly
+once. A corrupt journal interior fails loudly unless --repair skips the
+bad records. SIGTERM, SIGINT, or an `op=shutdown` request drains
 gracefully (every admitted job finishes exactly once) and, with
 --bench-out, writes the latency/throughput/queue-trace JSON
 (BENCH_serve_daemon.json). serve-load offers a seeded open-loop job

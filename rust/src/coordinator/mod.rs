@@ -23,7 +23,11 @@
 //!   - [`TimedBackend`] — wraps another backend and charges a hardware
 //!     cost model per call, for whatever formats the inner backend
 //!     supports; this is how the FPGA/GPU rows of Figs 2-8 are produced
-//!     with *real numerics* and *modelled time*.
+//!     with *real numerics* and *modelled time*,
+//!   - [`FaultyBackend`] — deterministic fault injection around another
+//!     backend (a seeded per-call schedule of transient errors, injected
+//!     latency, poisoned tiles, and panics), the chaos half of the
+//!     serving tier's robustness tests.
 //! * [`drivers`] — blocked LU / Cholesky drivers parameterized by format
 //!   and backend, plus mixed-precision iterative refinement
 //!   ([`drivers::refine_offload`]: factorize in the working format,
@@ -37,8 +41,9 @@ use crate::blas::{
     gemm_update_quire, gemm_update_quire_parallel, pool, Accum, PackPlan, Scalar, Trans,
 };
 use crate::posit::Posit32;
+use crate::rng::Pcg64;
 use crate::runtime::{ArtifactKind, Runtime};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -971,6 +976,213 @@ impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for TimedBackend<B> {
     }
 }
 
+/// Knobs of a [`FaultyBackend`]: independent per-call probabilities for
+/// each fault class, drawn from one seeded schedule. All rates default to
+/// 0 (fully transparent); `..FaultConfig::default()` in tests.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Seed of the per-call fault schedule (same seed = same faults).
+    pub seed: u64,
+    /// Probability a call fails with a retryable `transient: ...` error
+    /// *before* touching its output tile (so a retry starts clean).
+    pub transient_rate: f64,
+    /// Probability a call sleeps [`FaultConfig::latency_ms`] first.
+    pub latency_rate: f64,
+    /// Injected latency per delayed call, in milliseconds.
+    pub latency_ms: u64,
+    /// Probability a call silently corrupts its output tile *after*
+    /// executing — the fault class fingerprints exist to catch.
+    pub poison_rate: f64,
+    /// Probability a call panics mid-flight (worker/dispatcher death).
+    pub panic_rate: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA017,
+            transient_rate: 0.0,
+            latency_rate: 0.0,
+            latency_ms: 1,
+            poison_rate: 0.0,
+            panic_rate: 0.0,
+        }
+    }
+}
+
+/// What one backend call is sentenced to.
+enum Fault {
+    Clean,
+    Transient,
+    Latency,
+    Poison,
+    Panic,
+}
+
+/// Deterministic fault-injection wrapper: numerics from the inner
+/// backend, faults from a seeded schedule that is a pure function of
+/// `(seed, call index)` — the same workload replays the same faults in
+/// the same call positions every run (exactly reproducible wherever call
+/// *order* is deterministic: the sequential drivers, single-worker
+/// drains; under concurrency the schedule is still fixed per call index,
+/// only which job lands on it varies). Asynchronous submissions are
+/// deliberately *not* overridden, so they degrade to the synchronous
+/// methods and stay on the one per-call schedule.
+pub struct FaultyBackend<B> {
+    inner: B,
+    label: String,
+    cfg: FaultConfig,
+    calls: AtomicU64,
+}
+
+impl<B> FaultyBackend<B> {
+    pub fn new(inner: B, cfg: FaultConfig) -> Self {
+        FaultyBackend {
+            inner,
+            label: "faulty".to_string(),
+            cfg,
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Backend calls seen so far (diagnostics; also the schedule cursor).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Draw this call's sentence. One uniform draw per call, partitioned
+    /// panic | poison | transient | latency | clean, so the classes are
+    /// mutually exclusive and their rates add.
+    fn draw(&self) -> (u64, Fault) {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::seed(self.cfg.seed ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let u = rng.uniform();
+        let c = &self.cfg;
+        let panic_edge = c.panic_rate;
+        let poison_edge = panic_edge + c.poison_rate;
+        let transient_edge = poison_edge + c.transient_rate;
+        let latency_edge = transient_edge + c.latency_rate;
+        let fault = if u < panic_edge {
+            Fault::Panic
+        } else if u < poison_edge {
+            Fault::Poison
+        } else if u < transient_edge {
+            Fault::Transient
+        } else if u < latency_edge {
+            Fault::Latency
+        } else {
+            Fault::Clean
+        };
+        (call, fault)
+    }
+
+    /// Apply the drawn fault for one call. `Ok(poison)` tells the caller
+    /// whether to corrupt its output tile after the inner call runs.
+    fn inject(&self) -> Result<bool> {
+        let (call, fault) = self.draw();
+        match fault {
+            Fault::Panic => panic!("injected backend panic (call {call})"),
+            Fault::Transient => Err(anyhow!("transient: injected backend fault (call {call})")),
+            Fault::Latency => {
+                std::thread::sleep(Duration::from_millis(self.cfg.latency_ms));
+                Ok(false)
+            }
+            Fault::Poison => Ok(true),
+            Fault::Clean => Ok(false),
+        }
+    }
+}
+
+/// Overwrite the tile's first element with the format's NaN/NaR — a
+/// silent device corruption the job-level fingerprints must surface.
+fn poison_tile<T: Scalar>(c: &mut [T]) {
+    if let Some(v) = c.first_mut() {
+        *v = T::from_f64(f64::NAN);
+    }
+}
+
+impl<T: Scalar, B: GemmBackend<T>> GemmBackend<T> for FaultyBackend<B> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn gemm_update(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let poison = self.inject()?;
+        self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)?;
+        if poison {
+            poison_tile(c);
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_update_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        plan: &PackPlan<T>,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let poison = self.inject()?;
+        self.inner
+            .gemm_update_prepacked(m, k, n, a, lda, b, ldb, plan, c, ldc)?;
+        if poison {
+            poison_tile(c);
+        }
+        Ok(())
+    }
+
+    fn gemm_update_quire(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<()> {
+        let poison = self.inject()?;
+        self.inner.gemm_update_quire(m, k, n, a, lda, b, ldb, c, ldc)?;
+        if poison {
+            poison_tile(c);
+        }
+        Ok(())
+    }
+
+    fn wants_scalar_tiles(&self) -> bool {
+        self.inner.wants_scalar_tiles()
+    }
+    fn simulated_cost(&self, m: usize, k: usize, n: usize) -> f64 {
+        self.inner.simulated_cost(m, k, n)
+    }
+    fn simulated_seconds(&self) -> f64 {
+        self.inner.simulated_seconds()
+    }
+    fn tiles_dispatched(&self) -> u64 {
+        self.inner.tiles_dispatched()
+    }
+}
+
 /// Phase timing of an offloaded factorization.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OffloadStats {
@@ -1391,5 +1603,75 @@ mod tests {
         GemmBackend::<f64>::gemm_update(&be, m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
             .unwrap();
         assert_eq!(c1.data, c2.data, "f64 backend == f64 gemm");
+    }
+
+    #[test]
+    fn faulty_backend_rate_zero_is_bit_transparent() {
+        let a = rand_mat(12, 8, 1);
+        let b = rand_mat(8, 10, 2);
+        let c0 = rand_mat(12, 10, 3);
+        let mut c1 = c0.data.clone();
+        let mut c2 = c0.data.clone();
+        NativeBackend::new(1)
+            .gemm_update(12, 8, 10, &a.data, 12, &b.data, 8, &mut c1, 12)
+            .unwrap();
+        let faulty = FaultyBackend::new(NativeBackend::new(1), FaultConfig::default());
+        faulty
+            .gemm_update(12, 8, 10, &a.data, 12, &b.data, 8, &mut c2, 12)
+            .unwrap();
+        let bits = |c: &[Posit32]| c.iter().map(|v| v.0).collect::<Vec<_>>();
+        assert_eq!(bits(&c1), bits(&c2), "all-zero rates change nothing");
+        assert_eq!(faulty.calls(), 1);
+    }
+
+    #[test]
+    fn faulty_backend_schedule_is_deterministic_and_marks_transients() {
+        let cfg = FaultConfig {
+            transient_rate: 0.4,
+            seed: 0xFA11,
+            ..FaultConfig::default()
+        };
+        let outcomes = |cfg: FaultConfig| -> Vec<bool> {
+            let be = FaultyBackend::new(NativeBackend::new(1), cfg);
+            let a = rand_mat(6, 4, 10);
+            let b = rand_mat(4, 6, 11);
+            (0..32)
+                .map(|_| {
+                    let mut c = rand_mat(6, 6, 12).data;
+                    match be.gemm_update(6, 4, 6, &a.data, 6, &b.data, 4, &mut c, 6) {
+                        Ok(()) => true,
+                        Err(e) => {
+                            assert!(e.to_string().contains("transient"), "{e}");
+                            false
+                        }
+                    }
+                })
+                .collect()
+        };
+        let s1 = outcomes(cfg);
+        let s2 = outcomes(cfg);
+        assert_eq!(s1, s2, "same seed, same fault schedule");
+        assert!(
+            s1.iter().any(|&ok| ok) && s1.iter().any(|&ok| !ok),
+            "rate 0.4 over 32 calls mixes outcomes: {s1:?}"
+        );
+        let s3 = outcomes(FaultConfig { seed: 0x0DD, ..cfg });
+        assert_ne!(s1, s3, "different seed, different schedule");
+    }
+
+    #[test]
+    fn poisoned_tiles_corrupt_output_detectably() {
+        let cfg = FaultConfig {
+            poison_rate: 1.0,
+            ..FaultConfig::default()
+        };
+        let be = FaultyBackend::new(NativeBackend::new(1), cfg);
+        let a = rand_mat(6, 4, 20);
+        let b = rand_mat(4, 6, 21);
+        let mut c = rand_mat(6, 6, 22).data;
+        be.gemm_update(6, 4, 6, &a.data, 6, &b.data, 4, &mut c, 6)
+            .unwrap();
+        let nar = <Posit32 as Scalar>::from_f64(f64::NAN);
+        assert_eq!(c[0].0, nar.0, "first output element poisoned to NaR");
     }
 }

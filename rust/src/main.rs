@@ -343,15 +343,31 @@ fn cmd_batch(args: &Args, serve: bool) {
 
 const DEFAULT_SOCKET: &str = "/tmp/posit-serve.sock";
 
-/// Run the persistent serving daemon on a Unix socket until SIGTERM or a
-/// client `shutdown`, then drain gracefully and (with `--bench-out`)
-/// flush `BENCH_serve_daemon.json`.
+/// Resolve the serving address: `--listen unix://PATH|tcp://HOST:PORT`
+/// wins; `--socket PATH` (the pre-TCP spelling) and the default socket
+/// path stay as Unix fallbacks.
+#[cfg(unix)]
+fn listen_addr(args: &Args) -> posit_accel::serve::Listen {
+    let spec = args
+        .get("listen")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.str_or("socket", DEFAULT_SOCKET).to_string());
+    posit_accel::serve::Listen::parse(&spec).unwrap_or_else(|e| die(&format!("--listen: {e:#}")))
+}
+
+/// Run the persistent serving daemon on a Unix or TCP socket until
+/// SIGTERM/SIGINT or a client `shutdown`, then drain gracefully and
+/// (with `--bench-out`) flush `BENCH_serve_daemon.json`. With
+/// `--journal PATH` the daemon is crash-safe: admits are journaled
+/// before the ack, results on completion, and a restart on the same
+/// journal recovers finished results bit-identical and re-runs
+/// admitted-but-unfinished jobs exactly once.
 #[cfg(unix)]
 fn cmd_serve_daemon(args: &Args) {
-    use posit_accel::serve::{serve_unix, Daemon, DaemonConfig};
+    use posit_accel::serve::{serve, Daemon, DaemonConfig, FsyncPolicy, Store};
     use std::path::{Path, PathBuf};
 
-    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let listen = listen_addr(args);
     let backends: Vec<String> = args
         .str_or("backends", "native")
         .split(',')
@@ -372,12 +388,35 @@ fn cmd_serve_daemon(args: &Args) {
         retry_after_ms: args.usize_or("retry-after-ms", 10) as u64,
         idle_exit_ms: args.usize_or("idle-exit-ms", 50) as u64,
         trace_interval_ms: args.usize_or("trace-ms", 20) as u64,
+        shed_low_on_full: !args.flag("no-shed"),
         ..DaemonConfig::default()
     };
     let bench_out: Option<PathBuf> = args.get("bench-out").map(PathBuf::from);
-    let daemon = Daemon::start(engine, config);
-    println!("serve-daemon listening on {socket} (backends: {})", backends.join(","));
-    let summary = serve_unix(daemon, Path::new(&socket), bench_out.as_deref())
+    let daemon = match args.get("journal") {
+        Some(path) => {
+            let fsync = FsyncPolicy::parse(args.str_or("fsync", "always"))
+                .unwrap_or_else(|e| die(&format!("--fsync: {e:#}")));
+            let store = Store::open(Path::new(path), fsync, args.flag("repair"))
+                .unwrap_or_else(|e| die(&format!("journal {path}: {e:#}")));
+            let (daemon, report) = Daemon::start_with_store(engine, config, store);
+            println!(
+                "serve-daemon journal {path} (fsync={}): {} results recovered, {} jobs replayed{}{}",
+                fsync.name(),
+                report.recovered_results,
+                report.replayed_jobs,
+                if report.torn_tail { ", torn tail truncated" } else { "" },
+                if report.skipped > 0 {
+                    format!(", {} corrupt records skipped (--repair)", report.skipped)
+                } else {
+                    String::new()
+                },
+            );
+            daemon
+        }
+        None => Daemon::start(engine, config),
+    };
+    println!("serve-daemon listening on {listen} (backends: {})", backends.join(","));
+    let summary = serve(daemon, &listen, bench_out.as_deref())
         .unwrap_or_else(|e| die(&format!("serve-daemon: {e:#}")));
     println!(
         "serve-daemon drained: {} admitted, {} completed, {} rejected in {:.3}s",
@@ -393,10 +432,9 @@ fn cmd_serve_daemon(args: &Args) {
 fn cmd_serve_load(args: &Args) {
     use posit_accel::serve::{plan, protocol};
     use std::io::{BufRead, BufReader, Write};
-    use std::os::unix::net::UnixStream;
     use std::time::{Duration, Instant};
 
-    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let listen = listen_addr(args);
     let jobs = args.usize_or("jobs", 24);
     let n = args.usize_or("n", 48);
     let seed = args.usize_or("seed", 1) as u64;
@@ -411,10 +449,11 @@ fn cmd_serve_load(args: &Args) {
         let mut handles = Vec::new();
         for s in 0..submitters {
             let lp = &lp;
-            let socket = &socket;
+            let listen = &listen;
             handles.push(scope.spawn(move || {
-                let stream = UnixStream::connect(socket)
-                    .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+                let stream = listen
+                    .connect()
+                    .unwrap_or_else(|e| die(&format!("connect {listen}: {e}")));
                 let mut writer =
                     stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
                 let mut reader = BufReader::new(stream);
@@ -469,8 +508,7 @@ fn cmd_serve_load(args: &Args) {
     });
 
     // Control connection: settle (collect with wait), then optionally drain.
-    let stream = UnixStream::connect(&socket)
-        .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+    let stream = listen.connect().unwrap_or_else(|e| die(&format!("connect {listen}: {e}")));
     let mut writer = stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -494,21 +532,24 @@ fn cmd_serve_load(args: &Args) {
     }
 }
 
-/// One-shot control client: `serve-ctl ping|stats|shutdown`.
+/// One-shot control client: `serve-ctl ping|stats|collect|shutdown`.
+/// `collect` waits for the daemon to go idle and prints every completed
+/// result — the post-recovery check a restarted client runs.
 #[cfg(unix)]
 fn cmd_serve_ctl(args: &Args) {
     use std::io::{BufRead, BufReader, Write};
-    use std::os::unix::net::UnixStream;
 
-    let socket = args.str_or("socket", DEFAULT_SOCKET).to_string();
+    let listen = listen_addr(args);
     let request = match args.positional.get(1).map(|s| s.as_str()) {
         Some("ping") => "{\"op\": \"ping\"}".to_string(),
         Some("stats") => "{\"op\": \"stats\"}".to_string(),
+        Some("collect") => "{\"op\": \"collect\", \"wait\": true}".to_string(),
         Some("shutdown") => "{\"op\": \"shutdown\"}".to_string(),
-        other => die(&format!("unknown serve-ctl op {other:?} (want ping|stats|shutdown)")),
+        other => {
+            die(&format!("unknown serve-ctl op {other:?} (want ping|stats|collect|shutdown)"))
+        }
     };
-    let stream = UnixStream::connect(&socket)
-        .unwrap_or_else(|e| die(&format!("connect {socket}: {e}")));
+    let stream = listen.connect().unwrap_or_else(|e| die(&format!("connect {listen}: {e}")));
     let mut writer = stream.try_clone().unwrap_or_else(|e| die(&format!("clone socket: {e}")));
     let mut reader = BufReader::new(stream);
     writeln!(writer, "{request}").unwrap_or_else(|e| die(&format!("send: {e}")));

@@ -45,9 +45,11 @@
 //! contributes exactly one result and one stats row; nothing is lost or
 //! double-counted.
 
+use super::journal::Journal;
 use super::protocol::{esc, jnum, Priority};
+use super::store::{RecoveryReport, Store};
 use crate::coordinator::OffloadStats;
-use crate::service::{Engine, JobResult, JobSpec, Precision, QueueReport};
+use crate::service::{failed_result, Engine, JobResult, JobSpec, Precision, QueueReport};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -78,6 +80,12 @@ pub struct DaemonConfig {
     /// [`Daemon::release`] (backpressure tests fill queues this way;
     /// [`Daemon::drain`] releases the gate itself).
     pub hold_workers: bool,
+    /// Graceful degradation under sustained overload: when a shard is
+    /// full and a *higher*-priority job arrives, evict the newest job of
+    /// the lowest non-empty lane strictly below it (completing the victim
+    /// as a deterministic `shed: ...` failure) instead of rejecting the
+    /// important work. Surfaced in stats as `shed`.
+    pub shed_low_on_full: bool,
 }
 
 impl Default for DaemonConfig {
@@ -91,6 +99,7 @@ impl Default for DaemonConfig {
             trace_interval_ms: 10,
             keep_factors: false,
             hold_workers: false,
+            shed_low_on_full: true,
         }
     }
 }
@@ -217,6 +226,16 @@ struct DaemonCore {
     admitted: AtomicUsize,
     completed: AtomicUsize,
     rejected: AtomicUsize,
+    /// Jobs evicted by the overload-shedding path (counted in `completed`
+    /// too — a shed job completes as a deterministic failure).
+    shed: AtomicUsize,
+    /// Write-ahead journal: admits appended before the ack, results on
+    /// completion. `None` = ephemeral daemon (no durability).
+    journal: Option<Journal>,
+    /// Completed results recovered from the journal at startup.
+    recovered_results: usize,
+    /// Admitted-but-unfinished jobs re-queued from the journal at startup.
+    replayed_jobs: usize,
     stop_tracer: AtomicBool,
     started_at: Instant,
     handles: Mutex<Vec<JoinHandle<()>>>,
@@ -246,10 +265,43 @@ pub struct Daemon {
 }
 
 impl Daemon {
-    /// Start the daemon over `engine`: spawn `min_workers` per shard plus
-    /// the tracer thread, and begin accepting submissions.
+    /// Start an ephemeral daemon over `engine` (no journal): spawn
+    /// `min_workers` per shard plus the tracer thread, and begin accepting
+    /// submissions.
     pub fn start(engine: Engine, config: DaemonConfig) -> Daemon {
+        Daemon::boot(engine, config, None, Vec::new(), Vec::new())
+    }
+
+    /// Start a durable daemon over a replayed [`Store`]: recovered results
+    /// are served to `collect` immediately (bit-identical to the run the
+    /// crash interrupted), admitted-but-unfinished jobs are re-queued for
+    /// exactly-once re-runs (capacity-bypassing — a previous life of this
+    /// daemon already admitted them — and without re-journaling their
+    /// admits), and every new admit/result is journaled.
+    pub fn start_with_store(
+        engine: Engine,
+        config: DaemonConfig,
+        store: Store,
+    ) -> (Daemon, RecoveryReport) {
+        let Store {
+            journal,
+            completed,
+            pending,
+            report,
+        } = store;
+        let daemon = Daemon::boot(engine, config, Some(journal), completed, pending);
+        (daemon, report)
+    }
+
+    fn boot(
+        engine: Engine,
+        config: DaemonConfig,
+        journal: Option<Journal>,
+        recovered: Vec<JobResult>,
+        pending: Vec<(JobSpec, Priority)>,
+    ) -> Daemon {
         let held = config.hold_workers;
+        let recovered_count = recovered.len();
         let core = Arc::new(DaemonCore {
             engine,
             config,
@@ -264,32 +316,84 @@ impl Daemon {
                 rollup: [OffloadStats::default(); 3],
             }),
             done_cond: Condvar::new(),
-            admitted: AtomicUsize::new(0),
-            completed: AtomicUsize::new(0),
+            // Recovered jobs count as both admitted and completed, so the
+            // exactly-once invariant (drain waits for completed ==
+            // admitted) spans the restart.
+            admitted: AtomicUsize::new(recovered_count),
+            completed: AtomicUsize::new(recovered_count),
             rejected: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            journal,
+            recovered_results: recovered_count,
+            replayed_jobs: pending.len(),
             stop_tracer: AtomicBool::new(false),
             started_at: Instant::now(),
             handles: Mutex::new(Vec::new()),
             trace: Mutex::new(Vec::new()),
             drained: Mutex::new(None),
         });
+        {
+            // Seed the tally so `collect` and the per-format rollups serve
+            // pre-restart completions (no latency samples: their queue
+            // wait belongs to the previous life).
+            let mut tally = core.tally.lock().unwrap();
+            for r in recovered {
+                tally.rollup[shard_index(r.precision)].accumulate(&r.stats);
+                tally.results.push(r);
+            }
+        }
+        for (spec, priority) in pending {
+            let shard = core.shard(spec.precision);
+            let mut st = shard.state.lock().unwrap();
+            core.admitted.fetch_add(1, Ordering::SeqCst);
+            st.lanes[priority.index()].push_back(AdmittedJob {
+                spec,
+                priority,
+                admitted_at: Instant::now(),
+            });
+            st.depth += 1;
+            drop(st);
+            shard.cond.notify_one();
+        }
         for p in Precision::ALL {
             for _ in 0..core.config.min_workers {
                 spawn_worker(&core, p);
             }
+            scale_up(&core, p);
         }
         spawn_tracer(&core);
         Daemon { core }
     }
 
+    /// Abrupt in-process stop for crash tests: admission and dispatch
+    /// cease WITHOUT draining — queued jobs never run, which is exactly
+    /// what a daemon death looks like to the journal (in-flight jobs
+    /// finish on their workers and journal their results). Joins every
+    /// thread, so the journal file is quiescent when this returns.
+    pub fn abort(&self) {
+        let core = &self.core;
+        for shard in &core.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.stopped = true;
+            shard.cond.notify_all();
+        }
+        core.stop_tracer.store(true, Ordering::SeqCst);
+        let handles: Vec<JoinHandle<()>> = core.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
     /// Admit one job into its format shard's priority lane, or reject
-    /// with the deterministic backpressure hint.
+    /// with the deterministic backpressure hint. On a full shard, a
+    /// higher-priority arrival may shed a queued lower-priority job
+    /// instead of rejecting (see [`DaemonConfig::shed_low_on_full`]).
     pub fn submit(&self, spec: JobSpec, priority: Priority) -> Result<Admission, Rejection> {
         let core = &self.core;
         let precision = spec.precision;
         let id = spec.id;
         let shard = core.shard(precision);
-        let depth = {
+        let (depth, victim) = {
             let mut st = shard.state.lock().unwrap();
             if st.draining || st.stopped {
                 drop(st);
@@ -300,16 +404,55 @@ impl Daemon {
                     retry_after_ms: 0,
                 });
             }
+            let mut victim = None;
             if st.depth >= core.config.queue_capacity {
-                let hint =
-                    retry_hint(core.config.retry_after_ms, st.depth, core.config.queue_capacity);
-                drop(st);
-                core.rejected.fetch_add(1, Ordering::SeqCst);
-                return Err(Rejection {
-                    id,
-                    reason: "queue full".to_string(),
-                    retry_after_ms: hint,
-                });
+                if core.config.shed_low_on_full {
+                    // Evict the newest job of the lowest non-empty lane
+                    // strictly below the incoming priority (never a peer:
+                    // equal-priority arrivals still get backpressure).
+                    for lane_idx in (priority.index() + 1..st.lanes.len()).rev() {
+                        if let Some(job) = st.lanes[lane_idx].pop_back() {
+                            st.depth -= 1;
+                            victim = Some(job);
+                            break;
+                        }
+                    }
+                }
+                if victim.is_none() {
+                    let hint = retry_hint(
+                        core.config.retry_after_ms,
+                        st.depth,
+                        core.config.queue_capacity,
+                    );
+                    drop(st);
+                    core.rejected.fetch_add(1, Ordering::SeqCst);
+                    return Err(Rejection {
+                        id,
+                        reason: "queue full".to_string(),
+                        retry_after_ms: hint,
+                    });
+                }
+            }
+            // Journal before ack: an admit the journal has not durably
+            // recorded must never be acknowledged, or a crash would lose
+            // a job the client believes is queued. The journal mutex is a
+            // leaf lock, so holding the shard lock across the append is
+            // deadlock-free and keeps journal order = admission order.
+            if let Some(journal) = &core.journal {
+                if let Err(e) = journal.append_admit(&spec, priority) {
+                    if let Some(job) = victim.take() {
+                        st.lanes[job.priority.index()].push_back(job);
+                        st.depth += 1;
+                    }
+                    let hint = core.config.retry_after_ms;
+                    drop(st);
+                    core.rejected.fetch_add(1, Ordering::SeqCst);
+                    return Err(Rejection {
+                        id,
+                        reason: format!("journal append failed: {e:#}"),
+                        retry_after_ms: hint,
+                    });
+                }
             }
             // Count the admission while still holding the shard lock, so
             // `admitted` can never lag a completion (drain's exactly-once
@@ -321,8 +464,13 @@ impl Daemon {
                 admitted_at: Instant::now(),
             });
             st.depth += 1;
-            st.depth
+            (st.depth, victim)
         };
+        if let Some(job) = victim {
+            // Outside the shard lock: completing the victim takes the
+            // tally (and journal) locks and notifies waiters.
+            complete_shed(core, precision, job);
+        }
         shard.cond.notify_one();
         scale_up(core, precision);
         Ok(Admission {
@@ -432,6 +580,29 @@ impl Daemon {
         self.core.rejected.load(Ordering::SeqCst)
     }
 
+    /// Jobs evicted by the overload-shedding path (each also counts as a
+    /// completion — the victim completes as a deterministic failure).
+    pub fn shed_count(&self) -> usize {
+        self.core.shed.load(Ordering::SeqCst)
+    }
+
+    /// Completed results recovered from the journal at startup.
+    pub fn recovered_results(&self) -> usize {
+        self.core.recovered_results
+    }
+
+    /// Admitted-but-unfinished jobs re-queued from the journal at startup.
+    pub fn replayed_jobs(&self) -> usize {
+        self.core.replayed_jobs
+    }
+
+    /// Total transient-fault retries across every completed job (the
+    /// engine's bounded retry loop, summed over [`JobResult::retries`]).
+    pub fn retries_total(&self) -> usize {
+        let tally = self.core.tally.lock().unwrap();
+        tally.results.iter().map(|r| r.retries).sum()
+    }
+
     pub fn is_draining(&self) -> bool {
         self.core.drained.lock().unwrap().is_some()
             || self.core.shards.iter().any(|s| s.state.lock().unwrap().draining)
@@ -454,10 +625,14 @@ impl Daemon {
             workers[i] = st.workers;
         }
         format!(
-            "{{\"op\": \"stats\", \"ok\": true, \"admitted\": {}, \"completed\": {}, \"rejected\": {}, \"wall_s\": {}, \"queue_depth\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"workers\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"latency_s\": {}, \"formats\": [{}]}}",
+            "{{\"op\": \"stats\", \"ok\": true, \"admitted\": {}, \"completed\": {}, \"rejected\": {}, \"shed\": {}, \"retries_total\": {}, \"recovered_results\": {}, \"replayed_jobs\": {}, \"wall_s\": {}, \"queue_depth\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"workers\": {{\"posit32\": {}, \"f32\": {}, \"f64\": {}}}, \"latency_s\": {}, \"formats\": [{}]}}",
             self.admitted_count(),
             self.completed_count(),
             self.rejected_count(),
+            self.shed_count(),
+            self.retries_total(),
+            self.recovered_results(),
+            self.replayed_jobs(),
             jnum(self.core.started_at.elapsed().as_secs_f64()),
             depth[0],
             depth[1],
@@ -543,13 +718,17 @@ impl Daemon {
             .collect();
 
         format!(
-            "{{\n\"quick\": {},\n\"submitters\": {},\n\"rate_jobs_per_s\": {},\n\"admitted\": {},\n\"completed\": {},\n\"rejected\": {},\n\"wall_s\": {},\n\"jobs_per_s\": {},\n\"latency_s\": {},\n\"per_priority\": [\n{}\n],\n\"per_format\": [\n{}\n],\n\"queue_depth_trace\": [\n{}\n],\n\"queues\": [\n{}\n]\n}}\n",
+            "{{\n\"quick\": {},\n\"submitters\": {},\n\"rate_jobs_per_s\": {},\n\"admitted\": {},\n\"completed\": {},\n\"rejected\": {},\n\"shed\": {},\n\"retries_total\": {},\n\"recovered_results\": {},\n\"replayed_jobs\": {},\n\"wall_s\": {},\n\"jobs_per_s\": {},\n\"latency_s\": {},\n\"per_priority\": [\n{}\n],\n\"per_format\": [\n{}\n],\n\"queue_depth_trace\": [\n{}\n],\n\"queues\": [\n{}\n]\n}}\n",
             quick,
             submitters,
             jnum(rate_jobs_per_s),
             self.admitted_count(),
             completed,
             self.rejected_count(),
+            self.shed_count(),
+            self.retries_total(),
+            self.recovered_results(),
+            self.replayed_jobs(),
             jnum(wall_s),
             jnum(jobs_per_s),
             latency_json(&lat),
@@ -747,11 +926,43 @@ fn worker_loop(core: &Arc<DaemonCore>, precision: Precision) {
     }
 }
 
+/// Complete a shed victim as a deterministic failure: journaled (its
+/// admit is already in the journal, so recovery must not re-run it),
+/// rolled into the tally, counted in `completed` and `shed`. No latency
+/// sample — the victim never ran.
+fn complete_shed(core: &DaemonCore, precision: Precision, job: AdmittedJob) {
+    let mut result = failed_result(
+        &job.spec,
+        "shed: evicted under overload (a higher-priority job needed the slot)".to_string(),
+    );
+    result.backend = "shed".to_string();
+    if let Some(journal) = &core.journal {
+        if let Err(e) = journal.append_result(&result) {
+            eprintln!("journal: failed to append shed result for job {}: {e:#}", result.id);
+        }
+    }
+    let mut tally = core.tally.lock().unwrap();
+    tally.rollup[shard_index(precision)].accumulate(&result.stats);
+    tally.results.push(result);
+    core.completed.fetch_add(1, Ordering::SeqCst);
+    core.shed.fetch_add(1, Ordering::SeqCst);
+    drop(tally);
+    core.done_cond.notify_all();
+}
+
 fn run_and_record(core: &DaemonCore, precision: Precision, job: AdmittedJob) {
     let t_run = Instant::now();
     let result = core.engine.run_one(&job.spec, core.config.keep_factors);
     let wall_s = t_run.elapsed().as_secs_f64();
     let latency_s = job.admitted_at.elapsed().as_secs_f64();
+    // Journal the completion before publishing it: a crash after the
+    // append replays as a recovered result, a crash before it re-runs
+    // the job — either way exactly one (bit-identical) result survives.
+    if let Some(journal) = &core.journal {
+        if let Err(e) = journal.append_result(&result) {
+            eprintln!("journal: failed to append result for job {}: {e:#}", result.id);
+        }
+    }
     let mut tally = core.tally.lock().unwrap();
     tally.rollup[shard_index(precision)].accumulate(&result.stats);
     tally.latencies.push(LatencySample {

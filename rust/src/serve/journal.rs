@@ -1,0 +1,514 @@
+//! Write-ahead job journal: the durability half of crash-safe serving.
+//!
+//! Every admitted submission is appended *before* the accept reply is
+//! sent, and every completed job is appended with its fingerprint and
+//! accuracy numbers — so a daemon that dies mid-run can replay the file
+//! and (a) serve `collect` for everything that finished, (b) re-run
+//! exactly the admitted-but-unfinished jobs. Re-running is safe because
+//! job execution is a pure function of the [`JobSpec`] (the determinism
+//! contract): the recovered results are bit-identical to an
+//! uninterrupted run.
+//!
+//! **Format.** One record per line, text, append-only:
+//!
+//! ```text
+//! <16 hex digits of FNV-1a over the payload> <flat-JSON payload>\n
+//! ```
+//!
+//! The payload is a flat JSON object in the wire-protocol grammar with a
+//! `"rec"` discriminator: `"admit"` records are exactly a
+//! [`super::protocol::submit_line`] (so replay parses them with the
+//! production request parser), `"result"` records carry every field of
+//! the job's [`JobResult`] JSON row (factor bits excluded — the
+//! fingerprint pins them).
+//!
+//! **Corruption policy.** A torn *trailing* record (the crash happened
+//! mid-append) is truncated and tolerated: an unacked admit or a
+//! rerunnable result loses nothing. A corrupt *interior* record means
+//! the file was damaged after the fact; replay fails loudly, naming the
+//! line, unless the caller opts into `--repair` (skip + count).
+//!
+//! **Fsync policy.** [`FsyncPolicy::Always`] syncs after every append —
+//! an acked admit survives power loss, at a per-request fsync cost.
+//! [`FsyncPolicy::Never`] leaves flushing to the OS (survives process
+//! death, not power loss) — the load-bench setting.
+
+use super::protocol::{
+    esc, get_num, get_str, jnum, parse_flat_object, parse_request, submit_line, JsonValue,
+    Priority, Request,
+};
+use crate::blas::Accum;
+use crate::coordinator::OffloadStats;
+use crate::service::{Alg, JobResult, JobSpec, Mode, Precision};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// When the journal file is flushed to stable storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fdatasync` after every appended record (default): an acked
+    /// submission survives power loss.
+    Always,
+    /// Leave flushing to the OS page cache: survives daemon death, not
+    /// host death. The bench/load-test setting.
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            other => bail!("unknown fsync policy '{other}' (want always|never)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Never => "never",
+        }
+    }
+}
+
+/// One replayed journal record.
+#[derive(Clone, Debug)]
+pub enum Record {
+    /// A job the daemon accepted (journaled before the ack was sent).
+    Admit { spec: JobSpec, priority: Priority },
+    /// A job that ran to completion (success or deterministic failure).
+    Result(Box<JobResult>),
+}
+
+/// Outcome of [`replay`]: the decoded records plus what the scan found.
+#[derive(Debug)]
+pub struct Replay {
+    pub records: Vec<Record>,
+    /// A trailing record was incomplete or undecodable (crash mid-append)
+    /// and was dropped; [`Replay::valid_len`] is where it started.
+    pub torn_tail: bool,
+    /// Corrupt interior records skipped (only ever nonzero under repair).
+    pub skipped: usize,
+    /// Byte length of the valid prefix (everything up to but excluding a
+    /// torn tail). Truncating the file to this length makes it clean.
+    pub valid_len: u64,
+}
+
+/// The append side of the journal. One file, one mutex: appends are a
+/// single `write_all` of a whole line, so concurrent writers (shard
+/// workers finishing jobs while the acceptor admits new ones) can never
+/// interleave partial records.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+    fsync: FsyncPolicy,
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal at `path` for appending.
+    pub fn open(path: &Path, fsync: FsyncPolicy) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating journal dir {}", parent.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+            fsync,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.fsync
+    }
+
+    /// Append one admitted job. Call *before* acking the submission: an
+    /// admit that reaches the client is then guaranteed to be on disk.
+    pub fn append_admit(&self, spec: &JobSpec, priority: Priority) -> Result<()> {
+        // Reuse the wire serialization verbatim (spliced after the "rec"
+        // discriminator), so replay goes through the production parser.
+        let submit = submit_line(spec, priority);
+        self.append_payload(&format!("{{\"rec\": \"admit\", {}", &submit[1..]))
+    }
+
+    /// Append one completed job (success or deterministic failure).
+    pub fn append_result(&self, r: &JobResult) -> Result<()> {
+        self.append_payload(&result_payload(r))
+    }
+
+    fn append_payload(&self, payload: &str) -> Result<()> {
+        let line = format!("{:016x} {}\n", fnv1a(payload.as_bytes()), payload);
+        let mut file = self.file.lock().unwrap();
+        file.write_all(line.as_bytes())
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        if self.fsync == FsyncPolicy::Always {
+            file.sync_data()
+                .with_context(|| format!("syncing journal {}", self.path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over the payload bytes — the same hash the engine fingerprints
+/// use, here as a per-record checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Serialize one [`JobResult`] as a journal payload: every field the
+/// job's JSON row carries (so recovered `collect` rows are byte-faithful)
+/// except the factor bits and pivots, which the fingerprint pins and
+/// whose arrays would dwarf the protocol's string caps.
+fn result_payload(r: &JobResult) -> String {
+    let error = match &r.error {
+        Some(e) => format!("\"{}\"", esc(e)),
+        None => "null".to_string(),
+    };
+    let refine_iters = match r.refine_iters {
+        Some(i) => i.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"rec\": \"result\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"wait_s\": {}, \"overlap_s\": {}, \"simulated_s\": {}, \"total_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"retries\": {}, \"fingerprint\": \"{:#018x}\"}}",
+        r.id,
+        r.alg.name(),
+        r.n,
+        r.precision.name(),
+        r.mode.name(),
+        r.accum.name(),
+        r.lookahead,
+        esc(&r.backend),
+        error,
+        jnum(r.wall_s),
+        jnum(r.stats.panel_s),
+        jnum(r.stats.update_s),
+        jnum(r.stats.wait_s),
+        jnum(r.stats.overlap_s),
+        jnum(r.stats.simulated_s),
+        jnum(r.stats.total_s),
+        jnum(r.stats.update_flops),
+        jopt(r.backward_error),
+        jopt(r.digits),
+        refine_iters,
+        r.retries,
+        r.fingerprint,
+    )
+}
+
+fn jopt(v: Option<f64>) -> String {
+    match v {
+        Some(v) => jnum(v),
+        None => "null".to_string(),
+    }
+}
+
+/// Replay a journal file. Missing file = empty journal. See the module
+/// docs for the torn-tail vs interior-corruption policy.
+pub fn replay(path: &Path, repair: bool) -> Result<Replay> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Replay { records: Vec::new(), torn_tail: false, skipped: 0, valid_len: 0 })
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal {}", path.display()))
+        }
+    };
+    // Split into (offset, line, newline-terminated) segments. A record is
+    // one `write_all` ending in '\n', so unterminated trailing bytes are
+    // by definition a torn append.
+    let mut segments: Vec<(usize, &[u8], bool)> = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            segments.push((start, &bytes[start..i], true));
+            start = i + 1;
+        }
+    }
+    if start < bytes.len() {
+        segments.push((start, &bytes[start..], false));
+    }
+
+    let mut records = Vec::with_capacity(segments.len());
+    let mut torn_tail = false;
+    let mut skipped = 0usize;
+    let mut valid_len = bytes.len() as u64;
+    let last = segments.len().saturating_sub(1);
+    for (i, &(offset, line, terminated)) in segments.iter().enumerate() {
+        let decoded = if terminated { decode_line(line) } else { Err(anyhow!("torn record")) };
+        match decoded {
+            Ok(rec) => records.push(rec),
+            Err(_) if i == last => {
+                // A bad final record is a crash mid-append: drop it.
+                torn_tail = true;
+                valid_len = offset as u64;
+            }
+            Err(e) => {
+                // A bad interior record is file damage, not a torn write.
+                if repair {
+                    skipped += 1;
+                } else {
+                    bail!(
+                        "corrupt journal record at line {} of {}: {e} \
+                         (rerun with --repair to skip corrupt records)",
+                        i + 1,
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+    Ok(Replay { records, torn_tail, skipped, valid_len })
+}
+
+/// Decode one checksummed journal line (without its newline).
+fn decode_line(line: &[u8]) -> Result<Record> {
+    if line.len() < 18 || line[16] != b' ' {
+        bail!("record too short for checksum header");
+    }
+    let hex = std::str::from_utf8(&line[..16]).map_err(|_| anyhow!("non-ASCII checksum"))?;
+    let want = u64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad checksum hex"))?;
+    let payload = &line[17..];
+    if fnv1a(payload) != want {
+        bail!("checksum mismatch");
+    }
+    let payload = std::str::from_utf8(payload).map_err(|_| anyhow!("invalid UTF-8 payload"))?;
+    let fields = parse_flat_object(payload)?;
+    match get_str(&fields, "rec") {
+        Some("admit") => match parse_request(payload, 0)? {
+            Request::Submit { spec, priority } => Ok(Record::Admit { spec, priority }),
+            other => bail!("admit record decodes to {other:?}, not a submission"),
+        },
+        Some("result") => Ok(Record::Result(Box::new(parse_result(&fields)?))),
+        Some(other) => bail!("unknown record type '{other}'"),
+        None => bail!("record has no 'rec' discriminator"),
+    }
+}
+
+/// Rebuild a [`JobResult`] from a journaled result payload. Factor bits
+/// and pivots are not journaled, so they come back `None`; every field
+/// the job's JSON row renders round-trips to the same bytes (`null`
+/// fields come back as NaN/None, which render as `null` again).
+fn parse_result(fields: &[(String, JsonValue)]) -> Result<JobResult> {
+    let need_str = |key: &str| {
+        get_str(fields, key).ok_or_else(|| anyhow!("result record missing '{key}'"))
+    };
+    let need_int = |key: &str| -> Result<usize> {
+        match get_num(fields, key) {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 => Ok(v as usize),
+            other => bail!("result record field '{key}' is not an index: {other:?}"),
+        }
+    };
+    let num = |key: &str| get_num(fields, key).unwrap_or(f64::NAN);
+    let fp = need_str("fingerprint")?;
+    let fp = fp
+        .strip_prefix("0x")
+        .and_then(|h| u64::from_str_radix(h, 16).ok())
+        .ok_or_else(|| anyhow!("bad fingerprint '{fp}'"))?;
+    Ok(JobResult {
+        id: need_int("id")?,
+        alg: Alg::parse(need_str("alg")?)?,
+        n: need_int("n")?,
+        precision: Precision::parse(need_str("precision")?)?,
+        mode: Mode::parse(need_str("mode")?)?,
+        accum: Accum::parse(need_str("accum")?).map_err(|e| anyhow!(e))?,
+        lookahead: need_int("lookahead")?,
+        backend: get_str(fields, "backend").unwrap_or("").to_string(),
+        error: get_str(fields, "error").map(|s| s.to_string()),
+        stats: OffloadStats {
+            panel_s: num("panel_s"),
+            update_s: num("update_s"),
+            simulated_s: num("simulated_s"),
+            total_s: num("total_s"),
+            update_flops: num("update_flops"),
+            wait_s: num("wait_s"),
+            overlap_s: num("overlap_s"),
+        },
+        wall_s: num("wall_s"),
+        backward_error: get_num(fields, "backward_error"),
+        digits: get_num(fields, "digits"),
+        refine_iters: match get_num(fields, "refine_iters") {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 => Some(v as usize),
+            _ => None,
+        },
+        fingerprint: fp,
+        retries: need_int("retries")?,
+        factors: None,
+        ipiv: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{run_job_sequential_any, MatrixClass as MC};
+    use crate::coordinator::NativeBackend;
+
+    fn temp_journal(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "posit-journal-{}-{tag}.log",
+            std::process::id()
+        ))
+    }
+
+    fn sample_specs() -> Vec<(JobSpec, Priority)> {
+        let mut a = JobSpec::new(0, Alg::Lu, 24);
+        a.accum = Accum::Quire;
+        a.lookahead = 1;
+        let mut b = JobSpec::new(1, Alg::Cholesky, 20);
+        b.class = MC::Spd;
+        b.precision = Precision::F64;
+        b.mode = Mode::Refine;
+        b.sigma = 0.25;
+        vec![(a, Priority::High), (b, Priority::Low)]
+    }
+
+    #[test]
+    fn admits_and_results_roundtrip_bitwise() {
+        let path = temp_journal("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let specs = sample_specs();
+        let backend = NativeBackend::new(1);
+        let results: Vec<JobResult> = specs
+            .iter()
+            .map(|(s, _)| run_job_sequential_any(s, &backend, false))
+            .collect();
+        {
+            let journal = Journal::open(&path, FsyncPolicy::Always).unwrap();
+            for (spec, prio) in &specs {
+                journal.append_admit(spec, *prio).unwrap();
+            }
+            for r in &results {
+                journal.append_result(r).unwrap();
+            }
+            // A deterministic failure journals like any other completion.
+            let mut failed = results[0].clone();
+            failed.error = Some("transient: injected backend fault".into());
+            journal.append_result(&failed).unwrap();
+        }
+        let rep = replay(&path, false).unwrap();
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.skipped, 0);
+        assert_eq!(rep.records.len(), specs.len() + results.len() + 1);
+        for (rec, (spec, prio)) in rep.records.iter().zip(&specs) {
+            match rec {
+                Record::Admit { spec: got, priority } => {
+                    assert_eq!(got.id, spec.id);
+                    assert_eq!(got.seed, spec.seed);
+                    assert_eq!(got.n, spec.n);
+                    assert_eq!(got.nb, spec.nb);
+                    assert_eq!(got.sigma.to_bits(), spec.sigma.to_bits());
+                    assert_eq!(got.class, spec.class);
+                    assert_eq!(got.precision, spec.precision);
+                    assert_eq!(got.mode, spec.mode);
+                    assert_eq!(got.accum, spec.accum);
+                    assert_eq!(got.lookahead, spec.lookahead);
+                    assert_eq!(got.backend, spec.backend);
+                    assert_eq!(priority, prio);
+                }
+                other => panic!("expected admit, got {other:?}"),
+            }
+        }
+        for (rec, want) in rep.records[specs.len()..].iter().zip(&results) {
+            match rec {
+                Record::Result(got) => {
+                    assert_eq!(got.fingerprint, want.fingerprint);
+                    assert_eq!(
+                        got.digits.map(f64::to_bits),
+                        want.digits.map(f64::to_bits)
+                    );
+                    // The collect row the daemon would serve is byte-equal.
+                    assert_eq!(got.to_json(), want.to_json());
+                }
+                other => panic!("expected result, got {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_tolerated() {
+        let path = temp_journal("torn");
+        let _ = std::fs::remove_file(&path);
+        let specs = sample_specs();
+        {
+            let journal = Journal::open(&path, FsyncPolicy::Never).unwrap();
+            for (spec, prio) in &specs {
+                journal.append_admit(spec, *prio).unwrap();
+            }
+        }
+        let full = std::fs::read(&path).unwrap();
+        // Crash mid-append: only a prefix of the last record hit disk.
+        let cut = full.len() - 9;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let rep = replay(&path, false).unwrap();
+        assert!(rep.torn_tail, "partial trailing record detected");
+        assert_eq!(rep.records.len(), specs.len() - 1, "torn record dropped");
+        let first_line_end = full.iter().position(|&b| b == b'\n').unwrap() + 1;
+        assert_eq!(rep.valid_len, first_line_end as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn interior_corruption_fails_loudly_unless_repaired() {
+        let path = temp_journal("corrupt");
+        let _ = std::fs::remove_file(&path);
+        let specs = sample_specs();
+        {
+            let journal = Journal::open(&path, FsyncPolicy::Never).unwrap();
+            for (spec, prio) in &specs {
+                journal.append_admit(spec, *prio).unwrap();
+            }
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte inside the FIRST record: checksum mismatch.
+        bytes[40] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = replay(&path, false).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("--repair"), "points at the escape hatch: {err}");
+        let rep = replay(&path, true).unwrap();
+        assert_eq!(rep.skipped, 1);
+        assert_eq!(rep.records.len(), specs.len() - 1, "good records survive");
+        assert!(!rep.torn_tail);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert_eq!(FsyncPolicy::Always.name(), "always");
+    }
+
+    #[test]
+    fn missing_journal_replays_empty() {
+        let path = temp_journal("absent");
+        let _ = std::fs::remove_file(&path);
+        let rep = replay(&path, false).unwrap();
+        assert!(rep.records.is_empty());
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.valid_len, 0);
+    }
+}

@@ -14,25 +14,39 @@
 //!   the latency-percentile/queue-trace bench writer.
 //! * [`loadgen`] — the deterministic open-loop load harness (fixed-rate
 //!   arrivals, seeded priorities, ≥4 concurrent submitters).
-//! * [`socket`] (unix) — the Unix-domain-socket transport and SIGTERM
-//!   handling behind the `serve-daemon` CLI subcommand.
+//! * [`journal`] — the write-ahead job journal: checksummed
+//!   newline-delimited records (admits before the ack, results on
+//!   completion) with a configurable fsync policy, torn-tail-tolerant
+//!   replay, and a loud corrupt-interior failure with a `--repair`
+//!   escape hatch.
+//! * [`store`] — journal replay reconciled into a restartable snapshot:
+//!   recovered results (served bit-identical after a crash) plus
+//!   admitted-but-unfinished jobs to re-run exactly once.
+//! * [`socket`] (unix) — the socket transport (Unix-domain or TCP via
+//!   [`Listen`]) and SIGTERM/SIGINT handling behind the `serve-daemon`
+//!   CLI subcommand.
 //!
 //! The serving tier adds *no* numeric behavior: every job still runs
 //! through [`crate::service::Engine::run_one`], so a drained daemon run
-//! over a fixed job set is bit-identical to the sequential drivers
-//! (gated in `rust/tests/serve_daemon.rs`).
+//! over a fixed job set is bit-identical to the sequential drivers —
+//! and so is a crash-recovered run, because replayed jobs re-run from
+//! their journaled specs (gated in `rust/tests/serve_daemon.rs`).
 
 pub mod daemon;
+pub mod journal;
 pub mod loadgen;
 pub mod protocol;
 #[cfg(unix)]
 pub mod socket;
+pub mod store;
 
 pub use daemon::{
     Admission, Daemon, DaemonConfig, DrainSummary, LatencySample, LatencySummary, Rejection,
     TraceSample,
 };
+pub use journal::{FsyncPolicy, Journal};
 pub use loadgen::{drive, plan, LoadPlan, LoadReport};
 pub use protocol::{parse_request, Priority, Request};
 #[cfg(unix)]
-pub use socket::serve_unix;
+pub use socket::{serve, serve_unix, Listen};
+pub use store::{RecoveryReport, Store};

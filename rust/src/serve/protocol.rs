@@ -3,7 +3,7 @@
 //! One request per line, one JSON-object reply per request, over a local
 //! Unix-domain socket. Submissions reuse the manifest job schema
 //! (`alg`/`n`/`nb`/`seed`/`sigma`/`class`/`precision`/`mode`/`accum`/
-//! `lookahead`/`backend`, exactly the `key=value` vocabulary of
+//! `lookahead`/`deadline_ms`/`backend`, exactly the `key=value` vocabulary of
 //! [`crate::service::parse_manifest`]) as flat JSON fields, plus
 //! `priority` for the admission lane:
 //!
@@ -347,6 +347,9 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
             if let Some(lookahead) = get_usize(&fields, "lookahead")? {
                 spec.lookahead = lookahead;
             }
+            if let Some(deadline_ms) = get_usize(&fields, "deadline_ms")? {
+                spec.deadline_ms = deadline_ms as u64;
+            }
             if let Some(backend) = get_str(&fields, "backend") {
                 spec.backend = backend.to_string();
             }
@@ -372,7 +375,7 @@ pub fn parse_request(line: &str, fallback_id: usize) -> Result<Request> {
 /// Serialize one job submission (the client side of `op=submit`).
 pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
     format!(
-        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"priority\": \"{}\"}}",
+        "{{\"op\": \"submit\", \"id\": {}, \"alg\": \"{}\", \"n\": {}, \"nb\": {}, \"seed\": {}, \"sigma\": {}, \"class\": \"{}\", \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"deadline_ms\": {}, \"backend\": \"{}\", \"priority\": \"{}\"}}",
         spec.id,
         spec.alg.name(),
         spec.n,
@@ -384,6 +387,7 @@ pub fn submit_line(spec: &JobSpec, priority: Priority) -> String {
         spec.mode.name(),
         spec.accum.name(),
         spec.lookahead,
+        spec.deadline_ms,
         esc(&spec.backend),
         priority.name(),
     )
@@ -512,6 +516,7 @@ mod tests {
         spec.accum = Accum::Quire;
         spec.sigma = 0.01;
         spec.lookahead = 2;
+        spec.deadline_ms = 1500;
         let line = submit_line(&spec, Priority::Low);
         match parse_request(&line, 0).unwrap() {
             Request::Submit { spec: back, priority } => {
@@ -523,6 +528,7 @@ mod tests {
                 assert_eq!(back.mode, spec.mode);
                 assert_eq!(back.accum, Accum::Quire);
                 assert_eq!(back.lookahead, 2);
+                assert_eq!(back.deadline_ms, 1500);
                 assert_eq!(priority, Priority::Low);
             }
             other => panic!("wrong request: {other:?}"),
@@ -568,6 +574,27 @@ mod tests {
             )
             .is_err(),
             "fractional depths are rejected, not truncated"
+        );
+    }
+
+    #[test]
+    fn parses_deadline_ms_and_defaults_to_none() {
+        let line = "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"deadline_ms\": 750}";
+        match parse_request(line, 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.deadline_ms, 750),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request("{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32}", 0).unwrap() {
+            Request::Submit { spec, .. } => assert_eq!(spec.deadline_ms, 0),
+            other => panic!("wrong request: {other:?}"),
+        }
+        assert!(
+            parse_request(
+                "{\"op\": \"submit\", \"alg\": \"lu\", \"n\": 32, \"deadline_ms\": -5}",
+                0
+            )
+            .is_err(),
+            "negative deadlines are rejected, not clamped"
         );
     }
 

@@ -1,61 +1,211 @@
-//! Unix-domain-socket transport for the serving daemon.
+//! Socket transport for the serving daemon: Unix-domain sockets and TCP
+//! behind one [`Listen`] address abstraction.
 //!
-//! [`serve_unix`] binds a socket path, accepts connections in a
-//! non-blocking loop, and hands each connection to a handler thread that
-//! speaks the newline-delimited protocol of [`super::protocol`]. A
-//! connection is *persistent*: a submitter holds one open and streams
-//! many `submit` lines, reading one reply per line (accepted or rejected
-//! — backpressure travels in-band).
+//! [`serve`] binds the address, accepts connections in a non-blocking
+//! loop, and hands each connection to a handler thread that speaks the
+//! newline-delimited protocol of [`super::protocol`]. A connection is
+//! *persistent*: a submitter holds one open and streams many `submit`
+//! lines, reading one reply per line (accepted or rejected —
+//! backpressure travels in-band). Clients reach the same daemon through
+//! [`Listen::connect`], so the transport choice is one flag
+//! (`--listen unix:///path` or `--listen tcp://127.0.0.1:7433`) on both
+//! sides.
 //!
 //! Shutdown paths, all converging on the same graceful drain
 //! ([`super::daemon::Daemon::drain`], idempotent):
 //!
 //! * an `op=shutdown` request (the client's `--shutdown` flag),
-//! * SIGTERM (installed via a raw `signal(2)` FFI shim — the repo has no
-//!   libc crate; the handler only stores into a static `AtomicBool`,
-//!   which is async-signal-safe).
+//! * SIGTERM or SIGINT (installed via a raw `signal(2)` FFI shim — the
+//!   repo has no libc crate; the handler only stores into a static
+//!   `AtomicBool`, which is async-signal-safe).
 //!
 //! After the drain the daemon writes `BENCH_serve_daemon.json` (if a
-//! bench path was given) and removes the socket file.
+//! bench path was given) and removes the socket file (Unix transport).
 
 use super::daemon::{Daemon, DrainSummary};
 use super::protocol::{
     self, accepted_line, drained_line, error_line, pong_line, rejected_line, results_line,
     Request,
 };
-use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use anyhow::{anyhow, Context, Result};
+use std::fmt;
+use std::io::{self, BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+static SHUTDOWN_SEEN: AtomicBool = AtomicBool::new(false);
 
-extern "C" fn on_sigterm(_signum: i32) {
+extern "C" fn on_shutdown_signal(_signum: i32) {
     // Only async-signal-safe work here: one atomic store.
-    SIGTERM_SEEN.store(true, Ordering::SeqCst);
+    SHUTDOWN_SEEN.store(true, Ordering::SeqCst);
 }
 
-/// Route SIGTERM (15) to a flag the accept loop polls. Uses the libc
-/// `signal(2)` symbol directly; the handler address travels as the
-/// integer `sighandler_t`, exactly as the C API defines it.
-fn install_sigterm_handler() {
+/// Route SIGTERM (15) and SIGINT (2) to a flag the accept loop polls —
+/// Ctrl-C gets the same idempotent graceful drain as a service manager's
+/// TERM. Uses the libc `signal(2)` symbol directly; the handler address
+/// travels as the integer `sighandler_t`, exactly as the C API defines
+/// it.
+fn install_shutdown_handlers() {
     extern "C" {
         fn signal(signum: i32, handler: usize) -> usize;
     }
+    const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
     #[allow(clippy::fn_to_numeric_cast)]
     unsafe {
-        signal(SIGTERM, on_sigterm as usize);
+        signal(SIGTERM, on_shutdown_signal as usize);
+        signal(SIGINT, on_shutdown_signal as usize);
     }
 }
 
-/// True once SIGTERM has been delivered (test hook: the accept loop's
-/// exit condition).
+/// True once SIGTERM or SIGINT has been delivered (test hook: the accept
+/// loop's exit condition).
 pub fn sigterm_seen() -> bool {
-    SIGTERM_SEEN.load(Ordering::SeqCst)
+    SHUTDOWN_SEEN.load(Ordering::SeqCst)
+}
+
+/// A serving address: Unix-domain socket path or TCP host:port. Parsed
+/// from `unix:///path`, `tcp://HOST:PORT`, or a bare path (Unix).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Listen {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl Listen {
+    /// Parse a `--listen` argument. `tcp://ADDR` is TCP, `unix://PATH`
+    /// is explicit Unix, anything else is a bare Unix socket path (the
+    /// pre-TCP `--socket` spelling keeps working).
+    pub fn parse(s: &str) -> Result<Listen> {
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            if addr.is_empty() {
+                return Err(anyhow!("tcp listen address is empty (want tcp://HOST:PORT)"));
+            }
+            return Ok(Listen::Tcp(addr.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("unix://") {
+            if path.is_empty() {
+                return Err(anyhow!("unix listen path is empty (want unix:///path)"));
+            }
+            return Ok(Listen::Unix(PathBuf::from(path)));
+        }
+        if s.is_empty() {
+            return Err(anyhow!("listen address is empty"));
+        }
+        Ok(Listen::Unix(PathBuf::from(s)))
+    }
+
+    /// Client side: connect to a daemon serving this address.
+    pub fn connect(&self) -> io::Result<Conn> {
+        match self {
+            Listen::Unix(path) => UnixStream::connect(path).map(Conn::Unix),
+            Listen::Tcp(addr) => TcpStream::connect(addr.as_str()).map(Conn::Tcp),
+        }
+    }
+
+    fn bind(&self) -> Result<Listener> {
+        match self {
+            Listen::Unix(path) => {
+                // A stale socket file from a crashed predecessor blocks
+                // bind().
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {}", path.display()))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding {}", path.display()))?;
+                Ok(Listener::Unix(l))
+            }
+            Listen::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp://{addr}"))?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+}
+
+impl fmt::Display for Listen {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Listen::Unix(path) => write!(f, "unix://{}", path.display()),
+            Listen::Tcp(addr) => write!(f, "tcp://{addr}"),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+        }
+    }
+}
+
+/// One protocol connection over either transport. `Read`/`Write`
+/// delegate to the underlying stream, so both sides of the protocol are
+/// transport-blind.
+pub enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    pub fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+        }
+    }
+
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_read_timeout(dur),
+            Conn::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
 }
 
 /// Bench metadata reported by the shutting-down client, recorded into
@@ -74,23 +224,23 @@ struct Server {
     meta: Mutex<BenchMeta>,
 }
 
-/// Run the daemon on `socket_path` until SIGTERM or an `op=shutdown`
-/// request, then drain gracefully, write the bench artifact (when
-/// `bench_out` is given), remove the socket file, and return the drain
-/// summary.
+/// Run the daemon on `socket_path` (Unix transport) until a shutdown
+/// signal or an `op=shutdown` request. Thin wrapper over [`serve`].
 pub fn serve_unix(
     daemon: Daemon,
     socket_path: &Path,
     bench_out: Option<&Path>,
 ) -> Result<DrainSummary> {
-    install_sigterm_handler();
-    // A stale socket file from a crashed predecessor blocks bind().
-    if socket_path.exists() {
-        std::fs::remove_file(socket_path)
-            .with_context(|| format!("removing stale socket {}", socket_path.display()))?;
-    }
-    let listener = UnixListener::bind(socket_path)
-        .with_context(|| format!("binding {}", socket_path.display()))?;
+    serve(daemon, &Listen::Unix(socket_path.to_path_buf()), bench_out)
+}
+
+/// Run the daemon on `listen` until SIGTERM/SIGINT or an `op=shutdown`
+/// request, then drain gracefully, write the bench artifact (when
+/// `bench_out` is given), remove the socket file (Unix transport), and
+/// return the drain summary.
+pub fn serve(daemon: Daemon, listen: &Listen, bench_out: Option<&Path>) -> Result<DrainSummary> {
+    install_shutdown_handlers();
+    let listener = listen.bind()?;
     listener.set_nonblocking(true).context("setting the listener non-blocking")?;
 
     let server = Arc::new(Server {
@@ -103,7 +253,7 @@ pub fn serve_unix(
 
     while !server.stop.load(Ordering::SeqCst) && !sigterm_seen() {
         match listener.accept() {
-            Ok((stream, _addr)) => {
+            Ok(stream) => {
                 let server = Arc::clone(&server);
                 handlers.push(std::thread::spawn(move || handle_connection(&server, stream)));
             }
@@ -129,14 +279,16 @@ pub fn serve_unix(
             .write_bench(path, quick, meta.submitters, meta.rate_jobs_per_s)
             .with_context(|| format!("writing {}", path.display()))?;
     }
-    let _ = std::fs::remove_file(socket_path);
+    if let Listen::Unix(path) = listen {
+        let _ = std::fs::remove_file(path);
+    }
     Ok(summary)
 }
 
 /// Serve one persistent connection: one reply line per request line.
 /// Read timeouts keep the handler responsive to shutdown without
 /// dropping half-received lines (the buffer persists across timeouts).
-fn handle_connection(server: &Server, stream: UnixStream) {
+fn handle_connection(server: &Server, stream: Conn) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -212,6 +364,40 @@ fn handle_request(server: &Server, line: &str) -> String {
             let summary = server.daemon.drain();
             server.stop.store(true, Ordering::SeqCst);
             drained_line(&summary)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_parses_all_three_spellings() {
+        assert_eq!(
+            Listen::parse("tcp://127.0.0.1:7433").unwrap(),
+            Listen::Tcp("127.0.0.1:7433".to_string())
+        );
+        assert_eq!(
+            Listen::parse("unix:///tmp/posit.sock").unwrap(),
+            Listen::Unix(PathBuf::from("/tmp/posit.sock"))
+        );
+        assert_eq!(
+            Listen::parse("/tmp/posit.sock").unwrap(),
+            Listen::Unix(PathBuf::from("/tmp/posit.sock")),
+            "a bare path keeps the pre-TCP --socket spelling working"
+        );
+        assert!(Listen::parse("").is_err());
+        assert!(Listen::parse("tcp://").is_err());
+        assert!(Listen::parse("unix://").is_err());
+    }
+
+    #[test]
+    fn listen_displays_round_trippable_addresses() {
+        for s in ["tcp://127.0.0.1:7433", "unix:///tmp/posit.sock"] {
+            let l = Listen::parse(s).unwrap();
+            assert_eq!(l.to_string(), s);
+            assert_eq!(Listen::parse(&l.to_string()).unwrap(), l);
         }
     }
 }

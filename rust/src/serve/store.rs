@@ -1,0 +1,199 @@
+//! Persistent result store: journal replay reconciled into daemon state.
+//!
+//! [`Store::open`] replays a [`super::journal`] file and splits its
+//! records into *completed* results (served to `collect` immediately
+//! after a restart) and *pending* jobs (admitted before the crash but
+//! never finished — the daemon re-runs them exactly once on startup;
+//! determinism makes the re-run bit-identical to the run the crash
+//! interrupted). A torn trailing record is physically truncated away so
+//! the reopened journal appends onto a clean prefix.
+//!
+//! Reconciliation rules:
+//! - results deduplicate by job id, **first wins** — if a crash landed
+//!   between "result appended" and "job removed from the queue", the
+//!   replayed re-run's second record must not displace the original;
+//! - pending = admits (in admission order) with no matching result;
+//! - a result without a matching admit is kept (the admit may sit in a
+//!   region skipped by `--repair`) — losing finished work helps nobody.
+
+use super::journal::{replay, FsyncPolicy, Journal, Record};
+use super::protocol::Priority;
+use crate::service::{JobResult, JobSpec};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// What a [`Store::open`] recovery found — surfaced in daemon stats and
+/// printed by `serve-daemon` at startup.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Completed results recovered from the journal.
+    pub recovered_results: usize,
+    /// Admitted-but-unfinished jobs re-queued for exactly-once re-run.
+    pub replayed_jobs: usize,
+    /// A torn trailing record was truncated (crash mid-append).
+    pub torn_tail: bool,
+    /// Corrupt interior records skipped under `--repair`.
+    pub skipped: usize,
+    /// Duplicate result records ignored (first occurrence wins).
+    pub duplicate_results: usize,
+}
+
+/// A replayed journal, reconciled and reopened for appending.
+pub struct Store {
+    pub journal: Journal,
+    /// Results recovered from the journal, in append order, deduplicated.
+    pub completed: Vec<JobResult>,
+    /// Admitted-but-unfinished jobs, in admission order.
+    pub pending: Vec<(JobSpec, Priority)>,
+    pub report: RecoveryReport,
+}
+
+impl Store {
+    /// Replay the journal at `path` (missing file = fresh store), truncate
+    /// a torn tail, reconcile, and reopen for appending under `fsync`.
+    /// Interior corruption fails loudly unless `repair` is set.
+    pub fn open(path: &Path, fsync: FsyncPolicy, repair: bool) -> Result<Store> {
+        let rep = replay(path, repair)?;
+        if rep.torn_tail {
+            // Drop the torn bytes so the next append starts a clean record.
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("truncating torn journal {}", path.display()))?;
+            f.set_len(rep.valid_len)
+                .with_context(|| format!("truncating torn journal {}", path.display()))?;
+        }
+
+        let mut completed: Vec<JobResult> = Vec::new();
+        let mut admits: Vec<(JobSpec, Priority)> = Vec::new();
+        let mut duplicate_results = 0usize;
+        for record in rep.records {
+            match record {
+                Record::Admit { spec, priority } => admits.push((spec, priority)),
+                Record::Result(r) => {
+                    if completed.iter().any(|c| c.id == r.id) {
+                        duplicate_results += 1;
+                    } else {
+                        completed.push(*r);
+                    }
+                }
+            }
+        }
+        // Pending = admits with no result yet, deduplicated by id (a job
+        // must re-run exactly once, however many admit records survive).
+        let mut pending: Vec<(JobSpec, Priority)> = Vec::new();
+        for (spec, priority) in admits {
+            if completed.iter().any(|c| c.id == spec.id)
+                || pending.iter().any(|(p, _)| p.id == spec.id)
+            {
+                continue;
+            }
+            pending.push((spec, priority));
+        }
+
+        let report = RecoveryReport {
+            recovered_results: completed.len(),
+            replayed_jobs: pending.len(),
+            torn_tail: rep.torn_tail,
+            skipped: rep.skipped,
+            duplicate_results,
+        };
+        Ok(Store {
+            journal: Journal::open(path, fsync)?,
+            completed,
+            pending,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeBackend;
+    use crate::service::{run_job_sequential_any, Alg};
+    use std::path::PathBuf;
+
+    fn temp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("posit-store-{}-{tag}.log", std::process::id()))
+    }
+
+    #[test]
+    fn reconciles_pending_and_completed() {
+        let path = temp_store("reconcile");
+        let _ = std::fs::remove_file(&path);
+        let specs: Vec<JobSpec> =
+            (0..4).map(|id| JobSpec::new(id, Alg::Lu, 20)).collect();
+        let backend = NativeBackend::new(1);
+        let done: Vec<JobResult> = specs[..2]
+            .iter()
+            .map(|s| run_job_sequential_any(s, &backend, false))
+            .collect();
+        {
+            let journal = Journal::open(&path, FsyncPolicy::Never).unwrap();
+            for spec in &specs {
+                journal.append_admit(spec, Priority::Normal).unwrap();
+            }
+            for r in &done {
+                journal.append_result(r).unwrap();
+            }
+            // A duplicate result (crash between append and dequeue): the
+            // first record must win.
+            journal.append_result(&done[0]).unwrap();
+        }
+        let store = Store::open(&path, FsyncPolicy::Never, false).unwrap();
+        assert_eq!(store.report.recovered_results, 2);
+        assert_eq!(store.report.replayed_jobs, 2);
+        assert_eq!(store.report.duplicate_results, 1);
+        assert!(!store.report.torn_tail);
+        let pending_ids: Vec<usize> = store.pending.iter().map(|(s, _)| s.id).collect();
+        assert_eq!(pending_ids, vec![2, 3], "admission order preserved");
+        assert_eq!(store.completed[0].to_json(), done[0].to_json());
+        // The reopened journal appends cleanly after recovery.
+        store.journal.append_result(&done[1]).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_physically_truncated_on_open() {
+        let path = temp_store("truncate");
+        let _ = std::fs::remove_file(&path);
+        let spec = JobSpec::new(7, Alg::Lu, 20);
+        {
+            let journal = Journal::open(&path, FsyncPolicy::Never).unwrap();
+            journal.append_admit(&spec, Priority::High).unwrap();
+        }
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // Simulate a crash mid-append of a second record.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"deadbeef").unwrap();
+        }
+        let store = Store::open(&path, FsyncPolicy::Never, false).unwrap();
+        assert!(store.report.torn_tail);
+        assert_eq!(store.report.replayed_jobs, 1);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            clean_len,
+            "torn bytes removed from disk"
+        );
+        // Records appended after recovery replay cleanly.
+        store.journal.append_admit(&spec, Priority::Low).unwrap();
+        drop(store);
+        let again = Store::open(&path, FsyncPolicy::Never, false).unwrap();
+        assert_eq!(again.pending.len(), 1, "duplicate admits collapse by id");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fresh_store_is_empty() {
+        let path = temp_store("fresh");
+        let _ = std::fs::remove_file(&path);
+        let store = Store::open(&path, FsyncPolicy::Never, false).unwrap();
+        assert_eq!(store.report.recovered_results, 0);
+        assert_eq!(store.report.replayed_jobs, 0);
+        assert!(store.completed.is_empty() && store.pending.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -44,13 +44,19 @@ use crate::experiments::matgen;
 use crate::lapack::{backward_error, getrs, getrs_quire, potrs, potrs_quire};
 use crate::posit::Posit32;
 use crate::rng::Pcg64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Refinement rounds cap for `mode=refine` jobs; convergence usually stops
 /// the loop first (see [`refine_offload`]).
 pub const REFINE_MAX_ITER: usize = 10;
+
+/// Retry budget for transient backend faults: a job whose error carries
+/// the `transient` marker is re-attempted up to this many extra times
+/// (with deterministic exponential backoff) before the failure is final.
+pub const RETRY_MAX: usize = 3;
 
 /// Outcome of one job.
 #[derive(Clone, Debug)]
@@ -80,6 +86,9 @@ pub struct JobResult {
     pub digits: Option<f64>,
     /// Refinement iterations (refine-mode jobs only).
     pub refine_iters: Option<usize>,
+    /// Transient-fault retries the engine spent on this job (bounded by
+    /// [`RETRY_MAX`]); 0 for a clean first attempt.
+    pub retries: usize,
     /// FNV-1a over the factor/solution bits and pivots: cheap cross-run
     /// identity.
     pub fingerprint: u64,
@@ -361,7 +370,91 @@ fn build_matrix64(spec: &JobSpec) -> Matrix<f64> {
     }
 }
 
+/// One job with the engine's fault envelope around the bare attempt:
+/// `catch_unwind` panic isolation (a poisoned job fails alone instead of
+/// killing its worker), bounded retries with deterministic backoff for
+/// transient backend errors (the `transient` marker in the error text),
+/// and the job's wall-clock deadline (`deadline_ms=`, 0 = none). The
+/// envelope is scheduling-only — a retry re-runs the same pure function,
+/// so results stay bit-identical; the deadline is the one knowingly
+/// wall-clock-dependent knob (a latency bound is about *this* machine),
+/// which is why manifests default it off.
 fn run_job_on<T: Scalar>(
+    spec: &JobSpec,
+    backend: &dyn GemmBackend<T>,
+    backend_label: &str,
+    keep_factors: bool,
+) -> JobResult {
+    let t0 = Instant::now();
+    let deadline = (spec.deadline_ms > 0).then(|| Duration::from_millis(spec.deadline_ms));
+    let mut retries = 0usize;
+    let mut result = loop {
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            run_job_attempt(spec, backend, backend_label, keep_factors)
+        }))
+        .unwrap_or_else(|payload| {
+            let mut r =
+                failed_result(spec, format!("panicked: {}", panic_message(&*payload)));
+            r.backend = backend_label.to_string();
+            r
+        });
+        let transient = attempt.error.as_deref().is_some_and(is_transient);
+        if !transient || retries >= RETRY_MAX {
+            break attempt;
+        }
+        let pause = retry_backoff(retries + 1);
+        if let Some(limit) = deadline {
+            if t0.elapsed() + pause >= limit {
+                break attempt; // no retry budget left inside the deadline
+            }
+        }
+        std::thread::sleep(pause);
+        retries += 1;
+    };
+    result.retries = retries;
+    result.wall_s = t0.elapsed().as_secs_f64();
+    if let Some(limit) = deadline {
+        if result.error.is_none() && t0.elapsed() > limit {
+            // Completed, but past its budget: the caller asked for a
+            // latency bound, so the late answer fails — stats and digits
+            // stay for observability, factors are withheld.
+            result.error = Some(format!("deadline exceeded: {} ms budget", spec.deadline_ms));
+            result.factors = None;
+            result.ipiv = None;
+        }
+    }
+    result
+}
+
+/// Transient-fault marker: backends flag retryable failures by putting
+/// `transient` in the error text ([`crate::coordinator::FaultyBackend`]
+/// does; a real accelerator shim would map e.g. a full device queue the
+/// same way). Anything else is treated as deterministic and final.
+fn is_transient(msg: &str) -> bool {
+    msg.contains("transient")
+}
+
+/// Deterministic backoff before retry number `retry` (1-based): 2 ms
+/// doubling per retry. The *schedule* being fixed is what matters (same
+/// retry sequence every run); the pauses are short so tests stay fast.
+fn retry_backoff(retry: usize) -> Duration {
+    Duration::from_millis(1u64 << retry.min(6))
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// The bare attempt: materialize, factorize/refine, probe accuracy. No
+/// retry/deadline/panic handling here — [`run_job_on`] wraps it.
+fn run_job_attempt<T: Scalar>(
     spec: &JobSpec,
     backend: &dyn GemmBackend<T>,
     backend_label: &str,
@@ -437,6 +530,7 @@ fn run_job_on<T: Scalar>(
                 backward_error: berr,
                 digits: berr.map(digits_of),
                 refine_iters: None,
+                retries: 0,
                 fingerprint: fingerprint(&a.data, &ipiv),
                 factors: keep_factors.then(|| a.data.iter().map(|v| v.bits()).collect()),
                 ipiv: keep_factors.then(|| ipiv.clone()),
@@ -466,6 +560,7 @@ fn run_job_on<T: Scalar>(
                     backward_error: Some(out.backward_error),
                     digits: Some(digits_of(out.backward_error)),
                     refine_iters: Some(out.iters),
+                    retries: 0,
                     fingerprint: fingerprint(&out.x, &[]),
                     factors: keep_factors.then(|| out.x.iter().map(|v| v.to_bits()).collect()),
                     ipiv: keep_factors.then(Vec::new),
@@ -487,7 +582,9 @@ fn digits_of(backward_error: f64) -> f64 {
     -backward_error.log10()
 }
 
-fn failed_result(spec: &JobSpec, error: String) -> JobResult {
+/// A [`JobResult`] for a job that never produced numbers: routing errors,
+/// caught panics, and the daemon's load-shedding path all use it.
+pub fn failed_result(spec: &JobSpec, error: String) -> JobResult {
     JobResult {
         id: spec.id,
         alg: spec.alg,
@@ -503,6 +600,7 @@ fn failed_result(spec: &JobSpec, error: String) -> JobResult {
         backward_error: None,
         digits: None,
         refine_iters: None,
+        retries: 0,
         fingerprint: 0,
         factors: None,
         ipiv: None,
@@ -721,7 +819,7 @@ impl JobResult {
             None => "null".to_string(),
         };
         format!(
-            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"wait_s\": {}, \"overlap_s\": {}, \"overlap_frac\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"fingerprint\": \"{:#018x}\"}}",
+            "{{\"id\": {}, \"alg\": \"{}\", \"n\": {}, \"precision\": \"{}\", \"mode\": \"{}\", \"accum\": \"{}\", \"lookahead\": {}, \"backend\": \"{}\", \"ok\": {}, \"error\": {}, \"wall_s\": {}, \"panel_s\": {}, \"update_s\": {}, \"wait_s\": {}, \"overlap_s\": {}, \"overlap_frac\": {}, \"simulated_s\": {}, \"update_flops\": {}, \"backward_error\": {}, \"digits\": {}, \"refine_iters\": {}, \"retries\": {}, \"fingerprint\": \"{:#018x}\"}}",
             self.id,
             self.alg.name(),
             self.n,
@@ -743,6 +841,7 @@ impl JobResult {
             jopt(self.backward_error),
             jopt(self.digits),
             refine_iters,
+            self.retries,
             self.fingerprint,
         )
     }
@@ -915,6 +1014,103 @@ mod tests {
         // Balanced braces/brackets (cheap structural check).
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn transient_faults_retry_to_the_bounded_budget() {
+        use crate::coordinator::{FaultConfig, FaultyBackend};
+        let spec = &mixed_manifest(1, 40)[0];
+        let be = FaultyBackend::new(
+            NativeBackend::new(1),
+            FaultConfig {
+                transient_rate: 1.0,
+                ..FaultConfig::default()
+            },
+        );
+        let r = run_job_sequential::<crate::posit::Posit32>(spec, &be, false);
+        let err = r.error.as_deref().expect("all-faulty backend must fail");
+        assert!(err.contains("transient"), "{err}");
+        assert_eq!(r.retries, RETRY_MAX, "exhausted the retry budget");
+    }
+
+    #[test]
+    fn faulty_runs_are_deterministic_across_instances() {
+        use crate::coordinator::{FaultConfig, FaultyBackend};
+        let spec = &mixed_manifest(1, 40)[0];
+        let cfg = FaultConfig {
+            transient_rate: 0.5,
+            seed: 0xD1CE,
+            ..FaultConfig::default()
+        };
+        let run = || {
+            let be = FaultyBackend::new(NativeBackend::new(1), cfg);
+            run_job_sequential::<crate::posit::Posit32>(spec, &be, true)
+        };
+        let (r1, r2) = (run(), run());
+        assert_eq!(r1.error, r2.error);
+        assert_eq!(r1.retries, r2.retries);
+        assert_eq!(r1.fingerprint, r2.fingerprint);
+        assert_eq!(
+            r1.digits.map(f64::to_bits),
+            r2.digits.map(f64::to_bits)
+        );
+        assert_eq!(r1.factors, r2.factors);
+    }
+
+    #[test]
+    fn injected_panic_fails_the_job_alone() {
+        use crate::coordinator::{FaultConfig, FaultyBackend};
+        let chaos = FaultyBackend::new(
+            NativeBackend::new(1),
+            FaultConfig {
+                panic_rate: 1.0,
+                ..FaultConfig::default()
+            },
+        );
+        let engine = Engine::new(
+            vec![
+                (
+                    "good".to_string(),
+                    Arc::new(NativeBackend::new(2)) as Arc<dyn GemmBackend>,
+                ),
+                ("chaos".to_string(), Arc::new(chaos) as Arc<dyn GemmBackend>),
+            ],
+            8,
+        );
+        let mut jobs = mixed_manifest(2, 40);
+        jobs[0].backend = "chaos".to_string();
+        jobs[1].backend = "good".to_string();
+        let report = engine.run(&jobs, 2, false);
+        let err = report.results[0].error.as_deref().unwrap();
+        assert!(err.contains("panic"), "{err}");
+        assert!(
+            report.results[1].error.is_none(),
+            "a panicking job must not take the engine down: {:?}",
+            report.results[1].error
+        );
+    }
+
+    #[test]
+    fn deadline_fails_jobs_that_finish_late() {
+        use crate::coordinator::{FaultConfig, FaultyBackend};
+        let mut spec = mixed_manifest(1, 40).remove(0);
+        spec.deadline_ms = 5;
+        let be = FaultyBackend::new(
+            NativeBackend::new(1),
+            FaultConfig {
+                latency_rate: 1.0,
+                latency_ms: 20,
+                ..FaultConfig::default()
+            },
+        );
+        let r = run_job_sequential::<crate::posit::Posit32>(&spec, &be, true);
+        let err = r.error.as_deref().expect("late job must fail");
+        assert!(err.contains("deadline"), "{err}");
+        assert!(r.factors.is_none(), "late factors are withheld");
+        // Without a deadline the same slow run succeeds.
+        spec.deadline_ms = 0;
+        let ok = run_job_sequential::<crate::posit::Posit32>(&spec, &be, true);
+        assert!(ok.error.is_none(), "{:?}", ok.error);
     }
 
     #[test]

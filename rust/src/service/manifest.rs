@@ -41,6 +41,10 @@
 //!   step `j` is still in flight. Bit-identical at every depth — only the
 //!   schedule (and the overlap fraction in the stats) changes. Applies to
 //!   factorize-mode jobs; `mode=refine` factorizes at depth 0.
+//! * `deadline_ms` — per-job wall-clock deadline in milliseconds
+//!   (default 0 = none). A job that exceeds its deadline is reported as a
+//!   deterministic failure (`deadline exceeded`); the engine stops
+//!   retrying past it and discards late factors ([`super::engine`]).
 //!
 //! `#` starts a comment; blank lines are skipped. Matrix generation is a
 //! pure function of the spec, so the same manifest produces bit-identical
@@ -192,6 +196,9 @@ pub struct JobSpec {
     /// ≥ 1 = overlap host panels with in-flight backend updates
     /// (bit-identical either way).
     pub lookahead: usize,
+    /// Per-job wall-clock deadline in milliseconds (0 = none). Past it
+    /// the engine stops retrying and fails the job deterministically.
+    pub deadline_ms: u64,
     /// Dispatch-queue name; empty selects the pool's primary backend.
     pub backend: String,
 }
@@ -214,6 +221,7 @@ impl JobSpec {
             mode: Mode::Factorize,
             accum: Accum::default(),
             lookahead: 0,
+            deadline_ms: 0,
             backend: String::new(),
         }
     }
@@ -258,6 +266,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
                         Accum::parse(val).map_err(|e| anyhow!("line {lineno}: {e}"))?;
                 }
                 "lookahead" => spec.lookahead = val.parse().map_err(|_| bad())?,
+                "deadline_ms" => spec.deadline_ms = val.parse().map_err(|_| bad())?,
                 "backend" => spec.backend = val.to_string(),
                 other => bail!("line {lineno}: unknown key '{other}'"),
             }
@@ -414,6 +423,14 @@ cholesky n=384   # trailing comment
         assert_eq!(jobs[0].lookahead, 2);
         assert_eq!(jobs[1].lookahead, 0, "default depth is 0");
         assert!(parse_manifest("lu n=8 lookahead=deep").is_err());
+    }
+
+    #[test]
+    fn parses_deadline_ms() {
+        let jobs = parse_manifest("lu n=64 deadline_ms=250\ncholesky n=32\n").unwrap();
+        assert_eq!(jobs[0].deadline_ms, 250);
+        assert_eq!(jobs[1].deadline_ms, 0, "default is no deadline");
+        assert!(parse_manifest("lu n=8 deadline_ms=soon").is_err());
     }
 
     #[test]

@@ -49,8 +49,8 @@ pub mod manifest;
 pub mod queue;
 
 pub use engine::{
-    fingerprint, run_job_sequential, run_job_sequential_any, Engine, EngineBuilder, JobResult,
-    ServiceReport, REFINE_MAX_ITER,
+    failed_result, fingerprint, run_job_sequential, run_job_sequential_any, Engine, EngineBuilder,
+    JobResult, ServiceReport, REFINE_MAX_ITER, RETRY_MAX,
 };
 pub use manifest::{
     mixed_accum_manifest, mixed_format_manifest, mixed_manifest, parse_manifest, Alg, JobSpec,

@@ -234,7 +234,24 @@ fn dispatch_loop<T: Scalar>(
                 accum: req.accum,
             })
             .collect();
-        let result = backend.gemm_update_many(&mut views);
+        // A panicking backend must not kill the dispatcher — every tile
+        // queued behind it would then fail forever ("dispatcher exited").
+        // Catch the unwind and fail just this batch: replies only carry
+        // staged data on success, so callers' own C buffers are untouched
+        // and the solo retry (or the engine's job retry) re-stages cleanly.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.gemm_update_many(&mut views)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "opaque panic payload".to_string()
+            };
+            Err(anyhow!("backend panicked in batched dispatch: {msg}"))
+        });
         drop(views);
         counters.batches.fetch_add(1, Ordering::Relaxed);
         counters.tiles.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -666,6 +683,75 @@ mod tests {
                 });
             }
         });
+    }
+
+    /// Backend that panics on one tile shape — the worker-death fault
+    /// class. The dispatcher thread must survive it.
+    struct PanickyBackend {
+        inner: NativeBackend,
+        bad_m: usize,
+    }
+
+    impl GemmBackend for PanickyBackend {
+        fn name(&self) -> &str {
+            "panicky"
+        }
+        fn gemm_update(
+            &self,
+            m: usize,
+            k: usize,
+            n: usize,
+            a: &[Posit32],
+            lda: usize,
+            b: &[Posit32],
+            ldb: usize,
+            c: &mut [Posit32],
+            ldc: usize,
+        ) -> Result<()> {
+            if m == self.bad_m {
+                panic!("injected backend panic m={m}");
+            }
+            self.inner.gemm_update(m, k, n, a, lda, b, ldb, c, ldc)
+        }
+    }
+
+    #[test]
+    fn panicking_tile_fails_alone_and_dispatcher_survives() {
+        let bad_m = 13;
+        let queue = BatchQueue::<Posit32>::start(
+            "panicky",
+            Arc::new(PanickyBackend {
+                inner: NativeBackend::new(1),
+                bad_m,
+            }),
+            16,
+        );
+        let proxy = QueueBackend::new(Arc::clone(&queue));
+        // The panicking tile comes back as an error, not a dead queue.
+        let (m, k, n) = (bad_m, 4, 9);
+        let a = rand_mat(m, k, 9500);
+        let b = rand_mat(k, n, 9501);
+        let mut c = rand_mat(m, n, 9502);
+        let err = proxy
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c.data, m)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        // The dispatcher survived: a good tile afterwards still bit-matches
+        // the direct backend.
+        let direct = NativeBackend::new(1);
+        let (m, k, n) = (21, 4, 9);
+        let a = rand_mat(m, k, 9600);
+        let b = rand_mat(k, n, 9601);
+        let c0 = rand_mat(m, n, 9602);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        direct
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c1.data, m)
+            .unwrap();
+        proxy
+            .gemm_update(m, k, n, &a.data, m, &b.data, k, &mut c2.data, m)
+            .unwrap();
+        assert_eq!(c1.data, c2.data, "queue still computes after a panic");
     }
 
     #[test]

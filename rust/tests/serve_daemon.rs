@@ -1,6 +1,8 @@
 //! Serving-daemon contracts: deterministic backpressure, exactly-once
 //! graceful drain, queue-depth worker scaling, bit-identical results vs
-//! the sequential drivers, and the socket transport end to end.
+//! the sequential drivers, overload shedding, crash recovery over the
+//! write-ahead journal, and the socket transports (Unix + TCP) end to
+//! end.
 
 use posit_accel::coordinator::NativeBackend;
 use posit_accel::serve::{plan, Daemon, DaemonConfig, Priority};
@@ -26,6 +28,7 @@ fn test_config() -> DaemonConfig {
         trace_interval_ms: 5,
         keep_factors: false,
         hold_workers: false,
+        shed_low_on_full: true,
     }
 }
 
@@ -366,6 +369,297 @@ fn malformed_corpus_gets_deterministic_errors_and_daemon_survives() {
     let summary = server.join().unwrap().expect("serve_unix");
     assert_eq!(summary.completed, 2);
     assert_eq!(summary.admitted, 2, "no malformed line was ever admitted");
+}
+
+/// Graceful degradation under overload: a full shard sheds its newest
+/// strictly-lower-priority queued job to admit a higher-priority
+/// arrival; the victim completes exactly once as a deterministic
+/// `shed: ...` failure, peers never shed each other, and `--no-shed`
+/// (shed_low_on_full: false) restores plain rejection.
+#[test]
+fn overload_sheds_lowest_priority_for_higher_priority_arrivals() {
+    let config = DaemonConfig {
+        queue_capacity: 2,
+        hold_workers: true, // keep the queue full: nothing runs yet
+        ..test_config()
+    };
+    let daemon = Daemon::start(native_engine(8), config);
+    let jobs: Vec<JobSpec> = mixed_format_manifest(15, 24)
+        .into_iter()
+        .filter(|j| j.precision == Precision::Posit32)
+        .collect();
+    assert!(jobs.len() >= 4);
+
+    daemon.submit(jobs[0].clone(), Priority::Low).unwrap();
+    daemon.submit(jobs[1].clone(), Priority::Low).unwrap();
+    assert_eq!(daemon.queue_depth(Precision::Posit32), 2);
+
+    // A Low peer gets backpressure, not a shed — eviction never targets
+    // an equal-or-higher lane.
+    let rej = daemon.submit(jobs[2].clone(), Priority::Low).expect_err("peer must reject");
+    assert_eq!(rej.reason, "queue full");
+    assert_eq!(daemon.shed_count(), 0);
+
+    // A High arrival evicts the NEWEST queued Low job (jobs[1]).
+    let adm = daemon.submit(jobs[2].clone(), Priority::High).expect("shed admits High");
+    assert_eq!(adm.queue_depth, 2, "victim freed the slot");
+    assert_eq!(daemon.shed_count(), 1);
+    assert_eq!(daemon.admitted_count(), 3);
+    assert_eq!(daemon.completed_count(), 1, "the victim completed (as a failure)");
+    let shed_rows: Vec<JobResult> = daemon
+        .completed_results()
+        .into_iter()
+        .filter(|r| r.error.as_deref().is_some_and(|e| e.contains("shed")))
+        .collect();
+    assert_eq!(shed_rows.len(), 1);
+    assert_eq!(shed_rows[0].id, jobs[1].id, "newest low-priority job is the victim");
+
+    daemon.release();
+    let summary = daemon.drain();
+    assert_eq!(summary.admitted, 3);
+    assert_eq!(summary.completed, 3, "survivors + victim, exactly once each");
+    let results = daemon.completed_results();
+    assert_eq!(results.len(), 3);
+    let ran: Vec<&JobResult> = results.iter().filter(|r| r.error.is_none()).collect();
+    assert_eq!(ran.len(), 2, "jobs[0] and the High job actually ran");
+    assert!(daemon.stats_json().contains("\"shed\": 1"), "{}", daemon.stats_json());
+
+    // With shedding disabled, the same pattern is a plain rejection.
+    let config = DaemonConfig {
+        queue_capacity: 2,
+        hold_workers: true,
+        shed_low_on_full: false,
+        ..test_config()
+    };
+    let daemon = Daemon::start(native_engine(8), config);
+    daemon.submit(jobs[0].clone(), Priority::Low).unwrap();
+    daemon.submit(jobs[1].clone(), Priority::Low).unwrap();
+    let rej = daemon.submit(jobs[2].clone(), Priority::High).expect_err("--no-shed rejects");
+    assert_eq!(rej.reason, "queue full");
+    assert_eq!(daemon.shed_count(), 0);
+    daemon.release();
+    daemon.drain();
+}
+
+/// The chaos contract: kill a journaled daemon mid-burst, restart on the
+/// same journal, and every admitted job is collectible exactly once with
+/// results bit-identical to an uninterrupted sequential run. Three
+/// lives: (1) admit everything, crash before anything runs — the journal
+/// holds only admits; (2) replay re-runs all jobs exactly once; (3) a
+/// third life serves the full result set from the journal without
+/// running anything.
+#[test]
+fn crash_recovery_replays_exactly_once_bit_identical() {
+    use posit_accel::serve::{FsyncPolicy, Store};
+
+    let journal = std::env::temp_dir()
+        .join(format!("posit-serve-crash-{}.wal", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+
+    let load = plan(10, 40, 11, 0.0, 4);
+    let baseline: Vec<JobResult> = load
+        .jobs
+        .iter()
+        .map(|(spec, _)| run_job_sequential_any(spec, &NativeBackend::new(1), false))
+        .collect();
+    for r in &baseline {
+        assert!(r.error.is_none(), "baseline job {}: {:?}", r.id, r.error);
+    }
+
+    // Life 1: admit the whole burst while the dispatch gate is held, then
+    // die. To the journal this is the worst crash: acked admits, zero
+    // results.
+    let store = Store::open(&journal, FsyncPolicy::Never, false).expect("fresh journal");
+    let config = DaemonConfig { hold_workers: true, ..test_config() };
+    let (daemon, report) = Daemon::start_with_store(native_engine(8), config, store);
+    assert_eq!((report.recovered_results, report.replayed_jobs), (0, 0));
+    for (spec, priority) in &load.jobs {
+        daemon.submit(spec.clone(), *priority).expect("capacity covers the burst");
+    }
+    assert_eq!(daemon.admitted_count(), load.jobs.len());
+    daemon.abort();
+    assert_eq!(daemon.completed_count(), 0, "nothing ran before the crash");
+
+    // Life 2: replay. Every admitted-but-unfinished job re-runs exactly
+    // once, bit-identical to the uninterrupted sequential run.
+    let store = Store::open(&journal, FsyncPolicy::Never, false).expect("replay");
+    assert!(!store.report.torn_tail, "a joined abort leaves whole records");
+    let (daemon, report) = Daemon::start_with_store(native_engine(8), test_config(), store);
+    assert_eq!(report.recovered_results, 0);
+    assert_eq!(report.replayed_jobs, load.jobs.len());
+    let summary = daemon.drain();
+    assert_eq!(summary.admitted, load.jobs.len());
+    assert_eq!(summary.completed, load.jobs.len(), "exactly once across the crash");
+    let results = daemon.completed_results(); // sorted by id
+    assert_eq!(results.len(), baseline.len(), "no loss, no duplicates");
+    for (seq, got) in baseline.iter().zip(&results) {
+        assert_eq!(seq.id, got.id);
+        assert!(got.error.is_none(), "replayed job {}: {:?}", got.id, got.error);
+        assert_eq!(seq.fingerprint, got.fingerprint, "job {}", seq.id);
+        assert_eq!(
+            seq.backward_error.map(f64::to_bits),
+            got.backward_error.map(f64::to_bits),
+            "accuracy bits differ after recovery: job {}",
+            seq.id
+        );
+        assert_eq!(
+            seq.digits.map(f64::to_bits),
+            got.digits.map(f64::to_bits),
+            "job {}",
+            seq.id
+        );
+    }
+
+    // Life 3: everything finished, so a restart serves the whole result
+    // set from the journal without running a single job.
+    let store = Store::open(&journal, FsyncPolicy::Never, false).expect("replay again");
+    let (daemon, report) = Daemon::start_with_store(native_engine(8), test_config(), store);
+    assert_eq!(report.recovered_results, load.jobs.len());
+    assert_eq!(report.replayed_jobs, 0);
+    assert_eq!(daemon.recovered_results(), load.jobs.len());
+    let results = daemon.completed_results();
+    assert_eq!(results.len(), baseline.len());
+    for (seq, got) in baseline.iter().zip(&results) {
+        assert_eq!(seq.fingerprint, got.fingerprint, "recovered job {}", seq.id);
+        assert_eq!(
+            seq.digits.map(f64::to_bits),
+            got.digits.map(f64::to_bits),
+            "recovered digits round-trip bitwise: job {}",
+            seq.id
+        );
+    }
+    let summary = daemon.drain();
+    assert_eq!(summary.admitted, load.jobs.len(), "recovered jobs count as admitted");
+    assert_eq!(summary.completed, load.jobs.len());
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// Malformed-journal corpus at the store level: interior corruption
+/// fails loudly (naming `--repair`), `--repair` skips the bad record and
+/// keeps the intact ones, and a torn trailing record is silently
+/// truncated — after which the reopened journal appends cleanly.
+#[test]
+fn corrupt_journal_fails_loudly_and_torn_tail_truncates() {
+    use posit_accel::serve::{FsyncPolicy, Journal, Store};
+
+    let pid = std::process::id();
+    let jobs = mixed_format_manifest(2, 24);
+
+    // Interior corruption: flip one byte inside the first of two records.
+    let path = std::env::temp_dir().join(format!("posit-serve-corrupt-{pid}.wal"));
+    let _ = std::fs::remove_file(&path);
+    {
+        let j = Journal::open(&path, FsyncPolicy::Never).unwrap();
+        j.append_admit(&jobs[0], Priority::Normal).unwrap();
+        j.append_admit(&jobs[1], Priority::Low).unwrap();
+    }
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[20] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Store::open(&path, FsyncPolicy::Never, false)
+        .expect_err("interior corruption must fail loudly");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--repair"), "error names the escape hatch: {msg}");
+    let store = Store::open(&path, FsyncPolicy::Never, true).expect("--repair opens");
+    assert_eq!(store.report.skipped, 1, "one corrupt record skipped");
+    assert_eq!(store.pending.len(), 1, "the intact admit survives");
+    assert_eq!(store.pending[0].0.id, jobs[1].id);
+    let _ = std::fs::remove_file(&path);
+
+    // Torn tail: chop the final record mid-line (a crash mid-write).
+    let path = std::env::temp_dir().join(format!("posit-serve-torn-{pid}.wal"));
+    let _ = std::fs::remove_file(&path);
+    {
+        let j = Journal::open(&path, FsyncPolicy::Never).unwrap();
+        j.append_admit(&jobs[0], Priority::Normal).unwrap();
+        j.append_admit(&jobs[1], Priority::Low).unwrap();
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+    let store = Store::open(&path, FsyncPolicy::Never, false).expect("torn tail is tolerated");
+    assert!(store.report.torn_tail);
+    assert_eq!(store.pending.len(), 1, "only the whole record replays");
+    assert!(
+        std::fs::metadata(&path).unwrap().len() < (bytes.len() - 7) as u64,
+        "the torn bytes are physically truncated"
+    );
+    // The reopened journal appends cleanly after the truncation.
+    store.journal.append_admit(&jobs[1], Priority::High).unwrap();
+    drop(store);
+    let store = Store::open(&path, FsyncPolicy::Never, false).expect("clean replay");
+    assert!(!store.report.torn_tail);
+    assert_eq!(store.pending.len(), 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// End-to-end over TCP: the same protocol, daemon, and graceful drain as
+/// the Unix transport, reached through `Listen::Tcp` — submit, collect,
+/// shutdown on one persistent connection.
+#[cfg(unix)]
+#[test]
+fn tcp_daemon_end_to_end() {
+    use posit_accel::serve::protocol::{get_num, get_str, parse_flat_object, submit_line};
+    use posit_accel::serve::{serve, Listen};
+    use std::io::{BufRead, BufReader, Write};
+
+    // Reserve an OS-assigned port, then hand it to the daemon. (The
+    // listener is dropped before the daemon binds; the race window is
+    // acceptable for a test.)
+    let port = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().unwrap().port()
+    };
+    let listen = Listen::Tcp(format!("127.0.0.1:{port}"));
+
+    let daemon = Daemon::start(native_engine(8), test_config());
+    let server = {
+        let listen = listen.clone();
+        std::thread::spawn(move || serve(daemon, &listen, None))
+    };
+
+    // Wait for the daemon to bind.
+    let mut conn = None;
+    for _ in 0..400 {
+        match listen.connect() {
+            Ok(c) => {
+                conn = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    }
+    let stream = conn.expect("daemon never bound its TCP port");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    writeln!(writer, "{{\"op\": \"ping\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\""), "{line}");
+
+    let jobs = mixed_format_manifest(4, 24);
+    for spec in &jobs {
+        line.clear();
+        writeln!(writer, "{}", submit_line(spec, Priority::Normal)).expect("send");
+        reader.read_line(&mut line).expect("reply");
+        let fields = parse_flat_object(line.trim()).expect("flat reply");
+        assert_eq!(get_str(&fields, "op"), Some("accepted"), "{line}");
+    }
+
+    line.clear();
+    writeln!(writer, "{{\"op\": \"collect\", \"wait\": true}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains(&format!("\"count\": {}", jobs.len())), "{line}");
+
+    line.clear();
+    writeln!(writer, "{{\"op\": \"shutdown\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let fields = parse_flat_object(line.trim()).expect("drained reply is flat");
+    assert_eq!(get_str(&fields, "op"), Some("drained"), "{line}");
+    assert_eq!(get_num(&fields, "admitted"), Some(jobs.len() as f64));
+    assert_eq!(get_num(&fields, "completed"), Some(jobs.len() as f64));
+    let summary = server.join().unwrap().expect("serve over tcp");
+    assert_eq!(summary.completed, jobs.len());
 }
 
 /// End-to-end over the Unix socket: 4 concurrent submitter connections
